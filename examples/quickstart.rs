@@ -1,0 +1,84 @@
+//! Quickstart: the whole MoD stack in ~60 lines.
+//!
+//! Loads the `mod_tiny` artifact bundle (built by `make artifacts`),
+//! trains for a handful of steps on the synthetic corpus, evaluates under
+//! the training-style top-k routing, and generates a few tokens through
+//! the layer-sliced decode runtime — demonstrating that routed-around
+//! blocks are *really skipped* (see the skip fraction it prints).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use mod_transformer::coordinator::{Trainer, TrainerOptions};
+use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
+use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::serve::{DecodeSession, RoutingDecision};
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the artifact bundle (AOT-compiled by `make artifacts`)
+    let engine = Arc::new(Engine::cpu()?);
+    let bundle = Arc::new(Bundle::open(
+        engine,
+        std::path::Path::new("artifacts/mod_tiny"),
+    )?);
+    println!(
+        "bundle {}: {} params, routed layers {:?}",
+        bundle.manifest.name, bundle.manifest.n_params,
+        bundle.manifest.routed_layers
+    );
+
+    // 2. train a few steps on the synthetic corpus
+    let corpus = MarkovCorpus::new(CorpusSpec::default(), 7);
+    let data = BatchIter::new(
+        corpus,
+        bundle.manifest.train.batch_size,
+        bundle.manifest.model.seq_len,
+    );
+    let mut trainer = Trainer::new(bundle.clone(), data, None)?;
+    let outcome = trainer.run(&TrainerOptions {
+        steps: Some(20),
+        log_every: 5,
+        run_dir: "runs/quickstart".into(),
+        ..Default::default()
+    })?;
+    println!(
+        "trained {} steps: loss {:.3}, {:.2} steps/s",
+        outcome.steps, outcome.final_loss, outcome.steps_per_sec
+    );
+
+    // 3. held-out evaluation (top-k routing, as in training)
+    let eval = trainer.evaluate("topk", 2)?;
+    println!(
+        "eval: ce {:.3}, predictor accuracy {:.2}, participation {:.3}",
+        eval.ce, eval.pred_acc, eval.participation
+    );
+
+    // 4. generate through the layer-sliced decode runtime
+    let params = trainer.params()?;
+    let mut session = DecodeSession::new(
+        &bundle, &params, 1, RoutingDecision::RouterThreshold,
+    )?;
+    let mut tok = mod_transformer::data::BOS as i32;
+    let mut out = Vec::new();
+    for _ in 0..32 {
+        let logits = session.step(&[tok], &[true])?;
+        let next = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        out.push(next);
+        tok = next as i32;
+    }
+    let report = session.report();
+    println!("generated {:?}...", &out[..8.min(out.len())]);
+    println!(
+        "decode: {:.0} tok/s, {:.0}% of routed-block invocations skipped \
+         (MoD's compute saving, measured)",
+        report.tokens_per_sec(),
+        100.0 * report.skip_fraction()
+    );
+    Ok(())
+}

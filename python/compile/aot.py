@@ -1,0 +1,287 @@
+"""AOT pipeline: lower the L2 model to HLO-text artifacts + manifest.
+
+This is the only place Python touches the system: `make artifacts` runs it
+once per model config; the Rust coordinator then drives the resulting
+executables with zero Python on any request path.
+
+Interchange format is HLO *text*, NOT `lowered.compile()`/`.serialize()`:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifact bundle layout (one directory per config under artifacts/):
+  manifest.json            ABI: config, param specs, metric names, files
+  init.ckpt                seeded initial params + Adam moments (MODCKPT1)
+  train_step.hlo.txt       (tokens, step, seed, *p, *m, *v) -> (metrics, ...)
+  eval_topk.hlo.txt        held-out eval under training-style top-k routing
+  eval_predictor.hlo.txt   eval under causal predictor routing (fig 6)
+  eval_router.hlo.txt      eval under causal aux-BCE router routing (fig 6)
+  embed_step.hlo.txt       decode: token -> h                (per batch size)
+  block_decode_B{b}_L{l}.hlo.txt   decode block per (batch, cache len)
+  router_score_B{b}.hlo.txt / predictor_B{b}.hlo.txt / logits_head_B{b}.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import ModelConfig, TrainConfig, config_fingerprint
+from . import ckpt, model, sampling, train
+
+FF_DENSE = "dense"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Presets (mirrored by rust/src/config/presets.rs)
+# ---------------------------------------------------------------------------
+
+def preset(name: str) -> tuple[ModelConfig, TrainConfig]:
+    tiny_train = TrainConfig(batch_size=8, total_steps=400)
+    base = dict(vocab_size=259, d_model=128, n_layers=4, n_heads=4,
+                d_head=32, d_ff=512, seq_len=256)
+    presets: dict[str, ModelConfig] = {
+        "baseline_tiny": ModelConfig(**base, routing="none"),
+        "mod_tiny": ModelConfig(**base, routing="mod_interleaved",
+                                capacity_frac=0.125),
+        "mod_tiny_every": ModelConfig(**base, routing="mod_every",
+                                      capacity_frac=0.125),
+        "mod_tiny_stochastic": ModelConfig(**base, routing="stochastic",
+                                           capacity_frac=0.125,
+                                           train_predictor=False),
+        "moe_tiny": ModelConfig(**{**base, "d_ff": 256}, ff_mode="moe",
+                                n_experts=4),
+        "mode_staged_tiny": ModelConfig(**{**base, "d_ff": 256},
+                                        routing="mod_interleaved",
+                                        capacity_frac=0.125, ff_mode="moe",
+                                        n_experts=4),
+        "mode_integrated_tiny": ModelConfig(**{**base, "d_ff": 256},
+                                            ff_mode="mode_integrated",
+                                            n_experts=4),
+        "kernel_demo": ModelConfig(vocab_size=259, d_model=64, n_layers=2,
+                                   n_heads=2, d_head=32, d_ff=128,
+                                   seq_len=128, routing="mod_interleaved",
+                                   capacity_frac=0.25, use_pallas=True),
+    }
+    if name not in presets:
+        raise SystemExit(
+            f"unknown preset {name!r}; have {sorted(presets)}"
+        )
+    return presets[name], tiny_train
+
+
+# ---------------------------------------------------------------------------
+# Bundle builder
+# ---------------------------------------------------------------------------
+
+def build_bundle(out_dir: str, name: str, mc: ModelConfig, tc: TrainConfig,
+                 *, seed: int = 0, decode_batches=(1, 4),
+                 max_decode_len: int = 256, force: bool = False,
+                 with_decode: bool = True, with_train: bool = True) -> str:
+    bundle = os.path.join(out_dir, name)
+    manifest_path = os.path.join(bundle, "manifest.json")
+    fp = config_fingerprint(mc, tc)
+    stamp = {
+        "fingerprint": fp, "seed": seed,
+        "decode_batches": list(decode_batches),
+        "max_decode_len": max_decode_len,
+        "with_decode": with_decode, "with_train": with_train,
+    }
+    if not force and os.path.exists(manifest_path):
+        try:
+            old = json.load(open(manifest_path))
+            if all(old.get(k) == v for k, v in stamp.items()):
+                print(f"[aot] {name}: up to date ({fp})")
+                return bundle
+        except (json.JSONDecodeError, OSError):
+            pass
+    os.makedirs(bundle, exist_ok=True)
+    print(f"[aot] {name}: building (fingerprint {fp})")
+
+    names = model.param_names(mc)
+    specs = model.param_specs(mc)
+    b, s = tc.batch_size, mc.seq_len
+    artifacts: dict[str, object] = {}
+
+    # --- initial params + Adam state ---
+    params = model.init_params(mc, jax.random.PRNGKey(seed))
+    tensors = {n: np.asarray(params[n]) for n in names}
+    ckpt.save(os.path.join(bundle, "init.ckpt"), tensors)
+    artifacts["init"] = "init.ckpt"
+
+    p_specs = [spec(shape) for _, shape in specs]
+
+    if with_train:
+        # --- train step ---
+        fn = train.train_step_fn(mc, tc)
+        args = [spec((b, s), jnp.int32), spec((), jnp.int32),
+                spec((), jnp.int32)] + p_specs * 3
+        text = lower_fn(fn, args)
+        with open(os.path.join(bundle, "train_step.hlo.txt"), "w") as f:
+            f.write(text)
+        artifacts["train_step"] = "train_step.hlo.txt"
+        print(f"[aot]   train_step: {len(text) / 1e6:.1f} MB hlo text")
+
+        # --- eval variants ---
+        eval_modes = ["topk"]
+        if mc.routing in ("mod_every", "mod_interleaved"):
+            eval_modes += ["router"]
+            if mc.train_predictor:
+                eval_modes += ["predictor"]
+        for mode in eval_modes:
+            fn = train.eval_step_fn(mc, routing_mode=mode)
+            text = lower_fn(fn, [spec((b, s), jnp.int32)] + p_specs)
+            fname = f"eval_{mode}.hlo.txt"
+            with open(os.path.join(bundle, fname), "w") as f:
+                f.write(text)
+            artifacts[f"eval_{mode}"] = fname
+
+    # --- decode path (dense-ff configs only) ---
+    cache_lens = sampling.cache_lengths(mc, max_decode_len)
+    if with_decode and mc.ff_mode == FF_DENSE:
+        d, v = mc.d_model, mc.vocab_size
+        kd = mc.n_heads * mc.d_head
+        dec: dict[str, object] = {}
+        for db in decode_batches:
+            text = lower_fn(sampling.embed_step_fn(mc),
+                            [spec((db,), jnp.int32), spec((v, d))])
+            fname = f"embed_step_B{db}.hlo.txt"
+            open(os.path.join(bundle, fname), "w").write(text)
+            dec[f"embed_B{db}"] = fname
+
+            text = lower_fn(sampling.logits_head_fn(mc),
+                            [spec((db, d)), spec((d,)), spec((v, d))])
+            fname = f"logits_head_B{db}.hlo.txt"
+            open(os.path.join(bundle, fname), "w").write(text)
+            dec[f"logits_B{db}"] = fname
+
+            if any(mc.is_routed_block(l) for l in range(mc.n_layers)):
+                text = lower_fn(sampling.router_score_step_fn(mc),
+                                [spec((db, d)), spec((d,))])
+                fname = f"router_score_B{db}.hlo.txt"
+                open(os.path.join(bundle, fname), "w").write(text)
+                dec[f"router_B{db}"] = fname
+                if mc.train_predictor:
+                    text = lower_fn(
+                        sampling.predictor_step_fn(mc),
+                        [spec((db, d)), spec((d, mc.predictor_hidden)),
+                         spec((mc.predictor_hidden,)),
+                         spec((mc.predictor_hidden,))])
+                    fname = f"predictor_B{db}.hlo.txt"
+                    open(os.path.join(bundle, fname), "w").write(text)
+                    dec[f"predictor_B{db}"] = fname
+
+            for cl in sorted(set(cache_lens.values())):
+                fn = sampling.block_decode_fn(mc, cl)
+                args = [
+                    spec((db, d)), spec((db,), jnp.int32), spec((db,)),
+                    spec((db,)), spec((db,), jnp.int32),
+                    spec((db, cl, kd)), spec((db, cl, kd)),
+                    spec((db, cl), jnp.int32), spec((db, cl)),
+                    spec((d,)), spec((d, kd)), spec((d, kd)), spec((d, kd)),
+                    spec((kd, d)), spec((d,)), spec((d, mc.d_ff)),
+                    spec((mc.d_ff, d)),
+                ]
+                text = lower_fn(fn, args)
+                fname = f"block_decode_B{db}_L{cl}.hlo.txt"
+                open(os.path.join(bundle, fname), "w").write(text)
+                dec[f"block_B{db}_L{cl}"] = fname
+        artifacts["decode"] = dec
+
+    manifest = {
+        **stamp,
+        "name": name,
+        "model": mc.to_json(),
+        "train": tc.to_json(),
+        "params": [
+            {"name": n, "shape": list(shape), "dtype": "f32"}
+            for n, shape in specs
+        ],
+        "metrics": list(train.METRIC_NAMES),
+        "eval_metrics": ["ce", "pred_acc", "router_frac", "participation"],
+        "cache_lengths": {str(l): cl for l, cl in cache_lens.items()},
+        "routed_layers": mc.routed_layers(),
+        "n_params": mc.n_params(),
+        "artifacts": artifacts,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] {name}: done")
+    return bundle
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", action="append", default=[],
+                    help="named preset bundle(s) to build")
+    ap.add_argument("--default-set", action="store_true",
+                    help="build the bundles the examples/tests expect")
+    ap.add_argument("--model-json", help="inline ModelConfig JSON")
+    ap.add_argument("--train-json", help="inline TrainConfig JSON")
+    ap.add_argument("--name", help="bundle name for --model-json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-batches", default="1,4")
+    ap.add_argument("--max-decode-len", type=int, default=256)
+    ap.add_argument("--no-decode", action="store_true")
+    ap.add_argument("--no-train", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    decode_batches = tuple(
+        int(x) for x in args.decode_batches.split(",") if x
+    )
+    todo: list[tuple[str, ModelConfig, TrainConfig]] = []
+    presets = list(args.preset)
+    if args.default_set:
+        presets += ["baseline_tiny", "mod_tiny", "kernel_demo"]
+    for p in presets:
+        mc, tc = preset(p)
+        todo.append((p, mc, tc))
+    if args.model_json:
+        if not args.name:
+            raise SystemExit("--model-json requires --name")
+        mc = ModelConfig.from_json(json.loads(args.model_json))
+        tc = (TrainConfig.from_json(json.loads(args.train_json))
+              if args.train_json else TrainConfig())
+        todo.append((args.name, mc, tc))
+    if not todo:
+        raise SystemExit("nothing to build: pass --preset/--default-set/"
+                         "--model-json")
+
+    for name, mc, tc in todo:
+        build_bundle(
+            args.out_dir, name, mc, tc, seed=args.seed,
+            decode_batches=decode_batches,
+            max_decode_len=args.max_decode_len, force=args.force,
+            with_decode=not args.no_decode, with_train=not args.no_train,
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""MODCKPT1 — the tiny tensor-bundle format shared with the Rust side.
+
+Layout (little-endian):
+  magic    8 bytes  b"MODCKPT1"
+  count    u32      number of tensors
+  per tensor:
+    name_len u32, name utf-8 bytes
+    dtype    u8   (0 = f32, 1 = i32)
+    ndim     u8
+    dims     u32 * ndim
+    data     raw LE bytes (product(dims) * itemsize)
+
+Mirrored by `rust/src/coordinator/checkpoint.rs`; both sides round-trip in
+tests. Used for initial parameters (written by aot.py), training
+checkpoints, and exported router-decision dumps.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"MODCKPT1"
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError(f"{path}: bad magic (not a MODCKPT1 file)")
+        (count,) = struct.unpack("<I", f.read(4))
+        out: dict[str, np.ndarray] = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = np.dtype(_DTYPES[code])
+            n = int(np.prod(dims)) if dims else 1
+            data = f.read(n * dt.itemsize)
+            out[name] = np.frombuffer(data, dt).reshape(dims).copy()
+        return out

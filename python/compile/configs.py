@@ -1,0 +1,170 @@
+"""Model / training configuration shared by the JAX build path.
+
+The Rust side mirrors these fields in `rust/src/config/` (TOML). The AOT
+pipeline (`aot.py`) serializes the resolved config into the artifact
+manifest so the coordinator can verify it is driving the executables it
+thinks it is.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Any
+
+
+# Routing modes (mirrors rust/src/config/mod.rs::RoutingMode)
+ROUTING_NONE = "none"  # vanilla transformer: every token through every block
+ROUTING_MOD_EVERY = "mod_every"  # MoD routing on every block
+ROUTING_MOD_INTERLEAVED = "mod_interleaved"  # MoD on odd blocks (paper's best)
+ROUTING_STOCHASTIC = "stochastic"  # control: gaussian router weights (fig 3)
+
+# Feedforward modes
+FF_DENSE = "dense"
+FF_MOE = "moe"  # expert-choice MoE MLP
+FF_MODE_INTEGRATED = "mode_integrated"  # MoE with a no-op expert (fig 7)
+
+ROUTING_MODES = (
+    ROUTING_NONE,
+    ROUTING_MOD_EVERY,
+    ROUTING_MOD_INTERLEAVED,
+    ROUTING_STOCHASTIC,
+)
+FF_MODES = (FF_DENSE, FF_MOE, FF_MODE_INTEGRATED)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters of one transformer variant.
+
+    Defaults give a tiny CPU-trainable model; the isoFLOP ladders in
+    `rust/src/config/presets.rs` scale these up/down.
+    """
+
+    vocab_size: int = 259  # 256 bytes + BOS/EOS/PAD
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 512
+    seq_len: int = 256
+
+    # --- Mixture-of-Depths ---
+    routing: str = ROUTING_NONE
+    # Fraction of the sequence admitted to a routed block (paper's best: 0.125).
+    capacity_frac: float = 0.125
+    # Auxiliary BCE loss weight pushing router sigmoid to straddle 0.5 (sec 3.5).
+    aux_loss_weight: float = 0.01
+    # Train the causal top-k membership predictor (second sampling method).
+    train_predictor: bool = True
+    predictor_hidden: int = 64
+
+    # --- Mixture-of-Experts / MoDE (fig 7) ---
+    ff_mode: str = FF_DENSE
+    n_experts: int = 4
+    # staged MoDE = routing != none AND ff_mode == moe (MoD wraps the block,
+    # the block's MLP is an MoE). integrated MoDE = ff_mode == mode_integrated.
+    expert_capacity_frac: float = 0.25
+
+    # --- numerics ---
+    rope_theta: float = 10000.0
+    use_pallas: bool = False  # lower L1 pallas kernels into the HLO (interpret)
+
+    def __post_init__(self) -> None:
+        if self.routing not in ROUTING_MODES:
+            raise ValueError(f"bad routing mode {self.routing!r}")
+        if self.ff_mode not in FF_MODES:
+            raise ValueError(f"bad ff mode {self.ff_mode!r}")
+        if self.d_model != self.n_heads * self.d_head:
+            raise ValueError(
+                f"d_model ({self.d_model}) must equal n_heads*d_head "
+                f"({self.n_heads}*{self.d_head})"
+            )
+        if not (0.0 < self.capacity_frac <= 1.0):
+            raise ValueError(f"capacity_frac out of (0,1]: {self.capacity_frac}")
+
+    # ---- derived quantities ----
+    def capacity(self, seq_len: int | None = None) -> int:
+        """Tokens admitted to a routed block (the paper's k / C). At least 1."""
+        s = self.seq_len if seq_len is None else seq_len
+        return max(1, int(round(self.capacity_frac * s)))
+
+    def is_routed_block(self, layer: int) -> bool:
+        """Whether block `layer` (0-based) has MoD routing applied.
+
+        Interleaved routing puts MoD on odd blocks so that block 0 — which
+        consumes raw embeddings — always runs at full capacity, matching the
+        paper's "every other block" setup.
+        """
+        if self.routing in (ROUTING_NONE,):
+            return False
+        if self.routing == ROUTING_MOD_INTERLEAVED:
+            return layer % 2 == 1
+        return True  # mod_every / stochastic
+
+    def routed_layers(self) -> list[int]:
+        return [l for l in range(self.n_layers) if self.is_routed_block(l)]
+
+    def n_params(self) -> int:
+        """Exact parameter count (matches init_params; embeddings tied)."""
+        d, h, f, v = self.d_model, self.n_heads * self.d_head, self.d_ff, self.vocab_size
+        per_layer = 4 * d * h  # wq wk wv wo
+        if self.ff_mode == FF_DENSE:
+            per_layer += 2 * d * f
+        else:
+            n_e = self.n_experts
+            per_layer += n_e * 2 * d * f  # expert banks
+            per_layer += d * (n_e + (1 if self.ff_mode == FF_MODE_INTEGRATED else 0))
+        per_layer += 2 * d  # two rmsnorm gains
+        total = self.n_layers * per_layer
+        total += v * d  # tied embedding/unembedding
+        total += d  # final norm
+        for l in range(self.n_layers):
+            if self.is_routed_block(l):
+                total += d  # router projection
+                if self.train_predictor:
+                    # pred.w1 [d,h] + pred.b1 [h] + pred.w2 [h]
+                    total += d * self.predictor_hidden + 2 * self.predictor_hidden
+        return total
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict[str, Any]) -> "ModelConfig":
+        return ModelConfig(**d)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / schedule hyperparameters baked into the train_step HLO."""
+
+    batch_size: int = 8
+    learning_rate: float = 3e-3
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 50
+    total_steps: int = 500  # cosine period == total steps (paper sec 3.6)
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-9
+    grad_clip: float = 1.0
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict[str, Any]) -> "TrainConfig":
+        return TrainConfig(**d)
+
+
+def config_fingerprint(mc: ModelConfig, tc: TrainConfig | None = None) -> str:
+    """Stable content hash used by `make artifacts` incrementality."""
+    import hashlib
+
+    blob = json.dumps(
+        {"model": mc.to_json(), "train": tc.to_json() if tc else None},
+        sort_keys=True,
+    )
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]

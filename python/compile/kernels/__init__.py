@@ -1,0 +1,22 @@
+"""L1 Pallas kernels (interpret=True on CPU) + pure-jnp oracles.
+
+Import surface used by the L2 model (`compile.layers`):
+  causal_attention, fused_mlp, gather_tokens, scatter_add_weighted,
+  router_scores — each has a `*_ref` oracle in `ref.py`.
+"""
+
+from .attention import causal_attention
+from .mlp import fused_mlp
+from .mod_gather import gather_tokens, scatter_add_weighted
+from .router import router_scores
+from . import ref
+from . import vjp
+
+__all__ = [
+    "causal_attention",
+    "fused_mlp",
+    "gather_tokens",
+    "scatter_add_weighted",
+    "router_scores",
+    "ref",
+]

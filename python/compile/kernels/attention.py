@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: flash-style causal attention, tiled for TPU VMEM.
+
+Hardware adaptation (DESIGN.md §3): the paper's testbed batches full-capacity
+attention on TPU MXUs. We express the HBM↔VMEM schedule with a `BlockSpec`
+grid over (batch*heads, query blocks); each program streams KV blocks through
+VMEM scratch while maintaining the online-softmax running max/denominator —
+the TPU analogue of the warp-level tiling a CUDA flash kernel would use.
+
+Runs under `interpret=True` only (the CPU PJRT plugin cannot execute Mosaic
+custom-calls); structure — not interpret wallclock — is what matters here.
+VMEM budget at default tiles (BQ=BK=128, Dh≤128, f32):
+  q tile 128*128*4 = 64 KiB, k/v tiles 64 KiB each, logits 128*128*4 = 64 KiB,
+  accumulator + stats < 70 KiB  →  ≈ 320 KiB/program, far inside the ~16 MiB
+  VMEM envelope, leaving headroom for 8-deep double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _attn_kernel(pos_q_ref, pos_k_ref, valid_k_ref, q_ref, k_ref, v_ref, o_ref,
+                 *, block_k: int, sk: int, scale: float):
+    """One (batch*head, q-block) program: online softmax over KV blocks."""
+    bq, dh = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * scale
+    pos_q = pos_q_ref[...]  # [bq] int32 original positions
+
+    m = jnp.full((bq,), NEG_INF, jnp.float32)  # running max
+    l = jnp.zeros((bq,), jnp.float32)  # running denominator
+    acc = jnp.zeros((bq, dh), jnp.float32)
+
+    num_kb = pl.cdiv(sk, block_k)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k_blk = pl.load(k_ref, (pl.ds(kb * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.ds(kb * block_k, block_k), slice(None)))
+        pos_k = pl.load(pos_k_ref, (pl.ds(kb * block_k, block_k),))
+        valid = pl.load(valid_k_ref, (pl.ds(kb * block_k, block_k),))
+        logits = q @ k_blk.astype(jnp.float32).T  # [bq, block_k]
+        # Ragged tail: the last KV block may read past sk (interpret mode
+        # clamps, duplicating the final key) — mask those lanes explicitly.
+        kidx = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        in_bounds = kidx < sk
+        mask = ((pos_k[None, :] <= pos_q[:, None])
+                & (valid[None, :] > 0) & in_bounds[None, :])
+        # OOB v rows are NaN-padded in interpret mode; their softmax weight
+        # is 0 but 0*NaN = NaN in p @ v — zero them explicitly.
+        v_blk = jnp.where(in_bounds[:, None], v_blk.astype(jnp.float32), 0.0)
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        correction = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_new = l * correction + p.sum(axis=-1)
+        acc_new = acc * correction[:, None] + p @ v_blk.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m, l, acc))
+    # Guard fully-masked rows (no valid keys yet): emit zeros, not NaNs.
+    l_safe = jnp.where(l > 0.0, l, 1.0)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def causal_attention(q, k, v, pos_q=None, pos_k=None, valid_k=None, *,
+                     block_q: int = DEFAULT_BLOCK_Q,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = True):
+    """Pallas causal attention matching `ref.causal_attention_ref`.
+
+    q: [B,H,Sq,Dh]; k, v: [B,H,Sk,Dh]; optional original-position tensors
+    pos_q [B,Sq] / pos_k [B,Sk] and key validity valid_k [B,Sk].
+    """
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    if pos_q is None:
+        pos_q = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32)[None], (b, sq))
+    if pos_k is None:
+        pos_k = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (b, sk))
+    if valid_k is None:
+        valid_k = jnp.ones((b, sk), jnp.int32)
+    else:
+        valid_k = valid_k.astype(jnp.int32)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    # Merge batch and head axes into the grid's leading dimension.
+    qm = q.reshape(b * h, sq, dh)
+    km = k.reshape(b * h, sk, dh)
+    vm = v.reshape(b * h, sk, dh)
+    pos_qm = jnp.repeat(pos_q, h, axis=0)  # [B*H, Sq]
+    pos_km = jnp.repeat(pos_k, h, axis=0)
+    valid_m = jnp.repeat(valid_k, h, axis=0)
+
+    grid = (b * h, pl.cdiv(sq, block_q))
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, sk=sk,
+        scale=float(1.0 / (dh ** 0.5)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q), lambda g, i: (g, i)),      # pos_q
+            pl.BlockSpec((None, sk), lambda g, i: (g, 0)),           # pos_k
+            pl.BlockSpec((None, sk), lambda g, i: (g, 0)),           # valid_k
+            pl.BlockSpec((None, block_q, dh), lambda g, i: (g, i, 0)),  # q
+            pl.BlockSpec((None, sk, dh), lambda g, i: (g, 0, 0)),    # k
+            pl.BlockSpec((None, sk, dh), lambda g, i: (g, 0, 0)),    # v
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+        interpret=interpret,
+    )(pos_qm, pos_km, valid_m, qm, km, vm)
+    return out.reshape(b, h, sq, dh)

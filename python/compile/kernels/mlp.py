@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: fused position-wise feedforward (gelu(x@W1)@W2).
+
+Tiling (DESIGN.md §3 hardware adaptation): the grid runs over row blocks of
+the flattened token axis; each program keeps one [BM, D] activation tile, the
+[D, F] / [F, D] weight panels, and the [BM, F] hidden tile in VMEM, so the
+intermediate activation never round-trips to HBM — this is the fusion the
+paper's TPU stack gets from XLA, expressed explicitly as one kernel.
+
+VMEM at default tiles (BM=128, D=512, F=2048, f32):
+  x 256 KiB + w1 4 MiB + h 1 MiB + w2 4 MiB + out 256 KiB ≈ 9.5 MiB — fits
+  the ~16 MiB envelope; larger F must shrink BM or panel F (documented in
+  EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 128
+
+
+def _mlp_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    h = jax.nn.gelu(x @ w1_ref[...].astype(jnp.float32), approximate=True)
+    o_ref[...] = (h @ w2_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def fused_mlp(x, w1, w2, *, block_m: int = DEFAULT_BLOCK_M,
+              interpret: bool = True):
+    """Pallas fused MLP matching `ref.mlp_ref`. x: [..., D] -> [..., D]."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    f = w1.shape[1]
+    xm = x.reshape(-1, d)
+    m = xm.shape[0]
+    bm = min(block_m, m)
+    # Pad rows to a multiple of the block so the grid is exact.
+    pad = (-m) % bm
+    if pad:
+        xm = jnp.concatenate([xm, jnp.zeros((pad, d), xm.dtype)], axis=0)
+    grid = (xm.shape[0] // bm,)
+    out = pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xm.shape[0], d), x.dtype),
+        interpret=interpret,
+    )(xm, w1, w2)
+    if pad:
+        out = out[:m]
+    return out.reshape(orig_shape)

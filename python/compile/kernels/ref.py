@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the single source of numerical truth: the Pallas kernels in
+`attention.py`, `mlp.py`, `mod_gather.py` and `router.py` are asserted
+allclose against these in `python/tests/test_kernels.py` (hypothesis sweeps
+over shapes and dtypes), and the L2 model uses exactly these functions when
+`ModelConfig.use_pallas` is False — so a kernel bug can never silently
+diverge from the reference semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # additive-mask value; finite to stay NaN-free under f32/bf16
+
+
+def causal_attention_ref(q, k, v, *, pos_q=None, pos_k=None, valid_k=None):
+    """Multi-head scaled-dot-product attention with a causal mask.
+
+    q: [B, H, Sq, Dh], k/v: [B, H, Sk, Dh].
+    pos_q/pos_k: optional [B, Sq]/[B, Sk] int32 original positions — used by
+      the MoD compact path where the Sq/Sk axes hold a *gathered subset* of
+      the sequence; causality must be judged on original positions.
+    valid_k: optional [B, Sk] bool — False keys are masked out (padded slots,
+      KV-cache slots beyond the write head, tokens routed around the block).
+    """
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    if pos_q is None:
+        pos_q = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32)[None], (b, sq))
+    if pos_k is None:
+        pos_k = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (b, sk))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = pos_k[:, None, None, :] <= pos_q[:, None, :, None]  # [B,1,Sq,Sk]
+    if valid_k is not None:
+        mask = mask & valid_k[:, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    # Rows with no valid key (possible for padded queries) softmax over the
+    # NEG_INF plateau to a uniform distribution; callers mask those outputs.
+    weights = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", weights, v)
+
+
+def mlp_ref(x, w1, w2):
+    """Position-wise feedforward: gelu(x @ w1) @ w2. x: [..., D]."""
+    return jax.nn.gelu(x @ w1, approximate=True) @ w2
+
+
+def router_scores_ref(x, w_r):
+    """Scalar router weight per token: r_i = w_r . x_i. x: [B,S,D], w_r: [D]."""
+    return jnp.einsum("bsd,d->bs", x, w_r)
+
+
+def gather_tokens_ref(x, idx):
+    """Compact selected tokens: x [B,S,D], idx [B,C] int32 -> [B,C,D]."""
+    return jnp.take_along_axis(x, idx[:, :, None], axis=1)
+
+
+def scatter_add_weighted_ref(x, updates, idx, gates):
+    """Residual scatter of Eq. (1): out = x, out[idx] += gate * updates.
+
+    x: [B,S,D]; updates: [B,C,D]; idx: [B,C] int32 (unique per row);
+    gates: [B,C]. Matches the paper: only routed tokens receive the
+    gated block output; bypassed tokens pass through unchanged.
+    """
+    b, s, _ = x.shape
+    weighted = updates * gates[:, :, None]
+    onehot = (idx[:, :, None] == jnp.arange(s, dtype=idx.dtype)[None, None, :])
+    return x + jnp.einsum("bcs,bcd->bsd", onehot.astype(x.dtype), weighted)
+
+
+def topk_mask_ref(scores, k):
+    """Expert-choice selection: per-row top-k of `scores` [B,S].
+
+    Returns (idx [B,k] int32 sorted ascending, mask [B,S] bool).
+    Sorting ascending keeps the compacted sub-sequence in original temporal
+    order so the compact attention's causal mask stays a simple pos compare.
+    Stable argsort breaks ties toward earlier positions, keeping the
+    selection deterministic across backends.
+    """
+    b, s = scores.shape
+    # Selection is non-differentiable (integer indices); stop_gradient also
+    # sidesteps sort_key_val's VJP, which needs a batched-gather feature the
+    # pinned xla_client lacks. Gradients reach the scores via the gate
+    # multiply and the aux BCE loss, exactly as in the paper.
+    order = jnp.argsort(-jax.lax.stop_gradient(scores), axis=-1, stable=True)
+    idx = jnp.sort(order[:, :k].astype(jnp.int32), axis=-1)
+    mask = jnp.zeros((b, s), bool).at[jnp.arange(b)[:, None], idx].set(True)
+    return idx, mask
+
+
+def mod_block_ref(x, idx, gates, block_fn):
+    """Full MoD routed-block semantics (paper Eq. 1), reference composition.
+
+    x: [B,S,D]; idx: [B,C] (ascending original positions of the top-k);
+    gates: [B,C] router weights of the selected tokens; block_fn maps
+    ([B,C,D], pos [B,C]) -> [B,C,D] (self-attention + MLP over the
+    compacted tokens, causal in original positions).
+    """
+    xc = gather_tokens_ref(x, idx)
+    out = block_fn(xc, idx)
+    return scatter_add_weighted_ref(x, out, idx, gates)

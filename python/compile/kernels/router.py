@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: MoD router scoring r_i = w_r . x_i (paper §3.4).
+
+A deliberately thin matvec kernel: the router is a single linear projection
+to a scalar per token. Its cost is negligible next to the block it gates
+(D MACs/token vs ~12·D² MACs/token), but keeping it as an explicit kernel
+lets the scoring run fused over the token tile while the activations are
+already VMEM-resident, and gives the L3 decode server a single artifact for
+routing decisions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 256
+
+
+def _router_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # [bs, D]
+    w = w_ref[...].astype(jnp.float32)  # [D]
+    o_ref[...] = (x @ w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def router_scores(x, w_r, *, block_s: int = DEFAULT_BLOCK_S,
+                  interpret: bool = True):
+    """Pallas router scoring matching `ref.router_scores_ref`.
+
+    x: [B,S,D]; w_r: [D] -> scores [B,S].
+    """
+    b, s, d = x.shape
+    xm = x.reshape(b * s, d)
+    m = xm.shape[0]
+    bs = min(block_s, m)
+    pad = (-m) % bs
+    if pad:
+        xm = jnp.concatenate([xm, jnp.zeros((pad, d), xm.dtype)], axis=0)
+    out = pl.pallas_call(
+        _router_kernel,
+        grid=(xm.shape[0] // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xm.shape[0],), x.dtype),
+        interpret=interpret,
+    )(xm, w_r)
+    if pad:
+        out = out[:m]
+    return out.reshape(b, s)

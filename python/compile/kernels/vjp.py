@@ -1,0 +1,123 @@
+"""Differentiable wrappers: Pallas forward, oracle-derived backward.
+
+Interpret-mode `pallas_call` does not support `jax.grad` end-to-end in the
+pinned jax version (pl.load's abstract eval breaks under the transpose
+transformation). The standard production pattern applies anyway — flash
+attention et al. ship custom VJPs — so each kernel gets a `jax.custom_vjp`
+whose forward runs the L1 Pallas kernel and whose backward is derived by
+`jax.vjp` of the pure-jnp oracle. The two are asserted numerically equal in
+python/tests/test_kernels.py, so the pairing is sound by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import attention as _attention
+from . import mlp as _mlp
+from . import mod_gather as _mod_gather
+from . import router as _router
+from . import ref
+
+
+@jax.custom_vjp
+def causal_attention(q, k, v, pos_q, pos_k, valid_k):
+    return _attention.causal_attention(q, k, v, pos_q, pos_k, valid_k)
+
+
+def _attn_fwd(q, k, v, pos_q, pos_k, valid_k):
+    out = _attention.causal_attention(q, k, v, pos_q, pos_k, valid_k)
+    return out, (q, k, v, pos_q, pos_k, valid_k)
+
+
+def _attn_bwd(res, g):
+    q, k, v, pos_q, pos_k, valid_k = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.causal_attention_ref(
+            q_, k_, v_, pos_q=pos_q, pos_k=pos_k, valid_k=valid_k
+        ),
+        q, k, v,
+    )
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None, None
+
+
+causal_attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+@jax.custom_vjp
+def fused_mlp(x, w1, w2):
+    return _mlp.fused_mlp(x, w1, w2)
+
+
+def _mlp_fwd(x, w1, w2):
+    return _mlp.fused_mlp(x, w1, w2), (x, w1, w2)
+
+
+def _mlp_bwd(res, g):
+    x, w1, w2 = res
+    _, vjp = jax.vjp(ref.mlp_ref, x, w1, w2)
+    return vjp(g)
+
+
+fused_mlp.defvjp(_mlp_fwd, _mlp_bwd)
+
+
+@jax.custom_vjp
+def router_scores(x, w_r):
+    return _router.router_scores(x, w_r)
+
+
+def _router_fwd(x, w_r):
+    return _router.router_scores(x, w_r), (x, w_r)
+
+
+def _router_bwd(res, g):
+    x, w_r = res
+    _, vjp = jax.vjp(ref.router_scores_ref, x, w_r)
+    return vjp(g)
+
+
+router_scores.defvjp(_router_fwd, _router_bwd)
+
+
+@jax.custom_vjp
+def gather_tokens(x, idx):
+    return _mod_gather.gather_tokens(x, idx)
+
+
+def _gather_fwd(x, idx):
+    return _mod_gather.gather_tokens(x, idx), (x, idx)
+
+
+def _gather_bwd(res, g):
+    x, idx = res
+    _, vjp = jax.vjp(lambda x_: ref.gather_tokens_ref(x_, idx), x)
+    (dx,) = vjp(g)
+    return dx, None
+
+
+gather_tokens.defvjp(_gather_fwd, _gather_bwd)
+
+
+@jax.custom_vjp
+def scatter_add_weighted(x, updates, idx, gates):
+    return _mod_gather.scatter_add_weighted(x, updates, idx, gates)
+
+
+def _scatter_fwd(x, updates, idx, gates):
+    out = _mod_gather.scatter_add_weighted(x, updates, idx, gates)
+    return out, (x, updates, idx, gates)
+
+
+def _scatter_bwd(res, g):
+    x, updates, idx, gates = res
+    _, vjp = jax.vjp(
+        lambda x_, u_, g_: ref.scatter_add_weighted_ref(x_, u_, idx, g_),
+        x, updates, gates,
+    )
+    dx, du, dg = vjp(g)
+    return dx, du, None, dg
+
+
+scatter_add_weighted.defvjp(_scatter_fwd, _scatter_bwd)

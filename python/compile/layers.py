@@ -1,0 +1,127 @@
+"""L2 transformer substrate: RMSNorm, RoPE, attention and MLP layers.
+
+Every compute-heavy op has two implementations selected by
+`ModelConfig.use_pallas`:
+  * the L1 Pallas kernels from `compile.kernels` (interpret=True), or
+  * the pure-jnp oracles from `compile.kernels.ref` (XLA-fused fast path).
+Both are asserted numerically identical in `python/tests/`, so either can
+be baked into the AOT artifacts without changing semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+from .configs import ModelConfig
+
+
+def rmsnorm(x, gain, eps: float = 1e-6):
+    """Root-mean-square layer norm (no bias, no mean-centering)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def rope_angles(positions, d_head: int, theta: float):
+    """Rotary embedding angles for int32 positions [...]. -> [..., d_head/2]."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotate q/k by position. x: [B,H,S,Dh]; positions: [B,S] int32.
+
+    Positions are the *original* sequence positions — essential for MoD's
+    compacted blocks, where the S axis holds a gathered subset of tokens.
+    """
+    b, h, s, dh = x.shape
+    ang = rope_angles(positions, dh, theta)  # [B,S,Dh/2]
+    cos = jnp.cos(ang)[:, None, :, :]
+    sin = jnp.sin(ang)[:, None, :, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attention_layer(x, layer_params, positions, cfg: ModelConfig, valid=None):
+    """Pre-norm multi-head causal self-attention with RoPE.
+
+    x: [B,S,D] (possibly a compacted [B,C,D] MoD buffer); positions: [B,S]
+    original token positions; valid: optional [B,S] key-validity mask.
+    Returns the attention output (no residual add — callers own residuals).
+    """
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    xn = rmsnorm(x, layer_params["attn_norm"])
+    q = (xn @ layer_params["wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (xn @ layer_params["wk"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = (xn @ layer_params["wv"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.use_pallas:
+        valid_arr = (jnp.ones((b, s), jnp.int32) if valid is None
+                     else valid.astype(jnp.int32))
+        # custom-VJP wrapper: Pallas forward, oracle-derived backward
+        o = kernels.vjp.causal_attention(q, k, v, positions, positions,
+                                         valid_arr)
+    else:
+        o = ref.causal_attention_ref(
+            q, k, v, pos_q=positions, pos_k=positions, valid_k=valid
+        )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return o @ layer_params["wo"]
+
+
+def mlp_layer(x, layer_params, cfg: ModelConfig):
+    """Pre-norm dense feedforward. Returns the MLP output (no residual)."""
+    xn = rmsnorm(x, layer_params["mlp_norm"])
+    if cfg.use_pallas:
+        return kernels.vjp.fused_mlp(xn, layer_params["w1"],
+                                     layer_params["w2"])
+    return ref.mlp_ref(xn, layer_params["w1"], layer_params["w2"])
+
+
+def ff_apply(x, layer_params, cfg: ModelConfig):
+    """Feedforward with ff-mode dispatch (dense vs MoE); no residual add.
+
+    Used by both the MoD compact path (staged MoDE routes around blocks
+    whose MLP is itself an MoE) and the masked evaluation path.
+    """
+    from .configs import FF_DENSE, FF_MODE_INTEGRATED
+
+    if cfg.ff_mode == FF_DENSE:
+        return mlp_layer(x, layer_params, cfg)
+    from . import routing  # lazy: routing imports layers
+
+    out, _noop = routing.moe_mlp(
+        x, layer_params, cfg, integrated=cfg.ff_mode == FF_MODE_INTEGRATED
+    )
+    return out
+
+
+def block_fn(x, layer_params, positions, cfg: ModelConfig, valid=None):
+    """A full transformer block f = MLP ∘ Attn with internal residuals.
+
+    This is the `f` of the paper's Eq. (1). For MoD-compacted inputs the
+    caller applies the router-gate scaling and the outer residual; here we
+    keep the standard intra-block residual wiring so a capacity-T MoD block
+    is *exactly* a vanilla block.
+    """
+    x = x + attention_layer(x, layer_params, positions, cfg, valid=valid)
+    x = x + ff_apply(x, layer_params, cfg)
+    return x
+
+
+def embed(tokens, params):
+    """Token embedding lookup, scaled by sqrt(D) (tied-embedding convention)."""
+    emb = params["embed"]
+    d = emb.shape[1]
+    return emb[tokens] * jnp.sqrt(jnp.asarray(d, emb.dtype))
+
+
+def unembed(x, params):
+    """Final norm + tied unembedding -> logits over the vocab."""
+    xn = rmsnorm(x, params["final_norm"])
+    return xn @ params["embed"].T

@@ -1,0 +1,199 @@
+"""L2 model: the Mixture-of-Depths transformer and all paper variants.
+
+One `forward` covers every configuration in the paper's evaluation:
+  * vanilla baseline                     (routing="none", ff="dense")
+  * MoD, every block                     (routing="mod_every")
+  * MoD, every other block (paper best)  (routing="mod_interleaved")
+  * stochastic-routing control (fig 3)   (routing="stochastic")
+  * expert-choice MoE baseline (fig 7)   (ff="moe")
+  * staged MoDE (fig 7)                  (routing=mod_*, ff="moe")
+  * integrated MoDE (fig 7)              (routing="none", ff="mode_integrated")
+
+Parameters are a flat {name: array} dict with a deterministic ordering
+(`param_names`) — the same ordering the AOT manifest records and the Rust
+coordinator threads through the train_step executable.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .configs import (
+    FF_DENSE,
+    FF_MODE_INTEGRATED,
+    ModelConfig,
+    ROUTING_STOCHASTIC,
+)
+from . import layers, routing
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the AOT/manifest ordering."""
+    d, dh, h, f, v = (cfg.d_model, cfg.d_head, cfg.n_heads, cfg.d_ff,
+                      cfg.vocab_size)
+    specs: list[tuple[str, tuple[int, ...]]] = [("embed", (v, d))]
+    for l in range(cfg.n_layers):
+        p = f"layer_{l:02d}."
+        specs += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, h * dh)),
+            (p + "wk", (d, h * dh)),
+            (p + "wv", (d, h * dh)),
+            (p + "wo", (h * dh, d)),
+            (p + "mlp_norm", (d,)),
+        ]
+        if cfg.ff_mode == FF_DENSE:
+            specs += [(p + "w1", (d, f)), (p + "w2", (f, d))]
+        else:
+            cols = cfg.n_experts + (1 if cfg.ff_mode == FF_MODE_INTEGRATED else 0)
+            specs += [
+                (p + "moe_router", (d, cols)),
+                (p + "moe_w1", (cfg.n_experts, d, f)),
+                (p + "moe_w2", (cfg.n_experts, f, d)),
+            ]
+        if cfg.is_routed_block(l):
+            specs += [(p + "router_w", (d,))]
+            if cfg.train_predictor:
+                specs += [
+                    (p + "pred.w1", (d, cfg.predictor_hidden)),
+                    (p + "pred.b1", (cfg.predictor_hidden,)),
+                    (p + "pred.w2", (cfg.predictor_hidden,)),
+                ]
+    specs += [("final_norm", (d,))]
+    return specs
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    return [n for n, _ in param_specs(cfg)]
+
+
+def init_params(cfg: ModelConfig, key) -> dict[str, jax.Array]:
+    """Scaled-normal init; norm gains 1, biases 0, routers near-0."""
+    params: dict[str, jax.Array] = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".b1"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith("router_w") or name.endswith("moe_router"):
+            # small init: routing starts near-uniform, gates near 0
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 1 else shape[-2]
+            std = 1.0 / jnp.sqrt(jnp.asarray(max(1, fan_in), jnp.float32))
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    # deeper nets: scale output projections down by sqrt(2L)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(2.0 * cfg.n_layers, jnp.float32))
+    for l in range(cfg.n_layers):
+        p = f"layer_{l:02d}."
+        params[p + "wo"] = params[p + "wo"] * scale
+        if cfg.ff_mode == FF_DENSE:
+            params[p + "w2"] = params[p + "w2"] * scale
+        else:
+            params[p + "moe_w2"] = params[p + "moe_w2"] * scale
+    return params
+
+
+def layer_view(params: dict[str, Any], l: int) -> dict[str, Any]:
+    """Sub-dict view of one layer's tensors with the prefix stripped."""
+    p = f"layer_{l:02d}."
+    out = {k[len(p):]: v for k, v in params.items() if k.startswith(p)}
+    pred = {k[len("pred."):]: v for k, v in out.items() if k.startswith("pred.")}
+    if pred:
+        out["pred"] = pred
+    return out
+
+
+def flatten_params(cfg: ModelConfig, params: dict[str, Any]) -> list[jax.Array]:
+    return [params[n] for n in param_names(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> dict[str, Any]:
+    return dict(zip(param_names(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def full_block(x, lp, positions, cfg: ModelConfig, aux, l):
+    """Full-capacity block with ff-mode dispatch (dense / MoE / integrated)."""
+    x = x + layers.attention_layer(x, lp, positions, cfg)
+    if cfg.ff_mode == FF_DENSE:
+        return x + layers.mlp_layer(x, lp, cfg)
+    out, noop = routing.moe_mlp(
+        x, lp, cfg, integrated=cfg.ff_mode == FF_MODE_INTEGRATED
+    )
+    if noop is not None:
+        aux["noop_masks"][l] = noop
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def forward(params: dict[str, Any], tokens, cfg: ModelConfig, *,
+            rng=None, routing_mode: str = "topk"):
+    """Run the model. tokens: [B,S] int32.
+
+    routing_mode:
+      "topk"      — training-time expert-choice top-k (non-causal), with
+                    real capacity compaction (the FLOP-saving path).
+      "predictor" — causal: route where sigmoid(predictor logit) > 0.5 (the
+                    paper's autoregressive sampling scheme; masked blocks).
+      "router"    — causal: route where sigmoid(router score) > 0.5 (the
+                    aux-BCE sampling scheme).
+
+    Returns (logits [B,S,V], aux dict) with per-routed-block entries:
+      aux["topk_masks"][l]      participation mask actually used
+      aux["router_scores"][l]   raw router weights
+      aux["pred_logits"][l]     predictor logits (if cfg.train_predictor)
+      aux["noop_masks"][l]      integrated-MoDE no-op winners (full blocks)
+    """
+    b, s = tokens.shape
+    x = layers.embed(tokens, params)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    aux: dict[str, dict[int, jax.Array]] = {
+        "topk_masks": {}, "router_scores": {}, "pred_logits": {},
+        "noop_masks": {},
+    }
+
+    for l in range(cfg.n_layers):
+        lp = layer_view(params, l)
+        if not cfg.is_routed_block(l):
+            x = full_block(x, lp, positions, cfg, aux, l)
+            continue
+
+        if cfg.routing == ROUTING_STOCHASTIC:
+            assert rng is not None, "stochastic routing needs an rng"
+            rng, sub = jax.random.split(rng)
+            scores = routing.stochastic_scores((b, s), sub)
+        else:
+            scores = routing.compute_router_scores(x, lp["router_w"], cfg)
+        aux["router_scores"][l] = scores
+        if cfg.train_predictor and "pred" in lp:
+            aux["pred_logits"][l] = routing.predictor_logits(x, lp["pred"])
+
+        if routing_mode == "topk":
+            x, mask = routing.mod_block_compact(x, lp, cfg, scores)
+        else:
+            gate_src = (aux["pred_logits"][l] if routing_mode == "predictor"
+                        else scores)
+            mask = gate_src > 0.0  # sigmoid(.) > 0.5
+            x, _ = routing.routed_block_apply(
+                x, lp, cfg, route_mask=mask, gate_scores=scores
+            )
+        aux["topk_masks"][l] = mask
+
+    logits = layers.unembed(x, params)
+    return logits, aux

@@ -1,0 +1,207 @@
+"""L2 MoD routing machinery (paper §3.2–3.5).
+
+Implements:
+  * expert-choice top-k selection over scalar router weights (§3.3),
+  * the compact gather → block → gated scatter path of Eq. (1) (§3.4),
+  * the auxiliary BCE loss that centres router sigmoids on 0.5 (§3.5,
+    sampling method 1),
+  * the causal top-k-membership predictor (§3.5, sampling method 2),
+  * the stochastic-routing control (Gaussian router weights, §3.3 / fig 3),
+  * a masked (non-compacted) block used for predictor-based evaluation,
+    numerically equivalent to skip semantics at decode time.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+from .configs import ModelConfig, ROUTING_STOCHASTIC
+
+
+def compute_router_scores(x, w_r, cfg: ModelConfig):
+    """Raw router weights r_i = w_r . x_i  ([B,S,D],[D] -> [B,S])."""
+    if cfg.use_pallas:
+        return kernels.vjp.router_scores(x, w_r)
+    return ref.router_scores_ref(x, w_r)
+
+
+def select_topk(scores, capacity: int):
+    """Expert-choice selection: (idx [B,C] ascending, mask [B,S] bool)."""
+    return ref.topk_mask_ref(scores, capacity)
+
+
+def stochastic_scores(shape, key):
+    """Control router: weights ~ N(0,1), independent of content (fig 3)."""
+    return jax.random.normal(key, shape)
+
+
+def mod_block_compact(x, layer_params, cfg: ModelConfig, scores):
+    """The trained-model MoD path: Eq. (1) with real capacity compaction.
+
+    x: [B,S,D]; scores: [B,S] router weights for this block. Returns
+    (x_next, topk_mask). The block computes on only C = capacity tokens —
+    this is where the FLOP savings physically live.
+    """
+    from .layers import block_fn
+
+    b, s, _ = x.shape
+    c = cfg.capacity(s)
+    idx, mask = select_topk(scores, c)
+    gates = jnp.take_along_axis(scores, idx, axis=1)  # selected raw weights
+    if cfg.use_pallas:
+        xc = kernels.vjp.gather_tokens(x, idx)
+    else:
+        xc = ref.gather_tokens_ref(x, idx)
+    # f over the compacted tokens; causality judged on original positions.
+    out = block_fn(xc, layer_params, idx, cfg)
+    # Paper: multiply f's output by the router weight so the router sits on
+    # the gradient path; bypassing tokens keep the bare residual. Eq. (1)
+    # writes r*f(X̃)+x for selected tokens — block_fn already includes the
+    # internal residual x̃, so scatter adds gate*(out − x̃) + x̃ ... the paper
+    # gates the whole block output; we follow the paper exactly:
+    # x_next[i] = gate_i * f(x̃)_i + x_i, implemented as x += gate*f_out with
+    # f_out the *delta* form. To keep gradients shaped as published we gate
+    # the block's residual-inclusive output delta:
+    delta = out - xc
+    if cfg.use_pallas:
+        x_next = kernels.vjp.scatter_add_weighted(x, delta, idx, gates)
+    else:
+        x_next = ref.scatter_add_weighted_ref(x, delta, idx, gates)
+    return x_next, mask
+
+
+def mod_block_masked(x, layer_params, cfg: ModelConfig, route_mask):
+    """Skip-semantics MoD block without compaction (predictor-based eval).
+
+    route_mask: [B,S] bool — True tokens participate; False tokens pass the
+    residual through unchanged AND are excluded from the block's keys/values
+    (exactly the semantics the L3 decode server realizes by not invoking the
+    block executable). FLOP cost here is full-size — this path exists for
+    *evaluation parity*, not savings; savings are measured in the Rust
+    decode runtime and accounted analytically in `rust/src/flops/`.
+
+    Gate: sigmoid(router score) is NOT applied here; the caller supplies the
+    gate values it wants via `gates` multiplication outside if needed. For
+    predictor-routed evaluation we follow the paper and use the raw router
+    weight of each participating token.
+    """
+    from .layers import attention_layer, ff_apply
+
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    attn = attention_layer(x, layer_params, positions, cfg, valid=route_mask)
+    h = x + jnp.where(route_mask[:, :, None], attn, 0.0)
+    mlp = ff_apply(h, layer_params, cfg)
+    out = h + jnp.where(route_mask[:, :, None], mlp, 0.0)
+    return out
+
+
+def routed_block_apply(x, layer_params, cfg: ModelConfig, *, scores=None,
+                       route_mask=None, gate_scores=None):
+    """Unified entry: compact path when scores given, masked path otherwise.
+
+    Masked path applies Eq. (1)'s gating explicitly:
+      x_next = mask * (gate * (f(x) - x) ) + x
+    with f evaluated under key-masking.
+    """
+    if scores is not None:
+        return mod_block_compact(x, layer_params, cfg, scores)
+    assert route_mask is not None
+    out = mod_block_masked(x, layer_params, cfg, route_mask)
+    if gate_scores is not None:
+        delta = out - x
+        out = x + jnp.where(
+            route_mask[:, :, None], gate_scores[:, :, None] * delta, 0.0
+        )
+    return out, route_mask
+
+
+# ---------------------------------------------------------------------------
+# Sampling helpers (§3.5)
+# ---------------------------------------------------------------------------
+
+def router_aux_bce(scores, topk_mask):
+    """Method 1: BCE(router logits, stop_grad(top-k membership)).
+
+    Centres sigmoid(score) around 0.5: selected tokens are pushed above,
+    non-selected below — making `sigmoid(score) > 0.5` a causal routing
+    rule at sampling time.
+    """
+    targets = jax.lax.stop_gradient(topk_mask.astype(scores.dtype))
+    logp = jax.nn.log_sigmoid(scores)
+    lognp = jax.nn.log_sigmoid(-scores)
+    return -jnp.mean(targets * logp + (1.0 - targets) * lognp)
+
+
+def predictor_logits(x, pred_params):
+    """Method 2: small MLP predicting top-k membership from stop_grad(x).
+
+    x: [B,S,D] -> logits [B,S]. The stop-gradient keeps the predictor from
+    shaping the trunk representation (paper: "receives the same inputs ...
+    with a stop gradient").
+    """
+    xs = jax.lax.stop_gradient(x)
+    h = jax.nn.relu(xs @ pred_params["w1"] + pred_params["b1"])
+    return jnp.einsum("bsh,h->bs", h, pred_params["w2"])
+
+
+def predictor_bce(logits, topk_mask):
+    """BCE loss + accuracy for the membership predictor."""
+    targets = jax.lax.stop_gradient(topk_mask.astype(logits.dtype))
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    loss = -jnp.mean(targets * logp + (1.0 - targets) * lognp)
+    acc = jnp.mean(((logits > 0.0) == topk_mask).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Mixture-of-Experts / MoDE feedforward (§4.3, fig 7)
+# ---------------------------------------------------------------------------
+
+def moe_mlp(x, layer_params, cfg: ModelConfig, *, integrated: bool):
+    """Expert-choice MoE MLP; with `integrated`, expert 0 is a no-op.
+
+    x: [B,S,D]. Each (real) expert e selects its own top-C_e tokens from a
+    per-expert router column (expert-choice, perfect load balance), applies
+    its MLP, and scatters back gated by the router weight — the same Eq. (1)
+    machinery as MoD, vectorized over experts. With `integrated` (MoDE-
+    integrated), an extra no-op column competes for tokens: tokens it wins
+    are *explicitly* routed to the residual path, which the paper found
+    clearly better than capacity-starving real experts.
+
+    Returns (mlp_out, noop_mask or None): mlp_out excludes the residual
+    (caller adds x + out), noop_mask [B,S] marks tokens won by the no-op.
+    """
+    from .layers import rmsnorm
+
+    b, s, d = x.shape
+    n_e = cfg.n_experts
+    w_router = layer_params["moe_router"]  # [D, n_e (+1 if integrated)]
+    xn = rmsnorm(x, layer_params["mlp_norm"])
+    scores = jnp.einsum("bsd,de->bse", xn, w_router)  # [B,S,E(+1)]
+    c_e = max(1, int(round(cfg.expert_capacity_frac * s)))
+
+    out = jnp.zeros_like(x)
+    for e in range(n_e):
+        col = e + 1 if integrated else e
+        idx, _ = ref.topk_mask_ref(scores[:, :, col], c_e)
+        gates = jnp.take_along_axis(scores[:, :, col], idx, axis=1)
+        gates = jax.nn.sigmoid(gates)
+        xc = ref.gather_tokens_ref(xn, idx)
+        w1 = layer_params["moe_w1"][e]
+        w2 = layer_params["moe_w2"][e]
+        yc = ref.mlp_ref(xc, w1, w2)
+        out = ref.scatter_add_weighted_ref(out, yc, idx, gates)
+
+    noop_mask = None
+    if integrated:
+        # Tokens whose argmax column is the no-op expert: counted for
+        # analysis; they simply receive no expert update (residual path).
+        noop_mask = jnp.argmax(scores, axis=-1) == 0
+    return out, noop_mask

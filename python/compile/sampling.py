@@ -1,0 +1,176 @@
+"""L2 decode path: per-block single-token step functions for the L3 server.
+
+The Rust serving runtime (rust/src/serve/) is *layer-sliced*: each transformer
+block is a separate PJRT executable, and the coordinator decides per token
+per routed block — using the causal predictor (paper §3.5) — whether to
+invoke the block at all. A skipped block costs zero FLOPs and zero KV-cache
+slots, which is how the paper's decode-time compute/memory savings become
+measurable wall-clock effects on this testbed.
+
+Artifacts produced from this module (see aot.py):
+  embed_step            (tokens i32[B], embed)                  -> h f32[B,D]
+  block_decode_L{len}   one per distinct KV-cache length         -> see below
+  router_score_step     (h, router_w)                            -> r f32[B]
+  predictor_step        (h, w1, b1, w2)                          -> logit f32[B]
+  logits_head           (h, final_norm, embed)                   -> f32[B,V]
+
+KV caches are *compacted*: a routed block's cache has only
+ceil(capacity_frac * max_len) slots, with explicit per-slot original
+positions + validity — the MoD memory saving the paper observes (§4.1).
+Cache tensors stay on-device as PJRT buffers; only h and the routing
+scalars round-trip to the coordinator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .layers import apply_rope, rmsnorm
+from .kernels.ref import NEG_INF
+
+
+def embed_step_fn(cfg: ModelConfig):
+    """(tokens i32[B], embed f32[V,D]) -> (h f32[B,D],)."""
+
+    def fn(tokens, embed):
+        d = embed.shape[1]
+        return (embed[tokens] * jnp.sqrt(jnp.asarray(d, embed.dtype)),)
+
+    return fn
+
+
+def logits_head_fn(cfg: ModelConfig):
+    """(h f32[B,D], final_norm f32[D], embed f32[V,D]) -> (logits f32[B,V],)."""
+
+    def fn(h, final_norm, embed):
+        return (rmsnorm(h, final_norm) @ embed.T,)
+
+    return fn
+
+
+def router_score_step_fn(cfg: ModelConfig):
+    """(h f32[B,D], router_w f32[D]) -> (r f32[B],). Raw router weight."""
+
+    def fn(h, router_w):
+        return (h @ router_w,)
+
+    return fn
+
+
+def predictor_step_fn(cfg: ModelConfig):
+    """(h, pred.w1, pred.b1, pred.w2) -> (logit f32[B],).
+
+    sigmoid(logit) > 0.5  ⇔  "this token would be in the top-k" — the causal
+    routing rule the coordinator applies.
+    """
+
+    def fn(h, w1, b1, w2):
+        hid = jax.nn.relu(h @ w1 + b1)
+        return (hid @ w2,)
+
+    return fn
+
+
+def block_decode_fn(cfg: ModelConfig, cache_len: int):
+    """Single-token block step over a `cache_len`-slot compacted KV cache.
+
+    Signature (B = compiled batch size, L = cache_len, KD = n_heads*d_head):
+      (h f32[B,D], pos i32[B], gate f32[B], participate f32[B],
+       slot i32[B],
+       cache_k f32[B,L,KD], cache_v f32[B,L,KD],
+       cache_pos i32[B,L], cache_valid f32[B,L],
+       attn_norm, wq, wk, wv, wo, mlp_norm, w1, w2)
+      -> (h' f32[B,D], cache_k', cache_v', cache_pos', cache_valid')
+
+    Semantics per batch element b:
+      * participate[b]==0 → h'[b]=h[b]; the written cache slot is marked
+        invalid (the coordinator normally doesn't even call the executable
+        when the whole batch skips — this mask handles mixed batches).
+      * participate[b]==1 → the token's K/V (+pos, valid) are written at
+        slot[b]; attention runs over valid cache slots (the just-written
+        slot included, so the token attends to itself); output delta is
+        scaled by gate[b] (the raw router weight, Eq. 1) and added onto h.
+    """
+    h_heads, dh, d = cfg.n_heads, cfg.d_head, cfg.d_model
+
+    def write_slot(cache, value, slot):
+        """vmapped dynamic_update_slice along the L axis. cache [L,...]"""
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, value[None], slot, axis=0
+        )
+
+    def fn(h, pos, gate, participate, slot,
+           cache_k, cache_v, cache_pos, cache_valid,
+           attn_norm, wq, wk, wv, wo, mlp_norm, w1, w2):
+        b = h.shape[0]
+        xn = rmsnorm(h, attn_norm)
+        q = (xn @ wq).reshape(b, h_heads, 1, dh)
+        k = (xn @ wk).reshape(b, h_heads, 1, dh)
+        v = (xn @ wv).reshape(b, h_heads, 1, dh)
+        pos_b = pos[:, None]  # [B,1]
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k = apply_rope(k, pos_b, cfg.rope_theta)
+
+        # Write this token's K/V into its slot (validity = participate).
+        k_flat = k.transpose(0, 2, 1, 3).reshape(b, h_heads * dh)
+        v_flat = v.transpose(0, 2, 1, 3).reshape(b, h_heads * dh)
+        new_k = jax.vmap(write_slot)(cache_k, k_flat, slot)
+        new_v = jax.vmap(write_slot)(cache_v, v_flat, slot)
+        new_pos = jax.vmap(write_slot)(cache_pos, pos, slot)
+        new_valid = jax.vmap(write_slot)(cache_valid, participate, slot)
+
+        # Attend: q over all valid cache slots with pos <= current pos.
+        kc = new_k.reshape(b, cache_len, h_heads, dh).transpose(0, 2, 1, 3)
+        vc = new_v.reshape(b, cache_len, h_heads, dh).transpose(0, 2, 1, 3)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, h.dtype))
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, kc) * scale  # [B,H,1,L]
+        ok = (new_valid > 0.5) & (new_pos <= pos[:, None])
+        logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", w, vc)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, h_heads * dh) @ wo
+
+        h_mid = h + attn
+        hn = rmsnorm(h_mid, mlp_norm)
+        mlp = jax.nn.gelu(hn @ w1, approximate=True) @ w2
+        delta = attn + mlp  # total block update relative to input h
+
+        scaled = gate[:, None] * participate[:, None] * delta
+        h_out = h + scaled
+
+        # Non-participating elements must leave the cache untouched beyond
+        # the invalid marker; simplest correct form: select old vs new.
+        p3 = participate[:, None, None] > 0.5
+        p2 = participate[:, None] > 0.5
+        out_k = jnp.where(p3, new_k, cache_k)
+        out_v = jnp.where(p3, new_v, cache_v)
+        out_pos = jnp.where(p2, new_pos, cache_pos)
+        # valid flag: write 0/1 as computed (marks slot consumed or not)
+        return h_out, out_k, out_v, out_pos, new_valid
+
+    return fn
+
+
+def cache_lengths(cfg: ModelConfig, max_len: int,
+                  slack: float = 1.5) -> dict[int, int]:
+    """Per-layer compacted KV-cache length for a `max_len` generation.
+
+    Routed blocks get ceil(capacity_frac * max_len * slack) slots: threshold
+    routing admits ~capacity_frac of tokens in expectation (the aux BCE loss
+    centres router sigmoids on 0.5), but any given sequence can run hot, so
+    the cache carries `slack` headroom. If a layer's cache still fills up,
+    the Rust coordinator *drops* further tokens from that block (routes them
+    around it) — exactly the capacity-exceeded token-dropping semantics of
+    paper §3.1. `rust/src/serve/kv_cache.rs` owns that enforcement and
+    reports occupancy/drop statistics.
+    """
+    out = {}
+    for l in range(cfg.n_layers):
+        if cfg.is_routed_block(l):
+            c = int(-(-cfg.capacity_frac * max_len * slack // 1))  # ceil
+            out[l] = max(1, min(max_len, c))
+        else:
+            out[l] = max_len
+    return out

@@ -1,0 +1,215 @@
+"""L2 training step: loss, AdamW + cosine schedule, one-executable step.
+
+The whole step — forward, total loss (CE + aux BCE + predictor BCE),
+backward, gradient clip, AdamW update with warmup+cosine LR — lowers into a
+single HLO executable that the Rust trainer invokes per batch. Parameter /
+optimizer-state tensors cross the boundary as flat ordered lists (see
+`model.param_names`).
+
+Metrics tensor layout (f32[8], `METRIC_NAMES`): the Rust side indexes this
+by position, so the order is part of the artifact ABI.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, TrainConfig, ROUTING_STOCHASTIC
+from . import model, routing
+
+METRIC_NAMES = (
+    "loss",          # 0: total optimized loss
+    "ce",            # 1: next-token cross entropy (the paper's objective)
+    "aux_bce",       # 2: router aux BCE (sec 3.5 method 1)
+    "pred_bce",      # 3: predictor BCE (sec 3.5 method 2)
+    "pred_acc",      # 4: predictor top-k membership accuracy
+    "router_frac",   # 5: fraction of router sigmoids > 0.5 (fig 5 histogram)
+    "grad_norm",     # 6: pre-clip global grad norm
+    "lr",            # 7: learning rate this step
+)
+
+
+def cross_entropy(logits, tokens):
+    """Next-token CE in nats/token; predicts tokens[:,1:] from logits[:,:-1]."""
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def total_loss(params, tokens, cfg: ModelConfig, rng=None):
+    """CE + aux losses. Returns (loss, metrics dict)."""
+    logits, aux = model.forward(params, tokens, cfg, rng=rng,
+                                routing_mode="topk")
+    ce = cross_entropy(logits, tokens)
+    loss = ce
+
+    aux_bce = jnp.zeros((), jnp.float32)
+    pred_bce = jnp.zeros((), jnp.float32)
+    pred_acc = jnp.zeros((), jnp.float32)
+    router_frac = jnp.zeros((), jnp.float32)
+    routed = sorted(aux["topk_masks"].keys())
+    if routed and cfg.routing != ROUTING_STOCHASTIC:
+        for l in routed:
+            scores = aux["router_scores"][l]
+            mask = aux["topk_masks"][l]
+            aux_bce = aux_bce + routing.router_aux_bce(scores, mask)
+            router_frac = router_frac + jnp.mean(
+                (scores > 0.0).astype(jnp.float32)
+            )
+            if l in aux["pred_logits"]:
+                pb, pa = routing.predictor_bce(aux["pred_logits"][l], mask)
+                pred_bce = pred_bce + pb
+                pred_acc = pred_acc + pa
+        n = float(len(routed))
+        aux_bce, router_frac = aux_bce / n, router_frac / n
+        if aux["pred_logits"]:
+            m = float(len(aux["pred_logits"]))
+            pred_bce, pred_acc = pred_bce / m, pred_acc / m
+        loss = loss + cfg.aux_loss_weight * aux_bce + pred_bce
+
+    metrics = {
+        "loss": loss, "ce": ce, "aux_bce": aux_bce, "pred_bce": pred_bce,
+        "pred_acc": pred_acc, "router_frac": router_frac,
+    }
+    return loss, metrics
+
+
+def lr_schedule(step, tc: TrainConfig):
+    """Linear warmup → cosine decay to min_lr_frac over total_steps."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, tc.warmup_steps))
+    t = jnp.clip((step - tc.warmup_steps)
+                 / max(1, tc.total_steps - tc.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = tc.min_lr_frac + (1.0 - tc.min_lr_frac) * cos
+    return tc.learning_rate * warm * frac
+
+
+def _is_decayed(name: str) -> bool:
+    """Weight decay applies to matrices, not norms/biases/routers."""
+    return not (
+        name.endswith("_norm") or name.endswith(".b1")
+        or name.endswith("router_w")
+    )
+
+
+def adamw_update(cfg: ModelConfig, tc: TrainConfig, params, grads, m, v, step):
+    """One AdamW step; returns (params', m', v', lr, grad_norm)."""
+    names = model.param_names(cfg)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(grads[n])) for n in names))
+    clip = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(step, tc)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - tc.beta1 ** t
+    bc2 = 1.0 - tc.beta2 ** t
+    new_p, new_m, new_v = {}, {}, {}
+    for n in names:
+        g = grads[n] * clip
+        m_n = tc.beta1 * m[n] + (1.0 - tc.beta1) * g
+        v_n = tc.beta2 * v[n] + (1.0 - tc.beta2) * jnp.square(g)
+        upd = (m_n / bc1) / (jnp.sqrt(v_n / bc2) + tc.eps)
+        p = params[n]
+        if _is_decayed(n):
+            upd = upd + tc.weight_decay * p
+        new_p[n] = p - lr * upd
+        new_m[n], new_v[n] = m_n, v_n
+    return new_p, new_m, new_v, lr, gnorm
+
+
+def train_step_fn(cfg: ModelConfig, tc: TrainConfig):
+    """Build the flat-signature train step for AOT lowering.
+
+    Signature (all leading lists flattened in `model.param_names` order):
+      (tokens i32[B,S], step i32[], seed i32[], *params, *m, *v)
+        -> (metrics f32[8], *params', *m', *v')
+    `seed` feeds the stochastic-routing control; ignored otherwise.
+    """
+    names = model.param_names(cfg)
+    n = len(names)
+
+    def step_fn(tokens, step, seed, *flat):
+        params = dict(zip(names, flat[:n]))
+        m = dict(zip(names, flat[n:2 * n]))
+        v = dict(zip(names, flat[2 * n:3 * n]))
+        rng = jax.random.PRNGKey(0)
+        if cfg.routing == ROUTING_STOCHASTIC:
+            rng = jax.random.fold_in(jax.random.PRNGKey(17), seed)
+
+        def loss_fn(p):
+            return total_loss(p, tokens, cfg, rng=rng)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        new_p, new_m, new_v, lr, gnorm = adamw_update(
+            cfg, tc, params, grads, m, v, step
+        )
+        mvec = jnp.stack([
+            metrics["loss"], metrics["ce"], metrics["aux_bce"],
+            metrics["pred_bce"], metrics["pred_acc"],
+            metrics["router_frac"], gnorm, lr,
+        ]).astype(jnp.float32)
+        # Anchor `seed` into the graph even when routing is deterministic:
+        # jax.jit prunes unused args at lowering, which would change the
+        # executable's arity per config and break the fixed Rust-side ABI.
+        mvec = mvec + seed.astype(jnp.float32) * 0.0
+        outs = [mvec]
+        outs += [new_p[k] for k in names]
+        outs += [new_m[k] for k in names]
+        outs += [new_v[k] for k in names]
+        return tuple(outs)
+
+    return step_fn
+
+
+def eval_step_fn(cfg: ModelConfig, routing_mode: str = "topk"):
+    """Held-out evaluation: (tokens, *params) -> metrics f32[4].
+
+    metrics = [ce, pred_acc, router_frac, participation] where
+    participation is the mean fraction of tokens actually routed *through*
+    routed blocks under the given routing_mode (fig 6 FLOP accounting).
+    """
+    names = model.param_names(cfg)
+
+    def fn(tokens, *flat):
+        params = dict(zip(names, flat))
+        logits, aux = model.forward(
+            params, tokens, cfg,
+            rng=jax.random.PRNGKey(0), routing_mode=routing_mode,
+        )
+        ce = cross_entropy(logits, tokens)
+        # Anchor every param into the graph (stochastic routing never reads
+        # router_w; arg pruning at lowering would break the fixed ABI).
+        ce = ce + sum(jnp.sum(p) for p in flat) * 0.0
+        pred_acc = jnp.zeros((), jnp.float32)
+        frac = jnp.zeros((), jnp.float32)
+        part = jnp.zeros((), jnp.float32)
+        routed = sorted(aux["topk_masks"].keys())
+        if routed:
+            for l in routed:
+                mask = aux["topk_masks"][l]
+                part = part + jnp.mean(mask.astype(jnp.float32))
+                frac = frac + jnp.mean(
+                    (aux["router_scores"][l] > 0.0).astype(jnp.float32)
+                )
+                if l in aux["pred_logits"]:
+                    # accuracy of predictor vs the mode's own mask
+                    _, pa = routing.predictor_bce(aux["pred_logits"][l], mask)
+                    pred_acc = pred_acc + pa
+            nl = float(len(routed))
+            part, frac = part / nl, frac / nl
+            if aux["pred_logits"]:
+                pred_acc = pred_acc / float(len(aux["pred_logits"]))
+        return (jnp.stack([ce, pred_acc, frac, part]).astype(jnp.float32),)
+
+    return fn
+
+
+def init_opt_state(cfg: ModelConfig, params) -> tuple[dict, dict]:
+    """Zero-initialized AdamW first/second moments."""
+    zeros = {n: jnp.zeros_like(params[n]) for n in model.param_names(cfg)}
+    return zeros, {n: jnp.zeros_like(v) for n, v in zeros.items()}

@@ -1,0 +1,88 @@
+"""AOT bundle ABI checks (pure JSON/file checks — no jax tracing).
+
+Validates the artifact bundles `make artifacts` produced: manifest
+structure, param-spec consistency with the config, cache-length rules,
+artifact files present, and init checkpoint completeness. These are the
+same invariants the Rust `Bundle::open` enforces — tested here so a broken
+build fails in pytest before any Rust runs.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import ckpt
+from compile.configs import ModelConfig
+from compile.model import param_specs
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+BUNDLES = ["baseline_tiny", "mod_tiny", "kernel_demo"]
+
+
+def bundle_dir(name):
+    d = os.path.join(ARTIFACTS, name)
+    if not os.path.exists(os.path.join(d, "manifest.json")):
+        pytest.skip(f"bundle {name} not built (run `make artifacts`)")
+    return d
+
+
+@pytest.mark.parametrize("name", BUNDLES)
+def test_manifest_parses_and_matches_config(name):
+    d = bundle_dir(name)
+    m = json.load(open(os.path.join(d, "manifest.json")))
+    cfg = ModelConfig.from_json(m["model"])
+    # param specs match a freshly computed ABI
+    fresh = param_specs(cfg)
+    assert [p["name"] for p in m["params"]] == [n for n, _ in fresh]
+    assert [tuple(p["shape"]) for p in m["params"]] == [s for _, s in fresh]
+    assert m["n_params"] == cfg.n_params()
+    assert m["metrics"][0] == "loss"
+
+
+@pytest.mark.parametrize("name", BUNDLES)
+def test_artifact_files_exist(name):
+    d = bundle_dir(name)
+    m = json.load(open(os.path.join(d, "manifest.json")))
+
+    def walk(node):
+        if isinstance(node, str):
+            assert os.path.exists(os.path.join(d, node)), node
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+
+    walk(m["artifacts"])
+
+
+@pytest.mark.parametrize("name", BUNDLES)
+def test_init_ckpt_complete(name):
+    d = bundle_dir(name)
+    m = json.load(open(os.path.join(d, "manifest.json")))
+    tensors = ckpt.load(os.path.join(d, "init.ckpt"))
+    for p in m["params"]:
+        assert p["name"] in tensors, p["name"]
+        assert list(tensors[p["name"]].shape) == p["shape"]
+
+
+@pytest.mark.parametrize("name", BUNDLES)
+def test_cache_lengths_follow_routing(name):
+    d = bundle_dir(name)
+    m = json.load(open(os.path.join(d, "manifest.json")))
+    cfg = ModelConfig.from_json(m["model"])
+    max_len = m["max_decode_len"]
+    for l_str, cl in m["cache_lengths"].items():
+        layer = int(l_str)
+        if cfg.is_routed_block(layer):
+            assert cl <= max_len
+            if cfg.capacity_frac < 0.5:
+                assert cl < max_len, f"routed layer {layer} not compacted"
+        else:
+            assert cl == max_len
+
+
+def test_hlo_text_is_parseable_header():
+    d = bundle_dir("mod_tiny")
+    text = open(os.path.join(d, "train_step.hlo.txt")).read(200)
+    assert text.startswith("HloModule"), "artifact is not HLO text"

@@ -1,0 +1,207 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; fixed-seed examples pin the edge cases
+(single token, capacity 1, full capacity, non-divisible block sizes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-5
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3), h=st.integers(1, 3),
+    s=st.sampled_from([1, 3, 8, 17, 64]),
+    dh=st.sampled_from([4, 16, 32]),
+)
+def test_attention_matches_ref(b, h, s, dh):
+    q, k, v = (rand(i, (b, h, s, dh)) for i in range(3))
+    got = kernels.causal_attention(q, k, v, block_q=16, block_k=16)
+    want = ref.causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+def test_attention_respects_causality():
+    """Perturbing a future token must not change earlier outputs."""
+    b, h, s, dh = 1, 2, 12, 8
+    q, k, v = (rand(i, (b, h, s, dh)) for i in range(3))
+    base = kernels.causal_attention(q, k, v)
+    k2 = k.at[:, :, -1].add(100.0)
+    v2 = v.at[:, :, -1].add(100.0)
+    pert = kernels.causal_attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, :-1], pert[:, :, :-1], atol=ATOL)
+    assert not np.allclose(base[:, :, -1], pert[:, :, -1], atol=1e-3)
+
+
+def test_attention_valid_mask_excludes_keys():
+    """Keys with valid=0 behave as if absent."""
+    b, h, s, dh = 2, 2, 16, 8
+    q, k, v = (rand(i, (b, h, s, dh)) for i in range(3))
+    valid = jnp.asarray(np.random.RandomState(0).rand(b, s) > 0.3)
+    valid = valid.at[:, 0].set(True)  # every query has >= 1 valid key
+    got = kernels.causal_attention(q, k, v, valid_k=valid)
+    want = ref.causal_attention_ref(q, k, v, valid_k=valid)
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+def test_attention_gathered_positions():
+    """MoD compact path: non-contiguous original positions drive the mask."""
+    b, h, c, dh = 2, 2, 6, 8
+    q, k, v = (rand(i, (b, h, c, dh)) for i in range(3))
+    pos = jnp.asarray([[0, 3, 4, 7, 10, 15], [1, 2, 5, 6, 11, 12]], jnp.int32)
+    got = kernels.causal_attention(q, k, v, pos, pos)
+    want = ref.causal_attention_ref(q, k, v, pos_q=pos, pos_k=pos)
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+def test_attention_single_token():
+    q, k, v = (rand(i, (1, 1, 1, 4)) for i in range(3))
+    got = kernels.causal_attention(q, k, v)
+    np.testing.assert_allclose(got, v, atol=ATOL)  # softmax over self only
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.sampled_from([1, 5, 16, 33, 128]),
+    d=st.sampled_from([8, 32]),
+    f=st.sampled_from([16, 64]),
+)
+def test_mlp_matches_ref(rows, d, f):
+    x = rand(0, (rows, d))
+    w1 = rand(1, (d, f)) * 0.2
+    w2 = rand(2, (f, d)) * 0.2
+    got = kernels.fused_mlp(x, w1, w2, block_m=16)
+    np.testing.assert_allclose(got, ref.mlp_ref(x, w1, w2), atol=ATOL)
+
+
+def test_mlp_batched_shape():
+    x = rand(0, (2, 7, 16))
+    w1, w2 = rand(1, (16, 32)) * 0.2, rand(2, (32, 16)) * 0.2
+    got = kernels.fused_mlp(x, w1, w2, block_m=4)
+    assert got.shape == (2, 7, 16)
+    np.testing.assert_allclose(got, ref.mlp_ref(x, w1, w2), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# router scores
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), s=st.sampled_from([1, 7, 32, 100]),
+       d=st.sampled_from([8, 64]))
+def test_router_scores_match_ref(b, s, d):
+    x = rand(0, (b, s, d))
+    w = rand(1, (d,))
+    got = kernels.router_scores(x, w, block_s=16)
+    np.testing.assert_allclose(got, ref.router_scores_ref(x, w), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# gather / scatter (the MoD data movement)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 3), s=st.sampled_from([4, 16, 50]),
+       frac=st.sampled_from([0.1, 0.25, 0.5, 1.0]), d=st.sampled_from([4, 32]))
+def test_gather_scatter_roundtrip(b, s, frac, d):
+    c = max(1, int(round(frac * s)))
+    x = rand(0, (b, s, d))
+    scores = rand(1, (b, s))
+    idx, mask = ref.topk_mask_ref(scores, c)
+    got = kernels.gather_tokens(x, idx)
+    want = ref.gather_tokens_ref(x, idx)
+    np.testing.assert_allclose(got, want, atol=0)
+
+    upd = rand(2, (b, c, d))
+    gates = rand(3, (b, c))
+    got2 = kernels.scatter_add_weighted(x, upd, idx, gates)
+    want2 = ref.scatter_add_weighted_ref(x, upd, idx, gates)
+    np.testing.assert_allclose(got2, want2, atol=ATOL)
+
+
+def test_scatter_leaves_unselected_untouched():
+    b, s, c, d = 2, 10, 3, 4
+    x = rand(0, (b, s, d))
+    idx = jnp.asarray([[1, 4, 7], [0, 5, 9]], jnp.int32)
+    upd = jnp.ones((b, c, d))
+    gates = jnp.ones((b, c))
+    out = kernels.scatter_add_weighted(x, upd, idx, gates)
+    sel = np.zeros((b, s), bool)
+    for bi in range(b):
+        sel[bi, np.asarray(idx)[bi]] = True
+    np.testing.assert_allclose(np.asarray(out)[~sel], np.asarray(x)[~sel])
+    np.testing.assert_allclose(np.asarray(out)[sel], np.asarray(x)[sel] + 1.0,
+                               atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# top-k selection invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 4), s=st.integers(2, 40), data=st.data())
+def test_topk_invariants(b, s, data):
+    k = data.draw(st.integers(1, s))
+    scores = rand(0, (b, s))
+    idx, mask = ref.topk_mask_ref(scores, k)
+    idx_np, mask_np, sc = np.asarray(idx), np.asarray(mask), np.asarray(scores)
+    # exactly k selected, indices strictly ascending (unique + ordered)
+    assert mask_np.sum(axis=1).tolist() == [k] * b
+    assert np.all(np.diff(idx_np, axis=1) > 0)
+    # selected scores dominate unselected scores per row
+    for bi in range(b):
+        sel = sc[bi][mask_np[bi]]
+        unsel = sc[bi][~mask_np[bi]]
+        if unsel.size:
+            assert sel.min() >= unsel.max() - 1e-6
+
+
+def test_topk_selects_largest():
+    scores = jnp.asarray([[0.1, 5.0, -2.0, 3.0]])
+    idx, mask = ref.topk_mask_ref(scores, 2)
+    assert idx.tolist() == [[1, 3]]
+    assert mask.tolist() == [[False, True, False, True]]
+
+
+# ---------------------------------------------------------------------------
+# composed MoD block (gather -> f -> gated scatter)
+# ---------------------------------------------------------------------------
+
+def test_mod_block_ref_composition():
+    """mod_block_ref == manual composition with a linear f."""
+    b, s, c, d = 2, 12, 4, 8
+    x = rand(0, (b, s, d))
+    scores = rand(1, (b, s))
+    idx, mask = ref.topk_mask_ref(scores, c)
+    gates = jnp.take_along_axis(scores, idx, axis=1)
+    w = rand(2, (d, d)) * 0.3
+
+    out = ref.mod_block_ref(x, idx, gates, lambda xc, pos: xc @ w)
+    xc = ref.gather_tokens_ref(x, idx)
+    want = ref.scatter_add_weighted_ref(x, xc @ w, idx, gates)
+    np.testing.assert_allclose(out, want, atol=ATOL)
+    # bypassed tokens unchanged
+    sel = np.asarray(mask)
+    np.testing.assert_allclose(np.asarray(out)[~sel], np.asarray(x)[~sel])

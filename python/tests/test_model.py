@@ -1,0 +1,225 @@
+"""L2 model correctness: variants, routing semantics, paper Eq. (1) wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import ModelConfig, TrainConfig
+from compile import layers, model, routing, train
+
+jax.config.update("jax_platform_name", "cpu")
+
+MICRO = dict(vocab_size=37, d_model=32, n_layers=4, n_heads=2, d_head=16,
+             d_ff=64, seq_len=32)
+
+
+def mk(key=0, **kw):
+    cfg = ModelConfig(**MICRO, **kw)
+    params = model.init_params(cfg, jax.random.PRNGKey(key))
+    return cfg, params
+
+
+def toks(cfg, b=2, key=1):
+    return jax.random.randint(jax.random.PRNGKey(key), (b, cfg.seq_len), 0,
+                              cfg.vocab_size)
+
+
+ALL_VARIANTS = [
+    dict(routing="none"),
+    dict(routing="mod_interleaved", capacity_frac=0.25),
+    dict(routing="mod_every", capacity_frac=0.25),
+    dict(routing="stochastic", capacity_frac=0.25, train_predictor=False),
+    dict(ff_mode="moe", n_experts=2),
+    dict(routing="mod_interleaved", capacity_frac=0.25, ff_mode="moe",
+         n_experts=2),
+    dict(ff_mode="mode_integrated", n_experts=2),
+]
+
+
+@pytest.mark.parametrize("kw", ALL_VARIANTS, ids=lambda kw: "-".join(
+    f"{k}={v}" for k, v in kw.items()))
+def test_forward_finite_all_variants(kw):
+    cfg, params = mk(**kw)
+    logits, aux = model.forward(params, toks(cfg), cfg,
+                                rng=jax.random.PRNGKey(3))
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_param_count_matches_config():
+    for kw in ALL_VARIANTS:
+        cfg, params = mk(**kw)
+        n = sum(int(np.prod(p.shape)) for p in params.values())
+        assert n == cfg.n_params(), kw
+
+
+def test_param_flatten_roundtrip():
+    cfg, params = mk(routing="mod_interleaved")
+    flat = model.flatten_params(cfg, params)
+    back = model.unflatten_params(cfg, flat)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_mod_bypassed_tokens_keep_residual():
+    """A token routed around every MoD block with zero full blocks is
+    untouched: capacity-0-like behaviour via mod_every on a 1-layer net."""
+    cfg = ModelConfig(**{**MICRO, "n_layers": 1},
+                      routing="mod_every", capacity_frac=0.25)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    t = toks(cfg, b=1)
+    x_in = layers.embed(t, params)
+    logits, aux = model.forward(params, t, cfg)
+    mask = np.asarray(aux["topk_masks"][0][0])
+    # bypassed positions: unembed(embed(x)) exactly
+    want = layers.unembed(x_in, params)
+    got, ref_ = np.asarray(logits[0]), np.asarray(want[0])
+    np.testing.assert_allclose(got[~mask], ref_[~mask], atol=1e-5)
+    assert not np.allclose(got[mask], ref_[mask], atol=1e-3)
+
+
+def test_capacity_full_equals_vanilla():
+    """capacity_frac=1.0 MoD with gate forced to 1 reduces to vanilla.
+
+    We verify structurally: the compact path with C=S selects every token,
+    so the only difference from vanilla is the gate multiply. With router
+    weights zeroed the gate is 0 => output == pure residual stream.
+    """
+    cfg, params = mk(routing="mod_every", capacity_frac=1.0)
+    for l in range(cfg.n_layers):
+        params[f"layer_{l:02d}.router_w"] = jnp.zeros_like(
+            params[f"layer_{l:02d}.router_w"])
+    t = toks(cfg, b=1)
+    logits, aux = model.forward(params, t, cfg)
+    x_in = layers.embed(t, params)
+    want = layers.unembed(x_in, params)  # gate 0 -> nothing added
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               atol=1e-4)
+
+
+def test_routed_block_capacity_exact():
+    cfg, params = mk(routing="mod_every", capacity_frac=0.25)
+    logits, aux = model.forward(params, toks(cfg), cfg)
+    c = cfg.capacity()
+    for l, mask in aux["topk_masks"].items():
+        assert np.asarray(mask).sum(axis=1).tolist() == [c, c]
+
+
+def test_interleaved_routes_odd_blocks_only():
+    cfg, _ = mk(routing="mod_interleaved")
+    assert cfg.routed_layers() == [1, 3]
+    cfg2, _ = mk(routing="mod_every")
+    assert cfg2.routed_layers() == [0, 1, 2, 3]
+
+
+def test_router_and_predictor_modes_run_causally():
+    """Causal modes: future-token perturbation cannot change past logits."""
+    cfg, params = mk(routing="mod_interleaved", capacity_frac=0.25)
+    t = toks(cfg, b=1)
+    t2 = t.at[0, -1].set((t[0, -1] + 1) % cfg.vocab_size)
+    for mode in ("router", "predictor"):
+        a, _ = model.forward(params, t, cfg, routing_mode=mode)
+        b_, _ = model.forward(params, t2, cfg, routing_mode=mode)
+        np.testing.assert_allclose(np.asarray(a[0, :-1]),
+                                   np.asarray(b_[0, :-1]), atol=1e-5)
+
+
+def test_topk_mode_is_noncausal():
+    """The training-time top-k IS non-causal (the paper's sampling problem):
+    a future token can evict a past token from the top-k."""
+    cfg, params = mk(routing="mod_every", capacity_frac=0.125)
+    # train a moment so router weights are non-trivial? not needed: random
+    # router weights already make selection content-dependent.
+    t = toks(cfg, b=1)
+    t2 = t.at[0, -1].set((t[0, -1] + 7) % cfg.vocab_size)
+    a, _ = model.forward(params, t, cfg, routing_mode="topk")
+    b_, _ = model.forward(params, t2, cfg, routing_mode="topk")
+    # at least some earlier-position logit moved
+    assert not np.allclose(np.asarray(a[0, :-1]), np.asarray(b_[0, :-1]),
+                           atol=1e-6)
+
+
+def test_aux_bce_centers_sigmoid():
+    """Gradient of the aux BCE pushes selected scores up, unselected down."""
+    scores = jnp.asarray([[1.0, -1.0, 0.5, -0.5]])
+    _, mask = routing.select_topk(scores, 2)  # selects 1.0 and 0.5
+
+    g = jax.grad(lambda s: routing.router_aux_bce(s, mask))(scores)
+    g = np.asarray(g)[0]
+    m = np.asarray(mask)[0]
+    assert np.all(g[m] < 0)   # descent raises selected scores
+    assert np.all(g[~m] > 0)  # descent lowers unselected scores
+
+
+def test_predictor_stop_gradient():
+    """Predictor loss must not leak gradients into the trunk (paper 3.5)."""
+    cfg, params = mk(routing="mod_interleaved", capacity_frac=0.25)
+    t = toks(cfg, b=1)
+
+    def pred_only_loss(p):
+        logits, aux = model.forward(p, t, cfg)
+        loss = jnp.zeros(())
+        for l, pl in aux["pred_logits"].items():
+            bce, _ = routing.predictor_bce(pl, aux["topk_masks"][l])
+            loss = loss + bce
+        return loss
+
+    g = jax.grad(pred_only_loss)(params)
+    # trunk weights get zero gradient; predictor weights get nonzero
+    assert float(jnp.abs(g["layer_01.wq"]).max()) == 0.0
+    assert float(jnp.abs(g["embed"]).max()) == 0.0
+    assert float(jnp.abs(g["layer_01.pred.w1"]).max()) > 0.0
+
+
+def test_stochastic_routing_varies_with_seed():
+    cfg, params = mk(routing="stochastic", capacity_frac=0.25,
+                     train_predictor=False)
+    t = toks(cfg)
+    a, _ = model.forward(params, t, cfg, rng=jax.random.PRNGKey(0))
+    b_, _ = model.forward(params, t, cfg, rng=jax.random.PRNGKey(1))
+    assert not np.allclose(np.asarray(a), np.asarray(b_))
+
+
+def test_moe_expert_capacity():
+    cfg, params = mk(ff_mode="moe", n_experts=2)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, cfg.seq_len, cfg.d_model))
+    lp = model.layer_view(params, 0)
+    out, noop = routing.moe_mlp(x, lp, cfg, integrated=False)
+    assert out.shape == x.shape
+    assert noop is None
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_integrated_mode_has_noop_mask():
+    cfg, params = mk(ff_mode="mode_integrated", n_experts=2)
+    logits, aux = model.forward(params, toks(cfg), cfg)
+    assert len(aux["noop_masks"]) == cfg.n_layers
+    for m in aux["noop_masks"].values():
+        assert m.dtype == bool
+
+
+def test_rope_relative_shift():
+    """RoPE: attention logits depend only on relative positions."""
+    b, h, s, dh = 1, 1, 4, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, h, s, dh))
+    p0 = jnp.arange(s, dtype=jnp.int32)[None]
+    p5 = p0 + 5
+    q0 = layers.apply_rope(q, p0, 10000.0)
+    k0 = layers.apply_rope(k, p0, 10000.0)
+    q5 = layers.apply_rope(q, p5, 10000.0)
+    k5 = layers.apply_rope(k, p5, 10000.0)
+    a0 = jnp.einsum("bhqd,bhkd->bhqk", q0, k0)
+    a5 = jnp.einsum("bhqd,bhkd->bhqk", q5, k5)
+    np.testing.assert_allclose(np.asarray(a0), np.asarray(a5), atol=1e-4)
+
+
+def test_cross_entropy_uniform_baseline():
+    cfg, params = mk()
+    v = cfg.vocab_size
+    logits = jnp.zeros((2, 8, v))
+    t = jnp.zeros((2, 8), jnp.int32)
+    ce = train.cross_entropy(logits, t)
+    np.testing.assert_allclose(float(ce), np.log(v), rtol=1e-5)

@@ -1,0 +1,108 @@
+//! Bench: L3 coordinator micro-costs on the decode hot path.
+//!
+//! The serving target (DESIGN.md §7): coordinator overhead — literal
+//! marshalling, routing bookkeeping, sampling, cache accounting, JSON —
+//! must stay well under the executable time. Each case isolates one hot
+//! component so the §Perf iteration log can attribute improvements.
+//!
+//! Run: `cargo bench --bench coordinator_micro` (no artifacts needed).
+
+use mod_transformer::data::rng::Pcg32;
+use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
+use mod_transformer::runtime::Tensor;
+use mod_transformer::serve::batcher::sample;
+use mod_transformer::serve::LayerKvCache;
+use mod_transformer::util::bench::Bench;
+use mod_transformer::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut bench = Bench::new("coordinator_micro").with_iters(50, 5);
+
+    // --- literal marshalling (Tensor <-> xla::Literal), decode-sized ---
+    let h = Tensor::f32(vec![4, 128], vec![0.5; 4 * 128]);
+    bench.case("literal/h_to_literal_4x128", Some(1.0), || {
+        let lit = h.to_literal().unwrap();
+        std::hint::black_box(&lit);
+    });
+    let lit = h.to_literal().unwrap();
+    bench.case("literal/h_from_literal_4x128", Some(1.0), || {
+        let t = Tensor::from_literal(&lit).unwrap();
+        std::hint::black_box(&t);
+    });
+    // cache-sized (the biggest per-step transfer if caches were host-side)
+    let cache = Tensor::f32(vec![4, 48, 128], vec![0.1; 4 * 48 * 128]);
+    bench.case("literal/cache_to_literal_4x48x128", Some(1.0), || {
+        let lit = cache.to_literal().unwrap();
+        std::hint::black_box(&lit);
+    });
+
+    // --- sampling over a vocab-sized logits row ---
+    let mut rng = Pcg32::new(1, 0);
+    let logits: Vec<f32> = (0..259).map(|i| ((i * 37) % 100) as f32 / 50.0).collect();
+    bench.case("sample/greedy_v259", Some(1.0), || {
+        std::hint::black_box(sample(&logits, 0.0, 0, &mut rng));
+    });
+    bench.case("sample/topk32_temp_v259", Some(1.0), || {
+        std::hint::black_box(sample(&logits, 0.8, 32, &mut rng));
+    });
+
+    // --- KV-cache bookkeeping ---
+    bench.case("kv_cache/alloc_reset_cycle_B4", Some(48.0 * 4.0), || {
+        let mut c = LayerKvCache::new(1, 48, 4, true);
+        for row in 0..4 {
+            for _ in 0..60 {
+                std::hint::black_box(c.try_alloc(row));
+            }
+            c.reset_row(row);
+        }
+    });
+
+    // --- batch synthesis (corpus -> training batch) ---
+    let data = BatchIter::new(
+        MarkovCorpus::new(CorpusSpec::default(), 7), 8, 256,
+    );
+    let mut step = 0u64;
+    bench.case("data/batch_8x256", Some((8 * 256) as f64), || {
+        std::hint::black_box(data.batch_at(step));
+        step += 1;
+    });
+
+    // --- JSON manifest parse (startup cost) ---
+    let manifest_text = std::fs::read_to_string(
+        "artifacts/mod_tiny/manifest.json",
+    )
+    .unwrap_or_else(|_| {
+        // synthetic stand-in when artifacts are absent
+        let big: Vec<Json> = (0..64)
+            .map(|i| {
+                Json::obj(vec![
+                    ("name", Json::str(format!("p{i}"))),
+                    ("shape", Json::arr([Json::num(128.0), Json::num(128.0)])),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("params", Json::Arr(big))]).to_string()
+    });
+    bench.case("json/manifest_parse", Some(1.0), || {
+        std::hint::black_box(Json::parse(&manifest_text).unwrap());
+    });
+
+    // --- MODCKPT roundtrip (checkpoint cost per MB) ---
+    let tensors: Vec<(String, Tensor)> = (0..8)
+        .map(|i| {
+            (format!("t{i}"), Tensor::f32(vec![128, 128], vec![0.1; 128 * 128]))
+        })
+        .collect();
+    let dir = std::env::temp_dir().join("bench_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.ckpt");
+    bench.case("ckpt/save_load_512KB", Some(1.0), || {
+        mod_transformer::coordinator::checkpoint::save(&path, &tensors).unwrap();
+        std::hint::black_box(
+            mod_transformer::coordinator::checkpoint::load(&path).unwrap(),
+        );
+    });
+
+    bench.finish()?;
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Bench: decode throughput — the paper's headline sampling-speed claim.
+//!
+//! Measures tokens/sec through the layer-sliced decode runtime for the
+//! baseline bundle vs the MoD bundle under each routing decision rule, at
+//! batch 1 and 4. The paper's claim (§1): MoD "can be upwards of 50%
+//! faster to step during post-training sampling"; here the skip is a real
+//! non-invocation of the block executable, so the speedup is wall-clock.
+//!
+//! Regenerates: fig 6 speed panel + the §1 claim. Run: `cargo bench
+//! --bench decode_throughput` (needs `make artifacts`).
+
+use std::sync::Arc;
+
+use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::serve::{DecodeSession, RoutingDecision};
+use mod_transformer::util::bench::Bench;
+
+fn decode_tokens(
+    bundle: &Bundle,
+    params: &[mod_transformer::runtime::Tensor],
+    batch: usize,
+    decision: RoutingDecision,
+    n_tokens: usize,
+) -> f64 {
+    let mut session =
+        DecodeSession::new(bundle, params, batch, decision).expect("session");
+    let mut toks = vec![mod_transformer::data::BOS as i32; batch];
+    let active = vec![true; batch];
+    for _ in 0..n_tokens {
+        let logits = session.step(&toks, &active).expect("step");
+        let vocab = bundle.manifest.model.vocab_size;
+        for b in 0..batch {
+            let row = &logits[b * vocab..(b + 1) * vocab];
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            toks[b] = best as i32;
+        }
+    }
+    session.report().skip_fraction()
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::cpu()?);
+    let mut bench = Bench::new("decode_throughput");
+    let n_tokens = 32usize;
+
+    for bundle_name in ["baseline_tiny", "mod_tiny"] {
+        let dir = std::path::Path::new("artifacts").join(bundle_name);
+        let bundle = match Bundle::open(engine.clone(), &dir) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("skipping {bundle_name}: {e} (run `make artifacts`)");
+                continue;
+            }
+        };
+        let params = bundle.init_params()?;
+        let decisions: &[(&str, RoutingDecision)] =
+            if bundle.manifest.routed_layers.is_empty() {
+                &[("always", RoutingDecision::AlwaysOn)]
+            } else {
+                &[
+                    ("router", RoutingDecision::RouterThreshold),
+                    ("predictor", RoutingDecision::Predictor),
+                    ("always", RoutingDecision::AlwaysOn),
+                ]
+            };
+        for &batch in &[1usize, 4] {
+            for &(dname, decision) in decisions {
+                let mut skip = 0.0;
+                bench.case(
+                    &format!("{bundle_name}/B{batch}/{dname}"),
+                    Some((n_tokens * batch) as f64),
+                    || {
+                        skip = decode_tokens(
+                            &bundle, &params, batch, decision, n_tokens,
+                        );
+                    },
+                );
+                println!("    (skip fraction {skip:.3})");
+            }
+        }
+    }
+    bench.finish()?;
+    Ok(())
+}

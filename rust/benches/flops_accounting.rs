@@ -1,0 +1,75 @@
+//! Bench + table: the paper's FLOP arithmetic (§3.1–3.2, fig 4 right).
+//!
+//! Prints the capacity → relative-FLOPs table the paper's compute-budget
+//! argument rests on (capacity T/2 ⇒ QKᵀ at 25%, etc.) for both routing
+//! frequencies, plus decode-step FLOPs under different skip patterns, and
+//! times the accounting functions themselves (they run on the serving hot
+//! path, so they must be ~free).
+//!
+//! Run: `cargo bench --bench flops_accounting` (no artifacts needed).
+
+use mod_transformer::config::{ModelConfig, RoutingMode};
+use mod_transformer::flops;
+use mod_transformer::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    // ---- the paper's capacity table ----
+    println!("=== relative FLOPs per forward pass vs capacity (d=128 L=8 S=256) ===");
+    println!("{:<10} {:>18} {:>18}", "capacity", "route every", "route every-other");
+    for frac in [0.95, 0.5, 0.25, 0.125, 0.0625] {
+        let mk = |routing| {
+            let mut c = ModelConfig {
+                n_layers: 8,
+                ..Default::default()
+            };
+            c.routing = routing;
+            c.capacity_frac = frac;
+            c
+        };
+        println!(
+            "{:<10} {:>18.3} {:>18.3}",
+            format!("{:.1}%", frac * 100.0),
+            flops::relative_flops(&mk(RoutingMode::ModEvery)),
+            flops::relative_flops(&mk(RoutingMode::ModInterleaved)),
+        );
+    }
+
+    println!("\n=== paper 3.2 worked example: capacity T/2 ===");
+    let cfg = ModelConfig::default();
+    let s = cfg.seq_len;
+    let full = flops::block_flops(&cfg, s, s, false);
+    let half = flops::block_flops(&cfg, s / 2, s, false);
+    println!(
+        "QK^T at T/2: {:.1}% of vanilla (paper: 25%)",
+        100.0 * half.qk / full.qk
+    );
+
+    println!("\n=== decode-step FLOPs by skip pattern (d=128 L=4, ctx 64) ===");
+    let mut mod_cfg = ModelConfig::default();
+    mod_cfg.routing = RoutingMode::ModInterleaved;
+    let ctx = vec![64; 4];
+    for (label, parts) in [
+        ("all blocks", vec![true; 4]),
+        ("skip routed (1,3)", vec![true, false, true, false]),
+        ("skip all", vec![false; 4]),
+    ] {
+        println!(
+            "  {label:<20} {:.3e} FLOPs/token",
+            flops::decode_step_flops(&mod_cfg, &ctx, &parts)
+        );
+    }
+
+    // ---- timing: accounting must be ~free on the hot path ----
+    let mut bench = Bench::new("flops_accounting").with_iters(100, 10);
+    bench.case("model_flops_L8", Some(1.0), || {
+        let mut c = ModelConfig { n_layers: 8, ..Default::default() };
+        c.routing = RoutingMode::ModInterleaved;
+        std::hint::black_box(flops::model_flops(&c).total());
+    });
+    let parts = vec![true, false, true, false];
+    bench.case("decode_step_flops_L4", Some(1.0), || {
+        std::hint::black_box(flops::decode_step_flops(&mod_cfg, &ctx, &parts));
+    });
+    bench.finish()?;
+    Ok(())
+}

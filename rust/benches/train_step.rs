@@ -1,0 +1,77 @@
+//! Bench: training step time — baseline vs MoD at identical dims.
+//!
+//! The paper (figs 3 & 4): MoD variants step faster because routed blocks
+//! compute on capacity-sized tensors. Measures wall-clock per train step
+//! (full fwd+bwd+AdamW executable) for every default bundle present,
+//! plus the L3-side batch-synthesis cost (shows the data pipeline is not
+//! the bottleneck — EXPERIMENTS.md §Perf).
+//!
+//! Regenerates: fig 3 "steps/s" column, fig 4 step-speed ordering.
+//! Run: `cargo bench --bench train_step` (needs `make artifacts`).
+
+use std::sync::Arc;
+
+use mod_transformer::coordinator::Trainer;
+use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
+use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::cpu()?);
+    let mut bench = Bench::new("train_step");
+
+    for bundle_name in ["baseline_tiny", "mod_tiny"] {
+        let dir = std::path::Path::new("artifacts").join(bundle_name);
+        let bundle = match Bundle::open(engine.clone(), &dir) {
+            Ok(b) => Arc::new(b),
+            Err(e) => {
+                eprintln!("skipping {bundle_name}: {e} (run `make artifacts`)");
+                continue;
+            }
+        };
+        let b = bundle.manifest.train.batch_size;
+        let s = bundle.manifest.model.seq_len;
+        let corpus = MarkovCorpus::new(CorpusSpec::default(), 7);
+        let data = BatchIter::new(corpus, b, s);
+
+        // batch synthesis alone (L3 data pipeline cost)
+        let data2 = BatchIter::new(
+            MarkovCorpus::new(CorpusSpec::default(), 7), b, s,
+        );
+        let mut step_counter = 0u64;
+        bench.case(
+            &format!("{bundle_name}/batch_synthesis"),
+            Some((b * s) as f64),
+            || {
+                let batch = data2.batch_at(step_counter);
+                std::hint::black_box(&batch);
+                step_counter += 1;
+            },
+        );
+
+        // full train step through PJRT
+        let mut trainer = Trainer::new(bundle.clone(), data, None)?;
+        let mut step = 0u64;
+        bench.case(
+            &format!("{bundle_name}/train_step"),
+            Some((b * s) as f64), // tokens per step
+            || {
+                let batch = trainer_data_batch(&bundle, step);
+                trainer.train_one(&batch).expect("train step");
+                step += 1;
+            },
+        );
+    }
+    bench.finish()?;
+    Ok(())
+}
+
+fn trainer_data_batch(bundle: &Bundle, step: u64) -> Vec<i32> {
+    let corpus = MarkovCorpus::new(CorpusSpec::default(), 7);
+    let data = BatchIter::new(
+        corpus,
+        bundle.manifest.train.batch_size,
+        bundle.manifest.model.seq_len,
+    );
+    data.batch_at(step)
+}

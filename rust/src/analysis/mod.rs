@@ -1,0 +1,238 @@
+//! Routing analysis tooling (fig 5, fig 1 inset).
+//!
+//! Collects per-token per-block routing decisions from a trained model and
+//! produces: the sequence×depth decision map, the router-weight sigmoid
+//! histogram (≈ capacity fraction above 0.5, as the aux BCE loss dictates),
+//! and the difficulty correlation — whether high-entropy (hard) corpus
+//! positions route *through* blocks more often than deterministic ones,
+//! the paper's §4.1 "tokens that engage with blocks … higher entropy"
+//! observation, measurable here because our corpus labels difficulty.
+
+use std::sync::Arc;
+
+use xla::Literal;
+
+use crate::data::{CorpusSpec, MarkovCorpus};
+use crate::runtime::{Bundle, Tensor};
+use crate::serve::{DecodeSession, RoutingDecision};
+
+/// Routing decisions for one sequence: `map[layer][t]` = participated.
+#[derive(Debug, Clone)]
+pub struct RoutingMap {
+    pub layers: Vec<usize>,
+    pub map: Vec<Vec<bool>>,
+    pub router_sigmoids: Vec<Vec<f32>>,
+    /// per-position difficulty flag from the corpus (true = high entropy).
+    pub hard: Vec<bool>,
+}
+
+/// Histogram of sigmoid(router weight) over [0,1] in `bins` buckets.
+#[derive(Debug, Clone)]
+pub struct WeightHistogram {
+    pub bins: Vec<u64>,
+    pub frac_above_half: f64,
+    pub n: u64,
+}
+
+
+impl RoutingMap {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("layers", Json::Arr(self.layers.iter().map(|&l| Json::num(l as f64)).collect())),
+            ("map", Json::Arr(self.map.iter().map(|row|
+                Json::Arr(row.iter().map(|&b| Json::Bool(b)).collect())).collect())),
+            ("hard", Json::Arr(self.hard.iter().map(|&b| Json::Bool(b)).collect())),
+        ])
+    }
+}
+
+impl WeightHistogram {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("bins", Json::Arr(self.bins.iter().map(|&c| Json::num(c as f64)).collect())),
+            ("frac_above_half", Json::num(self.frac_above_half)),
+            ("n", Json::num(self.n as f64)),
+        ])
+    }
+}
+
+impl DifficultyCorrelation {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("p_route_hard", Json::num(self.p_route_hard)),
+            ("p_route_easy", Json::num(self.p_route_easy)),
+            ("n_hard", Json::num(self.n_hard as f64)),
+            ("n_easy", Json::num(self.n_easy as f64)),
+        ])
+    }
+}
+
+pub fn histogram(sigmoids: impl Iterator<Item = f32>, bins: usize) -> WeightHistogram {
+    let mut h = vec![0u64; bins];
+    let mut above = 0u64;
+    let mut n = 0u64;
+    for s in sigmoids {
+        let b = ((s as f64 * bins as f64) as usize).min(bins - 1);
+        h[b] += 1;
+        if s > 0.5 {
+            above += 1;
+        }
+        n += 1;
+    }
+    WeightHistogram {
+        bins: h,
+        frac_above_half: above as f64 / n.max(1) as f64,
+        n,
+    }
+}
+
+/// Difficulty↔routing correlation summary.
+#[derive(Debug, Clone)]
+pub struct DifficultyCorrelation {
+    /// P(route through | hard position)
+    pub p_route_hard: f64,
+    /// P(route through | easy position)
+    pub p_route_easy: f64,
+    pub n_hard: u64,
+    pub n_easy: u64,
+}
+
+/// Collect routing decisions for `n_seqs` corpus sequences by running the
+/// decode path (RouterThreshold decisions — the trained behaviour).
+pub fn collect_routing_maps(
+    bundle: &Arc<Bundle>,
+    params: &[Tensor],
+    corpus: &MarkovCorpus,
+    n_seqs: u64,
+    seq_len: usize,
+) -> crate::Result<Vec<RoutingMap>> {
+    let routed = bundle.manifest.routed_layers.clone();
+    let mut maps = Vec::new();
+    for i in 0..n_seqs {
+        let (toks, hard) = corpus.sequence_with_difficulty(i, seq_len);
+        let mut session =
+            DecodeSession::new(bundle, params, 1, RoutingDecision::RouterThreshold)?;
+        let mut map = vec![Vec::with_capacity(seq_len); routed.len()];
+        let mut sig = vec![Vec::with_capacity(seq_len); routed.len()];
+        for &tok in &toks {
+            let decisions = session.step_traced(&[tok as i32], &[true])?;
+            for (j, &l) in routed.iter().enumerate() {
+                let (score, part) = decisions.routed[&l];
+                map[j].push(part);
+                sig[j].push(1.0 / (1.0 + (-score).exp()));
+            }
+        }
+        maps.push(RoutingMap {
+            layers: routed.clone(),
+            map,
+            router_sigmoids: sig,
+            hard,
+        });
+    }
+    Ok(maps)
+}
+
+/// Correlate routing participation with corpus difficulty labels.
+pub fn difficulty_correlation(maps: &[RoutingMap]) -> DifficultyCorrelation {
+    let (mut rh, mut nh, mut re, mut ne) = (0u64, 0u64, 0u64, 0u64);
+    for m in maps {
+        for layer_map in &m.map {
+            for (t, &part) in layer_map.iter().enumerate() {
+                if m.hard.get(t).copied().unwrap_or(false) {
+                    nh += 1;
+                    if part {
+                        rh += 1;
+                    }
+                } else {
+                    ne += 1;
+                    if part {
+                        re += 1;
+                    }
+                }
+            }
+        }
+    }
+    DifficultyCorrelation {
+        p_route_hard: rh as f64 / nh.max(1) as f64,
+        p_route_easy: re as f64 / ne.max(1) as f64,
+        n_hard: nh,
+        n_easy: ne,
+    }
+}
+
+/// ASCII rendering of a routing map (fig 1 / fig 5 style), truncated to
+/// `width` tokens: '#' routed through, '.' routed around.
+pub fn render_map(map: &RoutingMap, width: usize) -> String {
+    let mut out = String::new();
+    for (j, l) in map.layers.iter().enumerate() {
+        out.push_str(&format!("block {l:>2} | "));
+        for &p in map.map[j].iter().take(width) {
+            out.push(if p { '#' } else { '.' });
+        }
+        out.push('\n');
+    }
+    out.push_str("           ");
+    out.push_str(&"-".repeat(width.min(map.map.first().map_or(0, |m| m.len()))));
+    out.push('\n');
+    out.push_str("difficulty| ");
+    for &h in map.hard.iter().take(width) {
+        out.push(if h { '^' } else { ' ' });
+    }
+    out.push('\n');
+    out
+}
+
+/// Default corpus used by the analysis harnesses.
+pub fn analysis_corpus(seed: u64) -> MarkovCorpus {
+    MarkovCorpus::new(CorpusSpec::default(), seed)
+}
+
+// Re-exported trace type implemented in serve::session.
+pub use crate::serve::session::StepTrace;
+
+#[allow(unused)]
+fn _literal_marker(_: &Literal) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_fraction() {
+        let vals = vec![0.1f32, 0.2, 0.6, 0.95, 0.49, 0.51];
+        let h = histogram(vals.into_iter(), 10);
+        assert_eq!(h.n, 6);
+        assert_eq!(h.bins.iter().sum::<u64>(), 6);
+        assert!((h.frac_above_half - 0.5).abs() < 1e-9);
+        assert_eq!(h.bins[9], 1); // the 0.95
+    }
+
+    #[test]
+    fn difficulty_correlation_math() {
+        let maps = vec![RoutingMap {
+            layers: vec![1],
+            map: vec![vec![true, false, true, false]],
+            router_sigmoids: vec![vec![0.9, 0.1, 0.8, 0.2]],
+            hard: vec![true, false, true, false],
+        }];
+        let c = difficulty_correlation(&maps);
+        assert_eq!(c.p_route_hard, 1.0);
+        assert_eq!(c.p_route_easy, 0.0);
+    }
+
+    #[test]
+    fn render_map_shape() {
+        let map = RoutingMap {
+            layers: vec![1, 3],
+            map: vec![vec![true, false], vec![false, true]],
+            router_sigmoids: vec![vec![0.9, 0.1], vec![0.1, 0.9]],
+            hard: vec![true, false],
+        };
+        let s = render_map(&map, 2);
+        assert!(s.contains("block  1 | #."));
+        assert!(s.contains("block  3 | .#"));
+    }
+}

@@ -1,0 +1,425 @@
+//! Configuration system: model/train/serve configs, JSON files, presets.
+//!
+//! [`ModelConfig`] and [`TrainConfig`] mirror `python/compile/configs.py`
+//! field-for-field; the JSON the AOT manifest embeds parses directly into
+//! these structs, and [`ModelConfig::to_json`] emits the exact JSON the AOT
+//! builder accepts — the two sides cannot drift silently because the bundle
+//! loader cross-checks `n_params` at open time.
+
+mod presets;
+
+pub use presets::{ladder_for_budget, preset, preset_names, LadderEntry};
+
+use crate::util::json::Json;
+
+/// Where MoD routing applies across depth. Mirrors python `ROUTING_*`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingMode {
+    /// Vanilla transformer: every token through every block.
+    None,
+    /// MoD routing on every block.
+    ModEvery,
+    /// MoD on odd blocks — the paper's best ("every other block").
+    ModInterleaved,
+    /// Control: router weights drawn from a Gaussian (fig 3).
+    Stochastic,
+}
+
+impl RoutingMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::ModEvery => "mod_every",
+            Self::ModInterleaved => "mod_interleaved",
+            Self::Stochastic => "stochastic",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "none" => Self::None,
+            "mod_every" => Self::ModEvery,
+            "mod_interleaved" => Self::ModInterleaved,
+            "stochastic" => Self::Stochastic,
+            other => anyhow::bail!("unknown routing mode {other:?}"),
+        })
+    }
+}
+
+/// Feedforward flavour. Mirrors python `FF_*`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfMode {
+    Dense,
+    /// Expert-choice MoE MLP (fig 7 baseline; staged MoDE when combined
+    /// with `RoutingMode::Mod*`).
+    Moe,
+    /// Integrated MoDE: a no-op expert competes with real experts (fig 7).
+    ModeIntegrated,
+}
+
+impl FfMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Moe => "moe",
+            Self::ModeIntegrated => "mode_integrated",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "dense" => Self::Dense,
+            "moe" => Self::Moe,
+            "mode_integrated" => Self::ModeIntegrated,
+            other => anyhow::bail!("unknown ff mode {other:?}"),
+        })
+    }
+}
+
+/// Transformer hyperparameters — mirror of `python/compile/configs.py`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub routing: RoutingMode,
+    /// Fraction of the sequence admitted to a routed block (paper: 0.125).
+    pub capacity_frac: f64,
+    pub aux_loss_weight: f64,
+    pub train_predictor: bool,
+    pub predictor_hidden: usize,
+    pub ff_mode: FfMode,
+    pub n_experts: usize,
+    pub expert_capacity_frac: f64,
+    pub rope_theta: f64,
+    pub use_pallas: bool,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            vocab_size: 259,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 32,
+            d_ff: 512,
+            seq_len: 256,
+            routing: RoutingMode::None,
+            capacity_frac: 0.125,
+            aux_loss_weight: 0.01,
+            train_predictor: true,
+            predictor_hidden: 64,
+            ff_mode: FfMode::Dense,
+            n_experts: 4,
+            expert_capacity_frac: 0.25,
+            rope_theta: 10000.0,
+            use_pallas: false,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Validate internal consistency (same rules as the python side).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.d_model == self.n_heads * self.d_head,
+            "d_model ({}) != n_heads*d_head ({}*{})",
+            self.d_model, self.n_heads, self.d_head
+        );
+        anyhow::ensure!(
+            self.capacity_frac > 0.0 && self.capacity_frac <= 1.0,
+            "capacity_frac out of (0,1]: {}", self.capacity_frac
+        );
+        anyhow::ensure!(self.n_layers > 0 && self.seq_len > 0, "empty model");
+        Ok(())
+    }
+
+    /// Tokens admitted to a routed block (the paper's k / C); >= 1.
+    pub fn capacity(&self, seq_len: usize) -> usize {
+        ((self.capacity_frac * seq_len as f64).round() as usize).max(1)
+    }
+
+    /// Whether block `layer` (0-based) has MoD routing.
+    pub fn is_routed_block(&self, layer: usize) -> bool {
+        match self.routing {
+            RoutingMode::None => false,
+            RoutingMode::ModInterleaved => layer % 2 == 1,
+            RoutingMode::ModEvery | RoutingMode::Stochastic => true,
+        }
+    }
+
+    pub fn routed_layers(&self) -> Vec<usize> {
+        (0..self.n_layers).filter(|&l| self.is_routed_block(l)).collect()
+    }
+
+    /// Exact parameter count; must equal python `ModelConfig.n_params()`.
+    pub fn n_params(&self) -> usize {
+        let (d, h, f, v) = (
+            self.d_model,
+            self.n_heads * self.d_head,
+            self.d_ff,
+            self.vocab_size,
+        );
+        let mut per_layer = 4 * d * h + 2 * d; // wq wk wv wo + 2 norms
+        per_layer += match self.ff_mode {
+            FfMode::Dense => 2 * d * f,
+            FfMode::Moe => self.n_experts * 2 * d * f + d * self.n_experts,
+            FfMode::ModeIntegrated => {
+                self.n_experts * 2 * d * f + d * (self.n_experts + 1)
+            }
+        };
+        let mut total = self.n_layers * per_layer + v * d + d;
+        for l in 0..self.n_layers {
+            if self.is_routed_block(l) {
+                total += d; // router projection
+                if self.train_predictor {
+                    total += d * self.predictor_hidden + 2 * self.predictor_hidden;
+                }
+            }
+        }
+        total
+    }
+
+    /// JSON accepted by `python -m compile.aot --model-json` (and embedded
+    /// in bundle manifests).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab_size", Json::num(self.vocab_size as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("d_head", Json::num(self.d_head as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("routing", Json::str(self.routing.as_str())),
+            ("capacity_frac", Json::num(self.capacity_frac)),
+            ("aux_loss_weight", Json::num(self.aux_loss_weight)),
+            ("train_predictor", Json::Bool(self.train_predictor)),
+            ("predictor_hidden", Json::num(self.predictor_hidden as f64)),
+            ("ff_mode", Json::str(self.ff_mode.as_str())),
+            ("n_experts", Json::num(self.n_experts as f64)),
+            ("expert_capacity_frac", Json::num(self.expert_capacity_frac)),
+            ("rope_theta", Json::num(self.rope_theta)),
+            ("use_pallas", Json::Bool(self.use_pallas)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let cfg = Self {
+            vocab_size: j.req_usize("vocab_size")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            d_head: j.req_usize("d_head")?,
+            d_ff: j.req_usize("d_ff")?,
+            seq_len: j.req_usize("seq_len")?,
+            routing: RoutingMode::parse(&j.req_str("routing")?)?,
+            capacity_frac: j.req_f64("capacity_frac")?,
+            aux_loss_weight: j.req_f64("aux_loss_weight")?,
+            train_predictor: j.req_bool("train_predictor")?,
+            predictor_hidden: j.req_usize("predictor_hidden")?,
+            ff_mode: FfMode::parse(&j.req_str("ff_mode")?)?,
+            n_experts: j.req_usize("n_experts")?,
+            expert_capacity_frac: j.req_f64("expert_capacity_frac")?,
+            rope_theta: j.req_f64("rope_theta")?,
+            use_pallas: j.req_bool("use_pallas")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Optimizer / schedule hyperparameters — mirror of python `TrainConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub batch_size: usize,
+    pub learning_rate: f64,
+    pub min_lr_frac: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub grad_clip: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 8,
+            learning_rate: 3e-3,
+            min_lr_frac: 0.1,
+            warmup_steps: 50,
+            total_steps: 500,
+            weight_decay: 0.1,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-9,
+            grad_clip: 1.0,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("learning_rate", Json::num(self.learning_rate)),
+            ("min_lr_frac", Json::num(self.min_lr_frac)),
+            ("warmup_steps", Json::num(self.warmup_steps as f64)),
+            ("total_steps", Json::num(self.total_steps as f64)),
+            ("weight_decay", Json::num(self.weight_decay)),
+            ("beta1", Json::num(self.beta1)),
+            ("beta2", Json::num(self.beta2)),
+            ("eps", Json::num(self.eps)),
+            ("grad_clip", Json::num(self.grad_clip)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(Self {
+            batch_size: j.req_usize("batch_size")?,
+            learning_rate: j.req_f64("learning_rate")?,
+            min_lr_frac: j.req_f64("min_lr_frac")?,
+            warmup_steps: j.req_usize("warmup_steps")?,
+            total_steps: j.req_usize("total_steps")?,
+            weight_decay: j.req_f64("weight_decay")?,
+            beta1: j.req_f64("beta1")?,
+            beta2: j.req_f64("beta2")?,
+            eps: j.req_f64("eps")?,
+            grad_clip: j.req_f64("grad_clip")?,
+        })
+    }
+}
+
+/// Serving-side knobs (entirely L3; not part of the AOT ABI).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Compiled decode batch sizes available in the bundle.
+    pub decode_batches: Vec<usize>,
+    /// Max tokens a request may generate (bounds KV-cache allocation).
+    pub max_decode_len: usize,
+    /// KV-cache slack factor over the expected capacity occupancy.
+    pub cache_slack: f64,
+    /// Dynamic batcher: max time to hold a request waiting for batchmates.
+    pub batch_wait_ms: u64,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f64,
+    /// Top-k sampling cutoff (0 = disabled).
+    pub top_k: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            decode_batches: vec![1, 4],
+            max_decode_len: 256,
+            cache_slack: 1.5,
+            batch_wait_ms: 2,
+            temperature: 0.0,
+            top_k: 0,
+        }
+    }
+}
+
+/// A full experiment file: `{"model":{...},"train":{...}}` JSON.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentConfig {
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    pub serve: ServeConfig,
+}
+
+impl ExperimentConfig {
+    pub fn from_json_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let model = ModelConfig::from_json(j.req("model")?)?;
+        let train = match j.get("train") {
+            Some(t) => TrainConfig::from_json(t)?,
+            None => TrainConfig::default(),
+        };
+        Ok(Self { model, train, serve: ServeConfig::default() })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.to_json()),
+            ("train", self.train.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ModelConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn capacity_rounding() {
+        let mut c = ModelConfig::default();
+        c.capacity_frac = 0.125;
+        assert_eq!(c.capacity(256), 32);
+        assert_eq!(c.capacity(2048), 256); // the paper's top-k 256
+        c.capacity_frac = 0.01;
+        assert_eq!(c.capacity(8), 1); // floor at 1
+    }
+
+    #[test]
+    fn interleaved_routes_odd_blocks() {
+        let mut c = ModelConfig::default();
+        c.routing = RoutingMode::ModInterleaved;
+        assert_eq!(c.routed_layers(), vec![1, 3]);
+        c.routing = RoutingMode::ModEvery;
+        assert_eq!(c.routed_layers(), vec![0, 1, 2, 3]);
+        c.routing = RoutingMode::None;
+        assert!(c.routed_layers().is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ModelConfig::default();
+        cfg.routing = RoutingMode::ModInterleaved;
+        cfg.ff_mode = FfMode::ModeIntegrated;
+        cfg.capacity_frac = 0.125;
+        let j = cfg.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(back, cfg);
+        let t = TrainConfig::default();
+        assert_eq!(TrainConfig::from_json(&t.to_json()).unwrap(), t);
+    }
+
+    #[test]
+    fn routing_names_match_python() {
+        assert_eq!(RoutingMode::ModInterleaved.as_str(), "mod_interleaved");
+        assert_eq!(FfMode::ModeIntegrated.as_str(), "mode_integrated");
+        assert!(RoutingMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn n_params_structure() {
+        // routed layers add router + predictor params
+        let base = ModelConfig {
+            vocab_size: 37, d_model: 32, n_layers: 4, n_heads: 2, d_head: 16,
+            d_ff: 64, seq_len: 32, ..Default::default()
+        };
+        let mut routed = base.clone();
+        routed.routing = RoutingMode::ModInterleaved;
+        // 2 routed layers x (router 32 + pred 32*64 + 64 + 64)
+        assert_eq!(
+            routed.n_params() - base.n_params(),
+            2 * (32 + 32 * 64 + 128)
+        );
+    }
+}

@@ -1,0 +1,182 @@
+//! Named presets (mirroring `python/compile/aot.py::preset`) and the
+//! isoFLOP model ladders used by the fig 3 / fig 4 harnesses.
+
+use super::{ExperimentConfig, FfMode, ModelConfig, RoutingMode, TrainConfig};
+
+/// All preset names the AOT builder understands.
+pub fn preset_names() -> &'static [&'static str] {
+    &[
+        "baseline_tiny",
+        "mod_tiny",
+        "mod_tiny_every",
+        "mod_tiny_stochastic",
+        "moe_tiny",
+        "mode_staged_tiny",
+        "mode_integrated_tiny",
+        "kernel_demo",
+    ]
+}
+
+/// Resolve a named preset. Must agree with `python/compile/aot.py`.
+pub fn preset(name: &str) -> crate::Result<ExperimentConfig> {
+    let base = ModelConfig::default(); // == python's `base` dict
+    let train = TrainConfig {
+        batch_size: 8,
+        total_steps: 400,
+        ..Default::default()
+    };
+    let model = match name {
+        "baseline_tiny" => base,
+        "mod_tiny" => ModelConfig {
+            routing: RoutingMode::ModInterleaved,
+            capacity_frac: 0.125,
+            ..base
+        },
+        "mod_tiny_every" => ModelConfig {
+            routing: RoutingMode::ModEvery,
+            capacity_frac: 0.125,
+            ..base
+        },
+        "mod_tiny_stochastic" => ModelConfig {
+            routing: RoutingMode::Stochastic,
+            capacity_frac: 0.125,
+            train_predictor: false,
+            ..base
+        },
+        "moe_tiny" => ModelConfig {
+            ff_mode: FfMode::Moe,
+            n_experts: 4,
+            d_ff: 256,
+            ..base
+        },
+        "mode_staged_tiny" => ModelConfig {
+            routing: RoutingMode::ModInterleaved,
+            capacity_frac: 0.125,
+            ff_mode: FfMode::Moe,
+            n_experts: 4,
+            d_ff: 256,
+            ..base
+        },
+        "mode_integrated_tiny" => ModelConfig {
+            ff_mode: FfMode::ModeIntegrated,
+            n_experts: 4,
+            d_ff: 256,
+            ..base
+        },
+        "kernel_demo" => ModelConfig {
+            vocab_size: 259,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            d_ff: 128,
+            seq_len: 128,
+            routing: RoutingMode::ModInterleaved,
+            capacity_frac: 0.25,
+            use_pallas: true,
+            ..base
+        },
+        other => anyhow::bail!(
+            "unknown preset {other:?}; known: {:?}",
+            preset_names()
+        ),
+    };
+    model.validate()?;
+    Ok(ExperimentConfig {
+        model,
+        train,
+        serve: Default::default(),
+    })
+}
+
+/// One rung of an isoFLOP model ladder (fig 3 / fig 4).
+#[derive(Debug, Clone)]
+pub struct LadderEntry {
+    /// Short id used in bundle names, e.g. "d96L6".
+    pub id: String,
+    pub model: ModelConfig,
+}
+
+/// Model ladder for the scaled-down isoFLOP analysis.
+///
+/// The paper sweeps 60M–3B params at budgets 6e18–1e20 FLOPs; on this
+/// testbed we sweep ~0.2M–8M params at budgets ~1e12–2e13 (the isoFLOP
+/// *methodology* is scale-free — DESIGN.md §5). Following the paper, rungs
+/// add **depth faster than width** ("it is better to add depth than width
+/// when adding FLOPs").
+pub fn ladder_for_budget(
+    routing: RoutingMode,
+    capacity_frac: f64,
+    seq_len: usize,
+) -> Vec<LadderEntry> {
+    // (d_model, n_layers, n_heads) rungs, smallest to largest.
+    let rungs: &[(usize, usize, usize)] = &[
+        (32, 2, 2),
+        (48, 3, 3),
+        (64, 4, 4),
+        (96, 6, 4),
+        (128, 8, 4),
+        (160, 10, 5),
+        (192, 14, 6),
+    ];
+    rungs
+        .iter()
+        .map(|&(d, l, h)| {
+            let model = ModelConfig {
+                vocab_size: 259,
+                d_model: d,
+                n_layers: l,
+                n_heads: h,
+                d_head: d / h,
+                d_ff: 4 * d,
+                seq_len,
+                routing,
+                capacity_frac,
+                ..Default::default()
+            };
+            LadderEntry {
+                id: format!("d{d}L{l}"),
+                model,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve_and_validate() {
+        for name in preset_names() {
+            let cfg = preset(name).unwrap();
+            cfg.model.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn ladder_is_monotone_in_params() {
+        let ladder = ladder_for_budget(RoutingMode::None, 0.125, 256);
+        let params: Vec<usize> =
+            ladder.iter().map(|e| e.model.n_params()).collect();
+        assert!(params.windows(2).all(|w| w[0] < w[1]), "{params:?}");
+        for e in &ladder {
+            e.model.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn ladder_depth_grows_faster_than_width() {
+        let ladder = ladder_for_budget(RoutingMode::None, 0.125, 256);
+        let first = &ladder[0].model;
+        let last = &ladder[ladder.len() - 1].model;
+        let depth_ratio = last.n_layers as f64 / first.n_layers as f64;
+        let width_ratio = last.d_model as f64 / first.d_model as f64;
+        assert!(depth_ratio > width_ratio);
+    }
+}

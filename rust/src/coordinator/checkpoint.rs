@@ -1,0 +1,135 @@
+//! MODCKPT1 tensor-bundle codec — byte-compatible with
+//! `python/compile/ckpt.py` (round-tripped in tests on both sides).
+//!
+//! Layout (little-endian):
+//!   magic  8B  b"MODCKPT1"
+//!   count  u32
+//!   per tensor: name_len u32, name utf8, dtype u8 (0=f32,1=i32),
+//!               ndim u8, dims u32*ndim, raw LE data.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::runtime::Tensor;
+
+const MAGIC: &[u8; 8] = b"MODCKPT1";
+
+/// Write tensors (ordered iteration of the map is not required; python
+/// reads by name).
+pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> crate::Result<()> {
+    let file = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        let code = crate::runtime::tensor_dtype_code(t);
+        w.write_all(&[code, t.shape().len() as u8])?;
+        for &d in t.shape() {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            Tensor::F32 { data, .. } => {
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Tensor::I32 { data, .. } => {
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load all tensors by name.
+pub fn load(path: &Path) -> crate::Result<HashMap<String, Tensor>> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "{}: bad magic", path.display());
+    let count = read_u32(&mut r)? as usize;
+    let mut out = HashMap::with_capacity(count);
+    for _ in 0..count {
+        let nlen = read_u32(&mut r)? as usize;
+        anyhow::ensure!(nlen < 4096, "absurd name length {nlen}");
+        let mut nbuf = vec![0u8; nlen];
+        r.read_exact(&mut nbuf)?;
+        let name = String::from_utf8(nbuf)
+            .map_err(|e| anyhow::anyhow!("bad tensor name: {e}"))?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let (code, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut raw = vec![0u8; n * 4];
+        r.read_exact(&mut raw)?;
+        let tensor = match code {
+            0 => Tensor::f32(
+                dims,
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            1 => Tensor::i32(
+                dims,
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            other => anyhow::bail!("unknown dtype code {other}"),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> crate::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("modckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.ckpt");
+        let tensors = vec![
+            ("a".to_string(), Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.])),
+            ("b.scalar".to_string(), Tensor::scalar_f32(3.5)),
+            ("c_int".to_string(), Tensor::i32(vec![4], vec![-1, 0, 7, 2])),
+        ];
+        save(&path, &tensors).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        for (name, t) in &tensors {
+            assert_eq!(&back[name], t);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("modckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTMAGICxxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

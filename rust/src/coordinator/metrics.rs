@@ -1,0 +1,203 @@
+//! Run metrics: typed rows, JSONL/CSV sinks, simple aggregation.
+//!
+//! Every experiment harness writes through this module so the figures can
+//! be regenerated from on-disk logs (`runs/<name>/metrics.jsonl`).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One logged training/eval step.
+#[derive(Debug, Clone)]
+pub struct MetricsRow {
+    pub step: u64,
+    /// metric name -> value (keys come from the bundle manifest).
+    pub values: std::collections::BTreeMap<String, f64>,
+    /// wall-clock seconds since run start.
+    pub elapsed_s: f64,
+}
+
+impl MetricsRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            (
+                "values",
+                Json::Obj(
+                    self.values
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let values = j
+            .req("values")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("values not an object"))?
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+            .collect();
+        Ok(Self {
+            step: j.req("step")?.as_u64().unwrap_or(0),
+            values,
+            elapsed_s: j.req_f64("elapsed_s")?,
+        })
+    }
+}
+
+/// Append-only metrics writer (JSONL, flushed per row).
+pub struct MetricsSink {
+    path: PathBuf,
+    file: std::fs::File,
+    start: std::time::Instant,
+    names: Vec<String>,
+    rows: Vec<MetricsRow>,
+}
+
+impl MetricsSink {
+    /// Create (truncate) a sink at `dir/metrics.jsonl`.
+    pub fn create(dir: &Path, metric_names: &[String]) -> crate::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join("metrics.jsonl");
+        let file = std::fs::File::create(&path)?;
+        Ok(Self {
+            path,
+            file,
+            start: std::time::Instant::now(),
+            names: metric_names.to_vec(),
+            rows: Vec::new(),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Log a metric vector in manifest order.
+    pub fn log_vector(&mut self, step: u64, values: &[f32]) -> crate::Result<MetricsRow> {
+        anyhow::ensure!(
+            values.len() == self.names.len(),
+            "metric vector len {} != names {}",
+            values.len(),
+            self.names.len()
+        );
+        let row = MetricsRow {
+            step,
+            values: self
+                .names
+                .iter()
+                .cloned()
+                .zip(values.iter().map(|&v| v as f64))
+                .collect(),
+            elapsed_s: self.start.elapsed().as_secs_f64(),
+        };
+        self.file.write_all(row.to_json().to_string().as_bytes())?;
+        self.file.write_all(b"\n")?;
+        self.file.flush()?;
+        self.rows.push(row.clone());
+        Ok(row)
+    }
+
+    pub fn rows(&self) -> &[MetricsRow] {
+        &self.rows
+    }
+
+    /// Mean of a metric over the last `n` rows.
+    pub fn tail_mean(&self, name: &str, n: usize) -> Option<f64> {
+        let tail: Vec<f64> = self
+            .rows
+            .iter()
+            .rev()
+            .take(n)
+            .filter_map(|r| r.values.get(name).copied())
+            .collect();
+        if tail.is_empty() {
+            None
+        } else {
+            Some(tail.iter().sum::<f64>() / tail.len() as f64)
+        }
+    }
+
+    /// Export all rows as CSV next to the JSONL.
+    pub fn write_csv(&self) -> crate::Result<PathBuf> {
+        let csv_path = self.path.with_extension("csv");
+        let mut f = std::fs::File::create(&csv_path)?;
+        write!(f, "step,elapsed_s")?;
+        for n in &self.names {
+            write!(f, ",{n}")?;
+        }
+        writeln!(f)?;
+        for r in &self.rows {
+            write!(f, "{},{:.4}", r.step, r.elapsed_s)?;
+            for n in &self.names {
+                write!(f, ",{}", r.values.get(n).copied().unwrap_or(f64::NAN))?;
+            }
+            writeln!(f)?;
+        }
+        Ok(csv_path)
+    }
+}
+
+/// Load a metrics JSONL back (for analysis/regeneration).
+pub fn load_jsonl(path: &Path) -> crate::Result<Vec<MetricsRow>> {
+    let text = std::fs::read_to_string(path)?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| MetricsRow::from_json(&Json::parse(l)?))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names() -> Vec<String> {
+        vec!["loss".into(), "ce".into()]
+    }
+
+    #[test]
+    fn log_and_reload() {
+        let dir = std::env::temp_dir().join("metrics_test_a");
+        let mut sink = MetricsSink::create(&dir, &names()).unwrap();
+        sink.log_vector(0, &[2.0, 1.9]).unwrap();
+        sink.log_vector(1, &[1.5, 1.4]).unwrap();
+        let rows = load_jsonl(sink.path()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].values["loss"], 1.5);
+    }
+
+    #[test]
+    fn tail_mean() {
+        let dir = std::env::temp_dir().join("metrics_test_b");
+        let mut sink = MetricsSink::create(&dir, &names()).unwrap();
+        for i in 0..10 {
+            sink.log_vector(i, &[i as f32, 0.0]).unwrap();
+        }
+        let m = sink.tail_mean("loss", 4).unwrap();
+        assert!((m - 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vector_length_checked() {
+        let dir = std::env::temp_dir().join("metrics_test_c");
+        let mut sink = MetricsSink::create(&dir, &names()).unwrap();
+        assert!(sink.log_vector(0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn csv_export() {
+        let dir = std::env::temp_dir().join("metrics_test_d");
+        let mut sink = MetricsSink::create(&dir, &names()).unwrap();
+        sink.log_vector(0, &[2.0, 1.9]).unwrap();
+        let csv = sink.write_csv().unwrap();
+        let text = std::fs::read_to_string(csv).unwrap();
+        assert!(text.starts_with("step,elapsed_s,loss,ce"));
+        assert_eq!(text.lines().count(), 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Training orchestrator (Layer 3, train side).
+//!
+//! Drives the single-executable `train_step` artifact: data pipeline
+//! ([`crate::data`]) → batch literals → step → metrics/checkpoints. Also
+//! hosts the checkpoint codec shared with python (`MODCKPT1`) and the
+//! run-metrics sink (JSONL + CSV) the experiment harnesses consume.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod trainer;
+
+pub use metrics::{MetricsRow, MetricsSink};
+pub use trainer::{EvalResult, TrainOutcome, Trainer, TrainerOptions};

@@ -1,0 +1,287 @@
+//! The training orchestrator: drives the `train_step` executable.
+//!
+//! One `Trainer` owns: the bundle's executables, the parameter/optimizer
+//! literals (threaded step to step without re-marshalling), the data
+//! pipeline, metrics, and checkpoints. The step loop is synchronous —
+//! with one executable per step on one device there is nothing to overlap
+//! except batch synthesis, which is cheap (measured in benches; see
+//! EXPERIMENTS.md §Perf) — but batch materialization is still done for
+//! step s+1 while logging step s to keep the executable queue warm.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use xla::Literal;
+
+use crate::data::BatchIter;
+use crate::runtime::{Bundle, Tensor};
+
+use super::checkpoint;
+use super::metrics::MetricsSink;
+
+/// Options for a training run.
+#[derive(Debug, Clone)]
+pub struct TrainerOptions {
+    /// Steps to run (None = the bundle's TrainConfig::total_steps).
+    pub steps: Option<u64>,
+    /// Log every n steps.
+    pub log_every: u64,
+    /// Checkpoint every n steps (0 = only final).
+    pub ckpt_every: u64,
+    /// Output directory for metrics + checkpoints.
+    pub run_dir: PathBuf,
+    /// Resume from this checkpoint if present.
+    pub resume: Option<PathBuf>,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        Self {
+            steps: None,
+            log_every: 10,
+            ckpt_every: 0,
+            run_dir: PathBuf::from("runs/default"),
+            resume: None,
+        }
+    }
+}
+
+/// Summary of a finished run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub steps: u64,
+    pub final_loss: f64,
+    pub final_ce: f64,
+    pub mean_step_ms: f64,
+    pub steps_per_sec: f64,
+    pub metrics_path: PathBuf,
+    pub ckpt_path: PathBuf,
+}
+
+/// Held-out evaluation summary (one eval mode).
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub mode: String,
+    pub ce: f64,
+    pub pred_acc: f64,
+    pub router_frac: f64,
+    pub participation: f64,
+    pub n_batches: usize,
+}
+
+/// The coordinator's training driver.
+pub struct Trainer {
+    bundle: Arc<Bundle>,
+    data: BatchIter,
+    /// params ++ m ++ v, as literals in ABI order (3 * n_params entries).
+    state: Vec<Literal>,
+    step: u64,
+}
+
+impl Trainer {
+    /// Build a trainer from a bundle + data stream, loading init params
+    /// (or a resume checkpoint).
+    pub fn new(
+        bundle: Arc<Bundle>,
+        data: BatchIter,
+        resume: Option<&Path>,
+    ) -> crate::Result<Self> {
+        let b = bundle.manifest.train.batch_size;
+        let s = bundle.manifest.model.seq_len;
+        anyhow::ensure!(
+            data.batch() == b && data.seq_len() == s,
+            "data iterator shape ({}, {}) != bundle train shape ({b}, {s})",
+            data.batch(), data.seq_len()
+        );
+
+        let (params, step) = match resume {
+            Some(path) => {
+                let mut by_name = checkpoint::load(path)?;
+                let step = by_name
+                    .remove("__step")
+                    .and_then(|t| t.as_i32().ok().map(|v| v[0] as u64))
+                    .unwrap_or(0);
+                // split params and optimizer state back out
+                let mut p = Vec::new();
+                let mut m = Vec::new();
+                let mut v = Vec::new();
+                for spec in &bundle.manifest.params {
+                    p.push(take(&mut by_name, &spec.name)?);
+                    m.push(take(&mut by_name, &format!("m::{}", spec.name))?);
+                    v.push(take(&mut by_name, &format!("v::{}", spec.name))?);
+                }
+                let mut all = p;
+                all.extend(m);
+                all.extend(v);
+                (all, step)
+            }
+            None => {
+                let p = bundle.init_params()?;
+                let zeros: Vec<Tensor> = p
+                    .iter()
+                    .map(|t| Tensor::zeros_f32(t.shape().to_vec()))
+                    .collect();
+                let mut all = p;
+                all.extend(zeros.iter().cloned());
+                all.extend(zeros);
+                (all, 0)
+            }
+        };
+        let state = params
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<crate::Result<_>>()?;
+        Ok(Self { bundle, data, state, step })
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn bundle(&self) -> &Arc<Bundle> {
+        &self.bundle
+    }
+
+    /// Current parameters (first n_params entries of the state).
+    pub fn params(&self) -> crate::Result<Vec<Tensor>> {
+        let n = self.bundle.manifest.params.len();
+        self.state[..n].iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Run one step; returns the metric vector (manifest order).
+    pub fn train_one(&mut self, tokens: &[i32]) -> crate::Result<Vec<f32>> {
+        let exe = self.bundle.train_step()?;
+        let b = self.bundle.manifest.train.batch_size;
+        let s = self.bundle.manifest.model.seq_len;
+        anyhow::ensure!(tokens.len() == b * s, "bad batch size");
+        let tok_lit = Tensor::i32(vec![b, s], tokens.to_vec()).to_literal()?;
+        let step_lit = Tensor::scalar_i32(self.step as i32).to_literal()?;
+        let seed_lit = Tensor::scalar_i32(self.step as i32).to_literal()?;
+
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 + self.state.len());
+        args.push(&tok_lit);
+        args.push(&step_lit);
+        args.push(&seed_lit);
+        args.extend(self.state.iter());
+        let mut outs = exe.run_literals(&args)?;
+        anyhow::ensure!(
+            outs.len() == 1 + self.state.len(),
+            "train_step returned {} outputs, expected {}",
+            outs.len(),
+            1 + self.state.len()
+        );
+        let metrics_lit = outs.remove(0);
+        self.state = outs;
+        self.step += 1;
+        let metrics = Tensor::from_literal(&metrics_lit)?;
+        Ok(metrics.as_f32()?.to_vec())
+    }
+
+    /// Full run loop with logging + checkpoints.
+    pub fn run(&mut self, opts: &TrainerOptions) -> crate::Result<TrainOutcome> {
+        let total = opts
+            .steps
+            .unwrap_or(self.bundle.manifest.train.total_steps as u64);
+        let mut sink = MetricsSink::create(
+            &opts.run_dir,
+            &self.bundle.manifest.metrics.clone(),
+        )?;
+        let t0 = Instant::now();
+        let mut last_metrics = vec![f32::NAN; self.bundle.manifest.metrics.len()];
+        while self.step < total {
+            let batch = self.data.batch_at(self.step);
+            let metrics = self.train_one(&batch)?;
+            let done = self.step; // train_one already incremented
+            if done % opts.log_every == 0 || done == total {
+                sink.log_vector(done, &metrics)?;
+            }
+            if opts.ckpt_every > 0 && done % opts.ckpt_every == 0 {
+                self.save_checkpoint(&opts.run_dir.join(format!(
+                    "step_{done:06}.ckpt"
+                )))?;
+            }
+            last_metrics = metrics;
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let ckpt_path = opts.run_dir.join("final.ckpt");
+        self.save_checkpoint(&ckpt_path)?;
+        sink.write_csv()?;
+        let steps_run = total.max(1) as f64;
+        Ok(TrainOutcome {
+            steps: total,
+            final_loss: last_metrics.first().copied().unwrap_or(f32::NAN) as f64,
+            final_ce: last_metrics.get(1).copied().unwrap_or(f32::NAN) as f64,
+            mean_step_ms: 1000.0 * elapsed / steps_run,
+            steps_per_sec: steps_run / elapsed,
+            metrics_path: sink.path().to_path_buf(),
+            ckpt_path,
+        })
+    }
+
+    /// Held-out evaluation with a given routing mode over `n_batches`.
+    pub fn evaluate(
+        &self,
+        mode: &str,
+        n_batches: usize,
+    ) -> crate::Result<EvalResult> {
+        let exe = self.bundle.eval_step(mode)?;
+        let n = self.bundle.manifest.params.len();
+        let eval_iter = self.data.eval_split();
+        let mut acc = [0f64; 4];
+        for i in 0..n_batches {
+            let batch = eval_iter.batch_at(i as u64);
+            let b = self.bundle.manifest.train.batch_size;
+            let s = self.bundle.manifest.model.seq_len;
+            let tok_lit = Tensor::i32(vec![b, s], batch).to_literal()?;
+            let mut args: Vec<&Literal> = Vec::with_capacity(1 + n);
+            args.push(&tok_lit);
+            args.extend(self.state[..n].iter());
+            let outs = exe.run_literals(&args)?;
+            let m = Tensor::from_literal(&outs[0])?;
+            let m = m.as_f32()?;
+            for (a, &v) in acc.iter_mut().zip(m.iter()) {
+                *a += v as f64;
+            }
+        }
+        let k = n_batches.max(1) as f64;
+        Ok(EvalResult {
+            mode: mode.to_string(),
+            ce: acc[0] / k,
+            pred_acc: acc[1] / k,
+            router_frac: acc[2] / k,
+            participation: acc[3] / k,
+            n_batches,
+        })
+    }
+
+    /// Save params + optimizer state + step counter.
+    pub fn save_checkpoint(&self, path: &Path) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let n = self.bundle.manifest.params.len();
+        let mut named: Vec<(String, Tensor)> = Vec::with_capacity(3 * n + 1);
+        for (i, spec) in self.bundle.manifest.params.iter().enumerate() {
+            named.push((spec.name.clone(), Tensor::from_literal(&self.state[i])?));
+            named.push((
+                format!("m::{}", spec.name),
+                Tensor::from_literal(&self.state[n + i])?,
+            ));
+            named.push((
+                format!("v::{}", spec.name),
+                Tensor::from_literal(&self.state[2 * n + i])?,
+            ));
+        }
+        named.push(("__step".into(), Tensor::scalar_i32(self.step as i32)));
+        checkpoint::save(path, &named)
+    }
+}
+
+fn take(
+    map: &mut std::collections::HashMap<String, Tensor>,
+    key: &str,
+) -> crate::Result<Tensor> {
+    map.remove(key)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint missing {key:?}"))
+}

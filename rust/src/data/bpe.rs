@@ -1,0 +1,173 @@
+//! From-scratch byte-pair-encoding trainer + encoder.
+//!
+//! A small but real BPE substrate: trains merge rules over a corpus sample,
+//! encodes with longest-merge-first semantics, and round-trips losslessly.
+//! Used by the `routing_explorer` example to show MoD routing over a
+//! merged-token stream (token rarity vs routing depth), and available to
+//! downstream users who want sub-word units instead of raw bytes.
+//!
+//! New ids are allocated after the byte+specials range, so a BPE vocab is a
+//! strict superset of [`super::tokenizer::ByteTokenizer`]'s.
+
+use std::collections::HashMap;
+
+use super::tokenizer::{Tokenizer, BOS, EOS, VOCAB_SIZE};
+
+/// A trained BPE model: ordered merge rules.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// (left, right) -> merged id, in training order (priority order).
+    merges: Vec<((u16, u16), u16)>,
+    /// merged id -> byte expansion.
+    expansions: HashMap<u16, Vec<u8>>,
+}
+
+impl Bpe {
+    /// Learn `n_merges` merge rules from sample text.
+    pub fn train(text: &str, n_merges: usize) -> Self {
+        let mut seq: Vec<u16> = text.bytes().map(u16::from).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut expansions: HashMap<u16, Vec<u8>> = HashMap::new();
+        let mut next_id = VOCAB_SIZE as u16;
+
+        for _ in 0..n_merges {
+            // count adjacent pairs
+            let mut counts: HashMap<(u16, u16), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // deterministic argmax: count desc, then pair asc
+            let Some((&pair, &count)) = counts
+                .iter()
+                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break;
+            }
+            let id = next_id;
+            next_id += 1;
+            merges.push((pair, id));
+            let mut exp = expand_one(pair.0, &expansions);
+            exp.extend(expand_one(pair.1, &expansions));
+            expansions.insert(id, exp);
+            // apply the merge in-place
+            seq = apply_merge(&seq, pair, id);
+        }
+        Self { merges, expansions }
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE + self.merges.len()
+    }
+}
+
+fn expand_one(id: u16, expansions: &HashMap<u16, Vec<u8>>) -> Vec<u8> {
+    if id < 256 {
+        vec![id as u8]
+    } else {
+        expansions.get(&id).cloned().unwrap_or_default()
+    }
+}
+
+fn apply_merge(seq: &[u16], pair: (u16, u16), id: u16) -> Vec<u16> {
+    let mut out = Vec::with_capacity(seq.len());
+    let mut i = 0;
+    while i < seq.len() {
+        if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+            out.push(id);
+            i += 2;
+        } else {
+            out.push(seq[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+impl Tokenizer for Bpe {
+    fn encode(&self, text: &str) -> Vec<u16> {
+        let mut seq: Vec<u16> = text.bytes().map(u16::from).collect();
+        // apply merges in training (priority) order
+        for &(pair, id) in &self.merges {
+            if seq.len() < 2 {
+                break;
+            }
+            seq = apply_merge(&seq, pair, id);
+        }
+        let mut out = Vec::with_capacity(seq.len() + 2);
+        out.push(BOS);
+        out.extend(seq);
+        out.push(EOS);
+        out
+    }
+
+    fn decode(&self, tokens: &[u16]) -> String {
+        let mut bytes = Vec::new();
+        for &t in tokens {
+            if t < 256 {
+                bytes.push(t as u8);
+            } else if let Some(exp) = self.expansions.get(&t) {
+                bytes.extend_from_slice(exp);
+            }
+            // specials (BOS/EOS/PAD) decode to nothing
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.vocab_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str =
+        "the theory of the thing: the more the merrier, the theory holds. \
+         mixture of depths routes the easy tokens around the blocks.";
+
+    #[test]
+    fn training_learns_merges() {
+        let bpe = Bpe::train(SAMPLE, 20);
+        assert!(bpe.n_merges() > 5, "learned {}", bpe.n_merges());
+        assert_eq!(bpe.vocab_size(), VOCAB_SIZE + bpe.n_merges());
+    }
+
+    #[test]
+    fn encode_shrinks_text() {
+        let bpe = Bpe::train(SAMPLE, 30);
+        let toks = bpe.encode(SAMPLE);
+        assert!(toks.len() < SAMPLE.len(), "{} !< {}", toks.len(),
+                SAMPLE.len());
+    }
+
+    #[test]
+    fn roundtrip_lossless() {
+        let bpe = Bpe::train(SAMPLE, 30);
+        for text in [SAMPLE, "the the the", "unseen züri bytes ∆∆",
+                     ""] {
+            assert_eq!(bpe.decode(&bpe.encode(text)), text);
+        }
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let a = Bpe::train(SAMPLE, 15);
+        let b = Bpe::train(SAMPLE, 15);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn zero_merges_is_byte_tokenizer() {
+        let bpe = Bpe::train(SAMPLE, 0);
+        let toks = bpe.encode("abc");
+        assert_eq!(toks, vec![BOS, 97, 98, 99, EOS]);
+    }
+}

@@ -1,0 +1,230 @@
+//! Synthetic corpus with controllable per-position prediction difficulty.
+//!
+//! MoD's central hypothesis (paper §1) is that *some tokens are harder to
+//! predict than others*, and a learned router can identify the easy ones
+//! and spend less compute on them. Our generator makes that property
+//! explicit and tunable, substituting for the paper's proprietary corpus
+//! (DESIGN.md §5):
+//!
+//! * A first-order Markov chain over the byte vocabulary with a Zipfian
+//!   stationary distribution provides natural-language-like statistics.
+//! * A fraction of positions are **deterministic continuations**: inside a
+//!   "phrase" (copied span), the next token is a function of the previous
+//!   one — entropy ~0 bits, trivially predictable, the tokens a trained MoD
+//!   router should learn to route *around* blocks.
+//! * The remaining positions are **high-entropy draws** from the Markov
+//!   row — the tokens that warrant full compute.
+//!
+//! `sequence(i, len)` is random-access and deterministic: sequence `i` is
+//! generated from stream `i` of the corpus seed, so train/eval splits are
+//! exactly reproducible and trivially disjoint.
+
+use super::rng::Pcg32;
+use super::tokenizer::{BOS, VOCAB_SIZE};
+
+/// Tunable shape of the synthetic language.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    /// Number of "content" byte symbols actually used (<= 256).
+    pub alphabet: usize,
+    /// Zipf exponent of the stationary distribution (1.0 ≈ natural text).
+    pub zipf_s: f64,
+    /// Probability of entering a deterministic phrase at each position.
+    pub phrase_start_p: f64,
+    /// Mean length of a deterministic phrase (geometric).
+    pub phrase_mean_len: f64,
+    /// Markov row concentration: higher = peakier rows = lower entropy.
+    pub row_concentration: f64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        Self {
+            alphabet: 64,
+            zipf_s: 1.1,
+            phrase_start_p: 0.12,
+            phrase_mean_len: 6.0,
+            row_concentration: 1.0,
+        }
+    }
+}
+
+/// Deterministic random-access corpus stream.
+#[derive(Clone)]
+pub struct MarkovCorpus {
+    spec: CorpusSpec,
+    seed: u64,
+    /// Transition matrix rows, alphabet x alphabet, row-normalized.
+    rows: Vec<Vec<f64>>,
+    /// Deterministic phrase successor: succ[t] = next symbol inside a phrase.
+    succ: Vec<usize>,
+}
+
+impl MarkovCorpus {
+    pub fn new(spec: CorpusSpec, seed: u64) -> Self {
+        let a = spec.alphabet;
+        let mut rng = Pcg32::new(seed, 0xC0FFEE);
+        // Zipfian target marginals.
+        let marginal: Vec<f64> =
+            (0..a).map(|i| 1.0 / ((i + 1) as f64).powf(spec.zipf_s)).collect();
+        // Random rows biased toward the marginal; concentration shapes
+        // per-row entropy.
+        let mut rows = Vec::with_capacity(a);
+        for _ in 0..a {
+            let mut row: Vec<f64> = (0..a)
+                .map(|j| {
+                    let g = -(rng.next_f64().max(1e-12)).ln(); // Exp(1)
+                    marginal[j] * g.powf(spec.row_concentration)
+                })
+                .collect();
+            let sum: f64 = row.iter().sum();
+            for w in &mut row {
+                *w /= sum;
+            }
+            rows.push(row);
+        }
+        // Deterministic phrase successor = a fixed random permutation-ish
+        // map (not necessarily a bijection; determinism is what matters).
+        let succ: Vec<usize> =
+            (0..a).map(|_| rng.next_bounded(a as u32) as usize).collect();
+        Self { spec, seed, rows, succ }
+    }
+
+    pub fn spec(&self) -> &CorpusSpec {
+        &self.spec
+    }
+
+    /// Generate sequence `i` (length `len`, starts with BOS).
+    /// Tokens are offsets into the byte range [0, alphabet).
+    pub fn sequence(&self, i: u64, len: usize) -> Vec<u16> {
+        let (toks, _) = self.sequence_with_difficulty(i, len);
+        toks
+    }
+
+    /// Like [`sequence`], also returning per-position difficulty flags:
+    /// `true` = high-entropy (Markov draw), `false` = deterministic
+    /// (phrase continuation or BOS). The routing-analysis harness (fig 5)
+    /// correlates these with the router's decisions.
+    pub fn sequence_with_difficulty(&self, i: u64, len: usize)
+        -> (Vec<u16>, Vec<bool>) {
+        let a = self.spec.alphabet;
+        let mut rng = Pcg32::new(self.seed ^ 0x9E3779B97F4A7C15, i);
+        let mut toks = Vec::with_capacity(len);
+        let mut hard = Vec::with_capacity(len);
+        toks.push(BOS);
+        hard.push(false);
+        let mut prev = rng.next_bounded(a as u32) as usize;
+        let mut phrase_left = 0usize;
+        let p_cont = 1.0 - 1.0 / self.spec.phrase_mean_len.max(1.0);
+        while toks.len() < len {
+            let in_phrase = if phrase_left > 0 {
+                phrase_left -= 1;
+                true
+            } else if rng.next_f64() < self.spec.phrase_start_p {
+                // geometric length; consume this position deterministically
+                phrase_left = 0;
+                while rng.next_f64() < p_cont {
+                    phrase_left += 1;
+                }
+                true
+            } else {
+                false
+            };
+            let next = if in_phrase {
+                self.succ[prev]
+            } else {
+                rng.sample_weighted(&self.rows[prev])
+            };
+            toks.push(next as u16);
+            hard.push(!in_phrase);
+            prev = next;
+        }
+        debug_assert!(toks.iter().all(|&t| (t as usize) < VOCAB_SIZE));
+        (toks, hard)
+    }
+
+    /// Empirical per-position entropy over `n` sampled sequences, in nats.
+    /// Used by tests and by the fig 5 harness to verify the corpus really
+    /// has bimodal difficulty.
+    pub fn mean_entropy_bits(&self, n: u64, len: usize) -> (f64, f64) {
+        // entropy of deterministic positions vs markov positions
+        let mut h_hard = 0.0;
+        let mut n_hard = 0usize;
+        let mut n_easy = 0usize;
+        for i in 0..n {
+            let (toks, hard) = self.sequence_with_difficulty(i, len);
+            for t in 1..toks.len() {
+                if hard[t] {
+                    let row = &self.rows[toks[t - 1] as usize
+                        % self.spec.alphabet];
+                    let h: f64 = row
+                        .iter()
+                        .filter(|&&p| p > 0.0)
+                        .map(|&p| -p * p.ln())
+                        .sum();
+                    h_hard += h;
+                    n_hard += 1;
+                } else {
+                    n_easy += 1;
+                }
+            }
+        }
+        (h_hard / n_hard.max(1) as f64, n_easy as f64
+            / (n_hard + n_easy).max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_deterministic_and_distinct() {
+        let c = MarkovCorpus::new(CorpusSpec::default(), 5);
+        assert_eq!(c.sequence(0, 64), c.sequence(0, 64));
+        assert_ne!(c.sequence(0, 64), c.sequence(1, 64));
+    }
+
+    #[test]
+    fn starts_with_bos_and_in_vocab() {
+        let c = MarkovCorpus::new(CorpusSpec::default(), 5);
+        let s = c.sequence(3, 128);
+        assert_eq!(s[0], BOS);
+        assert_eq!(s.len(), 128);
+        for &t in &s[1..] {
+            assert!((t as usize) < c.spec().alphabet);
+        }
+    }
+
+    #[test]
+    fn difficulty_flags_are_bimodal() {
+        let c = MarkovCorpus::new(CorpusSpec::default(), 5);
+        let (h_hard, easy_frac) = c.mean_entropy_bits(20, 256);
+        // markov positions carry real entropy; a solid minority of
+        // positions are deterministic
+        assert!(h_hard > 1.0, "hard entropy {h_hard}");
+        assert!(easy_frac > 0.2 && easy_frac < 0.9, "easy frac {easy_frac}");
+    }
+
+    #[test]
+    fn phrase_positions_follow_succ_map() {
+        let c = MarkovCorpus::new(CorpusSpec::default(), 11);
+        let (toks, hard) = c.sequence_with_difficulty(2, 256);
+        for t in 2..toks.len() {
+            if !hard[t] && toks[t - 1] != BOS {
+                assert_eq!(
+                    toks[t] as usize,
+                    c.succ[toks[t - 1] as usize],
+                    "deterministic position {t} must follow succ map"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_different_languages() {
+        let a = MarkovCorpus::new(CorpusSpec::default(), 1);
+        let b = MarkovCorpus::new(CorpusSpec::default(), 2);
+        assert_ne!(a.sequence(0, 64), b.sequence(0, 64));
+    }
+}

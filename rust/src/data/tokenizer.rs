@@ -1,0 +1,72 @@
+//! Byte-level tokenizer: 256 byte symbols + BOS/EOS/PAD specials.
+//!
+//! Vocab layout (shared ABI with `python/compile/configs.py` vocab_size=259):
+//!   0..=255  raw bytes
+//!   256      BOS
+//!   257      EOS
+//!   258      PAD
+
+pub const BOS: u16 = 256;
+pub const EOS: u16 = 257;
+pub const PAD: u16 = 258;
+pub const VOCAB_SIZE: usize = 259;
+
+/// Minimal tokenizer interface used by the trainer and the server.
+pub trait Tokenizer: Send + Sync {
+    fn encode(&self, text: &str) -> Vec<u16>;
+    fn decode(&self, tokens: &[u16]) -> String;
+    fn vocab_size(&self) -> usize;
+}
+
+/// Identity byte tokenizer.
+#[derive(Debug, Default, Clone)]
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn encode(&self, text: &str) -> Vec<u16> {
+        let mut out = Vec::with_capacity(text.len() + 2);
+        out.push(BOS);
+        out.extend(text.bytes().map(u16::from));
+        out.push(EOS);
+        out
+    }
+
+    fn decode(&self, tokens: &[u16]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t < 256)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let toks = t.encode("hello, MoD!");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(*toks.last().unwrap(), EOS);
+        assert_eq!(t.decode(&toks), "hello, MoD!");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer;
+        let s = "mixturé-of-dépths ∆";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_outside_byte_range() {
+        assert!(BOS as usize >= 256 && (PAD as usize) < VOCAB_SIZE);
+    }
+}

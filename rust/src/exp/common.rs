@@ -1,0 +1,236 @@
+//! Shared experiment plumbing: context (paths, engine), scales, table
+//! rendering, and the train-one-variant helper every figure uses.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::coordinator::{Trainer, TrainerOptions};
+use crate::data::{BatchIter, CorpusSpec, MarkovCorpus};
+use crate::isoflop;
+use crate::runtime::{Bundle, Engine};
+
+/// How big to run an experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Smoke scale: minutes on 1 CPU core; shapes still hold directionally.
+    Smoke,
+    /// Tiny scale: the default for EXPERIMENTS.md numbers.
+    Tiny,
+    /// Full (still scaled-down vs the paper; hours).
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "smoke" => Ok(Self::Smoke),
+            "tiny" => Ok(Self::Tiny),
+            "full" => Ok(Self::Full),
+            other => anyhow::bail!("unknown scale {other:?} (smoke|tiny|full)"),
+        }
+    }
+
+    /// Training-FLOP budget for isoFLOP experiments at this scale.
+    pub fn budget(&self) -> f64 {
+        match self {
+            Self::Smoke => 2e10,
+            Self::Tiny => 2e11,
+            Self::Full => 2e12,
+        }
+    }
+
+    /// Sequence length used by experiment models at this scale.
+    pub fn seq_len(&self) -> usize {
+        match self {
+            Self::Smoke => 64,
+            Self::Tiny => 128,
+            Self::Full => 256,
+        }
+    }
+
+    /// Steps for fixed-step (non-isoFLOP) comparisons.
+    pub fn steps(&self) -> u64 {
+        match self {
+            Self::Smoke => 30,
+            Self::Tiny => 200,
+            Self::Full => 800,
+        }
+    }
+}
+
+/// Paths + engine shared by the harnesses.
+pub struct ExpContext {
+    pub engine: Arc<Engine>,
+    pub artifacts_dir: PathBuf,
+    pub python_dir: PathBuf,
+    pub runs_dir: PathBuf,
+    pub scale: Scale,
+    pub corpus_seed: u64,
+}
+
+impl ExpContext {
+    pub fn new(repo_root: &Path, scale: Scale) -> crate::Result<Self> {
+        Ok(Self {
+            engine: Arc::new(Engine::cpu()?),
+            artifacts_dir: repo_root.join("artifacts"),
+            python_dir: repo_root.join("python"),
+            runs_dir: repo_root.join("runs"),
+            scale,
+            corpus_seed: 7,
+        })
+    }
+
+    /// Locate the repo root: walk up from cwd until Cargo.toml is found.
+    pub fn repo_root() -> PathBuf {
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+        loop {
+            if dir.join("Cargo.toml").exists() && dir.join("python").exists() {
+                return dir;
+            }
+            if !dir.pop() {
+                return ".".into();
+            }
+        }
+    }
+
+    /// Ensure a bundle exists for (name, model, train); open it.
+    pub fn bundle(
+        &self,
+        name: &str,
+        model: &ModelConfig,
+        train: &TrainConfig,
+    ) -> crate::Result<Arc<Bundle>> {
+        self.bundle_opts(name, model, train, false)
+    }
+
+    /// [`Self::bundle`] with decode artifacts (layer-sliced runtime).
+    pub fn bundle_opts(
+        &self,
+        name: &str,
+        model: &ModelConfig,
+        train: &TrainConfig,
+        with_decode: bool,
+    ) -> crate::Result<Arc<Bundle>> {
+        let dir = isoflop::ensure_bundle_opts(
+            &self.artifacts_dir,
+            &self.python_dir,
+            name,
+            model,
+            train,
+            with_decode,
+        )?;
+        Ok(Arc::new(Bundle::open(self.engine.clone(), &dir)?))
+    }
+
+    pub fn data(&self, train: &TrainConfig, seq_len: usize) -> BatchIter {
+        let corpus = MarkovCorpus::new(CorpusSpec::default(), self.corpus_seed);
+        BatchIter::new(corpus, train.batch_size, seq_len)
+    }
+
+    /// Train a variant for `steps` and return (trainer, outcome).
+    pub fn train_variant(
+        &self,
+        name: &str,
+        model: &ModelConfig,
+        train: &TrainConfig,
+        steps: u64,
+        run_dir: &Path,
+    ) -> crate::Result<(Trainer, crate::coordinator::TrainOutcome)> {
+        self.train_variant_opts(name, model, train, steps, run_dir, false)
+    }
+
+    /// [`Self::train_variant`] with decode artifacts.
+    pub fn train_variant_opts(
+        &self,
+        name: &str,
+        model: &ModelConfig,
+        train: &TrainConfig,
+        steps: u64,
+        run_dir: &Path,
+        with_decode: bool,
+    ) -> crate::Result<(Trainer, crate::coordinator::TrainOutcome)> {
+        let bundle = self.bundle_opts(name, model, train, with_decode)?;
+        let data = self.data(train, model.seq_len);
+        let mut trainer = Trainer::new(bundle, data, None)?;
+        let opts = TrainerOptions {
+            steps: Some(steps),
+            log_every: (steps / 25).max(1),
+            ckpt_every: 0,
+            run_dir: run_dir.join(name),
+            resume: None,
+        };
+        let outcome = trainer.run(&opts)?;
+        Ok((trainer, outcome))
+    }
+}
+
+/// Render an aligned markdown-ish table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {c:>w$} |", w = w));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        headers.iter().map(|s| s.to_string()).collect(),
+        &widths,
+    ));
+    out.push_str(&fmt_row(
+        widths.iter().map(|w| "-".repeat(*w)).collect(),
+        &widths,
+    ));
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+    }
+    out
+}
+
+/// Write a JSON document under the runs dir.
+pub fn write_json(
+    dir: &Path,
+    name: &str,
+    value: &crate::util::json::Json,
+) -> crate::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, value.to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("tiny").unwrap(), Scale::Tiny);
+        assert!(Scale::parse("big").is_err());
+        assert!(Scale::Smoke.budget() < Scale::Full.budget());
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["name", "loss"],
+            &[vec!["a".into(), "1.25".into()],
+              vec!["longer".into(), "2".into()]],
+        );
+        assert!(t.contains("| longer |"));
+        let widths: Vec<usize> =
+            t.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{t}");
+    }
+}

@@ -1,0 +1,157 @@
+//! Figure 3 — MoD hyperparameter tuning at a fixed training-FLOP budget.
+//!
+//! Paper setup: variants trained for 6e18 FLOPs; findings (a) routing every
+//! *other* block beats every block, (b) aggressive capacity reduction down
+//! to 12.5% is best, (c) stochastic routing is drastically worse, (d) the
+//! best MoD variant beats the baseline's loss while stepping faster.
+//! Here: same comparison at `scale.budget()` FLOPs on the synthetic corpus.
+
+use crate::util::json::Json;
+
+use crate::config::{ModelConfig, RoutingMode, TrainConfig};
+use crate::flops;
+use crate::isoflop::steps_for_budget;
+
+use super::common::{render_table, write_json, ExpContext};
+
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub variant: String,
+    pub n_params: usize,
+    pub relative_fwd_flops: f64,
+    pub steps: u64,
+    pub final_ce: f64,
+    pub steps_per_sec: f64,
+    pub router_frac: f64,
+}
+
+#[derive(Debug)]
+pub struct Fig3Result {
+    pub budget: f64,
+    pub rows: Vec<Fig3Row>,
+}
+
+impl Fig3Result {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("budget", Json::num(self.budget)),
+            ("rows", Json::Arr(self.rows.iter().map(|r| Json::obj(vec![
+                ("variant", Json::str(&r.variant)),
+                ("n_params", Json::num(r.n_params as f64)),
+                ("relative_fwd_flops", Json::num(r.relative_fwd_flops)),
+                ("steps", Json::num(r.steps as f64)),
+                ("final_ce", Json::num(r.final_ce)),
+                ("steps_per_sec", Json::num(r.steps_per_sec)),
+                ("router_frac", Json::num(r.router_frac)),
+            ])).collect())),
+        ])
+    }
+}
+
+fn variants(seq_len: usize) -> Vec<(String, ModelConfig)> {
+    let base = ModelConfig {
+        d_model: 64,
+        n_layers: 6,
+        n_heads: 4,
+        d_head: 16,
+        d_ff: 256,
+        seq_len,
+        ..Default::default()
+    };
+    let mk = |routing, frac: f64| ModelConfig {
+        routing,
+        capacity_frac: frac,
+        ..base.clone()
+    };
+    vec![
+        ("baseline".into(), base.clone()),
+        ("mod_every_12.5%".into(), mk(RoutingMode::ModEvery, 0.125)),
+        ("mod_interleaved_12.5%".into(), mk(RoutingMode::ModInterleaved, 0.125)),
+        ("mod_interleaved_25%".into(), mk(RoutingMode::ModInterleaved, 0.25)),
+        ("mod_interleaved_50%".into(), mk(RoutingMode::ModInterleaved, 0.5)),
+        ("mod_interleaved_95%".into(), mk(RoutingMode::ModInterleaved, 0.95)),
+        ("stochastic_12.5%".into(), {
+            let mut c = mk(RoutingMode::Stochastic, 0.125);
+            c.train_predictor = false;
+            c
+        }),
+    ]
+}
+
+pub fn run(ctx: &ExpContext) -> crate::Result<Fig3Result> {
+    let budget = ctx.scale.budget();
+    let seq = ctx.scale.seq_len();
+    let run_dir = ctx.runs_dir.join("fig3");
+    let mut rows = Vec::new();
+    for (name, model) in variants(seq) {
+        let train = TrainConfig {
+            batch_size: 8,
+            total_steps: steps_for_budget(&model, &TrainConfig::default(), budget)
+                as usize,
+            ..Default::default()
+        };
+        let steps = train.total_steps as u64;
+        println!("[fig3] {name}: {} params, {steps} steps", model.n_params());
+        let bundle_name = format!("fig3_{}", name.replace(['%', '.'], ""));
+        let (trainer, outcome) =
+            ctx.train_variant(&bundle_name, &model, &train, steps, &run_dir)?;
+        // router calibration stat from a held-out eval (topk mode)
+        let router_frac = trainer
+            .evaluate("topk", 2)
+            .map(|e| e.router_frac)
+            .unwrap_or(f64::NAN);
+        rows.push(Fig3Row {
+            variant: name,
+            n_params: model.n_params(),
+            relative_fwd_flops: flops::relative_flops(&model),
+            steps,
+            final_ce: outcome.final_ce,
+            steps_per_sec: outcome.steps_per_sec,
+            router_frac,
+        });
+    }
+    let result = Fig3Result { budget, rows };
+    print_summary(&result);
+    write_json(&run_dir, "fig3.json", &result.to_json())?;
+    Ok(result)
+}
+
+pub fn print_summary(r: &Fig3Result) {
+    println!("\n=== Figure 3: hyperparameter tuning @ {:.1e} FLOPs ===", r.budget);
+    let rows: Vec<Vec<String>> = r
+        .rows
+        .iter()
+        .map(|row| {
+            vec![
+                row.variant.clone(),
+                row.n_params.to_string(),
+                format!("{:.3}", row.relative_fwd_flops),
+                row.steps.to_string(),
+                format!("{:.4}", row.final_ce),
+                format!("{:.2}", row.steps_per_sec),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &["variant", "params", "rel FLOPs/fwd", "steps", "final CE",
+              "steps/s"],
+            &rows
+        )
+    );
+    if let (Some(base), Some(best_mod)) = (
+        r.rows.iter().find(|x| x.variant == "baseline"),
+        r.rows
+            .iter()
+            .filter(|x| x.variant.starts_with("mod_"))
+            .min_by(|a, b| a.final_ce.total_cmp(&b.final_ce)),
+    ) {
+        println!(
+            "best MoD ({}) vs baseline: ΔCE = {:+.4}, step speed x{:.2}",
+            best_mod.variant,
+            best_mod.final_ce - base.final_ce,
+            best_mod.steps_per_sec / base.steps_per_sec
+        );
+    }
+}

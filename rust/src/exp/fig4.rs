@@ -1,0 +1,178 @@
+//! Figure 4 — isoFLOP analysis across multiple budgets.
+//!
+//! Paper setup: baseline vs 12.5%-capacity MoD, 6e18/2e19/1e20 FLOPs,
+//! 60M–3B params. Findings: MoD's isoFLOP optimum sits at *more params and
+//! lower loss* ("down and to the right"), and MoD variants exist that beat
+//! the optimal baseline while needing fewer FLOPs per forward pass.
+//! Here: the same two families over the scaled ladder at
+//! {0.5, 1, 2} × `scale.budget()`.
+
+use crate::util::json::Json;
+
+use crate::config::{ladder_for_budget, RoutingMode, TrainConfig};
+use crate::isoflop::{fit_quadratic_optimum, run_rung, SweepPoint, SweepResult};
+
+use super::common::{render_table, write_json, ExpContext};
+
+#[derive(Debug)]
+pub struct Fig4Result {
+    pub sweeps: Vec<SweepResult>,
+}
+
+impl Fig4Result {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "sweeps",
+            Json::Arr(self.sweeps.iter().map(|s| s.to_json()).collect()),
+        )])
+    }
+}
+
+/// Number of ladder rungs to run at each scale (keeps smoke mode fast).
+fn rung_count(ctx: &ExpContext) -> usize {
+    match ctx.scale {
+        super::common::Scale::Smoke => 3,
+        super::common::Scale::Tiny => 4,
+        super::common::Scale::Full => 6,
+    }
+}
+
+pub fn run(ctx: &ExpContext) -> crate::Result<Fig4Result> {
+    let budgets: Vec<f64> = [0.5, 1.0, 2.0]
+        .iter()
+        .map(|m| m * ctx.scale.budget())
+        .collect();
+    let seq = ctx.scale.seq_len();
+    let run_dir = ctx.runs_dir.join("fig4");
+    let train = TrainConfig { batch_size: 8, ..Default::default() };
+    let families = [
+        ("baseline", RoutingMode::None),
+        ("mod12.5", RoutingMode::ModInterleaved),
+    ];
+    let mut sweeps = Vec::new();
+    for &budget in &budgets {
+        for (label, routing) in families {
+            let ladder = ladder_for_budget(routing, 0.125, seq);
+            let ladder = &ladder[..rung_count(ctx).min(ladder.len())];
+            let mut points: Vec<SweepPoint> = Vec::new();
+            for entry in ladder {
+                let bundle_name = format!(
+                    "fig4_{label}_{}_{}",
+                    entry.id,
+                    seq
+                )
+                .replace('.', "");
+                let mut tr = train.clone();
+                tr.total_steps = crate::isoflop::steps_for_budget(
+                    &entry.model, &train, budget,
+                ) as usize;
+                let dir = crate::isoflop::ensure_bundle(
+                    &ctx.artifacts_dir,
+                    &ctx.python_dir,
+                    &bundle_name,
+                    &entry.model,
+                    &tr,
+                )?;
+                println!(
+                    "[fig4] budget {budget:.1e} {label} {}: {} params, {} steps",
+                    entry.id,
+                    entry.model.n_params(),
+                    tr.total_steps
+                );
+                let point = run_rung(
+                    &ctx.engine,
+                    &dir,
+                    entry,
+                    &tr,
+                    budget,
+                    ctx.corpus_seed,
+                    &run_dir.join(format!("{label}_{budget:.0e}")),
+                )?;
+                points.push(point);
+            }
+            let fitted = fit_quadratic_optimum(
+                &points
+                    .iter()
+                    .map(|p| (p.n_params as f64, p.final_ce))
+                    .collect::<Vec<_>>(),
+            );
+            sweeps.push(SweepResult {
+                budget,
+                label: label.to_string(),
+                points,
+                optimum: fitted,
+            });
+        }
+    }
+    let result = Fig4Result { sweeps };
+    print_summary(&result);
+    write_json(&run_dir, "fig4.json", &result.to_json())?;
+    Ok(result)
+}
+
+pub fn print_summary(r: &Fig4Result) {
+    println!("\n=== Figure 4: isoFLOP analysis ===");
+    for sweep in &r.sweeps {
+        println!("\n-- budget {:.1e}, family {} --", sweep.budget, sweep.label);
+        let rows: Vec<Vec<String>> = sweep
+            .points
+            .iter()
+            .map(|p| {
+                vec![
+                    p.id.clone(),
+                    p.n_params.to_string(),
+                    p.steps.to_string(),
+                    format!("{:.3}", p.relative_fwd_flops),
+                    format!("{:.4}", p.final_ce),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            render_table(
+                &["rung", "params", "steps", "rel FLOPs/fwd", "final CE"],
+                &rows
+            )
+        );
+        match sweep.optimum {
+            Some((p, l)) => println!(
+                "fitted optimum: ~{:.2e} params at CE {:.4}", p, l
+            ),
+            None => println!("fitted optimum: (no interior minimum)"),
+        }
+    }
+    // the paper's headline orderings
+    let mut budgets: Vec<f64> = r.sweeps.iter().map(|s| s.budget).collect();
+    budgets.sort_by(|a, b| a.total_cmp(b));
+    budgets.dedup_by(|a, b| a.to_bits() == b.to_bits());
+    for budget in budgets {
+        let base = r.sweeps.iter().find(|s| {
+            s.budget == budget && s.label == "baseline"
+        });
+        let modr = r.sweeps.iter().find(|s| {
+            s.budget == budget && s.label == "mod12.5"
+        });
+        if let (Some(base), Some(modr)) = (base, modr) {
+            let best_base = base
+                .points
+                .iter()
+                .map(|p| p.final_ce)
+                .fold(f64::INFINITY, f64::min);
+            let best_mod = modr
+                .points
+                .iter()
+                .map(|p| p.final_ce)
+                .fold(f64::INFINITY, f64::min);
+            println!(
+                "budget {budget:.1e}: best baseline CE {best_base:.4}, \
+                 best MoD CE {best_mod:.4} ({})",
+                if best_mod <= best_base {
+                    "MoD wins — matches paper"
+                } else {
+                    "baseline wins — check scale"
+                }
+            );
+        }
+    }
+}
+

@@ -1,0 +1,141 @@
+//! Figure 5 — routing analysis of a trained interleaved-MoD model.
+//!
+//! Paper findings: (a) routed blocks are sparse (≈capacity% of tokens
+//! participate), (b) the router-weight distribution straddles 0.5 exactly
+//! at the capacity split (the aux BCE loss at work), (c) some tokens engage
+//! every block while others route around whenever possible, correlated with
+//! prediction difficulty. Our corpus labels difficulty explicitly, so (c)
+//! becomes a measurable conditional probability instead of the paper's
+//! "preliminary analyses suggest".
+
+use crate::util::json::Json;
+
+use crate::analysis::{
+    collect_routing_maps, difficulty_correlation, histogram, render_map,
+    DifficultyCorrelation, WeightHistogram,
+};
+use crate::config::{ModelConfig, RoutingMode, TrainConfig};
+
+use super::common::{write_json, ExpContext};
+
+#[derive(Debug)]
+pub struct Fig5Result {
+    pub capacity_frac: f64,
+    pub histogram: WeightHistogram,
+    pub mean_participation: f64,
+    pub correlation: DifficultyCorrelation,
+    pub example_map: String,
+}
+
+impl Fig5Result {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("capacity_frac", Json::num(self.capacity_frac)),
+            ("histogram", self.histogram.to_json()),
+            ("mean_participation", Json::num(self.mean_participation)),
+            ("correlation", self.correlation.to_json()),
+            ("example_map", Json::str(&self.example_map)),
+        ])
+    }
+}
+
+pub fn run(ctx: &ExpContext) -> crate::Result<Fig5Result> {
+    let seq = ctx.scale.seq_len();
+    let model = ModelConfig {
+        d_model: 64,
+        n_layers: 6,
+        n_heads: 4,
+        d_head: 16,
+        d_ff: 256,
+        seq_len: seq,
+        routing: RoutingMode::ModInterleaved,
+        capacity_frac: 0.125,
+        ..Default::default()
+    };
+    let train = TrainConfig {
+        batch_size: 8,
+        total_steps: ctx.scale.steps() as usize,
+        ..Default::default()
+    };
+    let run_dir = ctx.runs_dir.join("fig5");
+    println!("[fig5] training interleaved 12.5% MoD for {} steps", train.total_steps);
+    let (trainer, _outcome) = ctx.train_variant_opts(
+        "fig5_mod",
+        &model,
+        &train,
+        train.total_steps as u64,
+        &run_dir,
+        true, // decode artifacts: the routing maps run the decode path
+    )?;
+
+    let params = trainer.params()?;
+    let bundle = trainer.bundle().clone();
+    let corpus = crate::analysis::analysis_corpus(ctx.corpus_seed + 1);
+    let n_seqs = match ctx.scale {
+        super::common::Scale::Smoke => 2,
+        super::common::Scale::Tiny => 6,
+        super::common::Scale::Full => 16,
+    };
+    println!("[fig5] collecting routing maps over {n_seqs} sequences");
+    let maps = collect_routing_maps(&bundle, &params, &corpus, n_seqs, seq.min(64))?;
+
+    let hist = histogram(
+        maps.iter()
+            .flat_map(|m| m.router_sigmoids.iter().flatten().copied()),
+        20,
+    );
+    let total: usize = maps
+        .iter()
+        .map(|m| m.map.iter().map(|v| v.len()).sum::<usize>())
+        .sum();
+    let through: usize = maps
+        .iter()
+        .map(|m| {
+            m.map
+                .iter()
+                .map(|v| v.iter().filter(|&&p| p).count())
+                .sum::<usize>()
+        })
+        .sum();
+    let corr = difficulty_correlation(&maps);
+    let result = Fig5Result {
+        capacity_frac: model.capacity_frac,
+        histogram: hist,
+        mean_participation: through as f64 / total.max(1) as f64,
+        correlation: corr,
+        example_map: render_map(&maps[0], 64),
+    };
+    print_summary(&result);
+    write_json(&run_dir, "fig5.json", &result.to_json())?;
+    Ok(result)
+}
+
+pub fn print_summary(r: &Fig5Result) {
+    println!("\n=== Figure 5: routing analysis ===");
+    println!("routing decisions for one sequence (64 tokens; '#'=through, \
+              '.'=around, '^'=high-entropy position):");
+    println!("{}", r.example_map);
+    println!(
+        "router sigmoid > 0.5: {:.1}% (aux-BCE target ≈ capacity {:.1}%)",
+        100.0 * r.histogram.frac_above_half,
+        100.0 * r.capacity_frac
+    );
+    println!(
+        "mean participation in routed blocks: {:.1}%",
+        100.0 * r.mean_participation
+    );
+    println!(
+        "P(route through | hard) = {:.3}   P(route through | easy) = {:.3}  \
+         ({} hard / {} easy positions)",
+        r.correlation.p_route_hard,
+        r.correlation.p_route_easy,
+        r.correlation.n_hard,
+        r.correlation.n_easy
+    );
+    println!("histogram (20 bins over sigmoid weight):");
+    let max = *r.histogram.bins.iter().max().unwrap_or(&1) as f64;
+    for (i, &c) in r.histogram.bins.iter().enumerate() {
+        let bar = "#".repeat(((c as f64 / max) * 40.0) as usize);
+        println!("  [{:4.2}-{:4.2}) {bar}", i as f64 / 20.0, (i + 1) as f64 / 20.0);
+    }
+}

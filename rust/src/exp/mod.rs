@@ -1,0 +1,16 @@
+//! Experiment harnesses: one per paper figure (DESIGN.md §4).
+//!
+//! Each harness trains/evaluates the configurations a figure compares and
+//! emits (a) a human-readable table on stdout and (b) machine-readable
+//! CSV/JSON under `runs/<figN>/`. Scales are deliberately small (DESIGN.md
+//! §5 substitutions): what must reproduce is the *shape* — orderings,
+//! crossovers, approximate factors — not absolute numbers.
+
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+
+pub use common::{ExpContext, Scale};

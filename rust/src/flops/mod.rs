@@ -1,0 +1,243 @@
+//! Analytic FLOPs accounting for vanilla / MoD / MoE / MoDE transformers.
+//!
+//! Implements the paper's §3.1–3.2 compute-budget arithmetic exactly: a
+//! routed block's cost scales with its **capacity** C rather than the
+//! sequence length S (quadratically for the attention score/value matmuls,
+//! linearly for projections and the MLP), while the router itself costs a
+//! thin linear scan over all S tokens. These counts drive:
+//!
+//! * the isoFLOP budget math in [`crate::isoflop`] (fig 3 / fig 4),
+//! * the "relative FLOPs per forward pass" panel of fig 4,
+//! * the serving-side per-request FLOP reports in [`crate::serve`].
+//!
+//! Counts are *algorithmic* multiply-add FLOPs (2·mnk per matmul), ignoring
+//! softmax/norm/activation vector ops — the same convention the paper's
+//! "FLOPs per forward pass" uses; tests pin the §3.2 worked example
+//! (capacity T/2 ⇒ the QKᵀ matmul costs 25% of vanilla's).
+
+use crate::config::{FfMode, ModelConfig};
+
+/// FLOPs breakdown for one block at a given participating-token count.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BlockFlops {
+    /// q/k/v/o projections (linear in tokens).
+    pub proj: f64,
+    /// attention score matmul QKᵀ (quadratic in tokens).
+    pub qk: f64,
+    /// attention-weighted value matmul (quadratic in tokens).
+    pub av: f64,
+    /// feedforward (linear in tokens; all experts for MoE).
+    pub ff: f64,
+    /// router scoring + predictor (linear in *all* S tokens).
+    pub router: f64,
+}
+
+impl BlockFlops {
+    pub fn total(&self) -> f64 {
+        self.proj + self.qk + self.av + self.ff + self.router
+    }
+}
+
+/// Full-model per-forward-pass FLOPs (one sequence of `seq_len` tokens).
+#[derive(Debug, Clone)]
+pub struct ModelFlops {
+    pub per_block: Vec<BlockFlops>,
+    pub embed: f64,
+    pub unembed: f64,
+}
+
+impl ModelFlops {
+    pub fn total(&self) -> f64 {
+        self.embed
+            + self.unembed
+            + self.per_block.iter().map(BlockFlops::total).sum::<f64>()
+    }
+}
+
+/// FLOPs of one transformer block processing `c` tokens (capacity) out of
+/// a sequence of `s`, per the paper's accounting.
+pub fn block_flops(cfg: &ModelConfig, c: usize, s: usize, routed: bool) -> BlockFlops {
+    let d = cfg.d_model as f64;
+    let kd = (cfg.n_heads * cfg.d_head) as f64;
+    let cf = c as f64;
+    let sf = s as f64;
+    let proj = 4.0 * 2.0 * cf * d * kd;
+    // per-head quadratic terms sum to 2*C²*kd across heads
+    let qk = 2.0 * cf * cf * kd;
+    let av = 2.0 * cf * cf * kd;
+    let ff = match cfg.ff_mode {
+        FfMode::Dense => 2.0 * 2.0 * cf * d * cfg.d_ff as f64,
+        FfMode::Moe | FfMode::ModeIntegrated => {
+            // each expert processes its own capacity C_e tokens
+            let ce = (cfg.expert_capacity_frac * cf).max(1.0);
+            cfg.n_experts as f64 * 2.0 * 2.0 * ce * d * cfg.d_ff as f64
+        }
+    };
+    let mut router = 0.0;
+    if routed {
+        router += 2.0 * sf * d; // MoD router scores every token
+        if cfg.train_predictor {
+            router += 2.0 * sf * d * cfg.predictor_hidden as f64;
+        }
+    }
+    if !matches!(cfg.ff_mode, FfMode::Dense) {
+        let cols = cfg.n_experts
+            + if matches!(cfg.ff_mode, FfMode::ModeIntegrated) { 1 } else { 0 };
+        router += 2.0 * cf * d * cols as f64; // MoE router
+    }
+    BlockFlops { proj, qk, av, ff, router }
+}
+
+/// Per-forward-pass FLOPs of a full model over one `seq_len` sequence.
+pub fn model_flops(cfg: &ModelConfig) -> ModelFlops {
+    let s = cfg.seq_len;
+    let d = cfg.d_model as f64;
+    let v = cfg.vocab_size as f64;
+    let per_block = (0..cfg.n_layers)
+        .map(|l| {
+            let routed = cfg.is_routed_block(l);
+            let c = if routed { cfg.capacity(s) } else { s };
+            block_flops(cfg, c, s, routed)
+        })
+        .collect();
+    ModelFlops {
+        per_block,
+        embed: 0.0, // table lookup, no matmul
+        unembed: 2.0 * s as f64 * d * v,
+    }
+}
+
+/// Training-step FLOPs (forward + backward ≈ 3× forward, the standard
+/// Chinchilla-style accounting) for one batch.
+pub fn train_step_flops(cfg: &ModelConfig, batch: usize) -> f64 {
+    3.0 * batch as f64 * model_flops(cfg).total()
+}
+
+/// FLOPs of one *decode step* (single token) against current context
+/// length `ctx`, counting only blocks the token actually participates in.
+/// `participates[l]` is the coordinator's routing decision for this token.
+pub fn decode_step_flops(
+    cfg: &ModelConfig,
+    ctx_per_layer: &[usize],
+    participates: &[bool],
+) -> f64 {
+    let d = cfg.d_model as f64;
+    let kd = (cfg.n_heads * cfg.d_head) as f64;
+    let mut total = 2.0 * d * cfg.vocab_size as f64; // unembed
+    for l in 0..cfg.n_layers {
+        let routed = cfg.is_routed_block(l);
+        if routed {
+            // router/predictor always run (that's how we decide)
+            total += 2.0 * d;
+            if cfg.train_predictor {
+                total += 2.0 * d * cfg.predictor_hidden as f64;
+            }
+        }
+        if !participates[l] {
+            continue;
+        }
+        let ctx = ctx_per_layer[l] as f64;
+        total += 4.0 * 2.0 * d * kd; // projections for 1 token
+        total += 2.0 * ctx * kd * 2.0; // qk + av over the layer's cache
+        total += 2.0 * 2.0 * d * cfg.d_ff as f64;
+    }
+    total
+}
+
+/// Relative FLOPs per forward pass vs a vanilla baseline of identical
+/// width/depth (the fig 4 right-panel quantity).
+pub fn relative_flops(cfg: &ModelConfig) -> f64 {
+    let mut vanilla = cfg.clone();
+    vanilla.routing = crate::config::RoutingMode::None;
+    model_flops(cfg).total() / model_flops(&vanilla).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RoutingMode;
+
+    fn base() -> ModelConfig {
+        ModelConfig::default() // d=128 L=4 S=256 dense
+    }
+
+    #[test]
+    fn qk_quadratic_in_capacity_paper_3_2() {
+        // Paper §3.2: capacity T/2 makes QKᵀ 25% as FLOP-intensive.
+        let cfg = base();
+        let s = cfg.seq_len;
+        let full = block_flops(&cfg, s, s, false);
+        let half = block_flops(&cfg, s / 2, s, false);
+        assert!((half.qk / full.qk - 0.25).abs() < 1e-12);
+        assert!((half.av / full.av - 0.25).abs() < 1e-12);
+        // projections and MLP scale linearly
+        assert!((half.proj / full.proj - 0.5).abs() < 1e-12);
+        assert!((half.ff / full.ff - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_one_recovers_vanilla() {
+        let mut cfg = base();
+        cfg.routing = RoutingMode::ModEvery;
+        cfg.capacity_frac = 1.0;
+        cfg.train_predictor = false;
+        let rel = relative_flops(&cfg);
+        // only the router scan is extra
+        assert!(rel > 1.0 && rel < 1.01, "rel {rel}");
+    }
+
+    #[test]
+    fn mod_12_5_interleaved_saves_roughly_a_third() {
+        let mut cfg = base();
+        cfg.routing = RoutingMode::ModInterleaved;
+        cfg.capacity_frac = 0.125;
+        let rel = relative_flops(&cfg);
+        // half the blocks run at 12.5% capacity => big savings, bounded by
+        // the unembed + full blocks
+        assert!(rel < 0.75, "rel {rel}");
+        assert!(rel > 0.4, "rel {rel}");
+    }
+
+    #[test]
+    fn mod_every_saves_more_than_interleaved() {
+        let mut every = base();
+        every.routing = RoutingMode::ModEvery;
+        every.capacity_frac = 0.125;
+        let mut inter = every.clone();
+        inter.routing = RoutingMode::ModInterleaved;
+        assert!(relative_flops(&every) < relative_flops(&inter));
+    }
+
+    #[test]
+    fn decode_skip_costs_only_router() {
+        let mut cfg = base();
+        cfg.routing = RoutingMode::ModEvery;
+        let ctx = vec![64; cfg.n_layers];
+        let all = decode_step_flops(&cfg, &ctx, &vec![true; cfg.n_layers]);
+        let none = decode_step_flops(&cfg, &ctx, &vec![false; cfg.n_layers]);
+        assert!(none < all * 0.2, "none {none} all {all}");
+        // router cost still present
+        assert!(none > 2.0 * cfg.d_model as f64 * cfg.vocab_size as f64);
+    }
+
+    #[test]
+    fn train_step_scales_with_batch() {
+        let cfg = base();
+        assert!(
+            (train_step_flops(&cfg, 16) / train_step_flops(&cfg, 8) - 2.0)
+                .abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn moe_ff_counts_all_experts() {
+        let mut cfg = base();
+        cfg.ff_mode = FfMode::Moe;
+        cfg.n_experts = 4;
+        cfg.expert_capacity_frac = 0.25;
+        let b = block_flops(&cfg, cfg.seq_len, cfg.seq_len, false);
+        let dense = block_flops(&base(), base().seq_len, base().seq_len, false);
+        // 4 experts * 0.25 capacity each == same ff flops as dense
+        assert!((b.ff / dense.ff - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,322 @@
+//! isoFLOP sweep harness (figs 3 & 4 methodology).
+//!
+//! Given a training-FLOP budget and a model ladder, compute per-rung step
+//! counts (steps = budget / flops-per-step), run each rung via the
+//! [`crate::coordinator::Trainer`], and fit a quadratic in log(params) to
+//! locate the isoFLOP-optimal model — the paper's analysis pipeline, scaled
+//! to this testbed (budgets ~1e12 instead of 6e18; DESIGN.md §5).
+//!
+//! Bundles for ladder rungs are produced by the *build-time* AOT pipeline;
+//! [`ensure_bundle`] shells out to `python -m compile.aot` only when a
+//! rung's artifacts are missing (never on a request path).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::Arc;
+
+use crate::config::{LadderEntry, ModelConfig, TrainConfig};
+use crate::data::{BatchIter, CorpusSpec, MarkovCorpus};
+use crate::flops;
+use crate::runtime::{Bundle, Engine};
+
+/// One completed rung of a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub id: String,
+    pub n_params: usize,
+    pub steps: u64,
+    pub flops_per_step: f64,
+    pub relative_fwd_flops: f64,
+    pub final_loss: f64,
+    pub final_ce: f64,
+    pub steps_per_sec: f64,
+}
+
+/// Result of an isoFLOP sweep at one budget.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub budget: f64,
+    pub label: String,
+    pub points: Vec<SweepPoint>,
+    /// fitted optimum (params, loss) if the fit succeeded.
+    pub optimum: Option<(f64, f64)>,
+}
+
+
+impl SweepPoint {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("n_params", Json::num(self.n_params as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("flops_per_step", Json::num(self.flops_per_step)),
+            ("relative_fwd_flops", Json::num(self.relative_fwd_flops)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("final_ce", Json::num(self.final_ce)),
+            ("steps_per_sec", Json::num(self.steps_per_sec)),
+        ])
+    }
+}
+
+impl SweepResult {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("budget", Json::num(self.budget)),
+            ("label", Json::str(&self.label)),
+            ("points", Json::Arr(self.points.iter().map(|p| p.to_json()).collect())),
+            ("optimum", match self.optimum {
+                Some((p, l)) => Json::arr([Json::num(p), Json::num(l)]),
+                None => Json::Null,
+            }),
+        ])
+    }
+}
+
+/// Steps affordable for `model` under `budget` training FLOPs.
+pub fn steps_for_budget(model: &ModelConfig, train: &TrainConfig, budget: f64) -> u64 {
+    let per_step = flops::train_step_flops(model, train.batch_size);
+    (budget / per_step).floor().max(1.0) as u64
+}
+
+/// Ensure an artifact bundle exists for `model`; build it (train-only, no
+/// decode artifacts) if missing. Returns the bundle directory.
+pub fn ensure_bundle(
+    artifacts_dir: &Path,
+    python_dir: &Path,
+    name: &str,
+    model: &ModelConfig,
+    train: &TrainConfig,
+) -> crate::Result<PathBuf> {
+    ensure_bundle_opts(artifacts_dir, python_dir, name, model, train, false)
+}
+
+/// [`ensure_bundle`] with control over decode-artifact generation
+/// (`with_decode` is needed by harnesses that run the layer-sliced
+/// decode runtime, e.g. figs 5 & 6).
+pub fn ensure_bundle_opts(
+    artifacts_dir: &Path,
+    python_dir: &Path,
+    name: &str,
+    model: &ModelConfig,
+    train: &TrainConfig,
+    with_decode: bool,
+) -> crate::Result<PathBuf> {
+    let dir = artifacts_dir.join(name);
+    if dir.join("manifest.json").exists() {
+        // fingerprint freshness is checked by aot.py itself on rebuild;
+        // for sweeps an existing manifest with matching config is enough.
+        if let Ok(text) = std::fs::read_to_string(dir.join("manifest.json")) {
+            if let Ok(m) = crate::util::json::Json::parse(&text) {
+                let has_decode = m
+                    .get("with_decode")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false);
+                if m.get("model") == Some(&model.to_json())
+                    && (!with_decode || has_decode)
+                {
+                    return Ok(dir);
+                }
+            }
+        }
+    }
+    let model_json = model.to_json().to_string();
+    let train_json = train.to_json().to_string();
+    let out_dir = artifacts_dir
+        .canonicalize()
+        .unwrap_or_else(|_| artifacts_dir.to_path_buf());
+    eprintln!("[isoflop] building bundle {name} (one-time AOT)...");
+    let mut cmd_args: Vec<String> = vec![
+        "-m".into(), "compile.aot".into(),
+        "--out-dir".into(), out_dir.to_string_lossy().into_owned(),
+        "--model-json".into(), model_json,
+        "--train-json".into(), train_json,
+        "--name".into(), name.into(),
+        "--force".into(),
+    ];
+    if with_decode {
+        // decode sessions in the harnesses run at batch 1 only
+        cmd_args.push("--decode-batches".into());
+        cmd_args.push("1".into());
+        cmd_args.push("--max-decode-len".into());
+        cmd_args.push(model.seq_len.to_string());
+    } else {
+        cmd_args.push("--no-decode".into());
+    }
+    let status = Command::new("python")
+        .current_dir(python_dir)
+        .args(&cmd_args)
+        .status()
+        .map_err(|e| anyhow::anyhow!("spawning AOT builder: {e}"))?;
+    anyhow::ensure!(status.success(), "AOT build failed for {name}");
+    Ok(dir)
+}
+
+/// Train one rung under a budget and report its sweep point.
+pub fn run_rung(
+    engine: &Arc<Engine>,
+    bundle_dir: &Path,
+    entry: &LadderEntry,
+    train: &TrainConfig,
+    budget: f64,
+    corpus_seed: u64,
+    run_dir: &Path,
+) -> crate::Result<SweepPoint> {
+    let bundle = Arc::new(Bundle::open(engine.clone(), bundle_dir)?);
+    let steps = steps_for_budget(&entry.model, train, budget);
+    let corpus = MarkovCorpus::new(CorpusSpec::default(), corpus_seed);
+    let data = BatchIter::new(corpus, train.batch_size, entry.model.seq_len);
+    let mut trainer =
+        crate::coordinator::Trainer::new(bundle.clone(), data, None)?;
+    let opts = crate::coordinator::TrainerOptions {
+        steps: Some(steps),
+        log_every: (steps / 20).max(1),
+        ckpt_every: 0,
+        run_dir: run_dir.join(&entry.id),
+        resume: None,
+    };
+    let outcome = trainer.run(&opts)?;
+    Ok(SweepPoint {
+        id: entry.id.clone(),
+        n_params: entry.model.n_params(),
+        steps,
+        flops_per_step: flops::train_step_flops(&entry.model, train.batch_size),
+        relative_fwd_flops: flops::relative_flops(&entry.model),
+        final_loss: outcome.final_loss,
+        final_ce: outcome.final_ce,
+        steps_per_sec: outcome.steps_per_sec,
+    })
+}
+
+/// Fit loss ≈ a·x² + b·x + c with x = ln(params); return (params*, loss*).
+///
+/// Plain least squares via the 3×3 normal equations — no linalg dependency.
+pub fn fit_quadratic_optimum(points: &[(f64, f64)]) -> Option<(f64, f64)> {
+    if points.len() < 3 {
+        return None;
+    }
+    let xs: Vec<f64> = points.iter().map(|&(p, _)| p.ln()).collect();
+    let ys: Vec<f64> = points.iter().map(|&(_, l)| l).collect();
+    let n = xs.len() as f64;
+    let (mut sx, mut sx2, mut sx3, mut sx4) = (0.0, 0.0, 0.0, 0.0);
+    let (mut sy, mut sxy, mut sx2y) = (0.0, 0.0, 0.0);
+    for (&x, &y) in xs.iter().zip(&ys) {
+        let x2 = x * x;
+        sx += x;
+        sx2 += x2;
+        sx3 += x2 * x;
+        sx4 += x2 * x2;
+        sy += y;
+        sxy += x * y;
+        sx2y += x2 * y;
+    }
+    // normal equations: [sx4 sx3 sx2; sx3 sx2 sx; sx2 sx n] [a b c]' = [sx2y sxy sy]'
+    let m = [[sx4, sx3, sx2], [sx3, sx2, sx], [sx2, sx, n]];
+    let rhs = [sx2y, sxy, sy];
+    let sol = solve3(m, rhs)?;
+    let (a, b, _c) = (sol[0], sol[1], sol[2]);
+    if a <= 0.0 {
+        return None; // no interior minimum
+    }
+    let x_star = -b / (2.0 * a);
+    let loss_star = a * x_star * x_star + b * x_star + sol[2];
+    Some((x_star.exp(), loss_star))
+}
+
+/// Solve a 3×3 linear system by Gaussian elimination with partial pivoting.
+fn solve3(mut m: [[f64; 3]; 3], mut rhs: [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        let piv = (col..3).max_by(|&a, &b| {
+            m[a][col].abs().partial_cmp(&m[b][col].abs()).unwrap()
+        })?;
+        if m[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        m.swap(col, piv);
+        rhs.swap(col, piv);
+        for row in (col + 1)..3 {
+            let f = m[row][col] / m[col][col];
+            for k in col..3 {
+                m[row][k] -= f * m[col][k];
+            }
+            rhs[row] -= f * rhs[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for row in (0..3).rev() {
+        let mut acc = rhs[row];
+        for k in (row + 1)..3 {
+            acc -= m[row][k] * x[k];
+        }
+        x[row] = acc / m[row][row];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RoutingMode;
+
+    #[test]
+    fn budget_steps_inverse_in_model_size() {
+        let train = TrainConfig::default();
+        let small = ModelConfig { d_model: 64, n_heads: 2, d_head: 32, ..Default::default() };
+        let big = ModelConfig::default(); // d=128
+        let budget = 1e12;
+        assert!(
+            steps_for_budget(&small, &train, budget)
+                > steps_for_budget(&big, &train, budget)
+        );
+    }
+
+    #[test]
+    fn mod_affords_more_steps_than_baseline() {
+        // fewer FLOPs/step => more steps under the same budget (the paper's
+        // central bargain).
+        let train = TrainConfig::default();
+        let baseline = ModelConfig::default();
+        let mut mod_cfg = baseline.clone();
+        mod_cfg.routing = RoutingMode::ModInterleaved;
+        mod_cfg.capacity_frac = 0.125;
+        let budget = 1e12;
+        assert!(
+            steps_for_budget(&mod_cfg, &train, budget)
+                > steps_for_budget(&baseline, &train, budget)
+        );
+    }
+
+    #[test]
+    fn quadratic_fit_recovers_synthetic_minimum() {
+        // loss = (ln p - ln 1e6)^2 * 0.1 + 2.0
+        let points: Vec<(f64, f64)> = [3e5, 6e5, 1e6, 2e6, 5e6]
+            .iter()
+            .map(|&p: &f64| {
+                let x = (p as f64).ln() - (1e6f64).ln();
+                (p, 0.1 * x * x + 2.0)
+            })
+            .collect();
+        let (p_star, l_star) = fit_quadratic_optimum(&points).unwrap();
+        assert!((p_star / 1e6 - 1.0).abs() < 0.01, "p* {p_star}");
+        assert!((l_star - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_inputs() {
+        assert!(fit_quadratic_optimum(&[(1e6, 2.0), (2e6, 1.9)]).is_none());
+        // concave data has no interior minimum
+        let concave: Vec<(f64, f64)> = [1e5, 1e6, 1e7]
+            .iter()
+            .map(|&p: &f64| (p, -((p as f64).ln() - 13.0).powi(2)))
+            .collect();
+        assert!(fit_quadratic_optimum(&concave).is_none());
+    }
+
+    #[test]
+    fn solve3_identity() {
+        let x = solve3([[1., 0., 0.], [0., 1., 0.], [0., 0., 1.]], [3., 4., 5.])
+            .unwrap();
+        assert_eq!(x, [3., 4., 5.]);
+    }
+}

@@ -1,0 +1,37 @@
+//! Mixture-of-Depths transformers — Rust coordinator (Layer 3).
+//!
+//! Reproduction of Raposo et al. (2024), *"Mixture-of-Depths: Dynamically
+//! allocating compute in transformer-based language models"*, as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time Python)** — `python/compile/` authors the MoD
+//!   transformer (Pallas kernels + JAX model/train step) and AOT-lowers it
+//!   to HLO-text artifacts (`make artifacts`).
+//! * **L3 (this crate)** — loads those artifacts through the PJRT C API
+//!   ([`runtime`]), and owns everything the paper's TPU stack owned around
+//!   the model: the training orchestrator ([`coordinator`]), the
+//!   layer-sliced decode server that *actually skips* routed-around blocks
+//!   ([`serve`]), FLOP accounting ([`flops`]), isoFLOP sweeps ([`isoflop`]),
+//!   routing analysis ([`analysis`]), and the experiment harnesses that
+//!   regenerate every figure in the paper ([`exp`]).
+//!
+//! Python never runs on a request path: after `make artifacts`, the `repro`
+//! binary (and the examples) are self-contained.
+//!
+//! The build is fully offline; [`util`] hosts the substrates that would
+//! normally be external crates (JSON codec, CLI parsing, bench harness,
+//! property-test loop).
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod flops;
+pub mod isoflop;
+pub mod runtime;
+pub mod serve;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

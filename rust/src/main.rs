@@ -1,0 +1,292 @@
+//! `repro` — the Mixture-of-Depths coordinator CLI.
+//!
+//! Usage: `repro [--artifacts DIR] <command> [args]`
+//!
+//! Commands:
+//!   train <bundle>     train a bundle on the synthetic corpus
+//!   eval <bundle>      held-out evaluation under a routing mode
+//!   generate <bundle>  autoregressive generation (layer-sliced runtime)
+//!   serve <bundle>     dynamic-batching server over demo requests
+//!   flops <preset>     analytic FLOPs report for a preset config
+//!   exp <figure>       regenerate a paper figure (fig3..fig7 | all)
+//!   info <bundle>      inspect an artifact bundle
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mod_transformer::config::{preset, ServeConfig};
+use mod_transformer::coordinator::{Trainer, TrainerOptions};
+use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus, Pcg32};
+use mod_transformer::exp::{self, ExpContext, Scale};
+use mod_transformer::flops;
+use mod_transformer::runtime::{Bundle, Engine, Tensor};
+use mod_transformer::serve::{batcher, DecodeSession, RoutingDecision};
+use mod_transformer::util::Args;
+
+const USAGE: &str = "\
+repro — Mixture-of-Depths transformers (Raposo et al. 2024) rust coordinator
+
+USAGE: repro [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  train <bundle>    [--steps N] [--run-dir D] [--resume CKPT]
+                    [--log-every N] [--ckpt-every N] [--corpus-seed N]
+  eval <bundle>     [--ckpt CKPT] [--mode topk|router|predictor]
+                    [--batches N] [--corpus-seed N]
+  generate <bundle> [--ckpt CKPT] [--max-new N]
+                    [--decision predictor|router|always] [--temperature T]
+  serve <bundle>    [--ckpt CKPT] [--requests N] [--max-new N]
+                    [--decision predictor|router|always]
+  flops <preset>
+  exp <fig3|fig4|fig5|fig6|fig7|all> [--scale smoke|tiny|full]
+  info <bundle>
+";
+
+fn parse_decision(s: &str) -> anyhow::Result<RoutingDecision> {
+    Ok(match s {
+        "predictor" => RoutingDecision::Predictor,
+        "router" => RoutingDecision::RouterThreshold,
+        "always" => RoutingDecision::AlwaysOn,
+        other => anyhow::bail!("unknown decision {other:?}"),
+    })
+}
+
+fn open_bundle(artifacts: &PathBuf, name: &str) -> anyhow::Result<Arc<Bundle>> {
+    let engine = Arc::new(Engine::cpu()?);
+    Ok(Arc::new(Bundle::open(engine, &artifacts.join(name))?))
+}
+
+fn load_params(
+    bundle: &Arc<Bundle>,
+    ckpt: Option<&str>,
+) -> anyhow::Result<Vec<Tensor>> {
+    match ckpt {
+        Some(path) => {
+            let by_name = mod_transformer::coordinator::checkpoint::load(
+                std::path::Path::new(path),
+            )?;
+            // drop optimizer-state entries
+            let filtered = by_name
+                .into_iter()
+                .filter(|(k, _)| {
+                    !k.starts_with("m::") && !k.starts_with("v::") && k != "__step"
+                })
+                .collect();
+            bundle.order_params(filtered)
+        }
+        None => bundle.init_params(),
+    }
+}
+
+fn data_for(bundle: &Arc<Bundle>, corpus_seed: u64) -> BatchIter {
+    let corpus = MarkovCorpus::new(CorpusSpec::default(), corpus_seed);
+    BatchIter::new(
+        corpus,
+        bundle.manifest.train.batch_size,
+        bundle.manifest.model.seq_len,
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["help"])?;
+    if args.has_flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let cmd = args.pos(0, "command")?.to_string();
+
+    match cmd.as_str() {
+        "train" => {
+            let bundle = args.pos(1, "bundle")?;
+            let b = open_bundle(&artifacts, bundle)?;
+            let data = data_for(&b, args.u64_or("corpus-seed", 7)?);
+            let resume = args.opt("resume").map(PathBuf::from);
+            let mut trainer = Trainer::new(b, data, resume.as_deref())?;
+            let outcome = trainer.run(&TrainerOptions {
+                steps: args.opt_u64("steps")?,
+                log_every: args.u64_or("log-every", 10)?,
+                ckpt_every: args.u64_or("ckpt-every", 0)?,
+                run_dir: PathBuf::from(args.str_or("run-dir", "runs/train")),
+                resume,
+            })?;
+            println!(
+                "trained {} steps: final loss {:.4} (ce {:.4}), {:.2} steps/s\n\
+                 metrics: {}\ncheckpoint: {}",
+                outcome.steps, outcome.final_loss, outcome.final_ce,
+                outcome.steps_per_sec,
+                outcome.metrics_path.display(),
+                outcome.ckpt_path.display()
+            );
+        }
+        "eval" => {
+            let bundle = args.pos(1, "bundle")?;
+            let b = open_bundle(&artifacts, bundle)?;
+            let data = data_for(&b, args.u64_or("corpus-seed", 7)?);
+            let ckpt = args.opt("ckpt").map(PathBuf::from);
+            let trainer = Trainer::new(b, data, ckpt.as_deref())?;
+            let mode = args.str_or("mode", "topk");
+            let e = trainer.evaluate(&mode, args.usize_or("batches", 8)?)?;
+            println!(
+                "eval[{}] over {} batches: ce {:.4}  pred_acc {:.3}  \
+                 router_frac {:.3}  participation {:.3}",
+                e.mode, e.n_batches, e.ce, e.pred_acc, e.router_frac,
+                e.participation
+            );
+        }
+        "generate" => {
+            let bundle = args.pos(1, "bundle")?;
+            let b = open_bundle(&artifacts, bundle)?;
+            let params = load_params(&b, args.opt("ckpt"))?;
+            let decision = parse_decision(&args.str_or("decision", "router"))?;
+            let temperature = args.f64_or("temperature", 0.8)?;
+            let max_new = args.usize_or("max-new", 64)?;
+            let mut session = DecodeSession::new(&b, &params, 1, decision)?;
+            let mut rng = Pcg32::new(42, 0);
+            let vocab = b.manifest.model.vocab_size;
+            let mut tok = mod_transformer::data::BOS as i32;
+            let mut toks = Vec::new();
+            for _ in 0..max_new.min(b.manifest.max_decode_len) {
+                let logits = session.step(&[tok], &[true])?;
+                let next =
+                    batcher::sample(&logits[..vocab], temperature, 0, &mut rng);
+                toks.push(next as u16);
+                tok = next as i32;
+            }
+            let rep = session.report();
+            println!("tokens: {toks:?}");
+            println!(
+                "decode: {:.1} tok/s, {:.0}% blocks skipped, {} capacity \
+                 drops, {:.2e} FLOPs/token",
+                rep.tokens_per_sec(),
+                100.0 * rep.skip_fraction(),
+                rep.capacity_drops,
+                rep.total_flops / rep.tokens_generated.max(1) as f64
+            );
+        }
+        "serve" => {
+            let bundle = args.pos(1, "bundle")?;
+            let b = open_bundle(&artifacts, bundle)?;
+            let params = Arc::new(load_params(&b, args.opt("ckpt"))?);
+            let decision = parse_decision(&args.str_or("decision", "router"))?;
+            let n_requests = args.usize_or("requests", 16)?;
+            let max_new = args.usize_or("max-new", 32)?;
+            let server = batcher::Server::spawn(
+                b.clone(),
+                params,
+                ServeConfig::default(),
+                decision,
+            );
+            let corpus = MarkovCorpus::new(CorpusSpec::default(), 99);
+            // submit all requests, then wait (the batcher groups them)
+            let pendings: Vec<_> = (0..n_requests)
+                .map(|i| {
+                    server.submit(batcher::Request {
+                        prompt: corpus.sequence(i as u64, 9),
+                        max_new,
+                        temperature: 0.8,
+                        top_k: 32,
+                        seed: i as u64,
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let mut latencies: Vec<f64> = Vec::new();
+            for p in pendings {
+                if let Ok(resp) = p.wait() {
+                    latencies.push(resp.latency.as_secs_f64());
+                }
+            }
+            latencies.sort_by(|a, b| a.total_cmp(b));
+            let stats = server.stats();
+            let p50 = latencies.get(latencies.len() / 2).copied().unwrap_or(0.0);
+            let p95 = latencies
+                .get((latencies.len() * 95 / 100)
+                    .min(latencies.len().saturating_sub(1)))
+                .copied()
+                .unwrap_or(0.0);
+            println!(
+                "served {} requests in {} batches: {:.1} tok/s, \
+                 {:.0}% blocks skipped, latency p50 {:.2}s p95 {:.2}s",
+                stats.requests, stats.batches, stats.tokens_per_sec(),
+                100.0 * stats.skip_fraction(), p50, p95
+            );
+            server.shutdown();
+        }
+        "flops" => {
+            let name = args.pos(1, "preset")?;
+            let cfg = preset(name)?;
+            let m = flops::model_flops(&cfg.model);
+            println!("preset {name}: {} params", cfg.model.n_params());
+            println!(
+                "forward pass (1 sequence of {} tokens):",
+                cfg.model.seq_len
+            );
+            for (l, b) in m.per_block.iter().enumerate() {
+                println!(
+                    "  block {l:>2}{}: proj {:.2e}  qk {:.2e}  av {:.2e}  \
+                     ff {:.2e}  router {:.2e}",
+                    if cfg.model.is_routed_block(l) { " (MoD)" } else { "      " },
+                    b.proj, b.qk, b.av, b.ff, b.router
+                );
+            }
+            println!("  unembed: {:.2e}", m.unembed);
+            println!("  TOTAL:   {:.3e}", m.total());
+            println!(
+                "  relative to vanilla same-dims: {:.3}",
+                flops::relative_flops(&cfg.model)
+            );
+            println!(
+                "  train step ({} batch): {:.3e} FLOPs",
+                cfg.train.batch_size,
+                flops::train_step_flops(&cfg.model, cfg.train.batch_size)
+            );
+        }
+        "exp" => {
+            let figure = args.pos(1, "figure")?;
+            let scale = Scale::parse(&args.str_or("scale", "tiny"))?;
+            let root = ExpContext::repo_root();
+            let ctx = ExpContext::new(&root, scale)?;
+            match figure {
+                "fig3" => { exp::fig3::run(&ctx)?; }
+                "fig4" => { exp::fig4::run(&ctx)?; }
+                "fig5" => { exp::fig5::run(&ctx)?; }
+                "fig6" => { exp::fig6::run(&ctx)?; }
+                "fig7" => { exp::fig7::run(&ctx)?; }
+                "all" => {
+                    exp::fig3::run(&ctx)?;
+                    exp::fig4::run(&ctx)?;
+                    exp::fig5::run(&ctx)?;
+                    exp::fig6::run(&ctx)?;
+                    exp::fig7::run(&ctx)?;
+                }
+                other => anyhow::bail!("unknown figure {other:?}"),
+            }
+        }
+        "info" => {
+            let bundle = args.pos(1, "bundle")?;
+            let b = open_bundle(&artifacts, bundle)?;
+            let m = &b.manifest;
+            println!("bundle {} (fingerprint {})", m.name, m.fingerprint);
+            println!(
+                "model: d={} L={} H={} ff={} seq={} routing={} capacity={}",
+                m.model.d_model, m.model.n_layers, m.model.n_heads,
+                m.model.d_ff, m.model.seq_len, m.model.routing.as_str(),
+                m.model.capacity_frac
+            );
+            println!("params: {} tensors, {} total", m.params.len(), m.n_params);
+            println!("routed layers: {:?}", m.routed_layers);
+            println!("cache lengths: {:?}", {
+                let mut v: Vec<_> =
+                    m.cache_lengths.iter().map(|(k, v)| (*k, *v)).collect();
+                v.sort();
+                v
+            });
+            println!("metrics: {:?}", m.metrics);
+        }
+        other => {
+            println!("{USAGE}");
+            anyhow::bail!("unknown command {other:?}");
+        }
+    }
+    Ok(())
+}

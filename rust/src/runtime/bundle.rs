@@ -1,0 +1,328 @@
+//! Artifact bundles: manifest parsing + executable access + init params.
+//!
+//! A bundle is one directory produced by `python -m compile.aot` for one
+//! model config. The manifest is the ABI contract: parameter ordering,
+//! metric vector layout, per-layer KV-cache lengths, and artifact file
+//! names all come from here — the Rust side never hardcodes them.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::util::json::Json;
+
+use super::client::{Engine, Executable};
+use super::tensor::Tensor;
+
+/// One parameter tensor's spec (name, shape) in ABI order.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub fingerprint: String,
+    pub seed: u64,
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    pub params: Vec<ParamSpec>,
+    pub metrics: Vec<String>,
+    pub eval_metrics: Vec<String>,
+    /// layer index -> decode KV-cache length.
+    pub cache_lengths: HashMap<usize, usize>,
+    pub routed_layers: Vec<usize>,
+    pub n_params: usize,
+    pub decode_batches: Vec<usize>,
+    pub max_decode_len: usize,
+    /// artifact key -> file name ("decode" holds a nested map).
+    artifacts: Json,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let j = Json::parse(text)?;
+        let str_vec = |key: &str| -> crate::Result<Vec<String>> {
+            Ok(j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect())
+        };
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+            .iter()
+            .map(|p| -> crate::Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p.req_str("name")?,
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    dtype: p.req_str("dtype")?,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let cache_lengths = j
+            .req("cache_lengths")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("cache_lengths not an object"))?
+            .iter()
+            .map(|(k, v)| -> crate::Result<(usize, usize)> {
+                Ok((
+                    k.parse()
+                        .map_err(|e| anyhow::anyhow!("cache layer {k:?}: {e}"))?,
+                    v.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("cache len not int"))?,
+                ))
+            })
+            .collect::<crate::Result<HashMap<_, _>>>()?;
+        Ok(Self {
+            name: j.req_str("name")?,
+            fingerprint: j.req_str("fingerprint")?,
+            seed: j.req("seed")?.as_u64().unwrap_or(0),
+            model: ModelConfig::from_json(j.req("model")?)?,
+            train: TrainConfig::from_json(j.req("train")?)?,
+            params,
+            metrics: str_vec("metrics")?,
+            eval_metrics: str_vec("eval_metrics")?,
+            cache_lengths,
+            routed_layers: j
+                .req("routed_layers")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            n_params: j.req_usize("n_params")?,
+            decode_batches: j
+                .req("decode_batches")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            max_decode_len: j.req_usize("max_decode_len")?,
+            artifacts: j.req("artifacts")?.clone(),
+        })
+    }
+
+    pub fn cache_len(&self, layer: usize) -> crate::Result<usize> {
+        self.cache_lengths
+            .get(&layer)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no cache length for layer {layer}"))
+    }
+
+    fn artifact_file(&self, key: &str) -> crate::Result<&str> {
+        self.artifacts
+            .get(key)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!(
+                "bundle {} has no artifact {key:?} (built with \
+                 --no-train/--no-decode?)", self.name))
+    }
+
+    fn decode_file(&self, key: &str) -> crate::Result<&str> {
+        self.artifacts
+            .get("decode")
+            .and_then(|d| d.get(key))
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!(
+                "bundle {} has no decode artifact {key:?}", self.name))
+    }
+}
+
+/// A loaded artifact bundle.
+pub struct Bundle {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    engine: Arc<Engine>,
+}
+
+impl Bundle {
+    /// Open `dir`, parse + sanity-check the manifest.
+    pub fn open(engine: Arc<Engine>, dir: &Path) -> crate::Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "no manifest at {} (run `make artifacts`?): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", manifest_path.display()))?;
+        manifest.model.validate()?;
+        anyhow::ensure!(
+            manifest.model.n_params() == manifest.n_params,
+            "param-count mismatch: rust ModelConfig computes {}, manifest \
+             says {} — config structs have drifted",
+            manifest.model.n_params(),
+            manifest.n_params
+        );
+        anyhow::ensure!(
+            !manifest.params.is_empty(),
+            "manifest has an empty param list"
+        );
+        Ok(Self { dir: dir.to_path_buf(), manifest, engine })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    fn load(&self, file: &str) -> crate::Result<Arc<Executable>> {
+        self.engine.load_hlo(&self.dir.join(file))
+    }
+
+    // ---- training-side executables ----
+
+    pub fn train_step(&self) -> crate::Result<Arc<Executable>> {
+        self.load(self.manifest.artifact_file("train_step")?)
+    }
+
+    /// `mode` is one of "topk" | "router" | "predictor".
+    pub fn eval_step(&self, mode: &str) -> crate::Result<Arc<Executable>> {
+        self.load(self.manifest.artifact_file(&format!("eval_{mode}"))?)
+    }
+
+    // ---- decode-side executables ----
+
+    pub fn embed_step(&self, batch: usize) -> crate::Result<Arc<Executable>> {
+        self.load(self.manifest.decode_file(&format!("embed_B{batch}"))?)
+    }
+
+    pub fn logits_head(&self, batch: usize) -> crate::Result<Arc<Executable>> {
+        self.load(self.manifest.decode_file(&format!("logits_B{batch}"))?)
+    }
+
+    pub fn router_score(&self, batch: usize) -> crate::Result<Arc<Executable>> {
+        self.load(self.manifest.decode_file(&format!("router_B{batch}"))?)
+    }
+
+    pub fn predictor(&self, batch: usize) -> crate::Result<Arc<Executable>> {
+        self.load(self.manifest.decode_file(&format!("predictor_B{batch}"))?)
+    }
+
+    pub fn block_decode(
+        &self,
+        batch: usize,
+        cache_len: usize,
+    ) -> crate::Result<Arc<Executable>> {
+        self.load(self.manifest.decode_file(&format!("block_B{batch}_L{cache_len}"))?)
+    }
+
+    // ---- parameters ----
+
+    /// Load the seeded initial parameters, in manifest (ABI) order.
+    pub fn init_params(&self) -> crate::Result<Vec<Tensor>> {
+        let by_name =
+            crate::coordinator::checkpoint::load(&self.dir.join("init.ckpt"))?;
+        self.order_params(by_name)
+    }
+
+    /// Arrange a name->tensor map into ABI order, verifying shapes.
+    pub fn order_params(
+        &self,
+        mut by_name: HashMap<String, Tensor>,
+    ) -> crate::Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(self.manifest.params.len());
+        for spec in &self.manifest.params {
+            let t = by_name.remove(&spec.name).ok_or_else(|| {
+                anyhow::anyhow!("checkpoint missing tensor {:?}", spec.name)
+            })?;
+            anyhow::ensure!(
+                t.shape() == spec.shape.as_slice(),
+                "tensor {:?}: checkpoint shape {:?} != manifest {:?}",
+                spec.name, t.shape(), spec.shape
+            );
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Pair ABI-ordered tensors back with their names.
+    pub fn named_params(&self, flat: &[Tensor]) -> Vec<(String, Tensor)> {
+        self.manifest
+            .params
+            .iter()
+            .zip(flat.iter())
+            .map(|(s, t)| (s.name.clone(), t.clone()))
+            .collect()
+    }
+
+    /// Index of a parameter by name, in ABI order.
+    pub fn param_index(&self, name: &str) -> crate::Result<usize> {
+        self.manifest
+            .params
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no parameter named {name:?}"))
+    }
+
+    /// The tensors of one layer, keyed by unprefixed name.
+    pub fn layer_param_indices(&self, layer: usize) -> HashMap<String, usize> {
+        let prefix = format!("layer_{layer:02}.");
+        self.manifest
+            .params
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                s.name
+                    .strip_prefix(&prefix)
+                    .map(|rest| (rest.to_string(), i))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "fingerprint":"abc","seed":0,"decode_batches":[1,4],
+      "max_decode_len":256,"with_decode":true,"with_train":true,
+      "name":"t",
+      "model":{"vocab_size":259,"d_model":128,"n_layers":4,"n_heads":4,
+        "d_head":32,"d_ff":512,"seq_len":256,"routing":"mod_interleaved",
+        "capacity_frac":0.125,"aux_loss_weight":0.01,"train_predictor":true,
+        "predictor_hidden":64,"ff_mode":"dense","n_experts":4,
+        "expert_capacity_frac":0.25,"rope_theta":10000.0,"use_pallas":false},
+      "train":{"batch_size":8,"learning_rate":0.003,"min_lr_frac":0.1,
+        "warmup_steps":50,"total_steps":400,"weight_decay":0.1,
+        "beta1":0.9,"beta2":0.95,"eps":1e-9,"grad_clip":1.0},
+      "params":[{"name":"embed","shape":[259,128],"dtype":"f32"}],
+      "metrics":["loss","ce"],
+      "eval_metrics":["ce"],
+      "cache_lengths":{"0":256,"1":48,"2":256,"3":48},
+      "routed_layers":[1,3],
+      "n_params":0,
+      "artifacts":{"train_step":"train_step.hlo.txt",
+                   "decode":{"embed_B1":"embed_step_B1.hlo.txt"}}
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.model.d_model, 128);
+        assert_eq!(m.cache_len(1).unwrap(), 48);
+        assert_eq!(m.routed_layers, vec![1, 3]);
+        assert_eq!(m.artifact_file("train_step").unwrap(), "train_step.hlo.txt");
+        assert_eq!(m.decode_file("embed_B1").unwrap(), "embed_step_B1.hlo.txt");
+        assert!(m.artifact_file("nonexistent").is_err());
+        assert!(m.cache_len(9).is_err());
+    }
+}

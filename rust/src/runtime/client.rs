@@ -1,0 +1,124 @@
+//! PJRT client wrapper + compiled executable handles.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::tensor::Tensor;
+
+/// Process-wide PJRT engine: one CPU client + a compile cache keyed by
+/// artifact path (compiling an HLO module is the expensive part; loading a
+/// bundle twice must not recompile).
+pub struct Engine {
+    client: PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> crate::Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by canonical path).
+    pub fn load_hlo(&self, path: &Path) -> crate::Result<Arc<Executable>> {
+        let key = path
+            .canonicalize()
+            .map_err(|e| anyhow::anyhow!("artifact {}: {e}", path.display()))?;
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&key)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", key.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", key.display()))?;
+        let exe = Arc::new(Executable {
+            exe,
+            name: key
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            compile_time: t0.elapsed(),
+        });
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// One compiled HLO module.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    name: String,
+    compile_time: std::time::Duration,
+}
+
+// SAFETY: the underlying PJRT CPU client and loaded executables are
+// thread-safe at the C API level; the `xla` crate merely wraps them in
+// `Rc`/raw pointers without declaring it. Our discipline: executables are
+// created on one thread and then *executed* from at most one thread at a
+// time per call site (the serving worker owns its sessions; the trainer is
+// single-threaded). Concurrent `execute` calls on the CPU client are
+// serialized by XLA's own intra-client locking.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn compile_time(&self) -> std::time::Duration {
+        self.compile_time
+    }
+
+    /// Execute with host tensors; returns the flattened output tuple.
+    ///
+    /// All AOT artifacts are lowered with `return_tuple=True`, so the
+    /// result is a single tuple literal we decompose into leaves.
+    pub fn run(&self, args: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        let literals: Vec<Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<crate::Result<_>>()?;
+        let outs = self.run_literals(&literals)?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute at the literal level (hot path: callers keep reusable
+    /// literals and avoid Tensor conversions). Accepts owned or borrowed
+    /// literals.
+    pub fn run_literals<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> crate::Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<L>(args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {} output: {e:?}", self.name))?;
+        tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {} output: {e:?}", self.name))
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin) behind a small typed
+//! surface the coordinator uses:
+//!
+//! * [`Engine`] — process-wide PJRT client + executable cache.
+//! * [`Executable`] — one compiled HLO module; `run` takes/returns
+//!   [`Tensor`]s (host), `run_literals` stays at the `xla::Literal` level
+//!   for hot paths that thread state through repeatedly.
+//! * [`Bundle`] — a parsed artifact directory (manifest + lazily compiled
+//!   executables + initial checkpoint).
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that this XLA build
+//! rejects; the text parser reassigns ids (see DESIGN.md / aot.py).
+
+mod bundle;
+mod client;
+mod tensor;
+
+pub use bundle::{Bundle, Manifest, ParamSpec};
+pub use client::{Engine, Executable};
+pub use tensor::Tensor;
+
+pub(crate) use tensor::dtype_code as tensor_dtype_code;

@@ -1,0 +1,183 @@
+//! Host tensors and conversions to/from `xla::Literal`.
+
+use xla::{ArrayElement, Literal, PrimitiveType};
+
+/// A simple host tensor: row-major f32 or i32 data + shape.
+///
+/// This is the coordinator's working currency; conversion to `Literal`
+/// happens only at executable boundaries.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: impl Into<Vec<usize>>, data: Vec<f32>) -> Self {
+        let shape = shape.into();
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: impl Into<Vec<usize>>, data: Vec<i32>) -> Self {
+        let shape = shape.into();
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape, data }
+    }
+
+    pub fn zeros_f32(shape: impl Into<Vec<usize>>) -> Self {
+        let shape = shape.into();
+        let n = shape.iter().product();
+        Tensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn zeros_i32(shape: impl Into<Vec<usize>>) -> Self {
+        let shape = shape.into();
+        let n = shape.iter().product();
+        Tensor::I32 { shape, data: vec![0; n] }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> crate::Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => anyhow::bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> crate::Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => anyhow::bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> crate::Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => anyhow::bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Scalar extraction (any rank-0 or single-element tensor).
+    pub fn item_f32(&self) -> crate::Result<f32> {
+        let d = self.as_f32()?;
+        anyhow::ensure!(d.len() == 1, "item() on {}-element tensor", d.len());
+        Ok(d[0])
+    }
+
+    /// Convert to an XLA literal (allocates + copies).
+    pub fn to_literal(&self) -> crate::Result<Literal> {
+        let dims: Vec<usize> = self.shape().to_vec();
+        let lit = match self {
+            Tensor::F32 { data, .. } => {
+                let mut l = Literal::create_from_shape(PrimitiveType::F32, &dims);
+                l.copy_raw_from::<f32>(data)?;
+                l
+            }
+            Tensor::I32 { data, .. } => {
+                let mut l = Literal::create_from_shape(PrimitiveType::S32, &dims);
+                l.copy_raw_from::<i32>(data)?;
+                l
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal.
+    pub fn from_literal(lit: &Literal) -> crate::Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            PrimitiveType::F32 => {
+                Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            PrimitiveType::S32 => {
+                Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => anyhow::bail!("unsupported literal type {other:?}"),
+        }
+    }
+
+    /// Primitive type this tensor maps to.
+    pub fn primitive_type(&self) -> PrimitiveType {
+        match self {
+            Tensor::F32 { .. } => PrimitiveType::F32,
+            Tensor::I32 { .. } => PrimitiveType::S32,
+        }
+    }
+}
+
+/// Dtype tag used by the MODCKPT1 checkpoint format.
+pub(crate) fn dtype_code(t: &Tensor) -> u8 {
+    match t {
+        Tensor::F32 { .. } => 0,
+        Tensor::I32 { .. } => 1,
+    }
+}
+
+// keep ArrayElement in scope for copy_raw_from generics
+#[allow(unused)]
+fn _assert_array_element<T: ArrayElement>() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![4], vec![5, -1, 0, 9]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar_f32(3.25);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.item_f32().unwrap(), 3.25);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let t = Tensor::zeros_f32(vec![2]);
+        assert!(t.as_i32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+}

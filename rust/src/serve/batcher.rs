@@ -1,0 +1,364 @@
+//! Request router + dynamic batcher (vLLM-router-shaped, scaled to one
+//! CPU device; std-thread based — this build is fully offline, so the
+//! runtime substrate is a hand-rolled worker loop + channels rather than
+//! tokio).
+//!
+//! Requests arrive on a channel; the batcher groups up to the largest
+//! compiled decode batch (waiting at most `batch_wait_ms` for batchmates),
+//! picks the smallest compiled batch size that fits, and runs one
+//! [`DecodeSession`] to completion per group. Prompt processing ("prefill")
+//! reuses the decode path token-by-token — rows with longer prompts keep
+//! consuming prompt tokens while shorter rows already generate; finished
+//! rows are marked inactive, so routed blocks skip them (free) while full
+//! blocks carry them (the cost of static batch shapes, visible in stats).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::data::rng::Pcg32;
+use crate::data::tokenizer::{EOS, PAD};
+use crate::runtime::{Bundle, Tensor};
+
+use super::session::{DecodeSession, RoutingDecision, SessionReport};
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<u16>,
+    pub max_new: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub tokens: Vec<u16>,
+    pub latency: Duration,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+}
+
+/// Aggregate server statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens_generated: u64,
+    pub blocks_invoked: u64,
+    pub blocks_skipped: u64,
+    pub capacity_drops: u64,
+    pub total_flops: f64,
+    pub decode_wall_s: f64,
+}
+
+impl ServerStats {
+    pub fn absorb(&mut self, report: &SessionReport, n_req: usize) {
+        self.batches += 1;
+        self.requests += n_req as u64;
+        self.tokens_generated += report.tokens_generated;
+        self.blocks_invoked += report.blocks_invoked;
+        self.blocks_skipped += report.blocks_skipped;
+        self.capacity_drops += report.capacity_drops;
+        self.total_flops += report.total_flops;
+        self.decode_wall_s += report.wall_s;
+    }
+
+    pub fn skip_fraction(&self) -> f64 {
+        let t = self.blocks_invoked + self.blocks_skipped;
+        self.blocks_skipped as f64 / t.max(1) as f64
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_generated as f64 / self.decode_wall_s.max(1e-9)
+    }
+}
+
+struct Job {
+    request: Request,
+    submitted: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+/// Handle to a pending response.
+pub struct Pending {
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Pending {
+    /// Block until the generation completes.
+    pub fn wait(self) -> crate::Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("request dropped (batch failed?)"))
+    }
+}
+
+/// The serving coordinator: a background worker thread running the
+/// dynamic-batching loop.
+pub struct Server {
+    tx: Option<mpsc::Sender<Job>>,
+    stats: Arc<Mutex<ServerStats>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the batcher worker.
+    pub fn spawn(
+        bundle: Arc<Bundle>,
+        params: Arc<Vec<Tensor>>,
+        serve_cfg: ServeConfig,
+        decision: RoutingDecision,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        let stats2 = stats.clone();
+        let handle = std::thread::spawn(move || {
+            let max_batch =
+                serve_cfg.decode_batches.iter().copied().max().unwrap_or(1);
+            while let Ok(first) = rx.recv() {
+                // gather batchmates up to max_batch within the wait window
+                let mut jobs = vec![first];
+                let deadline = Instant::now()
+                    + Duration::from_millis(serve_cfg.batch_wait_ms);
+                while jobs.len() < max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(job) => jobs.push(job),
+                        Err(_) => break,
+                    }
+                }
+                run_batch(&bundle, &params, &serve_cfg, decision, jobs, &stats2);
+            }
+        });
+        Self { tx: Some(tx), stats, handle: Some(handle) }
+    }
+
+    /// Submit a request; returns a handle to wait on.
+    pub fn submit(&self, request: Request) -> crate::Result<Pending> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("server is shut down"))?
+            .send(Job { request, submitted: Instant::now(), resp: tx })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(Pending { rx })
+    }
+
+    /// Submit and block (convenience).
+    pub fn generate(&self, request: Request) -> crate::Result<Response> {
+        self.submit(request)?.wait()
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Stop accepting requests and join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pick the smallest compiled batch size >= n (or the largest available).
+fn pick_batch(available: &[usize], n: usize) -> usize {
+    let mut sizes: Vec<usize> = available.to_vec();
+    sizes.sort_unstable();
+    for &s in &sizes {
+        if s >= n {
+            return s;
+        }
+    }
+    *sizes.last().unwrap_or(&1)
+}
+
+fn run_batch(
+    bundle: &Bundle,
+    params: &[Tensor],
+    serve_cfg: &ServeConfig,
+    decision: RoutingDecision,
+    jobs: Vec<Job>,
+    stats: &Mutex<ServerStats>,
+) {
+    let n = jobs.len();
+    let batch = pick_batch(&serve_cfg.decode_batches, n);
+    let requests: Vec<Request> =
+        jobs.iter().map(|j| j.request.clone()).collect();
+    let refs: Vec<&Request> = requests.iter().collect();
+    match generate_batch(bundle, params, batch, decision, &refs) {
+        Ok((outputs, report)) => {
+            stats.lock().unwrap().absorb(&report, n);
+            for (job, out) in jobs.into_iter().zip(outputs) {
+                let _ = job.resp.send(Response {
+                    decode_tokens: out.len(),
+                    prefill_tokens: job.request.prompt.len(),
+                    tokens: out,
+                    latency: job.submitted.elapsed(),
+                });
+            }
+        }
+        Err(e) => {
+            eprintln!("[serve] batch failed: {e:#}");
+            // responders drop => callers see "request dropped"
+        }
+    }
+}
+
+/// Core batched generation loop (synchronous; used by the server, the
+/// benches and the `serve_mod` example).
+pub fn generate_batch(
+    bundle: &Bundle,
+    params: &[Tensor],
+    batch: usize,
+    decision: RoutingDecision,
+    requests: &[&Request],
+) -> crate::Result<(Vec<Vec<u16>>, SessionReport)> {
+    anyhow::ensure!(requests.len() <= batch, "more requests than batch rows");
+    let mut session = DecodeSession::new(bundle, params, batch, decision)?;
+    let vocab = bundle.manifest.model.vocab_size;
+    let max_len = bundle.manifest.max_decode_len;
+
+    // per-row cursors
+    let mut prompt_idx = vec![0usize; batch];
+    let mut generated: Vec<Vec<u16>> = vec![Vec::new(); batch];
+    let mut done = vec![false; batch];
+    let mut rngs: Vec<Pcg32> = (0..batch)
+        .map(|b| {
+            let seed = requests.get(b).map(|r| r.seed).unwrap_or(0);
+            Pcg32::new(seed, b as u64)
+        })
+        .collect();
+    // rows beyond requests.len() are padding: immediately done
+    for b in requests.len()..batch {
+        done[b] = true;
+    }
+
+    for _step in 0..max_len {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let mut tokens = vec![PAD as i32; batch];
+        let mut active = vec![false; batch];
+        for b in 0..requests.len() {
+            if done[b] {
+                continue;
+            }
+            let req = requests[b];
+            if prompt_idx[b] < req.prompt.len() {
+                tokens[b] = req.prompt[prompt_idx[b]] as i32;
+                prompt_idx[b] += 1;
+            } else if let Some(&last) = generated[b].last() {
+                tokens[b] = last as i32;
+            } else {
+                // empty prompt: start from PAD
+                tokens[b] = PAD as i32;
+                prompt_idx[b] += 1;
+            }
+            active[b] = true;
+        }
+        let logits = session.step(&tokens, &active)?;
+        for b in 0..requests.len() {
+            if done[b] || prompt_idx[b] < requests[b].prompt.len() {
+                continue; // still prefilling: logits unused
+            }
+            let row = &logits[b * vocab..(b + 1) * vocab];
+            let req = requests[b];
+            let next = sample(row, req.temperature, req.top_k, &mut rngs[b]);
+            generated[b].push(next as u16);
+            if next as u16 == EOS || generated[b].len() >= req.max_new {
+                done[b] = true;
+            }
+        }
+    }
+    let report = session.report();
+    generated.truncate(requests.len());
+    Ok((generated, report))
+}
+
+/// Greedy / temperature / top-k sampling over one logits row.
+pub fn sample(logits: &[f32], temperature: f64, top_k: usize, rng: &mut Pcg32) -> usize {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if top_k > 0 && top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| {
+            logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(top_k);
+    }
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::MIN, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - max) as f64) / temperature).exp())
+        .collect();
+    idx[rng.sample_weighted(&weights)]
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_prefers_smallest_fit() {
+        assert_eq!(pick_batch(&[1, 4], 1), 1);
+        assert_eq!(pick_batch(&[1, 4], 2), 4);
+        assert_eq!(pick_batch(&[1, 4], 4), 4);
+        assert_eq!(pick_batch(&[1, 4], 9), 4); // oversubscribed -> largest
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Pcg32::new(0, 0);
+        assert_eq!(sample(&[0.1, 3.0, -1.0], 0.0, 0, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_sampling_stays_in_topk() {
+        let mut rng = Pcg32::new(0, 0);
+        let logits = vec![10.0, 9.0, -50.0, -50.0];
+        for _ in 0..50 {
+            let s = sample(&logits, 1.0, 2, &mut rng);
+            assert!(s == 0 || s == 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = Pcg32::new(1, 0);
+        let logits = vec![1.0, 1.0];
+        let mut seen = [false; 2];
+        for _ in 0..100 {
+            seen[sample(&logits, 1.0, 0, &mut rng)] = true;
+        }
+        assert!(seen[0] && seen[1]);
+    }
+}

@@ -1,0 +1,24 @@
+//! Layer-sliced decode runtime + serving coordinator (Layer 3, serve side).
+//!
+//! This is where MoD's decode-time savings become *real* on this testbed
+//! (paper §1: "upwards of 50% faster to step during post-training
+//! sampling"). Each transformer block is a separate PJRT executable; the
+//! coordinator consults the causal router (predictor or aux-BCE threshold,
+//! paper §3.5) per token per routed block and **skips the block executable
+//! entirely** when the token routes around it. Skipped blocks cost zero
+//! FLOPs and zero KV-cache slots.
+//!
+//! Components:
+//! * [`session::DecodeSession`] — one batched generation: per-layer
+//!   compacted KV caches, routing decisions, the step loop.
+//! * [`kv_cache::LayerKvCache`] — slot allocator + occupancy/drop stats
+//!   (capacity-exceeded tokens are *dropped from the block*, §3.1).
+//! * [`batcher::Server`] — async request router / dynamic batcher on tokio.
+
+pub mod batcher;
+pub mod kv_cache;
+pub mod session;
+
+pub use batcher::{Server, ServerStats};
+pub use kv_cache::{CacheStats, LayerKvCache};
+pub use session::{DecodeSession, RoutingDecision, SessionReport, StepStats, StepTrace};

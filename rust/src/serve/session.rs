@@ -1,0 +1,391 @@
+//! One batched decode session over the layer-sliced executables.
+//!
+//! The session owns the per-layer KV-cache literals and the routing
+//! decisions. Per token, per routed block it:
+//!   1. scores the token with the block's router (gate value, Eq. 1),
+//!   2. decides participation causally — predictor logit > 0 (paper §3.5
+//!      method 2) or router score > 0 (method 1),
+//!   3. checks the block's cache for a free slot (full ⇒ drop, §3.1),
+//!   4. **invokes the block executable only if any batch row participates**
+//!      — a fully-skipped block costs nothing, which is where MoD's decode
+//!      speedup physically comes from.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use xla::Literal;
+
+use crate::config::ModelConfig;
+use crate::flops;
+use crate::runtime::{Bundle, Executable, Tensor};
+
+use super::kv_cache::{CacheStats, LayerKvCache};
+
+/// How the coordinator decides participation at decode time (paper §3.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingDecision {
+    /// Auxiliary predictor MLP: sigmoid(logit) > 0.5 (method 2).
+    Predictor,
+    /// Aux-BCE-calibrated router: sigmoid(score) > 0.5 (method 1).
+    RouterThreshold,
+    /// Ablation: every token through every block (vanilla behaviour).
+    AlwaysOn,
+}
+
+/// Row-0 routing trace of one step (analysis tooling, fig 5):
+/// layer -> (raw router score, participated after capacity enforcement).
+#[derive(Debug, Clone, Default)]
+pub struct StepTrace {
+    pub routed: HashMap<usize, (f32, bool)>,
+}
+
+/// Counters for one decode step.
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub blocks_invoked: usize,
+    pub blocks_skipped: usize,
+    pub capacity_drops: usize,
+    pub flops: f64,
+    pub wall_us: u128,
+}
+
+/// Whole-session report (the fig 6 measurement unit).
+#[derive(Debug, Clone, Default)]
+pub struct SessionReport {
+    pub steps: u64,
+    pub blocks_invoked: u64,
+    pub blocks_skipped: u64,
+    pub capacity_drops: u64,
+    pub total_flops: f64,
+    pub wall_s: f64,
+    pub tokens_generated: u64,
+    pub cache_stats: Vec<CacheStats>,
+}
+
+impl SessionReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_generated as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn skip_fraction(&self) -> f64 {
+        let total = self.blocks_invoked + self.blocks_skipped;
+        self.blocks_skipped as f64 / total.max(1) as f64
+    }
+}
+
+struct LayerState {
+    routed: bool,
+    cache_len: usize,
+    weights: Vec<Literal>, // attn_norm, wq, wk, wv, wo, mlp_norm, w1, w2
+    /// host-side router projection (scores = h . w); routing decisions are
+    /// pure coordinator math — no device dispatch (§Perf iteration 1).
+    router_w: Option<Vec<f32>>,
+    /// host-side predictor MLP (w1 [D,H] row-major, b1 [H], w2 [H]).
+    pred: Option<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+    // cache literals: k, v, pos, valid
+    cache: [Literal; 4],
+    book: LayerKvCache,
+}
+
+/// A batched decode session.
+pub struct DecodeSession {
+    cfg: ModelConfig,
+    batch: usize,
+    decision: RoutingDecision,
+    embed_exe: Arc<Executable>,
+    logits_exe: Arc<Executable>,
+    block_exes: HashMap<usize, Arc<Executable>>,
+    embed_lit: Literal,
+    final_norm_lit: Literal,
+    layers: Vec<LayerState>,
+    /// next position per batch row.
+    pos: Vec<i32>,
+    report: SessionReport,
+    last_trace: StepTrace,
+}
+
+impl DecodeSession {
+    /// Build a session for `batch` rows from a bundle + ABI-ordered params.
+    pub fn new(
+        bundle: &Bundle,
+        params: &[Tensor],
+        batch: usize,
+        decision: RoutingDecision,
+    ) -> crate::Result<Self> {
+        let cfg = bundle.manifest.model.clone();
+        anyhow::ensure!(
+            bundle.manifest.decode_batches.contains(&batch),
+            "bundle {} has no decode executables for batch {batch} \
+             (available: {:?})",
+            bundle.manifest.name,
+            bundle.manifest.decode_batches
+        );
+        let kd = cfg.n_heads * cfg.d_head;
+
+        let embed_idx = bundle.param_index("embed")?;
+        let final_norm_idx = bundle.param_index("final_norm")?;
+        let embed_lit = params[embed_idx].to_literal()?;
+        let final_norm_lit = params[final_norm_idx].to_literal()?;
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        let mut block_exes = HashMap::new();
+        for l in 0..cfg.n_layers {
+            let idx = bundle.layer_param_indices(l);
+            let get = |name: &str| -> crate::Result<Literal> {
+                let i = *idx.get(name).ok_or_else(|| {
+                    anyhow::anyhow!("layer {l} missing param {name:?}")
+                })?;
+                params[i].to_literal()
+            };
+            let weights = vec![
+                get("attn_norm")?, get("wq")?, get("wk")?, get("wv")?,
+                get("wo")?, get("mlp_norm")?, get("w1")?, get("w2")?,
+            ];
+            let routed = cfg.is_routed_block(l);
+            let cache_len = bundle.manifest.cache_len(l)?;
+            block_exes.entry(cache_len).or_insert(
+                bundle.block_decode(batch, cache_len)?,
+            );
+            let host = |name: &str| -> crate::Result<Vec<f32>> {
+                let i = *idx.get(name).ok_or_else(|| {
+                    anyhow::anyhow!("layer {l} missing param {name:?}")
+                })?;
+                Ok(params[i].as_f32()?.to_vec())
+            };
+            let router_w = if routed { Some(host("router_w")?) } else { None };
+            let pred = if routed && cfg.train_predictor {
+                Some((host("pred.w1")?, host("pred.b1")?, host("pred.w2")?))
+            } else {
+                None
+            };
+            let cache = [
+                Tensor::zeros_f32(vec![batch, cache_len, kd]).to_literal()?,
+                Tensor::zeros_f32(vec![batch, cache_len, kd]).to_literal()?,
+                Tensor::zeros_i32(vec![batch, cache_len]).to_literal()?,
+                Tensor::zeros_f32(vec![batch, cache_len]).to_literal()?,
+            ];
+            layers.push(LayerState {
+                routed,
+                cache_len,
+                weights,
+                router_w,
+                pred,
+                cache,
+                book: LayerKvCache::new(l, cache_len, batch, routed),
+            });
+        }
+
+        Ok(Self {
+            embed_exe: bundle.embed_step(batch)?,
+            logits_exe: bundle.logits_head(batch)?,
+            block_exes,
+            embed_lit,
+            final_norm_lit,
+            layers,
+            pos: vec![0; batch],
+            cfg,
+            batch,
+            decision,
+            report: SessionReport::default(),
+            last_trace: StepTrace::default(),
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn positions(&self) -> &[i32] {
+        &self.pos
+    }
+
+    pub fn report(&self) -> SessionReport {
+        let kd = self.cfg.n_heads * self.cfg.d_head;
+        let vanilla_len = self
+            .layers
+            .iter()
+            .filter(|l| !l.routed)
+            .map(|l| l.cache_len)
+            .max()
+            .unwrap_or_else(|| {
+                self.layers.iter().map(|l| l.cache_len).max().unwrap_or(0)
+            });
+        let mut r = self.report.clone();
+        r.cache_stats = self
+            .layers
+            .iter()
+            .map(|l| l.book.stats(kd, vanilla_len))
+            .collect();
+        r
+    }
+
+    /// Advance every row by one token. `active[b]` = row still generating
+    /// (inactive rows are routed around every routed block and their
+    /// logits ignored). Returns the logits, row-major [batch, vocab].
+    pub fn step(&mut self, tokens: &[i32], active: &[bool]) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == self.batch && active.len() == self.batch);
+        let t0 = Instant::now();
+        let mut stats = StepStats::default();
+        self.last_trace = StepTrace::default();
+
+        let tok_lit = Tensor::i32(vec![self.batch], tokens.to_vec()).to_literal()?;
+        let outs = self
+            .embed_exe
+            .run_literals(&[&tok_lit, &self.embed_lit])?;
+        let mut h = outs.into_iter().next().unwrap();
+
+        let pos_lit =
+            Tensor::i32(vec![self.batch], self.pos.clone()).to_literal()?;
+
+        let mut ctx_per_layer = Vec::with_capacity(self.layers.len());
+        let mut participates_any = Vec::with_capacity(self.layers.len());
+
+        for li in 0..self.layers.len() {
+            // --- routing decision (causal; pure host math, no dispatch) ---
+            let (gates, participate) = if self.layers[li].routed {
+                let d = self.cfg.d_model;
+                let h_host = Tensor::from_literal(&h)?;
+                let h_host = h_host.as_f32()?;
+                let router_w = self.layers[li].router_w.as_ref().unwrap();
+                let scores: Vec<f32> = (0..self.batch)
+                    .map(|b| {
+                        let row = &h_host[b * d..(b + 1) * d];
+                        row.iter().zip(router_w).map(|(x, w)| x * w).sum()
+                    })
+                    .collect();
+                let decide: Vec<bool> = match self.decision {
+                    RoutingDecision::AlwaysOn => vec![true; self.batch],
+                    RoutingDecision::RouterThreshold => {
+                        scores.iter().map(|&s| s > 0.0).collect()
+                    }
+                    RoutingDecision::Predictor => {
+                        let (w1, b1, w2) =
+                            self.layers[li].pred.as_ref().ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "predictor routing requested but bundle \
+                                     has no predictor params"
+                                )
+                            })?;
+                        let hidden = b1.len();
+                        (0..self.batch)
+                            .map(|b| {
+                                let row = &h_host[b * d..(b + 1) * d];
+                                // logit = w2 . relu(W1^T h + b1)
+                                let mut logit = 0f32;
+                                for j in 0..hidden {
+                                    let mut acc = b1[j];
+                                    for (di, &x) in row.iter().enumerate() {
+                                        acc += x * w1[di * hidden + j];
+                                    }
+                                    logit += w2[j] * acc.max(0.0);
+                                }
+                                logit > 0.0
+                            })
+                            .collect()
+                    }
+                };
+                (scores, decide)
+            } else {
+                (vec![1.0; self.batch], vec![true; self.batch])
+            };
+
+            // --- slot allocation + capacity-drop enforcement ---
+            let mut part_f = vec![0f32; self.batch];
+            let mut slots = vec![0i32; self.batch];
+            let mut any = false;
+            for b in 0..self.batch {
+                let wants = participate[b] && active[b];
+                if !wants {
+                    continue;
+                }
+                match self.layers[li].book.try_alloc(b) {
+                    Some(slot) => {
+                        part_f[b] = 1.0;
+                        slots[b] = slot as i32;
+                        any = true;
+                    }
+                    None => stats.capacity_drops += 1, // routed around
+                }
+            }
+            ctx_per_layer.push(
+                (0..self.batch)
+                    .map(|b| self.layers[li].book.used(b))
+                    .max()
+                    .unwrap_or(0),
+            );
+            participates_any.push(any);
+            if self.layers[li].routed {
+                self.last_trace
+                    .routed
+                    .insert(li, (gates[0], part_f[0] > 0.5));
+            }
+
+            if !any {
+                stats.blocks_skipped += 1;
+                continue; // ZERO cost: no executable call at all
+            }
+            stats.blocks_invoked += 1;
+
+            // --- block invocation ---
+            let gate_lit =
+                Tensor::f32(vec![self.batch], gates.clone()).to_literal()?;
+            let part_lit =
+                Tensor::f32(vec![self.batch], part_f).to_literal()?;
+            let slot_lit =
+                Tensor::i32(vec![self.batch], slots).to_literal()?;
+            let exe = &self.block_exes[&self.layers[li].cache_len];
+            let layer = &self.layers[li];
+            let mut args: Vec<&Literal> = vec![
+                &h, &pos_lit, &gate_lit, &part_lit, &slot_lit,
+                &layer.cache[0], &layer.cache[1], &layer.cache[2],
+                &layer.cache[3],
+            ];
+            args.extend(layer.weights.iter());
+            let mut outs = exe.run_literals(&args)?;
+            anyhow::ensure!(outs.len() == 5, "block returned {} outs", outs.len());
+            let valid = outs.pop().unwrap();
+            let posc = outs.pop().unwrap();
+            let v = outs.pop().unwrap();
+            let k = outs.pop().unwrap();
+            h = outs.pop().unwrap();
+            self.layers[li].cache = [k, v, posc, valid];
+        }
+
+        // --- head ---
+        let outs = self
+            .logits_exe
+            .run_literals(&[&h, &self.final_norm_lit, &self.embed_lit])?;
+        let logits = Tensor::from_literal(&outs[0])?;
+
+        // --- accounting (per active token, batch-aggregated) ---
+        let n_active = active.iter().filter(|&&a| a).count() as f64;
+        stats.flops = n_active
+            * flops::decode_step_flops(&self.cfg, &ctx_per_layer, &participates_any);
+
+        for p in self.pos.iter_mut() {
+            *p += 1;
+        }
+        stats.wall_us = t0.elapsed().as_micros();
+
+        self.report.steps += 1;
+        self.report.blocks_invoked += stats.blocks_invoked as u64;
+        self.report.blocks_skipped += stats.blocks_skipped as u64;
+        self.report.capacity_drops += stats.capacity_drops as u64;
+        self.report.total_flops += stats.flops;
+        self.report.wall_s += stats.wall_us as f64 / 1e6;
+        self.report.tokens_generated += n_active as u64;
+
+        Ok(logits.as_f32()?.to_vec())
+    }
+
+    /// [`Self::step`] + the row-0 routing trace (analysis harnesses).
+    pub fn step_traced(
+        &mut self,
+        tokens: &[i32],
+        active: &[bool],
+    ) -> crate::Result<StepTrace> {
+        self.step(tokens, active)?;
+        Ok(self.last_trace.clone())
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal CLI argument parser (offline substitute for clap).
+//!
+//! Supports: positional args, `--flag value`, `--flag=value`, boolean
+//! `--flag`, defaults, typed getters with error context, and usage text.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals + `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        bool_flags: &[&str],
+    ) -> crate::Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("option --{rest} expects a value")
+                    })?;
+                    out.options.insert(rest.to_string(), v);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> crate::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> crate::Result<usize> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> crate::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str) -> crate::Result<Option<u64>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|e| {
+                anyhow::anyhow!("--{name} {v:?}: {e}")
+            })?)),
+        }
+    }
+
+    /// Positional at index, or a named error.
+    pub fn pos(&self, index: usize, what: &str) -> crate::Result<&str> {
+        self.positional
+            .get(index)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing {what} argument"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), &["force"]).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["train", "mod_tiny", "--steps", "100",
+                        "--run-dir=runs/x", "--force"]);
+        assert_eq!(a.positional, vec!["train", "mod_tiny"]);
+        assert_eq!(a.u64_or("steps", 5).unwrap(), 100);
+        assert_eq!(a.str_or("run-dir", "d"), "runs/x");
+        assert!(a.has_flag("force"));
+        assert_eq!(a.u64_or("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(
+            ["--steps".to_string()].into_iter(), &[]
+        ).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--steps", "abc"]);
+        assert!(a.u64_or("steps", 1).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Micro-benchmark harness (offline substitute for criterion).
+//!
+//! Each `rust/benches/*.rs` binary builds a [`Bench`] runner, registers
+//! closures, and gets warmup + repeated timed runs with mean / p50 / p95 /
+//! stddev and a throughput column. Output is both a table on stdout and a
+//! JSON report under `runs/bench/` so EXPERIMENTS.md §Perf numbers are
+//! regenerable.
+
+use std::time::Instant;
+
+use super::json::Json;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub std_ms: f64,
+    /// optional units-per-iteration for throughput (e.g. tokens).
+    pub units: Option<f64>,
+}
+
+impl CaseResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("std_ms", Json::num(self.std_ms)),
+            (
+                "units_per_sec",
+                match self.units {
+                    Some(u) => Json::num(u / (self.mean_ms / 1000.0)),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// The bench runner.
+pub struct Bench {
+    suite: String,
+    warmup: usize,
+    iters: usize,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // env overrides keep smoke runs fast: BENCH_ITERS / BENCH_WARMUP
+        let iters = std::env::var("BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10);
+        let warmup = std::env::var("BENCH_WARMUP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2);
+        Self { suite: suite.to_string(), warmup, iters, results: Vec::new() }
+    }
+
+    pub fn with_iters(mut self, iters: usize, warmup: usize) -> Self {
+        self.iters = iters;
+        self.warmup = warmup;
+        self
+    }
+
+    /// Time `f` (called once per iteration). `units` = work items per
+    /// iteration for the throughput column.
+    pub fn case<F: FnMut()>(&mut self, name: &str, units: Option<f64>, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64() * 1000.0);
+        }
+        times.sort_by(|a, b| a.total_cmp(b));
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times
+            .iter()
+            .map(|t| (t - mean) * (t - mean))
+            .sum::<f64>()
+            / times.len() as f64;
+        let result = CaseResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ms: mean,
+            p50_ms: times[times.len() / 2],
+            p95_ms: times[(times.len() * 95 / 100).min(times.len() - 1)],
+            std_ms: var.sqrt(),
+            units,
+        };
+        println!(
+            "  {name:<40} {mean:>9.3} ms/iter  (p50 {:.3}, p95 {:.3}, σ {:.3}){}",
+            result.p50_ms,
+            result.p95_ms,
+            result.std_ms,
+            match units {
+                Some(u) => format!("  {:.1} units/s", u / (mean / 1000.0)),
+                None => String::new(),
+            }
+        );
+        self.results.push(result);
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+
+    /// Write the JSON report and return its path.
+    pub fn finish(self) -> crate::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("runs/bench");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.suite));
+        let doc = Json::obj(vec![
+            ("suite", Json::str(&self.suite)),
+            (
+                "cases",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty())?;
+        println!("[bench] report: {}", path.display());
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_aggregates() {
+        let mut b = Bench::new("selftest").with_iters(5, 1);
+        let mut n = 0u64;
+        b.case("noop", Some(1.0), || {
+            n += 1;
+        });
+        assert_eq!(n, 6); // warmup 1 + iters 5
+        let r = &b.results()[0];
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p95_ms >= r.p50_ms);
+    }
+}

@@ -1,0 +1,514 @@
+//! From-scratch JSON codec (this build is fully offline; serde_json is
+//! unavailable, and the AOT manifest / metrics logs / experiment outputs
+//! are all JSON).
+//!
+//! Complete RFC 8259 parser + writer: objects, arrays, strings with
+//! escapes (incl. \uXXXX and surrogate pairs), numbers, bools, null.
+//! Objects preserve insertion order (Vec of pairs) so emitted files diff
+//! cleanly. No streaming — documents here are small (< a few MB).
+
+use std::fmt::Write as _;
+
+/// A JSON document node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    // ---- constructors ----
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(n: impl Into<f64>) -> Json {
+        Json::Num(n.into())
+    }
+
+    // ---- accessors ----
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => {
+                pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// `get` that errors with the key name (manifest parsing ergonomics).
+    pub fn req(&self, key: &str) -> crate::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing JSON key {key:?}"))
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|n| n as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    // typed req-helpers
+    pub fn req_str(&self, key: &str) -> crate::Result<String> {
+        Ok(self
+            .req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("{key:?} is not a string"))?
+            .to_string())
+    }
+
+    pub fn req_f64(&self, key: &str) -> crate::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("{key:?} is not a number"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> crate::Result<usize> {
+        Ok(self.req_f64(key)? as usize)
+    }
+
+    pub fn req_bool(&self, key: &str) -> crate::Result<bool> {
+        self.req(key)?
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("{key:?} is not a bool"))
+    }
+
+    // ---- parse ----
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        anyhow::ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
+        Ok(v)
+    }
+
+    // ---- emit ----
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(out, *n),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                if pairs.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_str(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_num(out: &mut String, n: f64) {
+    if n.is_finite() && n == n.trunc() && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else if n.is_finite() {
+        let _ = write!(out, "{n}");
+    } else {
+        out.push_str("null"); // JSON has no NaN/Inf
+    }
+}
+
+fn write_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> crate::Result<u8> {
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))
+    }
+
+    fn expect(&mut self, b: u8) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.peek()? == b,
+            "expected {:?} at byte {}, found {:?}",
+            b as char, self.pos, self.peek()? as char
+        );
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> crate::Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.keyword("true", Json::Bool(true)),
+            b'f' => self.keyword("false", Json::Bool(false)),
+            b'n' => self.keyword("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn keyword(&mut self, word: &str, v: Json) -> crate::Result<Json> {
+        anyhow::ensure!(
+            self.bytes[self.pos..].starts_with(word.as_bytes()),
+            "bad keyword at byte {}", self.pos
+        );
+        self.pos += word.len();
+        Ok(v)
+    }
+
+    fn object(&mut self) -> crate::Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                other => anyhow::bail!(
+                    "expected ',' or '}}' at byte {}, found {:?}",
+                    self.pos, other as char
+                ),
+            }
+        }
+    }
+
+    fn array(&mut self) -> crate::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => anyhow::bail!(
+                    "expected ',' or ']' at byte {}, found {:?}",
+                    self.pos, other as char
+                ),
+            }
+        }
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = self.peek()?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = self.peek()?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            // surrogate pair?
+                            if (0xD800..0xDC00).contains(&cp) {
+                                anyhow::ensure!(
+                                    self.peek()? == b'\\',
+                                    "lone high surrogate"
+                                );
+                                self.pos += 1;
+                                anyhow::ensure!(
+                                    self.peek()? == b'u',
+                                    "lone high surrogate"
+                                );
+                                self.pos += 1;
+                                let lo = self.hex4()?;
+                                let c = 0x10000
+                                    + ((cp - 0xD800) << 10)
+                                    + (lo - 0xDC00);
+                                out.push(
+                                    char::from_u32(c).ok_or_else(|| {
+                                        anyhow::anyhow!("bad surrogate pair")
+                                    })?,
+                                );
+                            } else {
+                                out.push(char::from_u32(cp).ok_or_else(
+                                    || anyhow::anyhow!("bad \\u escape"),
+                                )?);
+                            }
+                        }
+                        other => anyhow::bail!(
+                            "bad escape \\{:?}", other as char
+                        ),
+                    }
+                }
+                b if b < 0x80 => out.push(b as char),
+                b => {
+                    // multi-byte UTF-8: copy the full sequence
+                    let len = match b {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let start = self.pos - 1;
+                    anyhow::ensure!(
+                        start + len <= self.bytes.len(),
+                        "truncated UTF-8"
+                    );
+                    let s = std::str::from_utf8(&self.bytes[start..start + len])
+                        .map_err(|e| anyhow::anyhow!("bad UTF-8: {e}"))?;
+                    out.push_str(s);
+                    self.pos = start + len;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> crate::Result<u32> {
+        anyhow::ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u");
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|e| anyhow::anyhow!("bad \\u: {e}"))?;
+        let v = u32::from_str_radix(s, 16)
+            .map_err(|e| anyhow::anyhow!("bad \\u: {e}"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> crate::Result<Json> {
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos],
+                b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let n: f64 = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad number {s:?} at {start}: {e}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_manifest_like() {
+        let text = r#"{"name":"mod_tiny","n":259,"frac":0.125,"ok":true,
+                       "none":null,"arr":[1,2,3],
+                       "nested":{"a":{"b":[{"c":1}]}}}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.req_str("name").unwrap(), "mod_tiny");
+        assert_eq!(v.req_usize("n").unwrap(), 259);
+        assert_eq!(v.req_f64("frac").unwrap(), 0.125);
+        assert!(v.req_bool("ok").unwrap());
+        assert_eq!(v.get("none"), Some(&Json::Null));
+        assert_eq!(v.get("arr").unwrap().as_arr().unwrap().len(), 3);
+        // reparse what we emit
+        let again = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(again, v);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Json::parse(r#""a\"b\\c\ndAé""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\"b\\c\ndAé");
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn surrogate_pairs() {
+        let v = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+    }
+
+    #[test]
+    fn utf8_passthrough() {
+        let v = Json::parse("\"mixturé ∆ 😀\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "mixturé ∆ 😀");
+    }
+
+    #[test]
+    fn numbers() {
+        for (s, n) in [("0", 0.0), ("-1.5", -1.5), ("2e3", 2000.0),
+                       ("1.25e-2", 0.0125)] {
+            assert_eq!(Json::parse(s).unwrap().as_f64().unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn integers_emit_without_decimal() {
+        assert_eq!(Json::num(259.0).to_string(), "259");
+        assert_eq!(Json::num(0.125).to_string(), "0.125");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn object_order_preserved() {
+        let v = Json::parse(r#"{"z":1,"a":2}"#).unwrap();
+        let keys: Vec<&str> =
+            v.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["z", "a"]);
+    }
+}

@@ -1,0 +1,11 @@
+//! In-repo substrates that would normally be external crates (this build
+//! is fully offline): JSON codec, CLI argument parsing, micro-bench
+//! harness, and a minimal property-testing loop.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+
+pub use args::Args;
+pub use json::Json;

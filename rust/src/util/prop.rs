@@ -1,0 +1,69 @@
+//! Minimal property-based testing loop (offline substitute for proptest).
+//!
+//! `forall(cases, gen, check)` draws `cases` random inputs from `gen`
+//! (seeded PCG32 — deterministic per test) and asserts `check`; on failure
+//! it reports the failing case index and a debug dump of the input. No
+//! shrinking — inputs here are small enough to eyeball.
+
+use crate::data::rng::Pcg32;
+
+/// Run `check` over `cases` generated inputs; panic with context on the
+/// first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg32::new(seed, 0xBADC0DE);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed on case {i}/{cases}: {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn usize_in(rng: &mut Pcg32, lo: usize, hi: usize) -> usize {
+    lo + rng.next_bounded((hi - lo + 1) as u32) as usize
+}
+
+/// Vec of standard normals.
+pub fn normal_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            1,
+            100,
+            |rng| usize_in(rng, 1, 50),
+            |&n| {
+                if n >= 1 && n <= 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_invalid_property() {
+        forall(
+            2,
+            100,
+            |rng| usize_in(rng, 0, 10),
+            |&n| if n < 5 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+}

@@ -1,0 +1,364 @@
+//! Integration tests over the real artifacts (require `make artifacts`).
+//!
+//! Exercises the full L3 stack against the AOT executables: bundle ABI
+//! verification, training-step execution + determinism, checkpoint
+//! resume, held-out evaluation under all routing modes, the layer-sliced
+//! decode runtime (skip semantics, capacity drops, cache accounting), and
+//! the batching server. Tests skip gracefully (with a note) when the
+//! artifacts are absent so `cargo test` stays useful pre-`make artifacts`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use mod_transformer::config::ServeConfig;
+use mod_transformer::coordinator::{checkpoint, Trainer, TrainerOptions};
+use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus, BOS};
+use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::serve::batcher::{generate_batch, Request, Server};
+use mod_transformer::serve::{DecodeSession, RoutingDecision};
+
+fn open(name: &str) -> Option<Arc<Bundle>> {
+    let dir = Path::new("artifacts").join(name);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/{name} missing (run `make artifacts`)");
+        return None;
+    }
+    let engine = Arc::new(Engine::cpu().expect("pjrt cpu client"));
+    Some(Arc::new(Bundle::open(engine, &dir).expect("bundle opens")))
+}
+
+fn data_for(bundle: &Arc<Bundle>, seed: u64) -> BatchIter {
+    BatchIter::new(
+        MarkovCorpus::new(CorpusSpec::default(), seed),
+        bundle.manifest.train.batch_size,
+        bundle.manifest.model.seq_len,
+    )
+}
+
+#[test]
+fn bundle_abi_is_consistent() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let m = &bundle.manifest;
+    // rust-side param accounting matches the python-side manifest
+    assert_eq!(m.model.n_params(), m.n_params);
+    // every routed layer has a compacted cache, full layers a full cache
+    for l in 0..m.model.n_layers {
+        let cl = m.cache_len(l).unwrap();
+        if m.model.is_routed_block(l) {
+            assert!(cl < m.max_decode_len, "layer {l} cache {cl}");
+        } else {
+            assert_eq!(cl, m.max_decode_len);
+        }
+    }
+    // init checkpoint matches the ABI exactly
+    let params = bundle.init_params().expect("init params load");
+    assert_eq!(params.len(), m.params.len());
+    for (t, spec) in params.iter().zip(&m.params) {
+        assert_eq!(t.shape(), spec.shape.as_slice(), "{}", spec.name);
+    }
+}
+
+#[test]
+fn train_step_runs_and_is_deterministic() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let run = |steps: u64| -> Vec<f32> {
+        let mut trainer =
+            Trainer::new(bundle.clone(), data_for(&bundle, 7), None).unwrap();
+        let mut last = Vec::new();
+        for s in 0..steps {
+            let batch = data_for(&bundle, 7).batch_at(s);
+            last = trainer.train_one(&batch).unwrap();
+        }
+        last
+    };
+    let a = run(2);
+    let b = run(2);
+    assert!(a.iter().all(|v| v.is_finite()), "{a:?}");
+    assert_eq!(a, b, "same seed + same steps must reproduce exactly");
+}
+
+#[test]
+fn training_reduces_loss() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let mut trainer =
+        Trainer::new(bundle.clone(), data_for(&bundle, 7), None).unwrap();
+    let mut first_ce = f32::NAN;
+    let mut last_ce = f32::NAN;
+    for s in 0..12 {
+        let batch = data_for(&bundle, 7).batch_at(s);
+        let m = trainer.train_one(&batch).unwrap();
+        if s == 0 {
+            first_ce = m[1];
+        }
+        last_ce = m[1];
+    }
+    assert!(
+        last_ce < first_ce,
+        "ce did not improve: {first_ce} -> {last_ce}"
+    );
+}
+
+#[test]
+fn checkpoint_resume_is_bit_exact() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let dir = std::env::temp_dir().join("mod_resume_test");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // run 4 steps straight through
+    let mut t1 =
+        Trainer::new(bundle.clone(), data_for(&bundle, 7), None).unwrap();
+    let mut straight = Vec::new();
+    for s in 0..4 {
+        straight = t1.train_one(&data_for(&bundle, 7).batch_at(s)).unwrap();
+    }
+
+    // run 2 steps, checkpoint, resume, run 2 more
+    let mut t2 =
+        Trainer::new(bundle.clone(), data_for(&bundle, 7), None).unwrap();
+    for s in 0..2 {
+        t2.train_one(&data_for(&bundle, 7).batch_at(s)).unwrap();
+    }
+    let ckpt = dir.join("mid.ckpt");
+    t2.save_checkpoint(&ckpt).unwrap();
+    let mut t3 =
+        Trainer::new(bundle.clone(), data_for(&bundle, 7), Some(&ckpt))
+            .unwrap();
+    assert_eq!(t3.step(), 2);
+    let mut resumed = Vec::new();
+    for s in 2..4 {
+        resumed = t3.train_one(&data_for(&bundle, 7).batch_at(s)).unwrap();
+    }
+    assert_eq!(straight, resumed, "resume must be bit-exact");
+}
+
+#[test]
+fn eval_modes_all_run() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let trainer =
+        Trainer::new(bundle.clone(), data_for(&bundle, 7), None).unwrap();
+    for mode in ["topk", "router", "predictor"] {
+        let e = trainer.evaluate(mode, 1).expect(mode);
+        assert!(e.ce.is_finite() && e.ce > 0.0, "{mode}: {e:?}");
+        assert!((0.0..=1.0).contains(&e.participation), "{mode}: {e:?}");
+    }
+    // top-k participation is exactly the capacity fraction
+    let e = trainer.evaluate("topk", 1).unwrap();
+    let expect = bundle.manifest.model.capacity(bundle.manifest.model.seq_len)
+        as f64
+        / bundle.manifest.model.seq_len as f64;
+    assert!((e.participation - expect).abs() < 1e-5, "{e:?}");
+}
+
+#[test]
+fn decode_skips_blocks_and_tracks_caches() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let params = bundle.init_params().unwrap();
+    let mut session = DecodeSession::new(
+        &bundle, &params, 1, RoutingDecision::RouterThreshold,
+    )
+    .unwrap();
+    let mut tok = BOS as i32;
+    for _ in 0..32 {
+        let logits = session.step(&[tok], &[true]).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        tok = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0 as i32;
+    }
+    let rep = session.report();
+    assert_eq!(rep.steps, 32);
+    // full blocks always invoked; routed blocks sometimes skipped
+    assert!(rep.blocks_invoked >= 2 * 32, "{rep:?}");
+    // cache occupancy: full layers hold exactly one slot per step
+    for cs in &rep.cache_stats {
+        if !cs.routed {
+            assert!((cs.occupancy - 32.0 / 256.0).abs() < 1e-9, "{cs:?}");
+        } else {
+            // routed layers hold at most as many as steps
+            assert!(cs.occupancy <= 32.0 / cs.cache_len as f64 + 1e-9);
+        }
+    }
+    // compacted caches save memory vs vanilla
+    let (alloc, vanilla, ratio) =
+        mod_transformer::serve::kv_cache::memory_savings(&rep.cache_stats);
+    assert!(alloc < vanilla, "ratio {ratio}");
+}
+
+#[test]
+fn decode_always_on_never_skips() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let params = bundle.init_params().unwrap();
+    let mut session =
+        DecodeSession::new(&bundle, &params, 1, RoutingDecision::AlwaysOn)
+            .unwrap();
+    let mut tok = BOS as i32;
+    for _ in 0..8 {
+        session.step(&[tok], &[true]).unwrap();
+        tok = 1;
+    }
+    let rep = session.report();
+    assert_eq!(rep.blocks_skipped, 0);
+    assert_eq!(rep.blocks_invoked, 4 * 8);
+}
+
+#[test]
+fn decode_capacity_drops_when_cache_full() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let params = bundle.init_params().unwrap();
+    // AlwaysOn routes every token through every block; the routed layers'
+    // caches (48 slots) overflow after 48 steps -> drops (paper 3.1).
+    let mut session =
+        DecodeSession::new(&bundle, &params, 1, RoutingDecision::AlwaysOn)
+            .unwrap();
+    let mut tok = BOS as i32;
+    for _ in 0..60 {
+        session.step(&[tok], &[true]).unwrap();
+        tok = 2;
+    }
+    let rep = session.report();
+    assert!(rep.capacity_drops > 0, "{rep:?}");
+    for cs in &rep.cache_stats {
+        if cs.routed {
+            assert!((cs.occupancy - 1.0).abs() < 1e-9, "routed cache full");
+        }
+    }
+}
+
+#[test]
+fn batched_generation_matches_request_count() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let params = bundle.init_params().unwrap();
+    let reqs: Vec<Request> = (0..3)
+        .map(|i| Request {
+            prompt: vec![BOS, 5, 10],
+            max_new: 6,
+            temperature: 0.0,
+            top_k: 0,
+            seed: i,
+        })
+        .collect();
+    let refs: Vec<&Request> = reqs.iter().collect();
+    let (outs, report) =
+        generate_batch(&bundle, &params, 4, RoutingDecision::RouterThreshold,
+                       &refs)
+            .unwrap();
+    assert_eq!(outs.len(), 3);
+    for o in &outs {
+        assert!(!o.is_empty() && o.len() <= 6);
+    }
+    assert!(report.tokens_generated > 0);
+}
+
+#[test]
+fn greedy_batch_rows_match_single_row_decode() {
+    // batching must not change a row's output (greedy, same prompt)
+    let Some(bundle) = open("mod_tiny") else { return };
+    let params = bundle.init_params().unwrap();
+    let req = Request {
+        prompt: vec![BOS, 5, 10, 20],
+        max_new: 8,
+        temperature: 0.0,
+        top_k: 0,
+        seed: 0,
+    };
+    let (single, _) = generate_batch(
+        &bundle, &params, 1, RoutingDecision::RouterThreshold, &[&req],
+    )
+    .unwrap();
+    let reqs = [req.clone(), req.clone(), req.clone(), req];
+    let refs: Vec<&Request> = reqs.iter().collect();
+    let (batched, _) = generate_batch(
+        &bundle, &params, 4, RoutingDecision::RouterThreshold, &refs,
+    )
+    .unwrap();
+    for row in &batched {
+        assert_eq!(row, &single[0], "batching changed greedy output");
+    }
+}
+
+#[test]
+fn server_round_trip() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let params = Arc::new(bundle.init_params().unwrap());
+    let server = Server::spawn(
+        bundle.clone(),
+        params,
+        ServeConfig { batch_wait_ms: 1, ..Default::default() },
+        RoutingDecision::RouterThreshold,
+    );
+    let pendings: Vec<_> = (0..3)
+        .map(|i| {
+            server
+                .submit(Request {
+                    prompt: vec![BOS, 3],
+                    max_new: 4,
+                    temperature: 0.0,
+                    top_k: 0,
+                    seed: i,
+                })
+                .unwrap()
+        })
+        .collect();
+    for p in pendings {
+        let resp = p.wait().expect("response");
+        assert!(!resp.tokens.is_empty());
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 3);
+    server.shutdown();
+}
+
+#[test]
+fn trainer_rejects_mismatched_data_shape() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let bad = BatchIter::new(
+        MarkovCorpus::new(CorpusSpec::default(), 7),
+        2, // wrong batch size
+        bundle.manifest.model.seq_len,
+    );
+    assert!(Trainer::new(bundle.clone(), bad, None).is_err());
+}
+
+#[test]
+fn checkpoint_format_interops_with_python_abi() {
+    // MODCKPT written by rust parses the same fields python wrote in
+    // init.ckpt — verified by reloading the init checkpoint and re-saving.
+    let Some(bundle) = open("mod_tiny") else { return };
+    let params = bundle.init_params().unwrap();
+    let named = bundle.named_params(&params);
+    let dir = std::env::temp_dir().join("mod_ckpt_interop");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resaved.ckpt");
+    checkpoint::save(&path, &named).unwrap();
+    let back = checkpoint::load(&path).unwrap();
+    let reordered = bundle.order_params(back).unwrap();
+    assert_eq!(reordered, params);
+}
+
+#[test]
+fn full_run_writes_metrics_and_checkpoint() {
+    let Some(bundle) = open("mod_tiny") else { return };
+    let dir = std::env::temp_dir().join("mod_full_run_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut trainer =
+        Trainer::new(bundle.clone(), data_for(&bundle, 7), None).unwrap();
+    let outcome = trainer
+        .run(&TrainerOptions {
+            steps: Some(3),
+            log_every: 1,
+            ckpt_every: 0,
+            run_dir: dir.clone(),
+            resume: None,
+        })
+        .unwrap();
+    assert!(outcome.metrics_path.exists());
+    assert!(outcome.ckpt_path.exists());
+    let rows =
+        mod_transformer::coordinator::metrics::load_jsonl(&outcome.metrics_path)
+            .unwrap();
+    assert_eq!(rows.len(), 3);
+    assert!(dir.join("metrics.csv").exists());
+}

@@ -1,0 +1,311 @@
+//! Property-based tests on coordinator invariants (in-repo `util::prop`
+//! harness; proptest is unavailable offline). Each property runs hundreds
+//! of randomized cases from a fixed seed.
+
+use mod_transformer::config::{FfMode, ModelConfig, RoutingMode};
+use mod_transformer::data::bpe::Bpe;
+use mod_transformer::data::rng::Pcg32;
+use mod_transformer::data::tokenizer::{ByteTokenizer, Tokenizer};
+use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
+use mod_transformer::flops;
+use mod_transformer::serve::batcher::sample;
+use mod_transformer::serve::LayerKvCache;
+use mod_transformer::util::json::Json;
+use mod_transformer::util::prop::{forall, normal_vec, usize_in};
+
+fn random_model(rng: &mut Pcg32) -> ModelConfig {
+    let n_heads = usize_in(rng, 1, 4);
+    let d_head = [8, 16, 32][usize_in(rng, 0, 2)];
+    let routing = [
+        RoutingMode::None,
+        RoutingMode::ModEvery,
+        RoutingMode::ModInterleaved,
+        RoutingMode::Stochastic,
+    ][usize_in(rng, 0, 3)];
+    let ff_mode = [FfMode::Dense, FfMode::Moe, FfMode::ModeIntegrated]
+        [usize_in(rng, 0, 2)];
+    ModelConfig {
+        vocab_size: usize_in(rng, 16, 512),
+        d_model: n_heads * d_head,
+        n_layers: usize_in(rng, 1, 10),
+        n_heads,
+        d_head,
+        d_ff: usize_in(rng, 8, 256),
+        seq_len: usize_in(rng, 8, 512),
+        routing,
+        capacity_frac: 0.05 + 0.95 * (usize_in(rng, 0, 100) as f64 / 100.0),
+        ff_mode,
+        n_experts: usize_in(rng, 1, 6),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_capacity_bounds() {
+    // 1 <= capacity <= seq_len, monotone in capacity_frac
+    forall(11, 300, |rng| random_model(rng), |cfg| {
+        let c = cfg.capacity(cfg.seq_len);
+        if c < 1 || c > cfg.seq_len {
+            return Err(format!("capacity {c} out of [1,{}]", cfg.seq_len));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routed_flops_never_exceed_vanilla_plus_router() {
+    // MoD cost <= vanilla cost + router/predictor overhead, and strictly
+    // less when capacity < 1 on some routed block.
+    forall(12, 200, |rng| random_model(rng), |cfg| {
+        let mut vanilla = cfg.clone();
+        vanilla.routing = RoutingMode::None;
+        let m = flops::model_flops(cfg).total();
+        let v = flops::model_flops(&vanilla).total();
+        let router_overhead: f64 = cfg
+            .routed_layers()
+            .iter()
+            .map(|_| {
+                2.0 * cfg.seq_len as f64
+                    * cfg.d_model as f64
+                    * (1.0 + cfg.predictor_hidden as f64)
+            })
+            .sum();
+        if m > v + router_overhead + 1.0 {
+            return Err(format!("MoD flops {m} > vanilla {v} + router"));
+        }
+        if cfg.capacity_frac < 0.5 && !cfg.routed_layers().is_empty() && m >= v
+        {
+            return Err(format!(
+                "low capacity should save flops: {m} vs {v} ({cfg:?})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flops_monotone_in_capacity() {
+    forall(13, 200, |rng| {
+        let mut cfg = random_model(rng);
+        cfg.routing = RoutingMode::ModEvery;
+        let lo = 0.05 + 0.4 * (usize_in(rng, 0, 100) as f64 / 100.0);
+        let hi = (lo + 0.1 + 0.4 * (usize_in(rng, 0, 100) as f64 / 100.0)).min(1.0);
+        (cfg, lo, hi)
+    }, |(cfg, lo, hi)| {
+        let mut a = cfg.clone();
+        a.capacity_frac = *lo;
+        let mut b = cfg.clone();
+        b.capacity_frac = *hi;
+        // rounding can equalize at tiny seq_len; allow equality
+        if flops::model_flops(&a).total() > flops::model_flops(&b).total() + 1.0 {
+            return Err("flops not monotone in capacity".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_cache_never_over_allocates() {
+    forall(14, 300, |rng| {
+        let cache_len = usize_in(rng, 1, 64);
+        let batch = usize_in(rng, 1, 8);
+        let ops: Vec<(usize, bool)> = (0..usize_in(rng, 0, 200))
+            .map(|_| (usize_in(rng, 0, batch - 1), rng.next_f64() < 0.1))
+            .collect();
+        (cache_len, batch, ops)
+    }, |(cache_len, batch, ops)| {
+        let mut cache = LayerKvCache::new(0, *cache_len, *batch, true);
+        let mut used = vec![0usize; *batch];
+        for &(row, reset) in ops {
+            if reset {
+                cache.reset_row(row);
+                used[row] = 0;
+            } else {
+                match cache.try_alloc(row) {
+                    Some(slot) => {
+                        if slot != used[row] {
+                            return Err(format!(
+                                "slot {slot} != expected {}", used[row]
+                            ));
+                        }
+                        used[row] += 1;
+                        if used[row] > *cache_len {
+                            return Err("over-allocated".into());
+                        }
+                    }
+                    None => {
+                        if used[row] != *cache_len {
+                            return Err(format!(
+                                "dropped early at {}/{}", used[row], cache_len
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampling_in_topk_support() {
+    forall(15, 300, |rng| {
+        let n = usize_in(rng, 2, 300);
+        let logits = normal_vec(rng, n);
+        let k = usize_in(rng, 1, n);
+        let seed = rng.next_u32() as u64;
+        (logits, k, seed)
+    }, |(logits, k, seed)| {
+        let mut rng = Pcg32::new(*seed, 0);
+        let idx = sample(logits, 0.7, *k, &mut rng);
+        if idx >= logits.len() {
+            return Err("index out of range".into());
+        }
+        // idx must be among the k largest
+        let mut sorted: Vec<f32> = logits.clone();
+        sorted.sort_by(|a, b| b.total_cmp(a));
+        let threshold = sorted[*k - 1];
+        if logits[idx] < threshold - 1e-6 {
+            return Err(format!(
+                "sampled {idx} (logit {}) below top-{k} threshold {threshold}",
+                logits[idx]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_greedy_sampling_is_argmax() {
+    forall(16, 200, |rng| {
+        let n = usize_in(rng, 1, 100);
+        normal_vec(rng, n)
+    }, |logits| {
+        let mut rng = Pcg32::new(0, 0);
+        let idx = sample(logits, 0.0, 0, &mut rng);
+        let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+        if (logits[idx] - max).abs() > 1e-9 {
+            return Err("greedy != argmax".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { usize_in(rng, 0, 3) } else { usize_in(rng, 0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_normal() * 100.0 * 64.0).round() / 64.0),
+            3 => Json::Str(
+                (0..usize_in(rng, 0, 12))
+                    .map(|_| {
+                        ['a', 'Z', '"', '\\', '\n', 'é', '∆', ' ']
+                            [usize_in(rng, 0, 7)]
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr(
+                (0..usize_in(rng, 0, 4))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..usize_in(rng, 0, 4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(17, 300, |rng| random_json(rng, 3), |doc| {
+        let text = doc.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+        if &back != doc {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        let pretty = Json::parse(&doc.to_string_pretty())
+            .map_err(|e| format!("pretty parse: {e}"))?;
+        if &pretty != doc {
+            return Err("pretty roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corpus_batches_deterministic_and_in_vocab() {
+    forall(18, 60, |rng| {
+        (rng.next_u32() as u64, usize_in(rng, 1, 8), usize_in(rng, 2, 128),
+         rng.next_u32() as u64 % 50)
+    }, |(seed, batch, seq, step)| {
+        let mk = || {
+            BatchIter::new(
+                MarkovCorpus::new(CorpusSpec::default(), *seed), *batch, *seq,
+            )
+        };
+        let a = mk().batch_at(*step);
+        let b = mk().batch_at(*step);
+        if a != b {
+            return Err("batches not deterministic".into());
+        }
+        if a.len() != batch * seq {
+            return Err("wrong batch shape".into());
+        }
+        if a.iter().any(|&t| t < 0 || t >= 259) {
+            return Err("token out of vocab".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrip_arbitrary_ascii() {
+    forall(19, 100, |rng| {
+        let train: String = (0..usize_in(rng, 10, 300))
+            .map(|_| (b'a' + usize_in(rng, 0, 5) as u8) as char)
+            .collect();
+        let text: String = (0..usize_in(rng, 0, 100))
+            .map(|_| (b'a' + usize_in(rng, 0, 7) as u8) as char)
+            .collect();
+        let merges = usize_in(rng, 0, 40);
+        (train, text, merges)
+    }, |(train, text, merges)| {
+        let bpe = Bpe::train(train, *merges);
+        if bpe.decode(&bpe.encode(text)) != *text {
+            return Err(format!("roundtrip failed for {text:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_byte_tokenizer_roundtrip() {
+    forall(20, 200, |rng| {
+        (0..usize_in(rng, 0, 64))
+            .map(|_| ['a', '0', ' ', 'é', '∆', '😀'][usize_in(rng, 0, 5)])
+            .collect::<String>()
+    }, |text| {
+        let t = ByteTokenizer;
+        if t.decode(&t.encode(text)) != *text {
+            return Err(format!("roundtrip failed for {text:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_n_params_positive_and_monotone_in_depth() {
+    forall(21, 200, |rng| random_model(rng), |cfg| {
+        let n = cfg.n_params();
+        if n == 0 {
+            return Err("zero params".into());
+        }
+        let mut deeper = cfg.clone();
+        deeper.n_layers += 1;
+        if deeper.n_params() <= n {
+            return Err("adding a layer must add params".into());
+        }
+        Ok(())
+    });
+}
