@@ -8,6 +8,7 @@
 //! Run: `cargo bench --bench coordinator_micro` (no artifacts needed).
 
 use mod_transformer::data::rng::Pcg32;
+use mod_transformer::runtime::{Backend, NativeBackend};
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
 use mod_transformer::runtime::Tensor;
 use mod_transformer::serve::batcher::sample;
@@ -15,25 +16,26 @@ use mod_transformer::serve::LayerKvCache;
 use mod_transformer::util::bench::Bench;
 use mod_transformer::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mod_transformer::Result<()> {
     let mut bench = Bench::new("coordinator_micro").with_iters(50, 5);
 
-    // --- literal marshalling (Tensor <-> xla::Literal), decode-sized ---
+    // --- value marshalling (Tensor <-> backend Value), decode-sized ---
+    let backend = NativeBackend::new();
     let h = Tensor::f32(vec![4, 128], vec![0.5; 4 * 128]);
-    bench.case("literal/h_to_literal_4x128", Some(1.0), || {
-        let lit = h.to_literal().unwrap();
-        std::hint::black_box(&lit);
+    bench.case("value/h_upload_4x128", Some(1.0), || {
+        let v = backend.upload(&h).unwrap();
+        std::hint::black_box(&v);
     });
-    let lit = h.to_literal().unwrap();
-    bench.case("literal/h_from_literal_4x128", Some(1.0), || {
-        let t = Tensor::from_literal(&lit).unwrap();
+    let v = backend.upload(&h).unwrap();
+    bench.case("value/h_download_4x128", Some(1.0), || {
+        let t = backend.download(&v).unwrap();
         std::hint::black_box(&t);
     });
     // cache-sized (the biggest per-step transfer if caches were host-side)
     let cache = Tensor::f32(vec![4, 48, 128], vec![0.1; 4 * 48 * 128]);
-    bench.case("literal/cache_to_literal_4x48x128", Some(1.0), || {
-        let lit = cache.to_literal().unwrap();
-        std::hint::black_box(&lit);
+    bench.case("value/cache_upload_4x48x128", Some(1.0), || {
+        let v = backend.upload(&cache).unwrap();
+        std::hint::black_box(&v);
     });
 
     // --- sampling over a vocab-sized logits row ---

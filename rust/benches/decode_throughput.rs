@@ -7,11 +7,10 @@
 //! non-invocation of the block executable, so the speedup is wall-clock.
 //!
 //! Regenerates: fig 6 speed panel + the §1 claim. Run: `cargo bench
-//! --bench decode_throughput` (needs `make artifacts`).
+//! --bench decode_throughput` (AOT artifacts if present, synthetic
+//! native bundles otherwise).
 
-use std::sync::Arc;
-
-use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::runtime::{open_bundle, Bundle};
 use mod_transformer::serve::{DecodeSession, RoutingDecision};
 use mod_transformer::util::bench::Bench;
 
@@ -43,20 +42,13 @@ fn decode_tokens(
     session.report().skip_fraction()
 }
 
-fn main() -> anyhow::Result<()> {
-    let engine = Arc::new(Engine::cpu()?);
+fn main() -> mod_transformer::Result<()> {
     let mut bench = Bench::new("decode_throughput");
     let n_tokens = 32usize;
 
     for bundle_name in ["baseline_tiny", "mod_tiny"] {
-        let dir = std::path::Path::new("artifacts").join(bundle_name);
-        let bundle = match Bundle::open(engine.clone(), &dir) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("skipping {bundle_name}: {e} (run `make artifacts`)");
-                continue;
-            }
-        };
+        let bundle =
+            open_bundle(std::path::Path::new("artifacts"), bundle_name)?;
         let params = bundle.init_params()?;
         let decisions: &[(&str, RoutingDecision)] =
             if bundle.manifest.routed_layers.is_empty() {

@@ -12,7 +12,7 @@ use mod_transformer::config::{ModelConfig, RoutingMode};
 use mod_transformer::flops;
 use mod_transformer::util::bench::Bench;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mod_transformer::Result<()> {
     // ---- the paper's capacity table ----
     println!("=== relative FLOPs per forward pass vs capacity (d=128 L=8 S=256) ===");
     println!("{:<10} {:>18} {:>18}", "capacity", "route every", "route every-other");

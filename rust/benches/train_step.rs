@@ -7,28 +7,20 @@
 //! the bottleneck — EXPERIMENTS.md §Perf).
 //!
 //! Regenerates: fig 3 "steps/s" column, fig 4 step-speed ordering.
-//! Run: `cargo bench --bench train_step` (needs `make artifacts`).
-
-use std::sync::Arc;
+//! Run: `cargo bench --bench train_step` (AOT artifacts if present,
+//! synthetic native bundles otherwise).
 
 use mod_transformer::coordinator::Trainer;
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
-use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::runtime::{open_bundle, Bundle};
 use mod_transformer::util::bench::Bench;
 
-fn main() -> anyhow::Result<()> {
-    let engine = Arc::new(Engine::cpu()?);
+fn main() -> mod_transformer::Result<()> {
     let mut bench = Bench::new("train_step");
 
     for bundle_name in ["baseline_tiny", "mod_tiny"] {
-        let dir = std::path::Path::new("artifacts").join(bundle_name);
-        let bundle = match Bundle::open(engine.clone(), &dir) {
-            Ok(b) => Arc::new(b),
-            Err(e) => {
-                eprintln!("skipping {bundle_name}: {e} (run `make artifacts`)");
-                continue;
-            }
-        };
+        let bundle =
+            open_bundle(std::path::Path::new("artifacts"), bundle_name)?;
         let b = bundle.manifest.train.batch_size;
         let s = bundle.manifest.model.seq_len;
         let corpus = MarkovCorpus::new(CorpusSpec::default(), 7);
@@ -49,7 +41,7 @@ fn main() -> anyhow::Result<()> {
             },
         );
 
-        // full train step through PJRT
+        // full train step through the backend
         let mut trainer = Trainer::new(bundle.clone(), data, None)?;
         let mut step = 0u64;
         bench.case(

@@ -9,25 +9,19 @@
 //!
 //! Run: `cargo run --release --example routing_explorer -- [--steps 150]`
 
-use std::sync::Arc;
-
 use mod_transformer::analysis;
 use mod_transformer::coordinator::{Trainer, TrainerOptions};
 use mod_transformer::data::bpe::Bpe;
 use mod_transformer::data::tokenizer::Tokenizer;
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
-use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::runtime::open_bundle;
 use mod_transformer::util::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mod_transformer::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
     let steps = args.u64_or("steps", 150)?;
 
-    let engine = Arc::new(Engine::cpu()?);
-    let bundle = Arc::new(Bundle::open(
-        engine,
-        std::path::Path::new("artifacts/mod_tiny"),
-    )?);
+    let bundle = open_bundle(std::path::Path::new("artifacts"), "mod_tiny")?;
     let corpus = MarkovCorpus::new(CorpusSpec::default(), 7);
     let data = BatchIter::new(
         corpus.clone(),

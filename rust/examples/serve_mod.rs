@@ -14,12 +14,12 @@ use std::sync::Arc;
 
 use mod_transformer::config::ServeConfig;
 use mod_transformer::data::{CorpusSpec, MarkovCorpus};
-use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::runtime::open_bundle;
 use mod_transformer::serve::batcher::{Request, Server};
 use mod_transformer::serve::RoutingDecision;
 use mod_transformer::util::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mod_transformer::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
     let bundle_name = args.str_or("bundle", "mod_tiny");
     let n_requests = args.usize_or("requests", 12)?;
@@ -30,11 +30,7 @@ fn main() -> anyhow::Result<()> {
         _ => RoutingDecision::RouterThreshold,
     };
 
-    let engine = Arc::new(Engine::cpu()?);
-    let bundle = Arc::new(Bundle::open(
-        engine,
-        &std::path::Path::new("artifacts").join(&bundle_name),
-    )?);
+    let bundle = open_bundle(std::path::Path::new("artifacts"), &bundle_name)?;
     let params = Arc::new(match args.opt("ckpt") {
         Some(path) => {
             let by_name = mod_transformer::coordinator::checkpoint::load(
@@ -79,7 +75,7 @@ fn main() -> anyhow::Result<()> {
                 seed: i as u64,
             })
         })
-        .collect::<anyhow::Result<_>>()?;
+        .collect::<mod_transformer::Result<_>>()?;
 
     let mut latencies = Vec::new();
     for (i, p) in pendings.into_iter().enumerate() {

@@ -10,25 +10,18 @@
 //!
 //! Run: `cargo run --release --example train_tiny_lm [-- --steps N]`
 
-use std::sync::Arc;
-
 use mod_transformer::coordinator::{Trainer, TrainerOptions};
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
 use mod_transformer::flops;
-use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::runtime::open_bundle;
 use mod_transformer::util::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mod_transformer::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
     let steps = args.u64_or("steps", 300)?;
-    let engine = Arc::new(Engine::cpu()?);
-
     let mut results = Vec::new();
     for name in ["baseline_tiny", "mod_tiny"] {
-        let bundle = Arc::new(Bundle::open(
-            engine.clone(),
-            &std::path::Path::new("artifacts").join(name),
-        )?);
+        let bundle = open_bundle(std::path::Path::new("artifacts"), name)?;
         let corpus = MarkovCorpus::new(CorpusSpec::default(), 7);
         let data = BatchIter::new(
             corpus,

@@ -10,8 +10,6 @@
 
 use std::sync::Arc;
 
-use xla::Literal;
-
 use crate::data::{CorpusSpec, MarkovCorpus};
 use crate::runtime::{Bundle, Tensor};
 use crate::serve::{DecodeSession, RoutingDecision};
@@ -192,9 +190,6 @@ pub fn analysis_corpus(seed: u64) -> MarkovCorpus {
 
 // Re-exported trace type implemented in serve::session.
 pub use crate::serve::session::StepTrace;
-
-#[allow(unused)]
-fn _literal_marker(_: &Literal) {}
 
 #[cfg(test)]
 mod tests {

@@ -41,7 +41,7 @@ impl RoutingMode {
             "mod_every" => Self::ModEvery,
             "mod_interleaved" => Self::ModInterleaved,
             "stochastic" => Self::Stochastic,
-            other => anyhow::bail!("unknown routing mode {other:?}"),
+            other => crate::bail!("unknown routing mode {other:?}"),
         })
     }
 }
@@ -71,7 +71,7 @@ impl FfMode {
             "dense" => Self::Dense,
             "moe" => Self::Moe,
             "mode_integrated" => Self::ModeIntegrated,
-            other => anyhow::bail!("unknown ff mode {other:?}"),
+            other => crate::bail!("unknown ff mode {other:?}"),
         })
     }
 }
@@ -126,16 +126,16 @@ impl Default for ModelConfig {
 impl ModelConfig {
     /// Validate internal consistency (same rules as the python side).
     pub fn validate(&self) -> crate::Result<()> {
-        anyhow::ensure!(
+        crate::ensure!(
             self.d_model == self.n_heads * self.d_head,
             "d_model ({}) != n_heads*d_head ({}*{})",
             self.d_model, self.n_heads, self.d_head
         );
-        anyhow::ensure!(
+        crate::ensure!(
             self.capacity_frac > 0.0 && self.capacity_frac <= 1.0,
             "capacity_frac out of (0,1]: {}", self.capacity_frac
         );
-        anyhow::ensure!(self.n_layers > 0 && self.seq_len > 0, "empty model");
+        crate::ensure!(self.n_layers > 0 && self.seq_len > 0, "empty model");
         Ok(())
     }
 
@@ -339,7 +339,7 @@ pub struct ExperimentConfig {
 impl ExperimentConfig {
     pub fn from_json_file(path: &std::path::Path) -> crate::Result<Self> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
         let j = Json::parse(&text)?;
         let model = ModelConfig::from_json(j.req("model")?)?;
         let train = match j.get("train") {

@@ -76,7 +76,7 @@ pub fn preset(name: &str) -> crate::Result<ExperimentConfig> {
             use_pallas: true,
             ..base
         },
-        other => anyhow::bail!(
+        other => crate::bail!(
             "unknown preset {other:?}; known: {:?}",
             preset_names()
         ),

@@ -19,7 +19,7 @@ const MAGIC: &[u8; 8] = b"MODCKPT1";
 /// reads by name).
 pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> crate::Result<()> {
     let file = std::fs::File::create(path)
-        .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+        .map_err(|e| crate::err!("creating {}: {e}", path.display()))?;
     let mut w = BufWriter::new(file);
     w.write_all(MAGIC)?;
     w.write_all(&(tensors.len() as u32).to_le_bytes())?;
@@ -52,20 +52,20 @@ pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> crate::Result<()> {
 /// Load all tensors by name.
 pub fn load(path: &Path) -> crate::Result<HashMap<String, Tensor>> {
     let file = std::fs::File::open(path)
-        .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+        .map_err(|e| crate::err!("opening {}: {e}", path.display()))?;
     let mut r = BufReader::new(file);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "{}: bad magic", path.display());
+    crate::ensure!(&magic == MAGIC, "{}: bad magic", path.display());
     let count = read_u32(&mut r)? as usize;
     let mut out = HashMap::with_capacity(count);
     for _ in 0..count {
         let nlen = read_u32(&mut r)? as usize;
-        anyhow::ensure!(nlen < 4096, "absurd name length {nlen}");
+        crate::ensure!(nlen < 4096, "absurd name length {nlen}");
         let mut nbuf = vec![0u8; nlen];
         r.read_exact(&mut nbuf)?;
         let name = String::from_utf8(nbuf)
-            .map_err(|e| anyhow::anyhow!("bad tensor name: {e}"))?;
+            .map_err(|e| crate::err!("bad tensor name: {e}"))?;
         let mut hdr = [0u8; 2];
         r.read_exact(&mut hdr)?;
         let (code, ndim) = (hdr[0], hdr[1] as usize);
@@ -89,7 +89,7 @@ pub fn load(path: &Path) -> crate::Result<HashMap<String, Tensor>> {
                     .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect(),
             ),
-            other => anyhow::bail!("unknown dtype code {other}"),
+            other => crate::bail!("unknown dtype code {other}"),
         };
         out.insert(name, tensor);
     }

@@ -39,7 +39,7 @@ impl MetricsRow {
         let values = j
             .req("values")?
             .as_obj()
-            .ok_or_else(|| anyhow::anyhow!("values not an object"))?
+            .ok_or_else(|| crate::err!("values not an object"))?
             .iter()
             .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
             .collect();
@@ -81,7 +81,7 @@ impl MetricsSink {
 
     /// Log a metric vector in manifest order.
     pub fn log_vector(&mut self, step: u64, values: &[f32]) -> crate::Result<MetricsRow> {
-        anyhow::ensure!(
+        crate::ensure!(
             values.len() == self.names.len(),
             "metric vector len {} != names {}",
             values.len(),

@@ -1,21 +1,18 @@
 //! The training orchestrator: drives the `train_step` executable.
 //!
 //! One `Trainer` owns: the bundle's executables, the parameter/optimizer
-//! literals (threaded step to step without re-marshalling), the data
-//! pipeline, metrics, and checkpoints. The step loop is synchronous —
-//! with one executable per step on one device there is nothing to overlap
-//! except batch synthesis, which is cheap (measured in benches; see
-//! EXPERIMENTS.md §Perf) — but batch materialization is still done for
-//! step s+1 while logging step s to keep the executable queue warm.
+//! state as backend [`Value`]s (threaded step to step without
+//! re-marshalling), the data pipeline, metrics, and checkpoints. Written
+//! against the [`crate::runtime::Backend`] surface, so the same loop
+//! drives the native CPU interpreter (offline default) and the PJRT
+//! executables (`--features pjrt`).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use xla::Literal;
-
 use crate::data::BatchIter;
-use crate::runtime::{Bundle, Tensor};
+use crate::runtime::{Bundle, Tensor, Value};
 
 use super::checkpoint;
 use super::metrics::MetricsSink;
@@ -74,8 +71,8 @@ pub struct EvalResult {
 pub struct Trainer {
     bundle: Arc<Bundle>,
     data: BatchIter,
-    /// params ++ m ++ v, as literals in ABI order (3 * n_params entries).
-    state: Vec<Literal>,
+    /// params ++ m ++ v, as backend values in ABI order (3 * n_params).
+    state: Vec<Value>,
     step: u64,
 }
 
@@ -89,7 +86,7 @@ impl Trainer {
     ) -> crate::Result<Self> {
         let b = bundle.manifest.train.batch_size;
         let s = bundle.manifest.model.seq_len;
-        anyhow::ensure!(
+        crate::ensure!(
             data.batch() == b && data.seq_len() == s,
             "data iterator shape ({}, {}) != bundle train shape ({b}, {s})",
             data.batch(), data.seq_len()
@@ -130,7 +127,7 @@ impl Trainer {
         };
         let state = params
             .iter()
-            .map(|t| t.to_literal())
+            .map(|t| bundle.backend().upload(t))
             .collect::<crate::Result<_>>()?;
         Ok(Self { bundle, data, state, step })
     }
@@ -146,7 +143,10 @@ impl Trainer {
     /// Current parameters (first n_params entries of the state).
     pub fn params(&self) -> crate::Result<Vec<Tensor>> {
         let n = self.bundle.manifest.params.len();
-        self.state[..n].iter().map(Tensor::from_literal).collect()
+        self.state[..n]
+            .iter()
+            .map(|v| self.bundle.backend().download(v))
+            .collect()
     }
 
     /// Run one step; returns the metric vector (manifest order).
@@ -154,27 +154,28 @@ impl Trainer {
         let exe = self.bundle.train_step()?;
         let b = self.bundle.manifest.train.batch_size;
         let s = self.bundle.manifest.model.seq_len;
-        anyhow::ensure!(tokens.len() == b * s, "bad batch size");
-        let tok_lit = Tensor::i32(vec![b, s], tokens.to_vec()).to_literal()?;
-        let step_lit = Tensor::scalar_i32(self.step as i32).to_literal()?;
-        let seed_lit = Tensor::scalar_i32(self.step as i32).to_literal()?;
+        crate::ensure!(tokens.len() == b * s, "bad batch size");
+        let backend = self.bundle.backend();
+        let tok_val = backend.upload(&Tensor::i32(vec![b, s], tokens.to_vec()))?;
+        let step_val = backend.upload(&Tensor::scalar_i32(self.step as i32))?;
+        let seed_val = backend.upload(&Tensor::scalar_i32(self.step as i32))?;
 
-        let mut args: Vec<&Literal> = Vec::with_capacity(3 + self.state.len());
-        args.push(&tok_lit);
-        args.push(&step_lit);
-        args.push(&seed_lit);
+        let mut args: Vec<&Value> = Vec::with_capacity(3 + self.state.len());
+        args.push(&tok_val);
+        args.push(&step_val);
+        args.push(&seed_val);
         args.extend(self.state.iter());
-        let mut outs = exe.run_literals(&args)?;
-        anyhow::ensure!(
+        let mut outs = exe.run(&args)?;
+        crate::ensure!(
             outs.len() == 1 + self.state.len(),
             "train_step returned {} outputs, expected {}",
             outs.len(),
             1 + self.state.len()
         );
-        let metrics_lit = outs.remove(0);
+        let metrics_val = outs.remove(0);
         self.state = outs;
         self.step += 1;
-        let metrics = Tensor::from_literal(&metrics_lit)?;
+        let metrics = backend.download(&metrics_val)?;
         Ok(metrics.as_f32()?.to_vec())
     }
 
@@ -227,19 +228,20 @@ impl Trainer {
     ) -> crate::Result<EvalResult> {
         let exe = self.bundle.eval_step(mode)?;
         let n = self.bundle.manifest.params.len();
+        let backend = self.bundle.backend();
         let eval_iter = self.data.eval_split();
         let mut acc = [0f64; 4];
         for i in 0..n_batches {
             let batch = eval_iter.batch_at(i as u64);
             let b = self.bundle.manifest.train.batch_size;
             let s = self.bundle.manifest.model.seq_len;
-            let tok_lit = Tensor::i32(vec![b, s], batch).to_literal()?;
-            let mut args: Vec<&Literal> = Vec::with_capacity(1 + n);
-            args.push(&tok_lit);
+            let tok_val = backend.upload(&Tensor::i32(vec![b, s], batch))?;
+            let mut args: Vec<&Value> = Vec::with_capacity(1 + n);
+            args.push(&tok_val);
             args.extend(self.state[..n].iter());
-            let outs = exe.run_literals(&args)?;
-            let m = Tensor::from_literal(&outs[0])?;
-            let m = m.as_f32()?;
+            let outs = exe.run(&args)?;
+            let m = backend.download(&outs[0])?;
+            let m = m.as_f32()?.to_vec();
             for (a, &v) in acc.iter_mut().zip(m.iter()) {
                 *a += v as f64;
             }
@@ -260,17 +262,18 @@ impl Trainer {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
+        let backend = self.bundle.backend();
         let n = self.bundle.manifest.params.len();
         let mut named: Vec<(String, Tensor)> = Vec::with_capacity(3 * n + 1);
         for (i, spec) in self.bundle.manifest.params.iter().enumerate() {
-            named.push((spec.name.clone(), Tensor::from_literal(&self.state[i])?));
+            named.push((spec.name.clone(), backend.download(&self.state[i])?));
             named.push((
                 format!("m::{}", spec.name),
-                Tensor::from_literal(&self.state[n + i])?,
+                backend.download(&self.state[n + i])?,
             ));
             named.push((
                 format!("v::{}", spec.name),
-                Tensor::from_literal(&self.state[2 * n + i])?,
+                backend.download(&self.state[2 * n + i])?,
             ));
         }
         named.push(("__step".into(), Tensor::scalar_i32(self.step as i32)));
@@ -283,5 +286,5 @@ fn take(
     key: &str,
 ) -> crate::Result<Tensor> {
     map.remove(key)
-        .ok_or_else(|| anyhow::anyhow!("checkpoint missing {key:?}"))
+        .ok_or_else(|| crate::err!("checkpoint missing {key:?}"))
 }

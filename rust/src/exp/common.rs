@@ -1,5 +1,10 @@
-//! Shared experiment plumbing: context (paths, engine), scales, table
+//! Shared experiment plumbing: context (paths, backend), scales, table
 //! rendering, and the train-one-variant helper every figure uses.
+//!
+//! On the default (offline) build the context synthesizes in-memory
+//! bundles on the native CPU backend — no artifacts, no Python. With
+//! `--features pjrt` it shells out to the AOT builder once per missing
+//! bundle and runs the compiled HLO instead.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -7,8 +12,7 @@ use std::sync::Arc;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::coordinator::{Trainer, TrainerOptions};
 use crate::data::{BatchIter, CorpusSpec, MarkovCorpus};
-use crate::isoflop;
-use crate::runtime::{Bundle, Engine};
+use crate::runtime::{default_backend, Backend, Bundle, SyntheticSpec};
 
 /// How big to run an experiment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,7 +31,7 @@ impl Scale {
             "smoke" => Ok(Self::Smoke),
             "tiny" => Ok(Self::Tiny),
             "full" => Ok(Self::Full),
-            other => anyhow::bail!("unknown scale {other:?} (smoke|tiny|full)"),
+            other => crate::bail!("unknown scale {other:?} (smoke|tiny|full)"),
         }
     }
 
@@ -59,9 +63,9 @@ impl Scale {
     }
 }
 
-/// Paths + engine shared by the harnesses.
+/// Paths + backend shared by the harnesses.
 pub struct ExpContext {
-    pub engine: Arc<Engine>,
+    pub backend: Arc<dyn Backend>,
     pub artifacts_dir: PathBuf,
     pub python_dir: PathBuf,
     pub runs_dir: PathBuf,
@@ -72,7 +76,7 @@ pub struct ExpContext {
 impl ExpContext {
     pub fn new(repo_root: &Path, scale: Scale) -> crate::Result<Self> {
         Ok(Self {
-            engine: Arc::new(Engine::cpu()?),
+            backend: default_backend()?,
             artifacts_dir: repo_root.join("artifacts"),
             python_dir: repo_root.join("python"),
             runs_dir: repo_root.join("runs"),
@@ -81,11 +85,14 @@ impl ExpContext {
         })
     }
 
-    /// Locate the repo root: walk up from cwd until Cargo.toml is found.
+    /// Locate the repo root: walk up from cwd until the workspace (or the
+    /// rust package) plus the python tree are found.
     pub fn repo_root() -> PathBuf {
         let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
         loop {
-            if dir.join("Cargo.toml").exists() && dir.join("python").exists() {
+            let has_cargo = dir.join("Cargo.toml").exists()
+                || dir.join("rust/Cargo.toml").exists();
+            if has_cargo && dir.join("python").exists() {
                 return dir;
             }
             if !dir.pop() {
@@ -94,7 +101,8 @@ impl ExpContext {
         }
     }
 
-    /// Ensure a bundle exists for (name, model, train); open it.
+    /// Get a bundle for (name, model, train); see module docs for how the
+    /// two builds differ.
     pub fn bundle(
         &self,
         name: &str,
@@ -105,6 +113,7 @@ impl ExpContext {
     }
 
     /// [`Self::bundle`] with decode artifacts (layer-sliced runtime).
+    #[cfg(feature = "pjrt")]
     pub fn bundle_opts(
         &self,
         name: &str,
@@ -112,7 +121,7 @@ impl ExpContext {
         train: &TrainConfig,
         with_decode: bool,
     ) -> crate::Result<Arc<Bundle>> {
-        let dir = isoflop::ensure_bundle_opts(
+        let dir = crate::isoflop::ensure_bundle_opts(
             &self.artifacts_dir,
             &self.python_dir,
             name,
@@ -120,7 +129,31 @@ impl ExpContext {
             train,
             with_decode,
         )?;
-        Ok(Arc::new(Bundle::open(self.engine.clone(), &dir)?))
+        Ok(Arc::new(Bundle::open(self.backend.clone(), &dir)?))
+    }
+
+    /// [`Self::bundle`]; the native build synthesizes in-memory bundles
+    /// (decode executables are always available there).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn bundle_opts(
+        &self,
+        name: &str,
+        model: &ModelConfig,
+        train: &TrainConfig,
+        _with_decode: bool,
+    ) -> crate::Result<Arc<Bundle>> {
+        Ok(Arc::new(Bundle::synthetic(
+            self.backend.clone(),
+            name,
+            model,
+            train,
+            &SyntheticSpec {
+                seed: self.corpus_seed,
+                decode_batches: vec![1],
+                max_decode_len: model.seq_len,
+                ..Default::default()
+            },
+        )?))
     }
 
     pub fn data(&self, train: &TrainConfig, seq_len: usize) -> BatchIter {

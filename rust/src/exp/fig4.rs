@@ -66,13 +66,7 @@ pub fn run(ctx: &ExpContext) -> crate::Result<Fig4Result> {
                 tr.total_steps = crate::isoflop::steps_for_budget(
                     &entry.model, &train, budget,
                 ) as usize;
-                let dir = crate::isoflop::ensure_bundle(
-                    &ctx.artifacts_dir,
-                    &ctx.python_dir,
-                    &bundle_name,
-                    &entry.model,
-                    &tr,
-                )?;
+                let bundle = ctx.bundle(&bundle_name, &entry.model, &tr)?;
                 println!(
                     "[fig4] budget {budget:.1e} {label} {}: {} params, {} steps",
                     entry.id,
@@ -80,8 +74,7 @@ pub fn run(ctx: &ExpContext) -> crate::Result<Fig4Result> {
                     tr.total_steps
                 );
                 let point = run_rung(
-                    &ctx.engine,
-                    &dir,
+                    bundle,
                     entry,
                     &tr,
                     budget,

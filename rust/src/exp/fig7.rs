@@ -92,6 +92,20 @@ pub fn run(ctx: &ExpContext) -> crate::Result<Fig7Result> {
     };
     let mut rows = Vec::new();
     for (name, model) in variants(seq) {
+        // MoE/MoDE feedforward needs compiled expert kernels; the native
+        // interpreter is dense-only, so skip those variants rather than
+        // aborting the whole figure mid-run (see ROADMAP open items).
+        if !matches!(model.ff_mode, FfMode::Dense)
+            && cfg!(not(feature = "pjrt"))
+        {
+            eprintln!(
+                "[fig7] skipping {name}: ff_mode {:?} is pjrt-only (add \
+                 the xla dep per rust/Cargo.toml, build artifacts, then \
+                 --features pjrt)",
+                model.ff_mode
+            );
+            continue;
+        }
         println!("[fig7] {name}: {} params", model.n_params());
         let (_trainer, outcome) = ctx.train_variant(
             &format!("fig7_{name}"),

@@ -230,6 +230,87 @@ mod tests {
     }
 
     #[test]
+    fn fully_skipped_decode_step_counts_only_router_and_unembed() {
+        // a skipped block contributes exactly 0 FLOPs beyond the router
+        // scan that decided to skip it (that is the decode saving)
+        let mut cfg = base();
+        cfg.routing = RoutingMode::ModEvery;
+        let d = cfg.d_model as f64;
+        let ctx = vec![64; cfg.n_layers];
+        let none = decode_step_flops(&cfg, &ctx, &vec![false; cfg.n_layers]);
+        let router_per_layer = 2.0 * d + 2.0 * d * cfg.predictor_hidden as f64;
+        let expect = 2.0 * d * cfg.vocab_size as f64
+            + cfg.n_layers as f64 * router_per_layer;
+        assert!((none - expect).abs() < 1e-9, "none {none} expect {expect}");
+        // and the block term itself is exactly zero: adding context to a
+        // skipped layer changes nothing
+        let mut ctx2 = ctx.clone();
+        ctx2[1] = 4096;
+        let none2 = decode_step_flops(&cfg, &ctx2, &vec![false; cfg.n_layers]);
+        assert_eq!(none, none2);
+    }
+
+    #[test]
+    fn relative_flops_below_one_whenever_capacity_below_one() {
+        let mut cfg = base();
+        cfg.routing = RoutingMode::ModEvery;
+        cfg.train_predictor = false;
+        for frac in [0.125, 0.25, 0.5, 0.9] {
+            cfg.capacity_frac = frac;
+            let rel = relative_flops(&cfg);
+            assert!(rel < 1.0, "capacity {frac}: rel {rel}");
+        }
+        // the paper's operating point stays below 1 even with the
+        // predictor overhead included
+        let mut paper = base();
+        paper.routing = RoutingMode::ModInterleaved;
+        paper.capacity_frac = 0.125;
+        paper.train_predictor = true;
+        assert!(relative_flops(&paper) < 1.0);
+    }
+
+    #[test]
+    fn train_step_flops_match_hand_computed_two_layer_model() {
+        // d=32 H=2 dh=16 f=64 v=101 s=16, layer 1 routed at capacity 8
+        let cfg = ModelConfig {
+            vocab_size: 101,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 16,
+            d_ff: 64,
+            seq_len: 16,
+            routing: RoutingMode::ModInterleaved,
+            capacity_frac: 0.5,
+            train_predictor: true,
+            predictor_hidden: 8,
+            ..Default::default()
+        };
+        assert_eq!(cfg.capacity(16), 8);
+        // block 0 (full, 16 tokens):
+        let b0 = (4.0 * 2.0 * 16.0 * 32.0 * 32.0)  // q/k/v/o projections
+            + (2.0 * 16.0 * 16.0 * 32.0)           // QK^T
+            + (2.0 * 16.0 * 16.0 * 32.0)           // AV
+            + (2.0 * 2.0 * 16.0 * 32.0 * 64.0);    // MLP
+        // block 1 (routed, 8 of 16 tokens + router/predictor over all 16):
+        let b1 = (4.0 * 2.0 * 8.0 * 32.0 * 32.0)
+            + (2.0 * 8.0 * 8.0 * 32.0)
+            + (2.0 * 8.0 * 8.0 * 32.0)
+            + (2.0 * 2.0 * 8.0 * 32.0 * 64.0)
+            + (2.0 * 16.0 * 32.0)                  // router scan
+            + (2.0 * 16.0 * 32.0 * 8.0);           // predictor MLP
+        let unembed = 2.0 * 16.0 * 32.0 * 101.0;
+        let fwd = b0 + b1 + unembed;
+        let m = model_flops(&cfg);
+        assert!((m.total() - fwd).abs() < 1e-6, "{} vs {fwd}", m.total());
+        // train step = 3x forward (fwd + bwd), per batch row
+        let batch = 4;
+        let expect = 3.0 * batch as f64 * fwd;
+        let got = train_step_flops(&cfg, batch);
+        assert!((got - expect).abs() < 1e-6, "{got} vs {expect}");
+    }
+
+    #[test]
     fn moe_ff_counts_all_experts() {
         let mut cfg = base();
         cfg.ff_mode = FfMode::Moe;

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use crate::config::{LadderEntry, ModelConfig, TrainConfig};
 use crate::data::{BatchIter, CorpusSpec, MarkovCorpus};
 use crate::flops;
-use crate::runtime::{Bundle, Engine};
+use crate::runtime::Bundle;
 
 /// One completed rung of a sweep.
 #[derive(Debug, Clone)]
@@ -148,22 +148,22 @@ pub fn ensure_bundle_opts(
         .current_dir(python_dir)
         .args(&cmd_args)
         .status()
-        .map_err(|e| anyhow::anyhow!("spawning AOT builder: {e}"))?;
-    anyhow::ensure!(status.success(), "AOT build failed for {name}");
+        .map_err(|e| crate::err!("spawning AOT builder: {e}"))?;
+    crate::ensure!(status.success(), "AOT build failed for {name}");
     Ok(dir)
 }
 
-/// Train one rung under a budget and report its sweep point.
+/// Train one rung under a budget and report its sweep point. The bundle
+/// comes from the caller (synthetic on the native backend, AOT-compiled
+/// with `--features pjrt` — see [`crate::exp::ExpContext::bundle`]).
 pub fn run_rung(
-    engine: &Arc<Engine>,
-    bundle_dir: &Path,
+    bundle: Arc<Bundle>,
     entry: &LadderEntry,
     train: &TrainConfig,
     budget: f64,
     corpus_seed: u64,
     run_dir: &Path,
 ) -> crate::Result<SweepPoint> {
-    let bundle = Arc::new(Bundle::open(engine.clone(), bundle_dir)?);
     let steps = steps_for_budget(&entry.model, train, budget);
     let corpus = MarkovCorpus::new(CorpusSpec::default(), corpus_seed);
     let data = BatchIter::new(corpus, train.batch_size, entry.model.seq_len);

@@ -7,20 +7,37 @@
 //! * **L1/L2 (build-time Python)** — `python/compile/` authors the MoD
 //!   transformer (Pallas kernels + JAX model/train step) and AOT-lowers it
 //!   to HLO-text artifacts (`make artifacts`).
-//! * **L3 (this crate)** — loads those artifacts through the PJRT C API
-//!   ([`runtime`]), and owns everything the paper's TPU stack owned around
-//!   the model: the training orchestrator ([`coordinator`]), the
+//! * **L3 (this crate)** — executes those models through a pluggable
+//!   [`runtime::Backend`] and owns everything the paper's TPU stack owned
+//!   around the model: the training orchestrator ([`coordinator`]), the
 //!   layer-sliced decode server that *actually skips* routed-around blocks
 //!   ([`serve`]), FLOP accounting ([`flops`]), isoFLOP sweeps ([`isoflop`]),
 //!   routing analysis ([`analysis`]), and the experiment harnesses that
 //!   regenerate every figure in the paper ([`exp`]).
 //!
-//! Python never runs on a request path: after `make artifacts`, the `repro`
+//! ## Two backends, offline-first
+//!
+//! The runtime is a trait ([`runtime::Backend`]) with two implementations:
+//!
+//! * **Native CPU backend** ([`runtime::native`], the default) — a pure-Rust
+//!   tensor interpreter implementing the full model semantics: embedding,
+//!   multi-head causal attention with the compacted MoD KV cache, the GELU
+//!   MLP, router/predictor scoring, expert-choice top-k routing, and a
+//!   complete train step (forward, backward, AdamW). It needs **no
+//!   artifacts, no Python, and no external crates**: `cargo build --release
+//!   && cargo test -q` exercises the entire L3 stack offline against
+//!   synthetic in-memory bundles ([`runtime::Bundle::synthetic`]).
+//! * **PJRT backend** (`--features pjrt`) — loads the AOT HLO-text
+//!   artifacts through the PJRT C API via the external `xla` crate; see
+//!   `rust/Cargo.toml` for how to enable it. This is the fidelity path that
+//!   runs the exact graphs Python lowered.
+//!
+//! Python never runs on a request path: with either backend, the `repro`
 //! binary (and the examples) are self-contained.
 //!
 //! The build is fully offline; [`util`] hosts the substrates that would
-//! normally be external crates (JSON codec, CLI parsing, bench harness,
-//! property-test loop).
+//! normally be external crates (error type, JSON codec, CLI parsing, bench
+//! harness, property-test loop).
 
 pub mod analysis;
 pub mod config;
@@ -33,5 +50,4 @@ pub mod runtime;
 pub mod serve;
 pub mod util;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub use util::error::{Error, Result};

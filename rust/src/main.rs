@@ -19,7 +19,7 @@ use mod_transformer::coordinator::{Trainer, TrainerOptions};
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus, Pcg32};
 use mod_transformer::exp::{self, ExpContext, Scale};
 use mod_transformer::flops;
-use mod_transformer::runtime::{Bundle, Engine, Tensor};
+use mod_transformer::runtime::{Bundle, Tensor};
 use mod_transformer::serve::{batcher, DecodeSession, RoutingDecision};
 use mod_transformer::util::Args;
 
@@ -42,24 +42,19 @@ COMMANDS:
   info <bundle>
 ";
 
-fn parse_decision(s: &str) -> anyhow::Result<RoutingDecision> {
+fn parse_decision(s: &str) -> mod_transformer::Result<RoutingDecision> {
     Ok(match s {
         "predictor" => RoutingDecision::Predictor,
         "router" => RoutingDecision::RouterThreshold,
         "always" => RoutingDecision::AlwaysOn,
-        other => anyhow::bail!("unknown decision {other:?}"),
+        other => mod_transformer::bail!("unknown decision {other:?}"),
     })
-}
-
-fn open_bundle(artifacts: &PathBuf, name: &str) -> anyhow::Result<Arc<Bundle>> {
-    let engine = Arc::new(Engine::cpu()?);
-    Ok(Arc::new(Bundle::open(engine, &artifacts.join(name))?))
 }
 
 fn load_params(
     bundle: &Arc<Bundle>,
     ckpt: Option<&str>,
-) -> anyhow::Result<Vec<Tensor>> {
+) -> mod_transformer::Result<Vec<Tensor>> {
     match ckpt {
         Some(path) => {
             let by_name = mod_transformer::coordinator::checkpoint::load(
@@ -87,7 +82,7 @@ fn data_for(bundle: &Arc<Bundle>, corpus_seed: u64) -> BatchIter {
     )
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mod_transformer::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["help"])?;
     if args.has_flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
@@ -99,7 +94,7 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "train" => {
             let bundle = args.pos(1, "bundle")?;
-            let b = open_bundle(&artifacts, bundle)?;
+            let b = mod_transformer::runtime::open_bundle(&artifacts, bundle)?;
             let data = data_for(&b, args.u64_or("corpus-seed", 7)?);
             let resume = args.opt("resume").map(PathBuf::from);
             let mut trainer = Trainer::new(b, data, resume.as_deref())?;
@@ -121,7 +116,7 @@ fn main() -> anyhow::Result<()> {
         }
         "eval" => {
             let bundle = args.pos(1, "bundle")?;
-            let b = open_bundle(&artifacts, bundle)?;
+            let b = mod_transformer::runtime::open_bundle(&artifacts, bundle)?;
             let data = data_for(&b, args.u64_or("corpus-seed", 7)?);
             let ckpt = args.opt("ckpt").map(PathBuf::from);
             let trainer = Trainer::new(b, data, ckpt.as_deref())?;
@@ -136,7 +131,7 @@ fn main() -> anyhow::Result<()> {
         }
         "generate" => {
             let bundle = args.pos(1, "bundle")?;
-            let b = open_bundle(&artifacts, bundle)?;
+            let b = mod_transformer::runtime::open_bundle(&artifacts, bundle)?;
             let params = load_params(&b, args.opt("ckpt"))?;
             let decision = parse_decision(&args.str_or("decision", "router"))?;
             let temperature = args.f64_or("temperature", 0.8)?;
@@ -166,7 +161,7 @@ fn main() -> anyhow::Result<()> {
         }
         "serve" => {
             let bundle = args.pos(1, "bundle")?;
-            let b = open_bundle(&artifacts, bundle)?;
+            let b = mod_transformer::runtime::open_bundle(&artifacts, bundle)?;
             let params = Arc::new(load_params(&b, args.opt("ckpt"))?);
             let decision = parse_decision(&args.str_or("decision", "router"))?;
             let n_requests = args.usize_or("requests", 16)?;
@@ -189,7 +184,7 @@ fn main() -> anyhow::Result<()> {
                         seed: i as u64,
                     })
                 })
-                .collect::<anyhow::Result<_>>()?;
+                .collect::<mod_transformer::Result<_>>()?;
             let mut latencies: Vec<f64> = Vec::new();
             for p in pendings {
                 if let Ok(resp) = p.wait() {
@@ -259,12 +254,12 @@ fn main() -> anyhow::Result<()> {
                     exp::fig6::run(&ctx)?;
                     exp::fig7::run(&ctx)?;
                 }
-                other => anyhow::bail!("unknown figure {other:?}"),
+                other => mod_transformer::bail!("unknown figure {other:?}"),
             }
         }
         "info" => {
             let bundle = args.pos(1, "bundle")?;
-            let b = open_bundle(&artifacts, bundle)?;
+            let b = mod_transformer::runtime::open_bundle(&artifacts, bundle)?;
             let m = &b.manifest;
             println!("bundle {} (fingerprint {})", m.name, m.fingerprint);
             println!(
@@ -285,7 +280,7 @@ fn main() -> anyhow::Result<()> {
         }
         other => {
             println!("{USAGE}");
-            anyhow::bail!("unknown command {other:?}");
+            mod_transformer::bail!("unknown command {other:?}");
         }
     }
     Ok(())

@@ -1,0 +1,218 @@
+//! The [`Backend`] abstraction: every way the coordinator executes model
+//! code goes through this trait.
+//!
+//! A backend knows how to (a) resolve an [`ExecKey`] — one logical
+//! executable of the artifact ABI (train step, eval step, the layer-sliced
+//! decode steps) — into a runnable [`Executable`], and (b) move tensors
+//! between the host and whatever representation the backend computes on
+//! ([`Value`]).
+//!
+//! Implementations:
+//! * [`super::native::NativeBackend`] — pure-Rust CPU interpreter; builds
+//!   executables directly from the bundle's [`Manifest`] (no artifact
+//!   files needed), so the whole stack runs offline.
+//! * `PjrtBackend` (`--features pjrt`) — compiles the bundle's AOT
+//!   HLO-text artifacts through the PJRT C API.
+//!
+//! The coordinator (trainer, decode session, server, harnesses) is written
+//! entirely against this trait; swapping backends changes no call sites.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::bundle::Manifest;
+use super::tensor::Tensor;
+
+/// A backend-owned tensor value (an executable input/output).
+///
+/// The native backend computes directly on host tensors; the PJRT backend
+/// keeps `xla::Literal`s so hot paths (KV caches, optimizer state) never
+/// round-trip through host memory between steps.
+#[derive(Clone)]
+pub enum Value {
+    /// A host tensor (the native backend's only representation).
+    Host(Tensor),
+    /// A PJRT literal (device-adjacent buffer).
+    #[cfg(feature = "pjrt")]
+    Literal(Arc<xla::Literal>),
+}
+
+impl std::fmt::Debug for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Host(t) => write!(f, "Value::Host(shape {:?})", t.shape()),
+            #[cfg(feature = "pjrt")]
+            Value::Literal(_) => write!(f, "Value::Literal(..)"),
+        }
+    }
+}
+
+impl Value {
+    /// View/copy this value as a host tensor.
+    pub fn to_tensor(&self) -> crate::Result<Tensor> {
+        match self {
+            Value::Host(t) => Ok(t.clone()),
+            #[cfg(feature = "pjrt")]
+            Value::Literal(l) => Tensor::from_literal(l),
+        }
+    }
+
+    /// Borrow the host tensor, if this value is host-resident.
+    pub fn as_host(&self) -> Option<&Tensor> {
+        match self {
+            Value::Host(t) => Some(t),
+            #[cfg(feature = "pjrt")]
+            _ => None,
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::Host(t)
+    }
+}
+
+/// One logical executable of the artifact ABI.
+///
+/// Keys mirror the artifact names `python -m compile.aot` emits; the
+/// native backend synthesizes the same programs from the manifest's model
+/// config instead of loading files.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ExecKey {
+    /// `(tokens i32[B,S], step i32[], seed i32[], *params, *m, *v)`
+    /// `-> (metrics f32[8], *params', *m', *v')`
+    TrainStep,
+    /// `(tokens i32[B,S], *params) -> (metrics f32[4],)`;
+    /// mode is one of `"topk" | "router" | "predictor"`.
+    EvalStep(String),
+    /// `(tokens i32[B], embed f32[V,D]) -> (h f32[B,D],)`
+    Embed { batch: usize },
+    /// `(h f32[B,D], final_norm f32[D], embed f32[V,D]) -> (logits f32[B,V],)`
+    Logits { batch: usize },
+    /// `(h f32[B,D], router_w f32[D]) -> (scores f32[B],)`
+    RouterScore { batch: usize },
+    /// `(h, pred.w1, pred.b1, pred.w2) -> (logits f32[B],)`
+    Predictor { batch: usize },
+    /// Single-token block step over a compacted `cache_len`-slot KV cache;
+    /// see `python/compile/sampling.py::block_decode_fn` for the ABI.
+    BlockDecode { batch: usize, cache_len: usize },
+}
+
+impl ExecKey {
+    /// Stable display name (diagnostics, cache keys).
+    pub fn label(&self) -> String {
+        match self {
+            ExecKey::TrainStep => "train_step".into(),
+            ExecKey::EvalStep(mode) => format!("eval_{mode}"),
+            ExecKey::Embed { batch } => format!("embed_B{batch}"),
+            ExecKey::Logits { batch } => format!("logits_B{batch}"),
+            ExecKey::RouterScore { batch } => format!("router_B{batch}"),
+            ExecKey::Predictor { batch } => format!("predictor_B{batch}"),
+            ExecKey::BlockDecode { batch, cache_len } => {
+                format!("block_B{batch}_L{cache_len}")
+            }
+        }
+    }
+}
+
+/// A runnable program: the unit the coordinator dispatches.
+pub trait Executable: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Execute with backend values; returns the flattened output tuple.
+    fn run(&self, args: &[&Value]) -> crate::Result<Vec<Value>>;
+}
+
+/// A model-execution backend (see module docs).
+pub trait Backend: Send + Sync {
+    /// Human-readable platform name ("native-cpu", "pjrt-cpu", ...).
+    fn platform(&self) -> String;
+
+    /// Resolve one executable of the ABI for a bundle. `dir` is the
+    /// artifact directory when the bundle came from disk (the PJRT backend
+    /// needs it to locate HLO files; the native backend ignores it).
+    fn load(
+        &self,
+        manifest: &Manifest,
+        dir: Option<&Path>,
+        key: &ExecKey,
+    ) -> crate::Result<Arc<dyn Executable>>;
+
+    /// Move a host tensor into a backend value.
+    fn upload(&self, t: &Tensor) -> crate::Result<Value> {
+        Ok(Value::Host(t.clone()))
+    }
+
+    /// Read a backend value back to the host.
+    fn download(&self, v: &Value) -> crate::Result<Tensor> {
+        v.to_tensor()
+    }
+}
+
+/// The default backend for this build: native CPU (or PJRT when the
+/// `pjrt` feature is enabled).
+pub fn default_backend() -> crate::Result<Arc<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        Ok(Arc::new(super::client::PjrtBackend::cpu()?))
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        Ok(Arc::new(super::native::NativeBackend::new()))
+    }
+}
+
+/// Borrow the `i`-th argument as an f32 slice (interpreter ergonomics).
+pub(crate) fn f32_arg<'a>(
+    args: &'a [&Value],
+    i: usize,
+    what: &str,
+) -> crate::Result<&'a [f32]> {
+    let v = args
+        .get(i)
+        .ok_or_else(|| crate::err!("missing argument {i} ({what})"))?;
+    match v.as_host() {
+        Some(t) => t.as_f32(),
+        None => Err(crate::err!("argument {i} ({what}) is not host-resident")),
+    }
+}
+
+/// Borrow the `i`-th argument as an i32 slice.
+pub(crate) fn i32_arg<'a>(
+    args: &'a [&Value],
+    i: usize,
+    what: &str,
+) -> crate::Result<&'a [i32]> {
+    let v = args
+        .get(i)
+        .ok_or_else(|| crate::err!("missing argument {i} ({what})"))?;
+    match v.as_host() {
+        Some(t) => t.as_i32(),
+        None => Err(crate::err!("argument {i} ({what}) is not host-resident")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_key_labels_match_artifact_names() {
+        assert_eq!(ExecKey::TrainStep.label(), "train_step");
+        assert_eq!(ExecKey::EvalStep("topk".into()).label(), "eval_topk");
+        assert_eq!(ExecKey::Embed { batch: 4 }.label(), "embed_B4");
+        assert_eq!(
+            ExecKey::BlockDecode { batch: 1, cache_len: 48 }.label(),
+            "block_B1_L48"
+        );
+    }
+
+    #[test]
+    fn value_roundtrips_host_tensor() {
+        let t = Tensor::f32(vec![2], vec![1.0, 2.0]);
+        let v: Value = t.clone().into();
+        assert_eq!(v.to_tensor().unwrap(), t);
+        assert!(v.as_host().is_some());
+    }
+}

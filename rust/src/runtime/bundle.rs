@@ -1,9 +1,19 @@
-//! Artifact bundles: manifest parsing + executable access + init params.
+//! Bundles: a manifest (the ABI contract) + parameters + executables.
 //!
-//! A bundle is one directory produced by `python -m compile.aot` for one
-//! model config. The manifest is the ABI contract: parameter ordering,
-//! metric vector layout, per-layer KV-cache lengths, and artifact file
-//! names all come from here — the Rust side never hardcodes them.
+//! Two ways to get one:
+//!
+//! * [`Bundle::open`] — parse an artifact directory produced by
+//!   `python -m compile.aot` (manifest + init checkpoint + HLO files).
+//!   Works with either backend: the native backend interprets the model
+//!   straight from the manifest and only reads `init.ckpt`.
+//! * [`Bundle::synthetic`] — build an in-memory bundle from a
+//!   [`ModelConfig`]/[`TrainConfig`] with seeded init parameters and no
+//!   files at all (native backend only). This is what makes the test
+//!   suite, the examples and the experiment harnesses run offline.
+//!
+//! The manifest carries parameter ordering, metric vector layout,
+//! per-layer KV-cache lengths and artifact file names — the Rust side
+//! never hardcodes them.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -12,7 +22,7 @@ use std::sync::Arc;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::util::json::Json;
 
-use super::client::{Engine, Executable};
+use super::backend::{default_backend, Backend, ExecKey, Executable};
 use super::tensor::Tensor;
 
 /// One parameter tensor's spec (name, shape) in ABI order.
@@ -23,7 +33,42 @@ pub struct ParamSpec {
     pub dtype: String,
 }
 
-/// Parsed `manifest.json`.
+/// Training-metric vector layout (ABI order, mirrors `train.METRIC_NAMES`).
+pub const METRIC_NAMES: [&str; 8] = [
+    "loss", "ce", "aux_bce", "pred_bce", "pred_acc", "router_frac",
+    "grad_norm", "lr",
+];
+
+/// Eval-metric vector layout (mirrors `train.eval_step_fn`).
+pub const EVAL_METRIC_NAMES: [&str; 4] =
+    ["ce", "pred_acc", "router_frac", "participation"];
+
+/// Options for synthesizing an in-memory bundle.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    /// Init-parameter seed.
+    pub seed: u64,
+    /// Decode batch sizes the bundle "compiles" for.
+    pub decode_batches: Vec<usize>,
+    /// Max decode length (0 = the model's seq_len).
+    pub max_decode_len: usize,
+    /// KV-cache slack factor over the expected capacity occupancy
+    /// (mirrors `sampling.cache_lengths`).
+    pub cache_slack: f64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            decode_batches: vec![1, 4],
+            max_decode_len: 0,
+            cache_slack: 1.5,
+        }
+    }
+}
+
+/// Parsed (or synthesized) `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub name: String,
@@ -40,7 +85,8 @@ pub struct Manifest {
     pub n_params: usize,
     pub decode_batches: Vec<usize>,
     pub max_decode_len: usize,
-    /// artifact key -> file name ("decode" holds a nested map).
+    /// artifact key -> file name ("decode" holds a nested map);
+    /// `Json::Null` for synthetic bundles.
     artifacts: Json,
 }
 
@@ -50,7 +96,7 @@ impl Manifest {
         let str_vec = |key: &str| -> crate::Result<Vec<String>> {
             Ok(j.req(key)?
                 .as_arr()
-                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                .ok_or_else(|| crate::err!("{key} not an array"))?
                 .iter()
                 .filter_map(|v| v.as_str().map(String::from))
                 .collect())
@@ -58,7 +104,7 @@ impl Manifest {
         let params = j
             .req("params")?
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+            .ok_or_else(|| crate::err!("params not an array"))?
             .iter()
             .map(|p| -> crate::Result<ParamSpec> {
                 Ok(ParamSpec {
@@ -66,7 +112,7 @@ impl Manifest {
                     shape: p
                         .req("shape")?
                         .as_arr()
-                        .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                        .ok_or_else(|| crate::err!("shape not an array"))?
                         .iter()
                         .filter_map(Json::as_usize)
                         .collect(),
@@ -77,14 +123,14 @@ impl Manifest {
         let cache_lengths = j
             .req("cache_lengths")?
             .as_obj()
-            .ok_or_else(|| anyhow::anyhow!("cache_lengths not an object"))?
+            .ok_or_else(|| crate::err!("cache_lengths not an object"))?
             .iter()
             .map(|(k, v)| -> crate::Result<(usize, usize)> {
                 Ok((
                     k.parse()
-                        .map_err(|e| anyhow::anyhow!("cache layer {k:?}: {e}"))?,
+                        .map_err(|e| crate::err!("cache layer {k:?}: {e}"))?,
                     v.as_usize()
-                        .ok_or_else(|| anyhow::anyhow!("cache len not int"))?,
+                        .ok_or_else(|| crate::err!("cache len not int"))?,
                 ))
             })
             .collect::<crate::Result<HashMap<_, _>>>()?;
@@ -118,117 +164,218 @@ impl Manifest {
         })
     }
 
+    /// Build a manifest in memory for a synthetic (artifact-free) bundle.
+    ///
+    /// Cache lengths follow `sampling.cache_lengths`: a routed block gets
+    /// `ceil(capacity_frac * max_len * slack)` compacted slots; full
+    /// blocks get `max_len`.
+    pub fn synthesize(
+        name: &str,
+        model: &ModelConfig,
+        train: &TrainConfig,
+        spec: &SyntheticSpec,
+    ) -> crate::Result<Self> {
+        model.validate()?;
+        let max_len = if spec.max_decode_len == 0 {
+            model.seq_len
+        } else {
+            spec.max_decode_len
+        };
+        crate::ensure!(max_len > 0, "max_decode_len must be positive");
+        crate::ensure!(
+            !spec.decode_batches.is_empty(),
+            "need at least one decode batch size"
+        );
+        let mut cache_lengths = HashMap::new();
+        for l in 0..model.n_layers {
+            let len = if model.is_routed_block(l) {
+                let c = (model.capacity_frac * max_len as f64 * spec.cache_slack)
+                    .ceil() as usize;
+                c.clamp(1, max_len)
+            } else {
+                max_len
+            };
+            cache_lengths.insert(l, len);
+        }
+        Ok(Self {
+            name: name.to_string(),
+            fingerprint: format!("synthetic-{}", spec.seed),
+            seed: spec.seed,
+            model: model.clone(),
+            train: train.clone(),
+            params: super::native::param_specs(model),
+            metrics: METRIC_NAMES.iter().map(|s| s.to_string()).collect(),
+            eval_metrics: EVAL_METRIC_NAMES.iter().map(|s| s.to_string()).collect(),
+            cache_lengths,
+            routed_layers: model.routed_layers(),
+            n_params: model.n_params(),
+            decode_batches: spec.decode_batches.clone(),
+            max_decode_len: max_len,
+            artifacts: Json::Null,
+        })
+    }
+
     pub fn cache_len(&self, layer: usize) -> crate::Result<usize> {
         self.cache_lengths
             .get(&layer)
             .copied()
-            .ok_or_else(|| anyhow::anyhow!("no cache length for layer {layer}"))
+            .ok_or_else(|| crate::err!("no cache length for layer {layer}"))
     }
 
-    fn artifact_file(&self, key: &str) -> crate::Result<&str> {
+    pub(crate) fn artifact_file(&self, key: &str) -> crate::Result<&str> {
         self.artifacts
             .get(key)
             .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow::anyhow!(
+            .ok_or_else(|| crate::err!(
                 "bundle {} has no artifact {key:?} (built with \
-                 --no-train/--no-decode?)", self.name))
+                 --no-train/--no-decode, or a synthetic bundle?)", self.name))
     }
 
-    fn decode_file(&self, key: &str) -> crate::Result<&str> {
+    pub(crate) fn decode_file(&self, key: &str) -> crate::Result<&str> {
         self.artifacts
             .get("decode")
             .and_then(|d| d.get(key))
             .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow::anyhow!(
+            .ok_or_else(|| crate::err!(
                 "bundle {} has no decode artifact {key:?}", self.name))
     }
 }
 
-/// A loaded artifact bundle.
+/// A loaded (or synthesized) bundle.
 pub struct Bundle {
-    pub dir: PathBuf,
+    /// Artifact directory; `None` for synthetic bundles.
+    pub dir: Option<PathBuf>,
     pub manifest: Manifest,
-    engine: Arc<Engine>,
+    backend: Arc<dyn Backend>,
+    /// Synthetic bundles carry their seeded init parameters in memory.
+    init: Option<HashMap<String, Tensor>>,
 }
 
 impl Bundle {
     /// Open `dir`, parse + sanity-check the manifest.
-    pub fn open(engine: Arc<Engine>, dir: &Path) -> crate::Result<Self> {
+    pub fn open(backend: Arc<dyn Backend>, dir: &Path) -> crate::Result<Self> {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
-            anyhow::anyhow!(
+            crate::err!(
                 "no manifest at {} (run `make artifacts`?): {e}",
                 manifest_path.display()
             )
         })?;
         let manifest = Manifest::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", manifest_path.display()))?;
+            .map_err(|e| crate::err!("parsing {}: {e}", manifest_path.display()))?;
         manifest.model.validate()?;
-        anyhow::ensure!(
+        crate::ensure!(
             manifest.model.n_params() == manifest.n_params,
             "param-count mismatch: rust ModelConfig computes {}, manifest \
              says {} — config structs have drifted",
             manifest.model.n_params(),
             manifest.n_params
         );
-        anyhow::ensure!(
+        crate::ensure!(
             !manifest.params.is_empty(),
             "manifest has an empty param list"
         );
-        Ok(Self { dir: dir.to_path_buf(), manifest, engine })
+        Ok(Self {
+            dir: Some(dir.to_path_buf()),
+            manifest,
+            backend,
+            init: None,
+        })
     }
 
-    pub fn engine(&self) -> &Arc<Engine> {
-        &self.engine
+    /// Build an artifact-free in-memory bundle with seeded init params.
+    pub fn synthetic(
+        backend: Arc<dyn Backend>,
+        name: &str,
+        model: &ModelConfig,
+        train: &TrainConfig,
+        spec: &SyntheticSpec,
+    ) -> crate::Result<Self> {
+        let manifest = Manifest::synthesize(name, model, train, spec)?;
+        let init: HashMap<String, Tensor> =
+            super::native::init_params(model, spec.seed).into_iter().collect();
+        Ok(Self { dir: None, manifest, backend, init: Some(init) })
     }
 
-    fn load(&self, file: &str) -> crate::Result<Arc<Executable>> {
-        self.engine.load_hlo(&self.dir.join(file))
+    /// Convenience: a synthetic bundle on the native backend.
+    pub fn native(
+        name: &str,
+        model: &ModelConfig,
+        train: &TrainConfig,
+        spec: &SyntheticSpec,
+    ) -> crate::Result<Self> {
+        Bundle::synthetic(
+            Arc::new(super::native::NativeBackend::new()),
+            name,
+            model,
+            train,
+            spec,
+        )
+    }
+
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+
+    /// Whether this bundle was synthesized in memory (no artifact files).
+    pub fn is_synthetic(&self) -> bool {
+        self.init.is_some()
+    }
+
+    fn load(&self, key: ExecKey) -> crate::Result<Arc<dyn Executable>> {
+        self.backend.load(&self.manifest, self.dir.as_deref(), &key)
     }
 
     // ---- training-side executables ----
 
-    pub fn train_step(&self) -> crate::Result<Arc<Executable>> {
-        self.load(self.manifest.artifact_file("train_step")?)
+    pub fn train_step(&self) -> crate::Result<Arc<dyn Executable>> {
+        self.load(ExecKey::TrainStep)
     }
 
     /// `mode` is one of "topk" | "router" | "predictor".
-    pub fn eval_step(&self, mode: &str) -> crate::Result<Arc<Executable>> {
-        self.load(self.manifest.artifact_file(&format!("eval_{mode}"))?)
+    pub fn eval_step(&self, mode: &str) -> crate::Result<Arc<dyn Executable>> {
+        self.load(ExecKey::EvalStep(mode.to_string()))
     }
 
     // ---- decode-side executables ----
 
-    pub fn embed_step(&self, batch: usize) -> crate::Result<Arc<Executable>> {
-        self.load(self.manifest.decode_file(&format!("embed_B{batch}"))?)
+    pub fn embed_step(&self, batch: usize) -> crate::Result<Arc<dyn Executable>> {
+        self.load(ExecKey::Embed { batch })
     }
 
-    pub fn logits_head(&self, batch: usize) -> crate::Result<Arc<Executable>> {
-        self.load(self.manifest.decode_file(&format!("logits_B{batch}"))?)
+    pub fn logits_head(&self, batch: usize) -> crate::Result<Arc<dyn Executable>> {
+        self.load(ExecKey::Logits { batch })
     }
 
-    pub fn router_score(&self, batch: usize) -> crate::Result<Arc<Executable>> {
-        self.load(self.manifest.decode_file(&format!("router_B{batch}"))?)
+    pub fn router_score(&self, batch: usize) -> crate::Result<Arc<dyn Executable>> {
+        self.load(ExecKey::RouterScore { batch })
     }
 
-    pub fn predictor(&self, batch: usize) -> crate::Result<Arc<Executable>> {
-        self.load(self.manifest.decode_file(&format!("predictor_B{batch}"))?)
+    pub fn predictor(&self, batch: usize) -> crate::Result<Arc<dyn Executable>> {
+        self.load(ExecKey::Predictor { batch })
     }
 
     pub fn block_decode(
         &self,
         batch: usize,
         cache_len: usize,
-    ) -> crate::Result<Arc<Executable>> {
-        self.load(self.manifest.decode_file(&format!("block_B{batch}_L{cache_len}"))?)
+    ) -> crate::Result<Arc<dyn Executable>> {
+        self.load(ExecKey::BlockDecode { batch, cache_len })
     }
 
     // ---- parameters ----
 
     /// Load the seeded initial parameters, in manifest (ABI) order.
     pub fn init_params(&self) -> crate::Result<Vec<Tensor>> {
-        let by_name =
-            crate::coordinator::checkpoint::load(&self.dir.join("init.ckpt"))?;
+        let by_name = match &self.init {
+            Some(map) => map.clone(),
+            None => {
+                let dir = self.dir.as_ref().ok_or_else(|| {
+                    crate::err!("bundle has neither init params nor a directory")
+                })?;
+                crate::coordinator::checkpoint::load(&dir.join("init.ckpt"))?
+            }
+        };
         self.order_params(by_name)
     }
 
@@ -240,9 +387,9 @@ impl Bundle {
         let mut out = Vec::with_capacity(self.manifest.params.len());
         for spec in &self.manifest.params {
             let t = by_name.remove(&spec.name).ok_or_else(|| {
-                anyhow::anyhow!("checkpoint missing tensor {:?}", spec.name)
+                crate::err!("checkpoint missing tensor {:?}", spec.name)
             })?;
-            anyhow::ensure!(
+            crate::ensure!(
                 t.shape() == spec.shape.as_slice(),
                 "tensor {:?}: checkpoint shape {:?} != manifest {:?}",
                 spec.name, t.shape(), spec.shape
@@ -268,7 +415,7 @@ impl Bundle {
             .params
             .iter()
             .position(|s| s.name == name)
-            .ok_or_else(|| anyhow::anyhow!("no parameter named {name:?}"))
+            .ok_or_else(|| crate::err!("no parameter named {name:?}"))
     }
 
     /// The tensors of one layer, keyed by unprefixed name.
@@ -287,9 +434,50 @@ impl Bundle {
     }
 }
 
+/// Open `artifacts_dir/name` if it has a manifest; otherwise, if `name` is
+/// a known preset, synthesize an in-memory bundle for it on the default
+/// backend. This is what lets the CLI and examples run with zero
+/// artifacts.
+pub fn open_bundle(artifacts_dir: &Path, name: &str) -> crate::Result<Arc<Bundle>> {
+    let backend = default_backend()?;
+    let dir = artifacts_dir.join(name);
+    if dir.join("manifest.json").exists() {
+        return Ok(Arc::new(Bundle::open(backend, &dir)?));
+    }
+    match crate::config::preset(name) {
+        Ok(cfg) => {
+            // synthetic bundles are executable only on the native backend
+            // (no artifact files exist for PJRT to compile)
+            eprintln!(
+                "[bundle] no artifacts at {}; synthesizing preset {name} on \
+                 the native backend",
+                dir.display()
+            );
+            Ok(Arc::new(Bundle::native(
+                name,
+                &cfg.model,
+                &cfg.train,
+                &SyntheticSpec {
+                    decode_batches: cfg.serve.decode_batches.clone(),
+                    max_decode_len: cfg.serve.max_decode_len,
+                    cache_slack: cfg.serve.cache_slack,
+                    ..Default::default()
+                },
+            )?))
+        }
+        Err(_) => crate::bail!(
+            "no bundle at {} and {name:?} is not a preset (known presets: \
+             {:?})",
+            dir.display(),
+            crate::config::preset_names()
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::RoutingMode;
 
     const MANIFEST: &str = r#"{
       "fingerprint":"abc","seed":0,"decode_batches":[1,4],
@@ -324,5 +512,65 @@ mod tests {
         assert_eq!(m.decode_file("embed_B1").unwrap(), "embed_step_B1.hlo.txt");
         assert!(m.artifact_file("nonexistent").is_err());
         assert!(m.cache_len(9).is_err());
+    }
+
+    #[test]
+    fn synthesized_manifest_is_consistent() {
+        let model = ModelConfig {
+            routing: RoutingMode::ModInterleaved,
+            ..Default::default()
+        };
+        let m = Manifest::synthesize(
+            "syn",
+            &model,
+            &TrainConfig::default(),
+            &SyntheticSpec { max_decode_len: 64, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(m.n_params, model.n_params());
+        assert_eq!(m.routed_layers, vec![1, 3]);
+        assert_eq!(m.max_decode_len, 64);
+        assert_eq!(m.metrics.len(), 8);
+        // compacted caches on routed layers, full elsewhere
+        assert_eq!(m.cache_len(0).unwrap(), 64);
+        assert_eq!(m.cache_len(1).unwrap(), 12); // ceil(0.125*64*1.5)
+        // synthetic bundles have no artifact files
+        assert!(m.artifact_file("train_step").is_err());
+    }
+
+    #[test]
+    fn synthetic_bundle_orders_init_params() {
+        let model = ModelConfig {
+            vocab_size: 31,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 8,
+            d_ff: 32,
+            seq_len: 16,
+            routing: RoutingMode::ModInterleaved,
+            predictor_hidden: 8,
+            ..Default::default()
+        };
+        let bundle = Bundle::native(
+            "t",
+            &model,
+            &TrainConfig::default(),
+            &SyntheticSpec::default(),
+        )
+        .unwrap();
+        assert!(bundle.is_synthetic());
+        let params = bundle.init_params().unwrap();
+        assert_eq!(params.len(), bundle.manifest.params.len());
+        for (t, spec) in params.iter().zip(&bundle.manifest.params) {
+            assert_eq!(t.shape(), spec.shape.as_slice(), "{}", spec.name);
+        }
+        // ABI index helpers work against the synthesized manifest
+        assert_eq!(bundle.param_index("embed").unwrap(), 0);
+        let l1 = bundle.layer_param_indices(1);
+        assert!(l1.contains_key("router_w"));
+        assert!(l1.contains_key("pred.w1"));
+        let l0 = bundle.layer_param_indices(0);
+        assert!(!l0.contains_key("router_w"));
     }
 }

@@ -1,4 +1,16 @@
-//! PJRT client wrapper + compiled executable handles.
+//! PJRT backend (feature `pjrt`): load AOT HLO-text artifacts, compile
+//! once, execute through the PJRT C API via the external `xla` crate.
+//!
+//! * [`Engine`] — process-wide PJRT client + executable cache.
+//! * [`PjrtExecutable`] — one compiled HLO module.
+//! * [`PjrtBackend`] — [`Backend`] impl mapping [`ExecKey`]s to the
+//!   bundle's artifact files (the manifest is the ABI contract).
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that this XLA build
+//! rejects; the text parser reassigns ids (see DESIGN.md / aot.py).
+
+#![cfg(feature = "pjrt")]
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -7,6 +19,8 @@ use std::time::Instant;
 
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use super::backend::{Backend, ExecKey, Executable, Value};
+use super::bundle::Manifest;
 use super::tensor::Tensor;
 
 /// Process-wide PJRT engine: one CPU client + a compile cache keyed by
@@ -14,13 +28,14 @@ use super::tensor::Tensor;
 /// bundle twice must not recompile).
 pub struct Engine {
     client: PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+    cache: Mutex<HashMap<PathBuf, Arc<PjrtExecutable>>>,
 }
 
 impl Engine {
     /// Create a CPU PJRT engine.
     pub fn cpu() -> crate::Result<Self> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let client =
+            PjRtClient::cpu().map_err(|e| crate::err!("pjrt cpu: {e:?}"))?;
         Ok(Self { client, cache: Mutex::new(HashMap::new()) })
     }
 
@@ -29,22 +44,22 @@ impl Engine {
     }
 
     /// Load + compile an HLO-text artifact (cached by canonical path).
-    pub fn load_hlo(&self, path: &Path) -> crate::Result<Arc<Executable>> {
+    pub fn load_hlo(&self, path: &Path) -> crate::Result<Arc<PjrtExecutable>> {
         let key = path
             .canonicalize()
-            .map_err(|e| anyhow::anyhow!("artifact {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("artifact {}: {e}", path.display()))?;
         if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());
         }
         let t0 = Instant::now();
         let proto = HloModuleProto::from_text_file(&key)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", key.display()))?;
+            .map_err(|e| crate::err!("parsing {}: {e:?}", key.display()))?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", key.display()))?;
-        let exe = Arc::new(Executable {
+            .map_err(|e| crate::err!("compiling {}: {e:?}", key.display()))?;
+        let exe = Arc::new(PjrtExecutable {
             exe,
             name: key
                 .file_stem()
@@ -63,7 +78,7 @@ impl Engine {
 }
 
 /// One compiled HLO module.
-pub struct Executable {
+pub struct PjrtExecutable {
     exe: PjRtLoadedExecutable,
     name: String,
     compile_time: std::time::Duration,
@@ -76,36 +91,20 @@ pub struct Executable {
 // time per call site (the serving worker owns its sessions; the trainer is
 // single-threaded). Concurrent `execute` calls on the CPU client are
 // serialized by XLA's own intra-client locking.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
+unsafe impl Send for PjrtExecutable {}
+unsafe impl Sync for PjrtExecutable {}
 unsafe impl Send for Engine {}
 unsafe impl Sync for Engine {}
 
-impl Executable {
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
+impl PjrtExecutable {
     pub fn compile_time(&self) -> std::time::Duration {
         self.compile_time
     }
 
-    /// Execute with host tensors; returns the flattened output tuple.
+    /// Execute at the literal level.
     ///
     /// All AOT artifacts are lowered with `return_tuple=True`, so the
     /// result is a single tuple literal we decompose into leaves.
-    pub fn run(&self, args: &[Tensor]) -> crate::Result<Vec<Tensor>> {
-        let literals: Vec<Literal> = args
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<crate::Result<_>>()?;
-        let outs = self.run_literals(&literals)?;
-        outs.iter().map(Tensor::from_literal).collect()
-    }
-
-    /// Execute at the literal level (hot path: callers keep reusable
-    /// literals and avoid Tensor conversions). Accepts owned or borrowed
-    /// literals.
     pub fn run_literals<L: std::borrow::Borrow<Literal>>(
         &self,
         args: &[L],
@@ -113,12 +112,102 @@ impl Executable {
         let result = self
             .exe
             .execute::<L>(args)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+            .map_err(|e| crate::err!("executing {}: {e:?}", self.name))?;
         let mut tuple = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {} output: {e:?}", self.name))?;
+            .map_err(|e| crate::err!("fetching {} output: {e:?}", self.name))?;
         tuple
             .decompose_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {} output: {e:?}", self.name))
+            .map_err(|e| crate::err!("untupling {} output: {e:?}", self.name))
+    }
+}
+
+impl Executable for PjrtExecutable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Value]) -> crate::Result<Vec<Value>> {
+        // borrow existing literals; upload host tensors on the fly
+        let mut owned: Vec<Arc<Literal>> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Value::Literal(l) => owned.push(l.clone()),
+                Value::Host(t) => owned.push(Arc::new(t.to_literal()?)),
+            }
+        }
+        let borrowed: Vec<&Literal> =
+            owned.iter().map(|l| l.as_ref()).collect();
+        let outs = self.run_literals(&borrowed)?;
+        Ok(outs
+            .into_iter()
+            .map(|l| Value::Literal(Arc::new(l)))
+            .collect())
+    }
+}
+
+/// [`Backend`] over a shared PJRT [`Engine`].
+pub struct PjrtBackend {
+    engine: Arc<Engine>,
+}
+
+impl PjrtBackend {
+    pub fn cpu() -> crate::Result<Self> {
+        Ok(Self { engine: Arc::new(Engine::cpu()?) })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        format!("pjrt-{}", self.engine.platform())
+    }
+
+    fn load(
+        &self,
+        manifest: &Manifest,
+        dir: Option<&Path>,
+        key: &ExecKey,
+    ) -> crate::Result<Arc<dyn Executable>> {
+        let dir = dir.ok_or_else(|| {
+            crate::err!(
+                "pjrt backend needs an artifact directory for {} (synthetic \
+                 bundles are native-only)",
+                key.label()
+            )
+        })?;
+        let file = match key {
+            ExecKey::TrainStep => manifest.artifact_file("train_step")?.to_string(),
+            ExecKey::EvalStep(mode) => {
+                manifest.artifact_file(&format!("eval_{mode}"))?.to_string()
+            }
+            ExecKey::Embed { batch } => {
+                manifest.decode_file(&format!("embed_B{batch}"))?.to_string()
+            }
+            ExecKey::Logits { batch } => {
+                manifest.decode_file(&format!("logits_B{batch}"))?.to_string()
+            }
+            ExecKey::RouterScore { batch } => {
+                manifest.decode_file(&format!("router_B{batch}"))?.to_string()
+            }
+            ExecKey::Predictor { batch } => manifest
+                .decode_file(&format!("predictor_B{batch}"))?
+                .to_string(),
+            ExecKey::BlockDecode { batch, cache_len } => manifest
+                .decode_file(&format!("block_B{batch}_L{cache_len}"))?
+                .to_string(),
+        };
+        Ok(self.engine.load_hlo(&dir.join(file))?)
+    }
+
+    fn upload(&self, t: &Tensor) -> crate::Result<Value> {
+        Ok(Value::Literal(Arc::new(t.to_literal()?)))
+    }
+
+    fn download(&self, v: &Value) -> crate::Result<Tensor> {
+        v.to_tensor()
     }
 }

@@ -1,25 +1,35 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute.
+//! Model-execution runtime: the [`Backend`] trait and its two
+//! implementations.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin) behind a small typed
-//! surface the coordinator uses:
+//! * [`native`] — pure-Rust CPU interpreter (the default): tensor ops,
+//!   embedding, multi-head causal attention with the compacted MoD KV
+//!   cache, GELU MLP, router/predictor scoring, expert-choice top-k, a
+//!   full train step (forward + backward + AdamW), and the layer-sliced
+//!   decode executables. Needs no artifacts, no Python, no network.
+//! * `client` (feature `pjrt`) — loads AOT HLO-text artifacts through the
+//!   PJRT C API via the external `xla` crate; the fidelity path that runs
+//!   the exact graphs Python lowered.
 //!
-//! * [`Engine`] — process-wide PJRT client + executable cache.
-//! * [`Executable`] — one compiled HLO module; `run` takes/returns
-//!   [`Tensor`]s (host), `run_literals` stays at the `xla::Literal` level
-//!   for hot paths that thread state through repeatedly.
-//! * [`Bundle`] — a parsed artifact directory (manifest + lazily compiled
-//!   executables + initial checkpoint).
-//!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
-//! serialized protos carry 64-bit instruction ids that this XLA build
-//! rejects; the text parser reassigns ids (see DESIGN.md / aot.py).
+//! The coordinator talks only to [`Backend`] / [`Executable`] / [`Value`]
+//! and [`Bundle`]; backends are interchangeable per call site.
 
-mod bundle;
-mod client;
+pub mod backend;
+pub mod bundle;
+pub mod native;
 mod tensor;
 
-pub use bundle::{Bundle, Manifest, ParamSpec};
-pub use client::{Engine, Executable};
+#[cfg(feature = "pjrt")]
+pub mod client;
+
+pub use backend::{default_backend, Backend, ExecKey, Executable, Value};
+pub use bundle::{
+    open_bundle, Bundle, Manifest, ParamSpec, SyntheticSpec, EVAL_METRIC_NAMES,
+    METRIC_NAMES,
+};
+pub use native::NativeBackend;
 pub use tensor::Tensor;
+
+#[cfg(feature = "pjrt")]
+pub use client::{Engine, PjrtBackend, PjrtExecutable};
 
 pub(crate) use tensor::dtype_code as tensor_dtype_code;

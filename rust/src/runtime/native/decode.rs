@@ -1,0 +1,277 @@
+//! Native single-token decode executables (the layer-sliced serving ABI).
+//!
+//! Mirrors `python/compile/sampling.py`: `embed_step`, `logits_head`,
+//! `router_score_step`, `predictor_step`, and `block_decode` over a
+//! compacted `cache_len`-slot KV cache with explicit per-slot original
+//! positions + validity. The coordinator (serve::session) decides
+//! participation and slot allocation; a fully-skipped block is never
+//! invoked at all.
+//!
+//! One deliberate divergence from the lowered HLO: rows with
+//! `participate == 0` leave their cache *fully* untouched here (the HLO
+//! writes a `valid = 0` marker at slot 0 for such rows, clobbering a live
+//! slot in mixed batches). Not-written is the semantics the paper's drop
+//! rule describes, and it keeps batched rows exactly independent.
+
+use crate::config::ModelConfig;
+use crate::runtime::backend::{f32_arg, i32_arg, Executable, Value};
+use crate::runtime::tensor::Tensor;
+
+use super::ops;
+
+/// `(tokens i32[B], embed f32[V,D]) -> (h f32[B,D],)`
+pub struct NativeEmbed {
+    pub(super) cfg: ModelConfig,
+    pub(super) name: String,
+}
+
+impl Executable for NativeEmbed {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Value]) -> crate::Result<Vec<Value>> {
+        let tokens = i32_arg(args, 0, "tokens")?;
+        let embed = f32_arg(args, 1, "embed")?;
+        let d = self.cfg.d_model;
+        let v = self.cfg.vocab_size;
+        crate::ensure!(embed.len() == v * d, "embed shape mismatch");
+        let sqrt_d = (d as f32).sqrt();
+        let b = tokens.len();
+        let mut h = vec![0f32; b * d];
+        for (r, &t) in tokens.iter().enumerate() {
+            crate::ensure!(t >= 0 && (t as usize) < v, "token {t} out of vocab");
+            let e = &embed[t as usize * d..(t as usize + 1) * d];
+            for j in 0..d {
+                h[r * d + j] = e[j] * sqrt_d;
+            }
+        }
+        Ok(vec![Tensor::f32(vec![b, d], h).into()])
+    }
+}
+
+/// `(h f32[B,D], final_norm f32[D], embed f32[V,D]) -> (logits f32[B,V],)`
+pub struct NativeLogits {
+    pub(super) cfg: ModelConfig,
+    pub(super) name: String,
+}
+
+impl Executable for NativeLogits {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Value]) -> crate::Result<Vec<Value>> {
+        let h = f32_arg(args, 0, "h")?;
+        let final_norm = f32_arg(args, 1, "final_norm")?;
+        let embed = f32_arg(args, 2, "embed")?;
+        let d = self.cfg.d_model;
+        let v = self.cfg.vocab_size;
+        crate::ensure!(h.len() % d == 0, "h shape mismatch");
+        let b = h.len() / d;
+        let (xn, _) = ops::rmsnorm(h, final_norm, b, d);
+        let logits = ops::matmul_nt(&xn, embed, b, d, v);
+        Ok(vec![Tensor::f32(vec![b, v], logits).into()])
+    }
+}
+
+/// `(h f32[B,D], router_w f32[D]) -> (scores f32[B],)`
+pub struct NativeRouterScore {
+    pub(super) cfg: ModelConfig,
+    pub(super) name: String,
+}
+
+impl Executable for NativeRouterScore {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Value]) -> crate::Result<Vec<Value>> {
+        let h = f32_arg(args, 0, "h")?;
+        let w = f32_arg(args, 1, "router_w")?;
+        let d = self.cfg.d_model;
+        crate::ensure!(w.len() == d && h.len() % d == 0, "shape mismatch");
+        let b = h.len() / d;
+        let scores = ops::router_scores(h, w, b, d);
+        Ok(vec![Tensor::f32(vec![b], scores).into()])
+    }
+}
+
+/// `(h, pred.w1 [D,H], pred.b1 [H], pred.w2 [H]) -> (logits f32[B],)`
+pub struct NativePredictor {
+    pub(super) cfg: ModelConfig,
+    pub(super) name: String,
+}
+
+impl Executable for NativePredictor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Value]) -> crate::Result<Vec<Value>> {
+        let h = f32_arg(args, 0, "h")?;
+        let w1 = f32_arg(args, 1, "pred.w1")?;
+        let b1 = f32_arg(args, 2, "pred.b1")?;
+        let w2 = f32_arg(args, 3, "pred.w2")?;
+        let d = self.cfg.d_model;
+        let hp = b1.len();
+        crate::ensure!(
+            w1.len() == d * hp && w2.len() == hp && h.len() % d == 0,
+            "predictor shape mismatch"
+        );
+        let b = h.len() / d;
+        let out = ops::predictor_logits(h, w1, b1, w2, b, d);
+        Ok(vec![Tensor::f32(vec![b], out).into()])
+    }
+}
+
+/// Single-token block step over a compacted KV cache; see module docs and
+/// `sampling.block_decode_fn` for the ABI:
+///
+/// `(h f32[B,D], pos i32[B], gate f32[B], participate f32[B], slot i32[B],
+///   cache_k f32[B,L,KD], cache_v f32[B,L,KD], cache_pos i32[B,L],
+///   cache_valid f32[B,L], attn_norm, wq, wk, wv, wo, mlp_norm, w1, w2)`
+/// `-> (h' f32[B,D], cache_k', cache_v', cache_pos', cache_valid')`
+pub struct NativeBlockDecode {
+    pub(super) cfg: ModelConfig,
+    pub(super) cache_len: usize,
+    /// RoPE frequencies, precomputed once (hot path: one call per token
+    /// per invoked block).
+    pub(super) freqs: Vec<f32>,
+    pub(super) name: String,
+}
+
+impl Executable for NativeBlockDecode {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Value]) -> crate::Result<Vec<Value>> {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let heads = cfg.n_heads;
+        let dh = cfg.d_head;
+        let kd = heads * dh;
+        let f = cfg.d_ff;
+        let cl = self.cache_len;
+
+        let h = f32_arg(args, 0, "h")?;
+        let pos = i32_arg(args, 1, "pos")?;
+        let gate = f32_arg(args, 2, "gate")?;
+        let part = f32_arg(args, 3, "participate")?;
+        let slot = i32_arg(args, 4, "slot")?;
+        let b = pos.len();
+        crate::ensure!(
+            h.len() == b * d && gate.len() == b && part.len() == b
+                && slot.len() == b,
+            "block {}: bad step-input shapes",
+            self.name
+        );
+        let mut cache_k = f32_arg(args, 5, "cache_k")?.to_vec();
+        let mut cache_v = f32_arg(args, 6, "cache_v")?.to_vec();
+        let mut cache_pos = i32_arg(args, 7, "cache_pos")?.to_vec();
+        let mut cache_valid = f32_arg(args, 8, "cache_valid")?.to_vec();
+        crate::ensure!(
+            cache_k.len() == b * cl * kd && cache_v.len() == b * cl * kd
+                && cache_pos.len() == b * cl && cache_valid.len() == b * cl,
+            "block {}: bad cache shapes",
+            self.name
+        );
+        let attn_norm = f32_arg(args, 9, "attn_norm")?;
+        let wq = f32_arg(args, 10, "wq")?;
+        let wk = f32_arg(args, 11, "wk")?;
+        let wv = f32_arg(args, 12, "wv")?;
+        let wo = f32_arg(args, 13, "wo")?;
+        let mlp_norm = f32_arg(args, 14, "mlp_norm")?;
+        let w1 = f32_arg(args, 15, "w1")?;
+        let w2 = f32_arg(args, 16, "w2")?;
+
+        let freqs = &self.freqs;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut h_out = h.to_vec();
+
+        for r in 0..b {
+            if part[r] <= 0.5 {
+                continue; // skipped row: h and cache fully untouched
+            }
+            let hr = &h[r * d..(r + 1) * d];
+            let (xn, _) = ops::rmsnorm(hr, attn_norm, 1, d);
+            let mut q = ops::matmul(&xn, wq, 1, d, kd);
+            let mut k = ops::matmul(&xn, wk, 1, d, kd);
+            let v = ops::matmul(&xn, wv, 1, d, kd);
+            let p = [pos[r]];
+            ops::rope(&mut q, &p, 1, heads, dh, freqs, 1.0);
+            ops::rope(&mut k, &p, 1, heads, dh, freqs, 1.0);
+
+            // write this token's K/V into its slot
+            let sl = slot[r] as usize;
+            crate::ensure!(sl < cl, "slot {sl} out of cache {cl}");
+            cache_k[(r * cl + sl) * kd..(r * cl + sl + 1) * kd]
+                .copy_from_slice(&k);
+            cache_v[(r * cl + sl) * kd..(r * cl + sl + 1) * kd]
+                .copy_from_slice(&v);
+            cache_pos[r * cl + sl] = pos[r];
+            cache_valid[r * cl + sl] = 1.0;
+
+            // attend over valid slots with pos <= current pos
+            let mut att = vec![0f32; kd];
+            let mut logits = vec![0f32; cl];
+            for hd in 0..heads {
+                let qh = &q[hd * dh..(hd + 1) * dh];
+                for li in 0..cl {
+                    let ok = cache_valid[r * cl + li] > 0.5
+                        && cache_pos[r * cl + li] <= pos[r];
+                    logits[li] = if ok {
+                        let kh = &cache_k
+                            [(r * cl + li) * kd + hd * dh..(r * cl + li) * kd + (hd + 1) * dh];
+                        let mut acc = 0f32;
+                        for j in 0..dh {
+                            acc += qh[j] * kh[j];
+                        }
+                        acc * scale
+                    } else {
+                        ops::NEG_INF
+                    };
+                }
+                ops::softmax_inplace(&mut logits);
+                let out = &mut att[hd * dh..(hd + 1) * dh];
+                for li in 0..cl {
+                    let pw = logits[li];
+                    if pw == 0.0 {
+                        continue;
+                    }
+                    let vh = &cache_v
+                        [(r * cl + li) * kd + hd * dh..(r * cl + li) * kd + (hd + 1) * dh];
+                    for j in 0..dh {
+                        out[j] += pw * vh[j];
+                    }
+                }
+            }
+            let attn = ops::matmul(&att, wo, 1, kd, d);
+
+            // h_mid = h + attn; mlp over h_mid; delta = attn + mlp
+            let mut h_mid = vec![0f32; d];
+            for j in 0..d {
+                h_mid[j] = hr[j] + attn[j];
+            }
+            let (xn2, _) = ops::rmsnorm(&h_mid, mlp_norm, 1, d);
+            let u = ops::matmul(&xn2, w1, 1, d, f);
+            let g: Vec<f32> = u.iter().map(|&x| ops::gelu(x)).collect();
+            let mlp = ops::matmul(&g, w2, 1, f, d);
+
+            let gp = gate[r]; // participate[r] == 1 here
+            let or = &mut h_out[r * d..(r + 1) * d];
+            for j in 0..d {
+                or[j] = hr[j] + gp * (attn[j] + mlp[j]);
+            }
+        }
+
+        Ok(vec![
+            Tensor::f32(vec![b, d], h_out).into(),
+            Tensor::f32(vec![b, cl, kd], cache_k).into(),
+            Tensor::f32(vec![b, cl, kd], cache_v).into(),
+            Tensor::i32(vec![b, cl], cache_pos).into(),
+            Tensor::f32(vec![b, cl], cache_valid).into(),
+        ])
+    }
+}

@@ -1,0 +1,413 @@
+//! Teacher-forced sequence forward pass for the native backend.
+//!
+//! Implements the L2 model semantics (`python/compile/model.py::forward`)
+//! in the *masked* MoD form: a routed block computes under a key-validity
+//! mask and its gated delta is added only at participating positions —
+//! mathematically identical to the compact gather→block→scatter path of
+//! paper Eq. (1) (the compacted sub-sequence sees exactly the same keys
+//! and produces exactly the same per-token outputs), while keeping the
+//! interpreter simple. FLOP *savings* are a property of the compiled
+//! backends and the decode runtime; FLOP *accounting* stays analytic in
+//! [`crate::flops`].
+//!
+//! Every intermediate the backward pass needs is cached in [`Forward`];
+//! `native::train` consumes it.
+
+use crate::config::{ModelConfig, RoutingMode};
+use crate::data::rng::Pcg32;
+
+use super::ops;
+use super::ParamTable;
+
+/// How participation masks are derived (mirrors python `routing_mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteMode {
+    /// Training-time expert-choice top-k over router scores (non-causal).
+    Topk,
+    /// Causal: participate where `score > 0` (sigmoid > 0.5).
+    Router,
+    /// Causal: participate where `predictor logit > 0`.
+    Predictor,
+}
+
+impl RouteMode {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "topk" => Self::Topk,
+            "router" => Self::Router,
+            "predictor" => Self::Predictor,
+            other => crate::bail!("unknown routing mode {other:?}"),
+        })
+    }
+}
+
+/// Cached per-layer activations.
+pub struct LayerFwd {
+    pub routed: bool,
+    /// Router scores `[b*s]` (empty for unrouted layers).
+    pub scores: Vec<f32>,
+    /// Participation mask `[b*s]` in {0,1} (all-ones for unrouted layers).
+    pub mask: Vec<f32>,
+    /// Gate applied to the block delta (raw scores for routed layers,
+    /// 1.0 for unrouted layers).
+    pub gates: Vec<f32>,
+    /// Whether gates are a function of the router params (false for the
+    /// stochastic control and unrouted layers).
+    pub score_grad: bool,
+    pub pred_logits: Vec<f32>,
+    pub pred_hidden: Vec<f32>,
+    pub x_in: Vec<f32>,
+    pub xn1: Vec<f32>,
+    pub inv1: Vec<f32>,
+    /// Post-RoPE projections `[b*s, kd]` (head-major within a row).
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Attention probabilities `[b, heads, s, s]`.
+    pub probs: Vec<f32>,
+    /// Attention head outputs pre-`wo` `[b*s, kd]`.
+    pub att: Vec<f32>,
+    /// Attention output post-`wo` `[b*s, d]`.
+    pub attn_out: Vec<f32>,
+    pub h_mid: Vec<f32>,
+    pub xn2: Vec<f32>,
+    pub inv2: Vec<f32>,
+    /// Pre-GELU MLP activations `[b*s, d_ff]`.
+    pub u: Vec<f32>,
+    pub g: Vec<f32>,
+    pub mlp: Vec<f32>,
+}
+
+/// A completed forward pass with everything the backward needs.
+pub struct Forward {
+    pub b: usize,
+    pub s: usize,
+    pub layers: Vec<LayerFwd>,
+    pub x_final: Vec<f32>,
+    pub xn_final: Vec<f32>,
+    pub inv_final: Vec<f32>,
+    /// `[b*s, vocab]`.
+    pub logits: Vec<f32>,
+}
+
+/// Run the model over `tokens [b, s]`. `seed` feeds the stochastic-routing
+/// control only.
+pub fn forward(
+    cfg: &ModelConfig,
+    params: &ParamTable<'_>,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    mode: RouteMode,
+    seed: i32,
+) -> crate::Result<Forward> {
+    crate::ensure!(
+        matches!(cfg.ff_mode, crate::config::FfMode::Dense),
+        "native backend supports dense feedforward only (ff_mode {:?})",
+        cfg.ff_mode
+    );
+    crate::ensure!(tokens.len() == b * s, "tokens len != b*s");
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let dh = cfg.d_head;
+    let kd = heads * dh;
+    let f = cfg.d_ff;
+    let v = cfg.vocab_size;
+    let rows = b * s;
+    let embed = params.get("embed")?;
+    crate::ensure!(embed.len() == v * d, "embed shape mismatch");
+
+    // --- embedding (scaled by sqrt(D), tied-embedding convention) ---
+    let sqrt_d = (d as f32).sqrt();
+    let mut x = vec![0f32; rows * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        crate::ensure!(
+            t >= 0 && (t as usize) < v,
+            "token {t} out of vocab {v}"
+        );
+        let e = &embed[t as usize * d..(t as usize + 1) * d];
+        let xr = &mut x[r * d..(r + 1) * d];
+        for j in 0..d {
+            xr[j] = e[j] * sqrt_d;
+        }
+    }
+    let positions: Vec<i32> = (0..rows).map(|r| (r % s) as i32).collect();
+    let freqs = ops::rope_freqs(dh, cfg.rope_theta);
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let routed = cfg.is_routed_block(l);
+        let x_in = x.clone();
+
+        // --- routing decision (mask + gates) ---
+        let (scores, mask, gates, score_grad, pred_logits, pred_hidden) = if routed {
+            let (scores, score_grad) = if cfg.routing == RoutingMode::Stochastic {
+                let mut rng = Pcg32::new(seed as u32 as u64, 0x5707 + l as u64);
+                let sc: Vec<f32> =
+                    (0..rows).map(|_| rng.next_normal() as f32).collect();
+                (sc, false)
+            } else {
+                let w = params.layer(l, "router_w")?;
+                (ops::router_scores(&x, w, rows, d), true)
+            };
+            let (pred_logits, pred_hidden) =
+                if cfg.train_predictor && params.has_layer(l, "pred.w1") {
+                    let w1 = params.layer(l, "pred.w1")?;
+                    let b1 = params.layer(l, "pred.b1")?;
+                    let w2 = params.layer(l, "pred.w2")?;
+                    ops::predictor_forward(&x, w1, b1, w2, rows, d)
+                } else {
+                    (Vec::new(), Vec::new())
+                };
+            let mask = match mode {
+                RouteMode::Topk => {
+                    ops::topk_mask(&scores, b, s, cfg.capacity(s))
+                }
+                RouteMode::Router => scores
+                    .iter()
+                    .map(|&sc| if sc > 0.0 { 1.0 } else { 0.0 })
+                    .collect(),
+                RouteMode::Predictor => {
+                    crate::ensure!(
+                        !pred_logits.is_empty(),
+                        "predictor routing requested but layer {l} has no \
+                         predictor params"
+                    );
+                    pred_logits
+                        .iter()
+                        .map(|&p| if p > 0.0 { 1.0 } else { 0.0 })
+                        .collect()
+                }
+            };
+            let gates = scores.clone();
+            (scores, mask, gates, score_grad, pred_logits, pred_hidden)
+        } else {
+            (
+                Vec::new(),
+                vec![1f32; rows],
+                vec![1f32; rows],
+                false,
+                Vec::new(),
+                Vec::new(),
+            )
+        };
+
+        // --- attention ---
+        let attn_norm = params.layer(l, "attn_norm")?;
+        let (xn1, inv1) = ops::rmsnorm(&x, attn_norm, rows, d);
+        let wq = params.layer(l, "wq")?;
+        let wk = params.layer(l, "wk")?;
+        let wv = params.layer(l, "wv")?;
+        let wo = params.layer(l, "wo")?;
+        let mut q = ops::matmul(&xn1, wq, rows, d, kd);
+        let mut k = ops::matmul(&xn1, wk, rows, d, kd);
+        let v_proj = ops::matmul(&xn1, wv, rows, d, kd);
+        ops::rope(&mut q, &positions, rows, heads, dh, &freqs, 1.0);
+        ops::rope(&mut k, &positions, rows, heads, dh, &freqs, 1.0);
+
+        let mut probs = vec![0f32; b * heads * s * s];
+        let mut att = vec![0f32; rows * kd];
+        let valid: Option<&[f32]> = if routed { Some(&mask) } else { None };
+        for bi in 0..b {
+            for h in 0..heads {
+                for qi in 0..s {
+                    let qr = bi * s + qi;
+                    let qh = &q[qr * kd + h * dh..qr * kd + h * dh + dh];
+                    let prow_base = ((bi * heads + h) * s + qi) * s;
+                    // masked logits
+                    for ki in 0..=qi {
+                        let ok = match valid {
+                            Some(m) => m[bi * s + ki] > 0.5,
+                            None => true,
+                        };
+                        let kr = bi * s + ki;
+                        probs[prow_base + ki] = if ok {
+                            let kh =
+                                &k[kr * kd + h * dh..kr * kd + h * dh + dh];
+                            let mut acc = 0f32;
+                            for j in 0..dh {
+                                acc += qh[j] * kh[j];
+                            }
+                            acc * scale
+                        } else {
+                            ops::NEG_INF
+                        };
+                    }
+                    for ki in (qi + 1)..s {
+                        probs[prow_base + ki] = ops::NEG_INF;
+                    }
+                    ops::softmax_inplace(&mut probs[prow_base..prow_base + s]);
+                    // weighted value sum
+                    let mut out = vec![0f32; dh];
+                    for ki in 0..=qi {
+                        let p = probs[prow_base + ki];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let kr = bi * s + ki;
+                        let vh =
+                            &v_proj[kr * kd + h * dh..kr * kd + h * dh + dh];
+                        for j in 0..dh {
+                            out[j] += p * vh[j];
+                        }
+                    }
+                    att[qr * kd + h * dh..qr * kd + h * dh + dh]
+                        .copy_from_slice(&out);
+                }
+            }
+        }
+        let attn_out = ops::matmul(&att, wo, rows, kd, d);
+
+        // --- residual + MLP ---
+        let mut h_mid = x.clone();
+        for r in 0..rows {
+            let m = mask[r];
+            if m == 0.0 {
+                continue;
+            }
+            let hr = &mut h_mid[r * d..(r + 1) * d];
+            let ar = &attn_out[r * d..(r + 1) * d];
+            for j in 0..d {
+                hr[j] += m * ar[j];
+            }
+        }
+        let mlp_norm = params.layer(l, "mlp_norm")?;
+        let (xn2, inv2) = ops::rmsnorm(&h_mid, mlp_norm, rows, d);
+        let w1 = params.layer(l, "w1")?;
+        let w2 = params.layer(l, "w2")?;
+        let u = ops::matmul(&xn2, w1, rows, d, f);
+        let g: Vec<f32> = u.iter().map(|&uu| ops::gelu(uu)).collect();
+        let mlp = ops::matmul(&g, w2, rows, f, d);
+
+        // --- gated residual: x' = x + mask * gate * (attn_out + mlp) ---
+        let mut x_next = x;
+        for r in 0..rows {
+            let mg = mask[r] * gates[r];
+            if mg == 0.0 {
+                continue;
+            }
+            let xr = &mut x_next[r * d..(r + 1) * d];
+            let ar = &attn_out[r * d..(r + 1) * d];
+            let mr = &mlp[r * d..(r + 1) * d];
+            for j in 0..d {
+                xr[j] += mg * (ar[j] + mr[j]);
+            }
+        }
+
+        layers.push(LayerFwd {
+            routed,
+            scores,
+            mask,
+            gates,
+            score_grad,
+            pred_logits,
+            pred_hidden,
+            x_in,
+            xn1,
+            inv1,
+            q,
+            k,
+            v: v_proj,
+            probs,
+            att,
+            attn_out,
+            h_mid,
+            xn2,
+            inv2,
+            u,
+            g,
+            mlp,
+        });
+        x = x_next;
+    }
+
+    // --- final norm + tied unembedding ---
+    let final_norm = params.get("final_norm")?;
+    let (xn_final, inv_final) = ops::rmsnorm(&x, final_norm, rows, d);
+    let logits = ops::matmul_nt(&xn_final, embed, rows, d, v);
+
+    Ok(Forward {
+        b,
+        s,
+        layers,
+        x_final: x,
+        xn_final,
+        inv_final,
+        logits,
+    })
+}
+
+/// Next-token cross entropy in nats/token (predicts `tokens[:,1:]` from
+/// `logits[:,:-1]`), matching `train.cross_entropy`.
+pub fn cross_entropy(
+    logits: &[f32],
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    v: usize,
+) -> f32 {
+    let mut total = 0f64;
+    for bi in 0..b {
+        for t in 0..s.saturating_sub(1) {
+            let row = &logits[(bi * s + t) * v..(bi * s + t + 1) * v];
+            let tgt = tokens[bi * s + t + 1] as usize;
+            // stable log-softmax
+            let mut max = f32::MIN;
+            for &x in row {
+                if x > max {
+                    max = x;
+                }
+            }
+            let mut sum = 0f64;
+            for &x in row {
+                sum += ((x - max) as f64).exp();
+            }
+            total += sum.ln() + (max as f64) - (row[tgt] as f64);
+        }
+    }
+    (total / (b * s.saturating_sub(1).max(1)) as f64) as f32
+}
+
+/// Evaluation metrics `[ce, pred_acc, router_frac, participation]`
+/// (mirrors `train.eval_step_fn`).
+pub fn eval_metrics(cfg: &ModelConfig, fwd: &Forward, tokens: &[i32]) -> [f32; 4] {
+    let ce = cross_entropy(&fwd.logits, tokens, fwd.b, fwd.s, cfg.vocab_size);
+    let rows = (fwd.b * fwd.s) as f64;
+    let mut part = 0f64;
+    let mut frac = 0f64;
+    let mut pred_acc = 0f64;
+    let mut n_routed = 0usize;
+    let mut n_pred = 0usize;
+    for lf in &fwd.layers {
+        if !lf.routed {
+            continue;
+        }
+        n_routed += 1;
+        part += lf.mask.iter().map(|&m| m as f64).sum::<f64>() / rows;
+        frac += lf
+            .scores
+            .iter()
+            .filter(|&&sc| sc > 0.0)
+            .count() as f64
+            / rows;
+        if !lf.pred_logits.is_empty() {
+            n_pred += 1;
+            pred_acc += lf
+                .pred_logits
+                .iter()
+                .zip(&lf.mask)
+                .filter(|(&p, &m)| (p > 0.0) == (m > 0.5))
+                .count() as f64
+                / rows;
+        }
+    }
+    if n_routed > 0 {
+        part /= n_routed as f64;
+        frac /= n_routed as f64;
+    }
+    if n_pred > 0 {
+        pred_acc /= n_pred as f64;
+    }
+    [ce, pred_acc as f32, frac as f32, part as f32]
+}

@@ -1,0 +1,700 @@
+//! Native pure-Rust CPU backend.
+//!
+//! Interprets the full MoD-transformer ABI — train step, eval step, and
+//! the layer-sliced decode executables — directly from a bundle's
+//! [`Manifest`], with no artifact files, no Python, and no external
+//! crates. This is the offline-first default backend: it makes the whole
+//! L3 stack (trainer, decode server, experiment harnesses, tests) run
+//! end-to-end on a bare `cargo build`.
+//!
+//! It is a *reference* backend: clarity over speed. Semantics are pinned
+//! to the L2 sources (`python/compile/{layers,model,train,sampling}.py`);
+//! a finite-difference test pins the backward pass, and a decode-vs-
+//! teacher-forced parity test pins the serving path against the training
+//! path.
+
+mod decode;
+mod forward;
+pub(crate) mod ops;
+mod train;
+
+pub use forward::RouteMode;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{FfMode, ModelConfig, TrainConfig};
+use crate::data::rng::Pcg32;
+
+use super::backend::{Backend, ExecKey, Executable, Value};
+use super::bundle::{Manifest, ParamSpec};
+use super::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Parameter specs + seeded init (mirrors model.param_specs / init_params)
+// ---------------------------------------------------------------------------
+
+/// Deterministic (name, shape) list — the AOT/manifest ABI ordering.
+pub fn param_specs(cfg: &ModelConfig) -> Vec<ParamSpec> {
+    let d = cfg.d_model;
+    let kd = cfg.n_heads * cfg.d_head;
+    let f = cfg.d_ff;
+    let v = cfg.vocab_size;
+    let mut specs: Vec<(String, Vec<usize>)> = vec![("embed".into(), vec![v, d])];
+    for l in 0..cfg.n_layers {
+        let p = format!("layer_{l:02}.");
+        specs.push((format!("{p}attn_norm"), vec![d]));
+        specs.push((format!("{p}wq"), vec![d, kd]));
+        specs.push((format!("{p}wk"), vec![d, kd]));
+        specs.push((format!("{p}wv"), vec![d, kd]));
+        specs.push((format!("{p}wo"), vec![kd, d]));
+        specs.push((format!("{p}mlp_norm"), vec![d]));
+        match cfg.ff_mode {
+            FfMode::Dense => {
+                specs.push((format!("{p}w1"), vec![d, f]));
+                specs.push((format!("{p}w2"), vec![f, d]));
+            }
+            FfMode::Moe | FfMode::ModeIntegrated => {
+                let cols = cfg.n_experts
+                    + usize::from(cfg.ff_mode == FfMode::ModeIntegrated);
+                specs.push((format!("{p}moe_router"), vec![d, cols]));
+                specs.push((format!("{p}moe_w1"), vec![cfg.n_experts, d, f]));
+                specs.push((format!("{p}moe_w2"), vec![cfg.n_experts, f, d]));
+            }
+        }
+        if cfg.is_routed_block(l) {
+            specs.push((format!("{p}router_w"), vec![d]));
+            if cfg.train_predictor {
+                specs.push((format!("{p}pred.w1"), vec![d, cfg.predictor_hidden]));
+                specs.push((format!("{p}pred.b1"), vec![cfg.predictor_hidden]));
+                specs.push((format!("{p}pred.w2"), vec![cfg.predictor_hidden]));
+            }
+        }
+    }
+    specs.push(("final_norm".into(), vec![d]));
+    specs
+        .into_iter()
+        .map(|(name, shape)| ParamSpec { name, shape, dtype: "f32".into() })
+        .collect()
+}
+
+/// Seeded initial parameters in ABI order (scaled-normal init; norm gains
+/// 1, biases 0, routers near-0; output projections scaled by
+/// `1/sqrt(2 n_layers)` — same structure as `model.init_params`).
+pub fn init_params(cfg: &ModelConfig, seed: u64) -> Vec<(String, Tensor)> {
+    let depth_scale = 1.0 / (2.0 * cfg.n_layers as f64).sqrt();
+    param_specs(cfg)
+        .into_iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let n: usize = spec.shape.iter().product();
+            let mut rng = Pcg32::new(seed, 0x9E37 + i as u64);
+            let data: Vec<f32> = if spec.name.ends_with("_norm") {
+                vec![1.0; n]
+            } else if spec.name.ends_with(".b1") {
+                vec![0.0; n]
+            } else if spec.name.ends_with("router_w")
+                || spec.name.ends_with("moe_router")
+            {
+                (0..n).map(|_| (0.02 * rng.next_normal()) as f32).collect()
+            } else {
+                let fan_in = if spec.shape.len() == 1 {
+                    spec.shape[0]
+                } else {
+                    spec.shape[spec.shape.len() - 2]
+                };
+                let mut std = 1.0 / (fan_in.max(1) as f64).sqrt();
+                // deeper nets: scale the block output projections down
+                // (wo and the MLP's w2 — not the predictor's pred.w2)
+                let out_proj = (spec.name.ends_with(".wo")
+                    || spec.name.ends_with(".w2")
+                    || spec.name.ends_with(".moe_w2"))
+                    && !spec.name.contains("pred.");
+                if out_proj {
+                    std *= depth_scale;
+                }
+                (0..n).map(|_| (std * rng.next_normal()) as f32).collect()
+            };
+            (spec.name.clone(), Tensor::f32(spec.shape, data))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Parameter table (flat ABI-ordered tensors, name-indexed)
+// ---------------------------------------------------------------------------
+
+/// Borrowed view of the flat parameter list, indexed by name.
+pub struct ParamTable<'a> {
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+    data: Vec<&'a [f32]>,
+}
+
+impl<'a> ParamTable<'a> {
+    pub fn from_named(names: &[String], data: Vec<&'a [f32]>) -> crate::Result<Self> {
+        crate::ensure!(names.len() == data.len(), "names/data length mismatch");
+        let index = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        Ok(Self { names: names.to_vec(), index, data })
+    }
+
+    /// Build from executable args (`args[offset..offset+specs.len()]`),
+    /// verifying each tensor's element count against its spec.
+    pub fn from_args(
+        specs: &[ParamSpec],
+        args: &'a [&Value],
+        offset: usize,
+    ) -> crate::Result<Self> {
+        crate::ensure!(
+            args.len() >= offset + specs.len(),
+            "expected {} params at arg offset {offset}, got {}",
+            specs.len(),
+            args.len().saturating_sub(offset)
+        );
+        let mut names = Vec::with_capacity(specs.len());
+        let mut data = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let t = super::backend::f32_arg(args, offset + i, &spec.name)?;
+            let want: usize = spec.shape.iter().product();
+            crate::ensure!(
+                t.len() == want,
+                "param {:?}: got {} elements, spec {:?}",
+                spec.name,
+                t.len(),
+                spec.shape
+            );
+            names.push(spec.name.clone());
+            data.push(t);
+        }
+        Self::from_named(&names, data)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn data(&self, i: usize) -> &'a [f32] {
+        self.data[i]
+    }
+
+    pub fn idx(&self, name: &str) -> crate::Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .ok_or_else(|| crate::err!("no parameter named {name:?}"))
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&'a [f32]> {
+        Ok(self.data[self.idx(name)?])
+    }
+
+    pub fn layer_idx(&self, l: usize, name: &str) -> crate::Result<usize> {
+        self.idx(&format!("layer_{l:02}.{name}"))
+    }
+
+    pub fn layer(&self, l: usize, name: &str) -> crate::Result<&'a [f32]> {
+        self.get(&format!("layer_{l:02}.{name}"))
+    }
+
+    pub fn has_layer(&self, l: usize, name: &str) -> bool {
+        self.index.contains_key(&format!("layer_{l:02}.{name}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Train / eval executables
+// ---------------------------------------------------------------------------
+
+/// `(tokens i32[B,S], step i32[], seed i32[], *params, *m, *v)`
+/// `-> (metrics f32[8], *params', *m', *v')`
+struct NativeTrainStep {
+    model: ModelConfig,
+    train: TrainConfig,
+    specs: Vec<ParamSpec>,
+    name: String,
+}
+
+impl Executable for NativeTrainStep {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Value]) -> crate::Result<Vec<Value>> {
+        let n = self.specs.len();
+        crate::ensure!(
+            args.len() == 3 + 3 * n,
+            "train_step expects {} args, got {}",
+            3 + 3 * n,
+            args.len()
+        );
+        let tok_t = args[0]
+            .as_host()
+            .ok_or_else(|| crate::err!("tokens not host-resident"))?;
+        let shape = tok_t.shape().to_vec();
+        crate::ensure!(shape.len() == 2, "tokens must be [B,S]");
+        let (b, s) = (shape[0], shape[1]);
+        let tokens = tok_t.as_i32()?;
+        let step = super::backend::i32_arg(args, 1, "step")?[0];
+        let seed = super::backend::i32_arg(args, 2, "seed")?[0];
+
+        let table = ParamTable::from_args(&self.specs, args, 3)?;
+        let lg = train::loss_and_grads(&self.model, &table, tokens, b, s, seed)?;
+
+        // clone the optimizer state + params for the in-place update
+        let mut new_p: Vec<Vec<f32>> =
+            (0..n).map(|i| table.data(i).to_vec()).collect();
+        let read_state = |off: usize| -> crate::Result<Vec<Vec<f32>>> {
+            (0..n)
+                .map(|i| {
+                    let t =
+                        super::backend::f32_arg(args, off + i, &self.specs[i].name)?;
+                    crate::ensure!(
+                        t.len() == new_p[i].len(),
+                        "optimizer state {} shape mismatch",
+                        self.specs[i].name
+                    );
+                    Ok(t.to_vec())
+                })
+                .collect()
+        };
+        let mut m = read_state(3 + n)?;
+        let mut v = read_state(3 + 2 * n)?;
+        let names: Vec<String> =
+            self.specs.iter().map(|sp| sp.name.clone()).collect();
+        let (lr, gnorm) = train::adamw(
+            &self.train,
+            &names,
+            &mut new_p,
+            &lg.grads,
+            &mut m,
+            &mut v,
+            step as i64,
+        );
+
+        let mm = lg.metrics;
+        let metrics = Tensor::f32(
+            vec![8],
+            vec![
+                mm.loss,
+                mm.ce,
+                mm.aux_bce,
+                mm.pred_bce,
+                mm.pred_acc,
+                mm.router_frac,
+                gnorm,
+                lr,
+            ],
+        );
+        let mut outs: Vec<Value> = Vec::with_capacity(1 + 3 * n);
+        outs.push(metrics.into());
+        for (i, data) in new_p.into_iter().enumerate() {
+            outs.push(Tensor::f32(self.specs[i].shape.clone(), data).into());
+        }
+        for (i, data) in m.into_iter().enumerate() {
+            outs.push(Tensor::f32(self.specs[i].shape.clone(), data).into());
+        }
+        for (i, data) in v.into_iter().enumerate() {
+            outs.push(Tensor::f32(self.specs[i].shape.clone(), data).into());
+        }
+        Ok(outs)
+    }
+}
+
+/// `(tokens i32[B,S], *params) -> (metrics f32[4],)` with
+/// `metrics = [ce, pred_acc, router_frac, participation]`.
+struct NativeEvalStep {
+    model: ModelConfig,
+    mode: RouteMode,
+    specs: Vec<ParamSpec>,
+    name: String,
+}
+
+impl Executable for NativeEvalStep {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, args: &[&Value]) -> crate::Result<Vec<Value>> {
+        let tok_t = args
+            .first()
+            .and_then(|v| v.as_host())
+            .ok_or_else(|| crate::err!("tokens not host-resident"))?;
+        let shape = tok_t.shape().to_vec();
+        crate::ensure!(shape.len() == 2, "tokens must be [B,S]");
+        let (b, s) = (shape[0], shape[1]);
+        let tokens = tok_t.as_i32()?;
+        let table = ParamTable::from_args(&self.specs, args, 1)?;
+        let fwd =
+            forward::forward(&self.model, &table, tokens, b, s, self.mode, 0)?;
+        let m = forward::eval_metrics(&self.model, &fwd, tokens);
+        Ok(vec![Tensor::f32(vec![4], m.to_vec()).into()])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust CPU backend (see module docs).
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".into()
+    }
+
+    fn load(
+        &self,
+        manifest: &Manifest,
+        _dir: Option<&Path>,
+        key: &ExecKey,
+    ) -> crate::Result<Arc<dyn Executable>> {
+        let cfg = manifest.model.clone();
+        crate::ensure!(
+            matches!(cfg.ff_mode, FfMode::Dense),
+            "native backend supports dense feedforward only; MoE/MoDE \
+             ({:?}) needs the pjrt backend: add the xla dependency (see \
+             rust/Cargo.toml), build artifacts, and use --features pjrt",
+            cfg.ff_mode
+        );
+        let name = key.label();
+        // the manifest's param list is the ABI contract (identical to
+        // param_specs for synthetic bundles; authoritative for AOT ones)
+        Ok(match key {
+            ExecKey::TrainStep => Arc::new(NativeTrainStep {
+                specs: manifest.params.clone(),
+                train: manifest.train.clone(),
+                model: cfg,
+                name,
+            }),
+            ExecKey::EvalStep(mode) => Arc::new(NativeEvalStep {
+                specs: manifest.params.clone(),
+                mode: RouteMode::parse(mode)?,
+                model: cfg,
+                name,
+            }),
+            ExecKey::Embed { .. } => {
+                Arc::new(decode::NativeEmbed { cfg, name })
+            }
+            ExecKey::Logits { .. } => {
+                Arc::new(decode::NativeLogits { cfg, name })
+            }
+            ExecKey::RouterScore { .. } => {
+                Arc::new(decode::NativeRouterScore { cfg, name })
+            }
+            ExecKey::Predictor { .. } => {
+                Arc::new(decode::NativePredictor { cfg, name })
+            }
+            ExecKey::BlockDecode { cache_len, .. } => {
+                Arc::new(decode::NativeBlockDecode {
+                    freqs: ops::rope_freqs(cfg.d_head, cfg.rope_theta),
+                    cfg,
+                    cache_len: *cache_len,
+                    name,
+                })
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RoutingMode;
+
+    fn named_refs(named: &[(String, Tensor)]) -> (Vec<String>, Vec<&[f32]>) {
+        let names: Vec<String> = named.iter().map(|(n, _)| n.clone()).collect();
+        let data: Vec<&[f32]> =
+            named.iter().map(|(_, t)| t.as_f32().unwrap()).collect();
+        (names, data)
+    }
+
+    #[test]
+    fn param_specs_match_n_params() {
+        for routing in [
+            RoutingMode::None,
+            RoutingMode::ModEvery,
+            RoutingMode::ModInterleaved,
+        ] {
+            let mut cfg = ModelConfig::default();
+            cfg.routing = routing;
+            let total: usize = param_specs(&cfg)
+                .iter()
+                .map(|sp| sp.shape.iter().product::<usize>())
+                .sum();
+            assert_eq!(total, cfg.n_params(), "{routing:?}");
+        }
+        // MoE spec accounting must agree too
+        let mut cfg = ModelConfig::default();
+        cfg.ff_mode = crate::config::FfMode::ModeIntegrated;
+        let total: usize = param_specs(&cfg)
+            .iter()
+            .map(|sp| sp.shape.iter().product::<usize>())
+            .sum();
+        assert_eq!(total, cfg.n_params());
+    }
+
+    #[test]
+    fn init_params_deterministic_and_structured() {
+        let cfg = ModelConfig {
+            routing: RoutingMode::ModInterleaved,
+            ..Default::default()
+        };
+        let a = init_params(&cfg, 7);
+        let b = init_params(&cfg, 7);
+        let c = init_params(&cfg, 8);
+        assert_eq!(a.len(), param_specs(&cfg).len());
+        for ((na, ta), (nb, tb)) in a.iter().zip(&b) {
+            assert_eq!(na, nb);
+            assert_eq!(ta, tb, "{na} not deterministic");
+        }
+        assert_ne!(a[0].1, c[0].1, "different seeds must differ");
+        // norm gains are ones; router init is small
+        for (n, t) in &a {
+            if n.ends_with("_norm") {
+                assert!(t.as_f32().unwrap().iter().all(|&x| x == 1.0), "{n}");
+            }
+            if n.ends_with("router_w") {
+                assert!(
+                    t.as_f32().unwrap().iter().all(|&x| x.abs() < 0.2),
+                    "{n}"
+                );
+            }
+        }
+    }
+
+    /// Decode path vs teacher-forced forward: a vanilla model stepped
+    /// token-by-token through the block_decode executables must produce
+    /// the same logits as the sequence forward pass.
+    #[test]
+    fn decode_matches_teacher_forced_forward_vanilla() {
+        let cfg = ModelConfig {
+            vocab_size: 17,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 8,
+            d_ff: 32,
+            seq_len: 8,
+            routing: RoutingMode::None,
+            train_predictor: false,
+            ..Default::default()
+        };
+        run_parity(cfg, RouteMode::Router);
+    }
+
+    /// Same parity for a routed model under causal router-threshold
+    /// decisions (cache as long as the sequence, so no capacity drops).
+    #[test]
+    fn decode_matches_teacher_forced_forward_routed() {
+        let cfg = ModelConfig {
+            vocab_size: 17,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 8,
+            d_ff: 32,
+            seq_len: 8,
+            routing: RoutingMode::ModEvery,
+            capacity_frac: 0.5,
+            train_predictor: false,
+            ..Default::default()
+        };
+        run_parity(cfg, RouteMode::Router);
+    }
+
+    fn run_parity(cfg: ModelConfig, mode: RouteMode) {
+        let s = cfg.seq_len;
+        let d = cfg.d_model;
+        let kd = cfg.n_heads * cfg.d_head;
+        let named = init_params(&cfg, 5);
+        let (names, data) = named_refs(&named);
+        let table = ParamTable::from_named(&names, data).unwrap();
+        let tokens: Vec<i32> = (0..s).map(|i| ((i * 5 + 1) % 17) as i32).collect();
+        let fwd =
+            forward::forward(&cfg, &table, &tokens, 1, s, mode, 0).unwrap();
+
+        // manifest for executable construction
+        let manifest = Manifest::synthesize(
+            "parity",
+            &cfg,
+            &TrainConfig::default(),
+            &crate::runtime::bundle::SyntheticSpec {
+                decode_batches: vec![1],
+                max_decode_len: s,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let backend = NativeBackend::new();
+        let embed_exe = backend
+            .load(&manifest, None, &ExecKey::Embed { batch: 1 })
+            .unwrap();
+        let logits_exe = backend
+            .load(&manifest, None, &ExecKey::Logits { batch: 1 })
+            .unwrap();
+        let block_exe = backend
+            .load(
+                &manifest,
+                None,
+                &ExecKey::BlockDecode { batch: 1, cache_len: s },
+            )
+            .unwrap();
+
+        let embed_val: Value =
+            Tensor::f32(vec![cfg.vocab_size, d], table.get("embed").unwrap().to_vec())
+                .into();
+        let final_norm_val: Value =
+            Tensor::f32(vec![d], table.get("final_norm").unwrap().to_vec()).into();
+
+        // per-layer caches + write heads
+        let mut caches: Vec<[Value; 4]> = (0..cfg.n_layers)
+            .map(|_| {
+                [
+                    Tensor::zeros_f32(vec![1, s, kd]).into(),
+                    Tensor::zeros_f32(vec![1, s, kd]).into(),
+                    Tensor::zeros_i32(vec![1, s]).into(),
+                    Tensor::zeros_f32(vec![1, s]).into(),
+                ]
+            })
+            .collect();
+        let mut heads_used = vec![0i32; cfg.n_layers];
+
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok_val: Value = Tensor::i32(vec![1], vec![tok]).into();
+            let mut h = embed_exe
+                .run(&[&tok_val, &embed_val])
+                .unwrap()
+                .remove(0);
+            let pos_val: Value = Tensor::i32(vec![1], vec![t as i32]).into();
+            for l in 0..cfg.n_layers {
+                let routed = cfg.is_routed_block(l);
+                let h_host = h.to_tensor().unwrap();
+                let h_f = h_host.as_f32().unwrap();
+                let (gate, part) = if routed {
+                    let w = table.layer(l, "router_w").unwrap();
+                    let mut score = 0f32;
+                    for j in 0..d {
+                        score += h_f[j] * w[j];
+                    }
+                    // must agree with the forward pass's mask
+                    let want = fwd.layers[l].mask[t] > 0.5;
+                    assert_eq!(score > 0.0, want, "layer {l} tok {t}");
+                    (score, if score > 0.0 { 1.0 } else { 0.0 })
+                } else {
+                    (1.0, 1.0)
+                };
+                if part == 0.0 {
+                    continue; // skipped: zero cost, h unchanged
+                }
+                let slot = heads_used[l];
+                heads_used[l] += 1;
+                let gate_val: Value = Tensor::f32(vec![1], vec![gate]).into();
+                let part_val: Value = Tensor::f32(vec![1], vec![part]).into();
+                let slot_val: Value = Tensor::i32(vec![1], vec![slot]).into();
+                let lw: Vec<Value> = ["attn_norm", "wq", "wk", "wv", "wo",
+                                      "mlp_norm", "w1", "w2"]
+                    .iter()
+                    .map(|nm| {
+                        let dref = table.layer(l, nm).unwrap();
+                        Tensor::f32(vec![dref.len()], dref.to_vec()).into()
+                    })
+                    .collect();
+                let mut args: Vec<&Value> = vec![
+                    &h, &pos_val, &gate_val, &part_val, &slot_val,
+                    &caches[l][0], &caches[l][1], &caches[l][2], &caches[l][3],
+                ];
+                args.extend(lw.iter());
+                let mut outs = block_exe.run(&args).unwrap();
+                assert_eq!(outs.len(), 5);
+                let valid = outs.pop().unwrap();
+                let posc = outs.pop().unwrap();
+                let vv = outs.pop().unwrap();
+                let kk = outs.pop().unwrap();
+                h = outs.pop().unwrap();
+                caches[l] = [kk, vv, posc, valid];
+            }
+            let outs = logits_exe
+                .run(&[&h, &final_norm_val, &embed_val])
+                .unwrap();
+            let got = outs[0].to_tensor().unwrap();
+            let got = got.as_f32().unwrap();
+            let want =
+                &fwd.logits[t * cfg.vocab_size..(t + 1) * cfg.vocab_size];
+            for (a, b) in got.iter().zip(want) {
+                assert!(
+                    (a - b).abs() < 1e-3 * a.abs().max(1.0),
+                    "tok {t}: decode {a} vs forward {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_executable_reports_topk_participation() {
+        let cfg = ModelConfig {
+            vocab_size: 19,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 8,
+            d_ff: 32,
+            seq_len: 16,
+            routing: RoutingMode::ModEvery,
+            capacity_frac: 0.25,
+            predictor_hidden: 8,
+            ..Default::default()
+        };
+        let manifest = Manifest::synthesize(
+            "eval",
+            &cfg,
+            &TrainConfig::default(),
+            &Default::default(),
+        )
+        .unwrap();
+        let backend = NativeBackend::new();
+        let exe = backend
+            .load(&manifest, None, &ExecKey::EvalStep("topk".into()))
+            .unwrap();
+        let named = init_params(&cfg, 2);
+        let tok: Value = Tensor::i32(
+            vec![2, 16],
+            (0..32).map(|i| (i % 19) as i32).collect(),
+        )
+        .into();
+        let vals: Vec<Value> = named
+            .iter()
+            .map(|(_, t)| Value::Host(t.clone()))
+            .collect();
+        let mut args: Vec<&Value> = vec![&tok];
+        args.extend(vals.iter());
+        let outs = exe.run(&args).unwrap();
+        let m = outs[0].to_tensor().unwrap();
+        let m = m.as_f32().unwrap().to_vec();
+        assert_eq!(m.len(), 4);
+        assert!(m[0].is_finite() && m[0] > 0.0, "ce {m:?}");
+        // top-k participation is exactly the capacity fraction
+        let expect = cfg.capacity(16) as f32 / 16.0;
+        assert!((m[3] - expect).abs() < 1e-6, "participation {m:?}");
+    }
+}

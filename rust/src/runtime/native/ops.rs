@@ -1,0 +1,465 @@
+//! Scalar math kernels for the native CPU backend.
+//!
+//! Everything operates on flat row-major `f32` slices; shapes are passed
+//! explicitly. Numerics mirror the L2 reference semantics
+//! (`python/compile/kernels/ref.py` / `layers.py`): RMSNorm with eps 1e-6,
+//! tanh-approximated GELU, RoPE on split halves of each head, additive
+//! `NEG_INF` masking before softmax, stable expert-choice top-k.
+//!
+//! Each forward kernel that training needs has a hand-derived backward
+//! next to it; `native::train` composes them and a finite-difference test
+//! pins the composition.
+
+/// Additive-mask value (finite to stay NaN-free in f32, as in ref.py).
+pub const NEG_INF: f32 = -1e30;
+
+/// RMSNorm epsilon (matches `layers.rmsnorm`).
+pub const RMS_EPS: f32 = 1e-6;
+
+// ---------------------------------------------------------------------------
+// Matmuls
+// ---------------------------------------------------------------------------
+
+/// `a [m,k] @ b [k,n] -> [m,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// `a [m,k] @ b^T` with `b [n,k]` -> `[m,n]` (e.g. `dx = dy @ W^T`).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// `a^T @ b` with `a [k,m]`, `b [k,n]` -> `[m,n]` (e.g. `dW = x^T dy`),
+/// accumulated into `out`.
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for kk in 0..k {
+        let brow = &b[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let av = a[kk * m + i];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Elementwise `out += a`.
+pub fn add_assign(out: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o += x;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RMSNorm
+// ---------------------------------------------------------------------------
+
+/// Row-wise RMSNorm: `y = x * rsqrt(mean(x^2)+eps) * gain`.
+/// Returns `(y [rows,d], inv [rows])` — `inv` is cached for the backward.
+pub fn rmsnorm(x: &[f32], gain: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(gain.len(), d);
+    let mut y = vec![0f32; rows * d];
+    let mut inv = vec![0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut ss = 0f32;
+        for &v in xr {
+            ss += v * v;
+        }
+        let iv = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
+        inv[r] = iv;
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            yr[j] = xr[j] * iv * gain[j];
+        }
+    }
+    (y, inv)
+}
+
+/// Backward of [`rmsnorm`]: given upstream `dy`, returns `dx` and
+/// accumulates `dgain`.
+pub fn rmsnorm_bwd(
+    x: &[f32],
+    gain: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+    dgain: &mut [f32],
+) -> Vec<f32> {
+    debug_assert_eq!(dgain.len(), d);
+    let mut dx = vec![0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let iv = inv[r];
+        // s = sum_j dy_j * gain_j * x_j
+        let mut s = 0f32;
+        for j in 0..d {
+            s += dyr[j] * gain[j] * xr[j];
+            dgain[j] += xr[j] * iv * dyr[j];
+        }
+        let c = iv * iv * iv / d as f32 * s;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            dxr[j] = iv * gain[j] * dyr[j] - xr[j] * c;
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// GELU (tanh approximation, as jax.nn.gelu(approximate=True))
+// ---------------------------------------------------------------------------
+
+const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
+const GELU_A: f32 = 0.044_715;
+
+pub fn gelu(u: f32) -> f32 {
+    let t = (GELU_C * (u + GELU_A * u * u * u)).tanh();
+    0.5 * u * (1.0 + t)
+}
+
+/// d gelu(u) / du.
+pub fn gelu_grad(u: f32) -> f32 {
+    let inner = GELU_C * (u + GELU_A * u * u * u);
+    let t = inner.tanh();
+    0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * u * u)
+}
+
+// ---------------------------------------------------------------------------
+// RoPE
+// ---------------------------------------------------------------------------
+
+/// Rotary frequencies for a head dim (`theta ** (-j / (dh/2))`).
+pub fn rope_freqs(dh: usize, theta: f64) -> Vec<f32> {
+    let half = dh / 2;
+    (0..half)
+        .map(|j| theta.powf(-(j as f64) / half as f64) as f32)
+        .collect()
+}
+
+/// Apply RoPE in place. `x` is `[rows, heads*dh]` with head-major layout
+/// per row; `pos[r]` is the row's original sequence position. `sign = 1.0`
+/// rotates forward; `sign = -1.0` is the exact backward (transpose) pass.
+pub fn rope(
+    x: &mut [f32],
+    pos: &[i32],
+    rows: usize,
+    heads: usize,
+    dh: usize,
+    freqs: &[f32],
+    sign: f32,
+) {
+    let half = dh / 2;
+    debug_assert_eq!(x.len(), rows * heads * dh);
+    debug_assert_eq!(pos.len(), rows);
+    debug_assert_eq!(freqs.len(), half);
+    for r in 0..rows {
+        let p = pos[r] as f32;
+        for h in 0..heads {
+            let base = r * heads * dh + h * dh;
+            for j in 0..half {
+                let ang = p * freqs[j];
+                let (c, s) = (ang.cos(), sign * ang.sin());
+                let x1 = x[base + j];
+                let x2 = x[base + half + j];
+                x[base + j] = x1 * c - x2 * s;
+                x[base + half + j] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Softmax / sigmoid helpers
+// ---------------------------------------------------------------------------
+
+/// In-place softmax over a logits row (callers pre-mask with [`NEG_INF`]).
+pub fn softmax_inplace(row: &mut [f32]) {
+    let mut max = f32::MIN;
+    for &v in row.iter() {
+        if v > max {
+            max = v;
+        }
+    }
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Numerically stable `ln(sigmoid(x))`.
+pub fn log_sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        -(1.0 + (-x).exp()).ln()
+    } else {
+        x - (1.0 + x.exp()).ln()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router + predictor scoring (single source of truth: the train-time
+// forward, the decode executables, and the serving coordinator's host-side
+// decisions all call these, so the three paths cannot diverge)
+// ---------------------------------------------------------------------------
+
+/// Router scores `r_i = w . x_i`. `x: [rows, d]`, `w: [d]`.
+pub fn router_scores(x: &[f32], w: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(w.len(), d);
+    (0..rows)
+        .map(|r| {
+            let xr = &x[r * d..(r + 1) * d];
+            let mut acc = 0f32;
+            for j in 0..d {
+                acc += xr[j] * w[j];
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Predictor MLP `w2 . relu(x @ w1 + b1)` per row, returning
+/// `(logits [rows], post-relu hidden [rows, hp])` — the hidden activations
+/// are cached for the training backward. `w1: [d, hp]` row-major.
+pub fn predictor_forward(
+    x: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let hp = b1.len();
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(w1.len(), d * hp);
+    debug_assert_eq!(w2.len(), hp);
+    let mut hidden = matmul(x, w1, rows, d, hp);
+    for r in 0..rows {
+        for j in 0..hp {
+            hidden[r * hp + j] = (hidden[r * hp + j] + b1[j]).max(0.0);
+        }
+    }
+    let mut logits = vec![0f32; rows];
+    for r in 0..rows {
+        let hr = &hidden[r * hp..(r + 1) * hp];
+        let mut acc = 0f32;
+        for j in 0..hp {
+            acc += w2[j] * hr[j];
+        }
+        logits[r] = acc;
+    }
+    (logits, hidden)
+}
+
+/// [`predictor_forward`] without the hidden cache.
+pub fn predictor_logits(
+    x: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    rows: usize,
+    d: usize,
+) -> Vec<f32> {
+    predictor_forward(x, w1, b1, w2, rows, d).0
+}
+
+// ---------------------------------------------------------------------------
+// Expert-choice top-k
+// ---------------------------------------------------------------------------
+
+/// Per-row top-`c` membership mask over `scores [b, s]` (0.0 / 1.0).
+///
+/// Ties break toward earlier positions (stable sort), matching
+/// `ref.topk_mask_ref`'s stable argsort.
+pub fn topk_mask(scores: &[f32], b: usize, s: usize, c: usize) -> Vec<f32> {
+    debug_assert_eq!(scores.len(), b * s);
+    let c = c.min(s);
+    let mut mask = vec![0f32; b * s];
+    let mut idx: Vec<usize> = Vec::with_capacity(s);
+    for row in 0..b {
+        let sr = &scores[row * s..(row + 1) * s];
+        idx.clear();
+        idx.extend(0..s);
+        // descending by score; stable => ties keep ascending position order
+        idx.sort_by(|&i, &j| sr[j].total_cmp(&sr[i]));
+        for &i in idx.iter().take(c) {
+            mask[row * s + i] = 1.0;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [2,3] @ [3,2]
+        let a = vec![1., 2., 3., 4., 5., 6.];
+        let b = vec![7., 8., 9., 10., 11., 12.];
+        let out = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(out, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let a = vec![1., -2., 3., 0.5, 4., -1.];
+        let b = vec![2., 1., 0., -1., 3., 2.];
+        // nt: a [2,3] @ (b as [2,3])^T
+        let nt = matmul_nt(&a, &b, 2, 3, 2);
+        // reference: transpose b manually -> [3,2]
+        let bt = vec![2., -1., 1., 3., 0., 2.];
+        assert_eq!(nt, matmul(&a, &bt, 2, 3, 2));
+        // tn: (a as [2,3])^T @ b as [2,3] -> [3,3]
+        let mut tn = vec![0f32; 9];
+        matmul_tn_acc(&a, &b, 2, 3, 3, &mut tn);
+        let at = vec![1., 0.5, -2., 4., 3., -1.];
+        assert_eq!(tn, matmul(&at, &b, 3, 2, 3));
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain() {
+        let x = vec![3.0, 4.0];
+        let (y, inv) = rmsnorm(&x, &[1.0, 1.0], 1, 2);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let expect = 1.0 / (12.5f32 + RMS_EPS).sqrt();
+        assert!((inv[0] - expect).abs() < 1e-6);
+        assert!((y[0] - 3.0 * expect).abs() < 1e-6);
+        assert!((y[1] - 4.0 * expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_numeric() {
+        let x = vec![0.5, -1.2, 2.0];
+        let gain = vec![1.1, 0.9, -0.3];
+        let dy = vec![0.7, -0.2, 0.4];
+        let (_, inv) = rmsnorm(&x, &gain, 1, 3);
+        let mut dgain = vec![0f32; 3];
+        let dx = rmsnorm_bwd(&x, &gain, &inv, &dy, 1, 3, &mut dgain);
+        let loss = |x: &[f32]| -> f32 {
+            let (y, _) = rmsnorm(x, &gain, 1, 3);
+            y.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3f32;
+        for j in 0..3 {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let num = (loss(&xp) - loss(&xm)) / (2.0 * eps);
+            assert!((num - dx[j]).abs() < 2e-3, "j={j} num={num} ana={}", dx[j]);
+        }
+    }
+
+    #[test]
+    fn gelu_known_values_and_grad() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        // numeric grad check
+        for &u in &[-2.0f32, -0.3, 0.0, 0.7, 1.9] {
+            let eps = 1e-3;
+            let num = (gelu(u + eps) - gelu(u - eps)) / (2.0 * eps);
+            assert!((num - gelu_grad(u)).abs() < 1e-3, "u={u}");
+        }
+    }
+
+    #[test]
+    fn rope_backward_is_inverse_rotation() {
+        let freqs = rope_freqs(4, 10000.0);
+        let orig = vec![0.3f32, -1.0, 2.0, 0.5];
+        let mut x = orig.clone();
+        rope(&mut x, &[7], 1, 1, 4, &freqs, 1.0);
+        rope(&mut x, &[7], 1, 1, 4, &freqs, -1.0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rope_zero_position_is_identity() {
+        let freqs = rope_freqs(8, 10000.0);
+        let orig: Vec<f32> = (0..8).map(|i| i as f32 - 3.0).collect();
+        let mut x = orig.clone();
+        rope(&mut x, &[0], 1, 1, 8, &freqs, 1.0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn softmax_normalizes_and_masks() {
+        let mut row = vec![1.0, 2.0, NEG_INF];
+        softmax_inplace(&mut row);
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(row[2], 0.0);
+        assert!(row[1] > row[0]);
+    }
+
+    #[test]
+    fn topk_selects_largest_with_stable_ties() {
+        let scores = vec![0.1, 0.9, 0.9, -1.0, /* row 2 */ 1.0, 1.0, 1.0, 1.0];
+        let mask = topk_mask(&scores, 2, 4, 2);
+        assert_eq!(&mask[..4], &[0.0, 1.0, 1.0, 0.0]);
+        // all-tied row: earliest positions win
+        assert_eq!(&mask[4..], &[1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn log_sigmoid_stable() {
+        assert!((log_sigmoid(0.0) + std::f32::consts::LN_2).abs() < 1e-6);
+        assert!(log_sigmoid(100.0).abs() < 1e-6);
+        assert!((log_sigmoid(-100.0) + 100.0).abs() < 1e-3);
+        assert!(log_sigmoid(-1e30f32).is_finite() || log_sigmoid(-1e30f32) == f32::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,678 @@
+//! Native train step: loss, hand-derived backward pass, AdamW.
+//!
+//! Mirrors `python/compile/train.py` — total loss = next-token CE + the
+//! router aux BCE (§3.5 method 1, weighted) + the predictor BCE (§3.5
+//! method 2, stop-gradient input), gradients through the masked MoD
+//! forward of [`super::forward`], global-norm clipping, AdamW with linear
+//! warmup → cosine decay. Stop-gradients match the paper: top-k masks and
+//! BCE targets are constants; the router sits on the gradient path through
+//! the gate multiply and the aux loss; the predictor never shapes the
+//! trunk.
+//!
+//! A finite-difference test at the bottom pins the whole composition.
+
+use crate::config::{ModelConfig, RoutingMode, TrainConfig};
+
+use super::forward::{cross_entropy, forward, Forward, RouteMode};
+use super::ops;
+use super::ParamTable;
+
+/// Scalar training metrics (prefix of the ABI metrics vector).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LossMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub aux_bce: f32,
+    pub pred_bce: f32,
+    pub pred_acc: f32,
+    pub router_frac: f32,
+}
+
+/// Loss + gradients in parameter-table order.
+pub struct LossGrads {
+    pub metrics: LossMetrics,
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// Forward + full backward over one batch.
+pub fn loss_and_grads(
+    cfg: &ModelConfig,
+    params: &ParamTable<'_>,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    seed: i32,
+) -> crate::Result<LossGrads> {
+    let fwd = forward(cfg, params, tokens, b, s, RouteMode::Topk, seed)?;
+    backward(cfg, params, &fwd, tokens, b, s)
+}
+
+fn backward(
+    cfg: &ModelConfig,
+    params: &ParamTable<'_>,
+    fwd: &Forward,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+) -> crate::Result<LossGrads> {
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let dh = cfg.d_head;
+    let kd = heads * dh;
+    let f = cfg.d_ff;
+    let v = cfg.vocab_size;
+    let rows = b * s;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let freqs = ops::rope_freqs(dh, cfg.rope_theta);
+    let positions: Vec<i32> = (0..rows).map(|r| (r % s) as i32).collect();
+    let stochastic = cfg.routing == RoutingMode::Stochastic;
+
+    let mut grads: Vec<Vec<f32>> =
+        (0..params.len()).map(|i| vec![0f32; params.data(i).len()]).collect();
+
+    // --- loss scalars + aux-loss bookkeeping ---
+    let ce = cross_entropy(&fwd.logits, tokens, b, s, v);
+    let routed_layers: Vec<usize> = (0..cfg.n_layers)
+        .filter(|&l| fwd.layers[l].routed)
+        .collect();
+    let n_routed = routed_layers.len();
+    let n_pred = routed_layers
+        .iter()
+        .filter(|&&l| !fwd.layers[l].pred_logits.is_empty())
+        .count();
+    let mut aux_bce = 0f64;
+    let mut pred_bce = 0f64;
+    let mut pred_acc = 0f64;
+    let mut router_frac = 0f64;
+    if !stochastic {
+        for &l in &routed_layers {
+            let lf = &fwd.layers[l];
+            let mut layer_bce = 0f64;
+            for r in 0..rows {
+                let t = lf.mask[r];
+                let sc = lf.scores[r];
+                layer_bce -= (t * ops::log_sigmoid(sc)
+                    + (1.0 - t) * ops::log_sigmoid(-sc))
+                    as f64;
+            }
+            aux_bce += layer_bce / rows as f64;
+            router_frac += lf.scores.iter().filter(|&&x| x > 0.0).count() as f64
+                / rows as f64;
+            if !lf.pred_logits.is_empty() {
+                let mut layer_pbce = 0f64;
+                let mut layer_acc = 0f64;
+                for r in 0..rows {
+                    let t = lf.mask[r];
+                    let p = lf.pred_logits[r];
+                    layer_pbce -= (t * ops::log_sigmoid(p)
+                        + (1.0 - t) * ops::log_sigmoid(-p))
+                        as f64;
+                    if (p > 0.0) == (t > 0.5) {
+                        layer_acc += 1.0;
+                    }
+                }
+                pred_bce += layer_pbce / rows as f64;
+                pred_acc += layer_acc / rows as f64;
+            }
+        }
+        if n_routed > 0 {
+            aux_bce /= n_routed as f64;
+            router_frac /= n_routed as f64;
+        }
+        if n_pred > 0 {
+            pred_bce /= n_pred as f64;
+            pred_acc /= n_pred as f64;
+        }
+    }
+    let include_aux = n_routed > 0 && !stochastic;
+    let loss = ce as f64
+        + if include_aux {
+            cfg.aux_loss_weight * aux_bce + pred_bce
+        } else {
+            0.0
+        };
+
+    // --- CE backward: dlogits = (softmax - onehot) / (b*(s-1)) ---
+    let denom = (b * s.saturating_sub(1).max(1)) as f32;
+    let mut dlogits = vec![0f32; rows * v];
+    for bi in 0..b {
+        for t in 0..s.saturating_sub(1) {
+            let r = bi * s + t;
+            let lrow = &fwd.logits[r * v..(r + 1) * v];
+            let drow = &mut dlogits[r * v..(r + 1) * v];
+            let mut max = f32::MIN;
+            for &x in lrow {
+                if x > max {
+                    max = x;
+                }
+            }
+            let mut sum = 0f32;
+            for (dst, &x) in drow.iter_mut().zip(lrow) {
+                *dst = (x - max).exp();
+                sum += *dst;
+            }
+            let inv = 1.0 / sum;
+            for dst in drow.iter_mut() {
+                *dst *= inv / denom;
+            }
+            let tgt = tokens[bi * s + t + 1] as usize;
+            drow[tgt] -= 1.0 / denom;
+        }
+    }
+
+    // --- unembed backward: logits = xn_final @ embed^T ---
+    let embed = params.get("embed")?;
+    let embed_idx = params.idx("embed")?;
+    let final_norm = params.get("final_norm")?;
+    let final_norm_idx = params.idx("final_norm")?;
+    let d_xn_final = ops::matmul(&dlogits, embed, rows, v, d);
+    // dE[vi,:] += sum_r dlogits[r,vi] * xn_final[r,:]
+    ops::matmul_tn_acc(&dlogits, &fwd.xn_final, rows, v, d, &mut grads[embed_idx]);
+    let mut d_final_norm = vec![0f32; d];
+    let mut dx = ops::rmsnorm_bwd(
+        &fwd.x_final,
+        final_norm,
+        &fwd.inv_final,
+        &d_xn_final,
+        rows,
+        d,
+        &mut d_final_norm,
+    );
+    ops::add_assign(&mut grads[final_norm_idx], &d_final_norm);
+
+    // --- layers, reversed ---
+    for l in (0..cfg.n_layers).rev() {
+        let lf = &fwd.layers[l];
+        let g_up = dx; // dL/dx_next
+
+        // d_delta = mask*gate * G ; ds += mask * <G, delta>
+        let mut d_delta = vec![0f32; rows * d];
+        let mut ds = vec![0f32; rows];
+        for r in 0..rows {
+            let mg = lf.mask[r] * lf.gates[r];
+            let gr = &g_up[r * d..(r + 1) * d];
+            if mg != 0.0 {
+                let dd = &mut d_delta[r * d..(r + 1) * d];
+                for j in 0..d {
+                    dd[j] = mg * gr[j];
+                }
+            }
+            if lf.routed && lf.score_grad && lf.mask[r] > 0.5 {
+                let ar = &lf.attn_out[r * d..(r + 1) * d];
+                let mr = &lf.mlp[r * d..(r + 1) * d];
+                let mut acc = 0f32;
+                for j in 0..d {
+                    acc += gr[j] * (ar[j] + mr[j]);
+                }
+                ds[r] = acc;
+            }
+        }
+
+        // --- MLP backward (dmlp = d_delta) ---
+        let w1 = params.layer(l, "w1")?;
+        let w2 = params.layer(l, "w2")?;
+        let mlp_norm = params.layer(l, "mlp_norm")?;
+        ops::matmul_tn_acc(
+            &lf.g,
+            &d_delta,
+            rows,
+            f,
+            d,
+            &mut grads[params.layer_idx(l, "w2")?],
+        );
+        let dg = ops::matmul_nt(&d_delta, w2, rows, d, f);
+        let mut du = dg;
+        for (dst, &uu) in du.iter_mut().zip(&lf.u) {
+            *dst *= ops::gelu_grad(uu);
+        }
+        ops::matmul_tn_acc(
+            &lf.xn2,
+            &du,
+            rows,
+            d,
+            f,
+            &mut grads[params.layer_idx(l, "w1")?],
+        );
+        let dxn2 = ops::matmul_nt(&du, w1, rows, f, d);
+        let mut d_mlp_norm = vec![0f32; d];
+        let dh_mid = ops::rmsnorm_bwd(
+            &lf.h_mid,
+            mlp_norm,
+            &lf.inv2,
+            &dxn2,
+            rows,
+            d,
+            &mut d_mlp_norm,
+        );
+        ops::add_assign(&mut grads[params.layer_idx(l, "mlp_norm")?], &d_mlp_norm);
+
+        // h_mid = x + mask*attn_out:
+        //   dattn_out = d_delta + mask*dh_mid ; dx_acc = G + dh_mid
+        let mut dattn_out = d_delta;
+        let mut dx_acc = g_up;
+        for r in 0..rows {
+            let m = lf.mask[r];
+            let da = &mut dattn_out[r * d..(r + 1) * d];
+            let dh = &dh_mid[r * d..(r + 1) * d];
+            let dxr = &mut dx_acc[r * d..(r + 1) * d];
+            for j in 0..d {
+                da[j] += m * dh[j];
+                dxr[j] += dh[j];
+            }
+        }
+
+        // --- attention backward ---
+        let wq = params.layer(l, "wq")?;
+        let wk = params.layer(l, "wk")?;
+        let wv = params.layer(l, "wv")?;
+        let wo = params.layer(l, "wo")?;
+        ops::matmul_tn_acc(
+            &lf.att,
+            &dattn_out,
+            rows,
+            kd,
+            d,
+            &mut grads[params.layer_idx(l, "wo")?],
+        );
+        let datt = ops::matmul_nt(&dattn_out, wo, rows, d, kd);
+
+        let mut dq = vec![0f32; rows * kd];
+        let mut dk = vec![0f32; rows * kd];
+        let mut dv = vec![0f32; rows * kd];
+        let mut dlog = vec![0f32; s];
+        for bi in 0..b {
+            for h in 0..heads {
+                for qi in 0..s {
+                    let qr = bi * s + qi;
+                    let datt_h =
+                        &datt[qr * kd + h * dh..qr * kd + h * dh + dh];
+                    let prow_base = ((bi * heads + h) * s + qi) * s;
+                    let prow = &fwd.layers[l].probs[prow_base..prow_base + s];
+                    // dP and the softmax Jacobian (masked entries have P=0)
+                    let mut inner = 0f32; // sum_k dP_k * P_k
+                    for ki in 0..=qi {
+                        let p = prow[ki];
+                        if p == 0.0 {
+                            dlog[ki] = 0.0;
+                            continue;
+                        }
+                        let kr = bi * s + ki;
+                        let vh = &lf.v[kr * kd + h * dh..kr * kd + h * dh + dh];
+                        let mut dp = 0f32;
+                        for j in 0..dh {
+                            dp += datt_h[j] * vh[j];
+                        }
+                        dlog[ki] = dp;
+                        inner += dp * p;
+                        // dV accumulates P * datt
+                        let dvh =
+                            &mut dv[kr * kd + h * dh..kr * kd + h * dh + dh];
+                        for j in 0..dh {
+                            dvh[j] += p * datt_h[j];
+                        }
+                    }
+                    // dlogits = P * (dP - inner); then dQ/dK
+                    let qh = &lf.q[qr * kd + h * dh..qr * kd + h * dh + dh];
+                    for ki in 0..=qi {
+                        let p = prow[ki];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let dl = p * (dlog[ki] - inner) * scale;
+                        if dl == 0.0 {
+                            continue;
+                        }
+                        let kr = bi * s + ki;
+                        let kh = &lf.k[kr * kd + h * dh..kr * kd + h * dh + dh];
+                        let dqh =
+                            &mut dq[qr * kd + h * dh..qr * kd + h * dh + dh];
+                        for j in 0..dh {
+                            dqh[j] += dl * kh[j];
+                        }
+                        let dkh =
+                            &mut dk[kr * kd + h * dh..kr * kd + h * dh + dh];
+                        for j in 0..dh {
+                            dkh[j] += dl * qh[j];
+                        }
+                    }
+                }
+            }
+        }
+        // RoPE backward = inverse rotation
+        ops::rope(&mut dq, &positions, rows, heads, dh, &freqs, -1.0);
+        ops::rope(&mut dk, &positions, rows, heads, dh, &freqs, -1.0);
+
+        ops::matmul_tn_acc(
+            &lf.xn1,
+            &dq,
+            rows,
+            d,
+            kd,
+            &mut grads[params.layer_idx(l, "wq")?],
+        );
+        ops::matmul_tn_acc(
+            &lf.xn1,
+            &dk,
+            rows,
+            d,
+            kd,
+            &mut grads[params.layer_idx(l, "wk")?],
+        );
+        ops::matmul_tn_acc(
+            &lf.xn1,
+            &dv,
+            rows,
+            d,
+            kd,
+            &mut grads[params.layer_idx(l, "wv")?],
+        );
+        let mut dxn1 = ops::matmul_nt(&dq, wq, rows, kd, d);
+        ops::add_assign(&mut dxn1, &ops::matmul_nt(&dk, wk, rows, kd, d));
+        ops::add_assign(&mut dxn1, &ops::matmul_nt(&dv, wv, rows, kd, d));
+        let attn_norm = params.layer(l, "attn_norm")?;
+        let mut d_attn_norm = vec![0f32; d];
+        let dx1 = ops::rmsnorm_bwd(
+            &lf.x_in,
+            attn_norm,
+            &lf.inv1,
+            &dxn1,
+            rows,
+            d,
+            &mut d_attn_norm,
+        );
+        ops::add_assign(
+            &mut grads[params.layer_idx(l, "attn_norm")?],
+            &d_attn_norm,
+        );
+        ops::add_assign(&mut dx_acc, &dx1);
+
+        // --- router + predictor backward ---
+        if lf.routed && lf.score_grad {
+            // aux BCE contribution: d/ds mean BCE = (sigmoid(s) - target)/rows
+            let aux_scale =
+                cfg.aux_loss_weight as f32 / (n_routed.max(1) * rows) as f32;
+            for r in 0..rows {
+                ds[r] += aux_scale * (ops::sigmoid(lf.scores[r]) - lf.mask[r]);
+            }
+            let router_w = params.layer(l, "router_w")?;
+            let rw_grad_idx = params.layer_idx(l, "router_w")?;
+            for r in 0..rows {
+                let dsr = ds[r];
+                if dsr == 0.0 {
+                    continue;
+                }
+                let xr = &lf.x_in[r * d..(r + 1) * d];
+                let gw = &mut grads[rw_grad_idx];
+                for j in 0..d {
+                    gw[j] += dsr * xr[j];
+                }
+                let dxr = &mut dx_acc[r * d..(r + 1) * d];
+                for j in 0..d {
+                    dxr[j] += dsr * router_w[j];
+                }
+            }
+            // predictor (stop-grad input: grads reach pred params only)
+            if !lf.pred_logits.is_empty() {
+                let pw2 = params.layer(l, "pred.w2")?;
+                let hp = pw2.len();
+                let p_scale = 1.0 / (n_pred.max(1) * rows) as f32;
+                let mut dpl = vec![0f32; rows];
+                for r in 0..rows {
+                    dpl[r] =
+                        p_scale * (ops::sigmoid(lf.pred_logits[r]) - lf.mask[r]);
+                }
+                {
+                    let gw2 = &mut grads[params.layer_idx(l, "pred.w2")?];
+                    for r in 0..rows {
+                        let hr = &lf.pred_hidden[r * hp..(r + 1) * hp];
+                        for j in 0..hp {
+                            gw2[j] += dpl[r] * hr[j];
+                        }
+                    }
+                }
+                // dhid = dpl ⊗ w2, gated by relu
+                let mut dhid = vec![0f32; rows * hp];
+                for r in 0..rows {
+                    let hr = &lf.pred_hidden[r * hp..(r + 1) * hp];
+                    let dhr = &mut dhid[r * hp..(r + 1) * hp];
+                    for j in 0..hp {
+                        if hr[j] > 0.0 {
+                            dhr[j] = dpl[r] * pw2[j];
+                        }
+                    }
+                }
+                ops::matmul_tn_acc(
+                    &lf.x_in,
+                    &dhid,
+                    rows,
+                    d,
+                    hp,
+                    &mut grads[params.layer_idx(l, "pred.w1")?],
+                );
+                let gb1 = &mut grads[params.layer_idx(l, "pred.b1")?];
+                for r in 0..rows {
+                    for j in 0..hp {
+                        gb1[j] += dhid[r * hp + j];
+                    }
+                }
+            }
+        }
+
+        dx = dx_acc;
+    }
+
+    // --- embedding-lookup backward ---
+    let sqrt_d = (d as f32).sqrt();
+    {
+        let ge = &mut grads[embed_idx];
+        for (r, &t) in tokens.iter().enumerate() {
+            let dst = &mut ge[t as usize * d..(t as usize + 1) * d];
+            let src = &dx[r * d..(r + 1) * d];
+            for j in 0..d {
+                dst[j] += src[j] * sqrt_d;
+            }
+        }
+    }
+
+    Ok(LossGrads {
+        metrics: LossMetrics {
+            loss: loss as f32,
+            ce,
+            aux_bce: aux_bce as f32,
+            pred_bce: pred_bce as f32,
+            pred_acc: pred_acc as f32,
+            router_frac: router_frac as f32,
+        },
+        grads,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// AdamW + schedule (mirrors train.adamw_update / lr_schedule)
+// ---------------------------------------------------------------------------
+
+/// Weight decay applies to matrices, not norms/biases/routers.
+pub fn is_decayed(name: &str) -> bool {
+    !(name.ends_with("_norm") || name.ends_with(".b1") || name.ends_with("router_w"))
+}
+
+/// Linear warmup → cosine decay to `min_lr_frac` over `total_steps`.
+pub fn lr_schedule(step: f32, tc: &TrainConfig) -> f32 {
+    let warm = (1.0f32).min((step + 1.0) / tc.warmup_steps.max(1) as f32);
+    let t = ((step - tc.warmup_steps as f32)
+        / (tc.total_steps.saturating_sub(tc.warmup_steps)).max(1) as f32)
+        .clamp(0.0, 1.0);
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    let frac = tc.min_lr_frac as f32 + (1.0 - tc.min_lr_frac as f32) * cos;
+    tc.learning_rate as f32 * warm * frac
+}
+
+/// One AdamW update in place; returns `(lr, pre-clip grad norm)`.
+pub fn adamw(
+    tc: &TrainConfig,
+    names: &[String],
+    params: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    step: i64,
+) -> (f32, f32) {
+    let mut sq = 0f64;
+    for g in grads {
+        for &x in g {
+            sq += (x as f64) * (x as f64);
+        }
+    }
+    let gnorm = sq.sqrt() as f32;
+    let clip = (1.0f32).min(tc.grad_clip as f32 / (gnorm + 1e-9));
+    let lr = lr_schedule(step as f32, tc);
+    let t = step as f64 + 1.0;
+    let bc1 = (1.0 - tc.beta1.powf(t)) as f32;
+    let bc2 = (1.0 - tc.beta2.powf(t)) as f32;
+    let (b1, b2) = (tc.beta1 as f32, tc.beta2 as f32);
+    let eps = tc.eps as f32;
+    let wd = tc.weight_decay as f32;
+    for i in 0..names.len() {
+        let decayed = is_decayed(&names[i]);
+        let p = &mut params[i];
+        let mm = &mut m[i];
+        let vv = &mut v[i];
+        let g = &grads[i];
+        for j in 0..p.len() {
+            let gc = g[j] * clip;
+            mm[j] = b1 * mm[j] + (1.0 - b1) * gc;
+            vv[j] = b2 * vv[j] + (1.0 - b2) * gc * gc;
+            let mut upd = (mm[j] / bc1) / ((vv[j] / bc2).sqrt() + eps);
+            if decayed {
+                upd += wd * p[j];
+            }
+            p[j] -= lr * upd;
+        }
+    }
+    (lr, gnorm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::runtime::native::{init_params, param_specs, ParamTable};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 13,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ff: 16,
+            seq_len: 6,
+            routing: RoutingMode::ModInterleaved,
+            // capacity 1.0 keeps the top-k mask constant under parameter
+            // perturbation, so finite differences are well-defined
+            capacity_frac: 1.0,
+            aux_loss_weight: 0.01,
+            train_predictor: true,
+            predictor_hidden: 4,
+            ..Default::default()
+        }
+    }
+
+    fn loss_of(cfg: &ModelConfig, named: &[(String, Vec<f32>)], tokens: &[i32]) -> f32 {
+        let names: Vec<String> = named.iter().map(|(n, _)| n.clone()).collect();
+        let data: Vec<&[f32]> = named.iter().map(|(_, t)| t.as_slice()).collect();
+        let table = ParamTable::from_named(&names, data).unwrap();
+        let lg = loss_and_grads(cfg, &table, tokens, 2, cfg.seq_len, 0).unwrap();
+        lg.metrics.loss
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let cfg = tiny_cfg();
+        let named: Vec<(String, Vec<f32>)> = init_params(&cfg, 3)
+            .into_iter()
+            .map(|(n, t)| {
+                let d = t.as_f32().unwrap().to_vec();
+                (n, d)
+            })
+            .collect();
+        let tokens: Vec<i32> =
+            vec![1, 5, 2, 9, 4, 7, 0, 3, 12, 6, 8, 10];
+        assert_eq!(tokens.len(), 2 * cfg.seq_len);
+
+        let names: Vec<String> = named.iter().map(|(n, _)| n.clone()).collect();
+        let data: Vec<&[f32]> = named.iter().map(|(_, t)| t.as_slice()).collect();
+        let table = ParamTable::from_named(&names, data).unwrap();
+        let lg =
+            loss_and_grads(&cfg, &table, &tokens, 2, cfg.seq_len, 0).unwrap();
+        assert!(lg.metrics.loss.is_finite());
+        assert!(lg.metrics.ce > 0.0);
+
+        // probe a few entries of structurally different tensors
+        let probes: &[(&str, usize)] = &[
+            ("embed", 5 * cfg.d_model + 3),
+            ("layer_00.wq", 17),
+            ("layer_00.w1", 40),
+            ("layer_00.attn_norm", 2),
+            ("layer_01.router_w", 3),
+            ("layer_01.wo", 9),
+            ("layer_01.pred.w1", 11),
+            ("layer_01.pred.w2", 1),
+            ("final_norm", 5),
+        ];
+        let specs = param_specs(&cfg);
+        for &(pname, j) in probes {
+            let pi = specs.iter().position(|sp| sp.name == pname).unwrap();
+            let analytic = lg.grads[pi][j];
+            let eps = 1e-2f32;
+            let mut plus = named.clone();
+            plus[pi].1[j] += eps;
+            let mut minus = named.clone();
+            minus[pi].1[j] -= eps;
+            let numeric =
+                (loss_of(&cfg, &plus, &tokens) - loss_of(&cfg, &minus, &tokens))
+                    / (2.0 * eps);
+            let tol = 2e-3f32.max(0.05 * numeric.abs());
+            assert!(
+                (analytic - numeric).abs() < tol,
+                "{pname}[{j}]: analytic {analytic} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn adamw_moves_params_and_respects_decay_mask() {
+        let tc = TrainConfig::default();
+        let names = vec!["w".to_string(), "x_norm".to_string()];
+        let mut params = vec![vec![1.0f32, -1.0], vec![1.0f32]];
+        let grads = vec![vec![0.5f32, -0.5], vec![0.0f32]];
+        let mut m = vec![vec![0f32; 2], vec![0f32; 1]];
+        let mut v = vec![vec![0f32; 2], vec![0f32; 1]];
+        let (lr, gnorm) =
+            adamw(&tc, &names, &mut params, &grads, &mut m, &mut v, 0);
+        assert!(lr > 0.0 && gnorm > 0.0);
+        assert!(params[0][0] < 1.0); // moved against the gradient
+        // zero-grad norm parameter: no Adam movement, no weight decay
+        assert_eq!(params[1][0], 1.0);
+        assert!(is_decayed("layer_00.w1"));
+        assert!(!is_decayed("layer_01.router_w"));
+        assert!(!is_decayed("layer_00.attn_norm"));
+        assert!(!is_decayed("layer_01.pred.b1"));
+    }
+
+    #[test]
+    fn lr_schedule_warms_up_then_decays() {
+        let tc = TrainConfig {
+            learning_rate: 1.0,
+            warmup_steps: 10,
+            total_steps: 100,
+            min_lr_frac: 0.1,
+            ..Default::default()
+        };
+        assert!(lr_schedule(0.0, &tc) < lr_schedule(9.0, &tc));
+        assert!((lr_schedule(9.0, &tc) - 1.0).abs() < 1e-5);
+        assert!(lr_schedule(50.0, &tc) < 1.0);
+        let end = lr_schedule(99.0, &tc);
+        assert!(end >= 0.1 - 1e-5 && end < 0.2, "end {end}");
+    }
+}

@@ -1,11 +1,11 @@
-//! Host tensors and conversions to/from `xla::Literal`.
-
-use xla::{ArrayElement, Literal, PrimitiveType};
+//! Host tensors: the coordinator's working currency.
+//!
+//! A [`Tensor`] is a row-major f32 or i32 buffer + shape. The native
+//! backend computes on these directly; the PJRT backend (feature `pjrt`)
+//! converts to/from `xla::Literal` at executable boundaries via the
+//! feature-gated impl block at the bottom.
 
 /// A simple host tensor: row-major f32 or i32 data + shape.
-///
-/// This is the coordinator's working currency; conversion to `Literal`
-/// happens only at executable boundaries.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
@@ -69,70 +69,29 @@ impl Tensor {
     pub fn as_f32(&self) -> crate::Result<&[f32]> {
         match self {
             Tensor::F32 { data, .. } => Ok(data),
-            Tensor::I32 { .. } => anyhow::bail!("tensor is i32, expected f32"),
+            Tensor::I32 { .. } => crate::bail!("tensor is i32, expected f32"),
         }
     }
 
     pub fn as_i32(&self) -> crate::Result<&[i32]> {
         match self {
             Tensor::I32 { data, .. } => Ok(data),
-            Tensor::F32 { .. } => anyhow::bail!("tensor is f32, expected i32"),
+            Tensor::F32 { .. } => crate::bail!("tensor is f32, expected i32"),
         }
     }
 
     pub fn as_f32_mut(&mut self) -> crate::Result<&mut [f32]> {
         match self {
             Tensor::F32 { data, .. } => Ok(data),
-            Tensor::I32 { .. } => anyhow::bail!("tensor is i32, expected f32"),
+            Tensor::I32 { .. } => crate::bail!("tensor is i32, expected f32"),
         }
     }
 
     /// Scalar extraction (any rank-0 or single-element tensor).
     pub fn item_f32(&self) -> crate::Result<f32> {
         let d = self.as_f32()?;
-        anyhow::ensure!(d.len() == 1, "item() on {}-element tensor", d.len());
+        crate::ensure!(d.len() == 1, "item() on {}-element tensor", d.len());
         Ok(d[0])
-    }
-
-    /// Convert to an XLA literal (allocates + copies).
-    pub fn to_literal(&self) -> crate::Result<Literal> {
-        let dims: Vec<usize> = self.shape().to_vec();
-        let lit = match self {
-            Tensor::F32 { data, .. } => {
-                let mut l = Literal::create_from_shape(PrimitiveType::F32, &dims);
-                l.copy_raw_from::<f32>(data)?;
-                l
-            }
-            Tensor::I32 { data, .. } => {
-                let mut l = Literal::create_from_shape(PrimitiveType::S32, &dims);
-                l.copy_raw_from::<i32>(data)?;
-                l
-            }
-        };
-        Ok(lit)
-    }
-
-    /// Read back from an XLA literal.
-    pub fn from_literal(lit: &Literal) -> crate::Result<Self> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.primitive_type() {
-            PrimitiveType::F32 => {
-                Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
-            }
-            PrimitiveType::S32 => {
-                Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
-            }
-            other => anyhow::bail!("unsupported literal type {other:?}"),
-        }
-    }
-
-    /// Primitive type this tensor maps to.
-    pub fn primitive_type(&self) -> PrimitiveType {
-        match self {
-            Tensor::F32 { .. } => PrimitiveType::F32,
-            Tensor::I32 { .. } => PrimitiveType::S32,
-        }
     }
 }
 
@@ -144,34 +103,74 @@ pub(crate) fn dtype_code(t: &Tensor) -> u8 {
     }
 }
 
-// keep ArrayElement in scope for copy_raw_from generics
-#[allow(unused)]
-fn _assert_array_element<T: ArrayElement>() {}
+// ---- PJRT interchange (feature-gated: needs the external `xla` crate) ----
+
+#[cfg(feature = "pjrt")]
+impl Tensor {
+    /// Convert to an XLA literal (allocates + copies).
+    pub fn to_literal(&self) -> crate::Result<xla::Literal> {
+        use xla::{Literal, PrimitiveType};
+        let dims: Vec<usize> = self.shape().to_vec();
+        let lit = match self {
+            Tensor::F32 { data, .. } => {
+                let mut l = Literal::create_from_shape(PrimitiveType::F32, &dims);
+                l.copy_raw_from::<f32>(data)
+                    .map_err(|e| crate::err!("literal copy: {e:?}"))?;
+                l
+            }
+            Tensor::I32 { data, .. } => {
+                let mut l = Literal::create_from_shape(PrimitiveType::S32, &dims);
+                l.copy_raw_from::<i32>(data)
+                    .map_err(|e| crate::err!("literal copy: {e:?}"))?;
+                l
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> crate::Result<Self> {
+        use xla::PrimitiveType;
+        let shape = lit
+            .array_shape()
+            .map_err(|e| crate::err!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            PrimitiveType::F32 => Ok(Tensor::F32 {
+                shape: dims,
+                data: lit
+                    .to_vec::<f32>()
+                    .map_err(|e| crate::err!("literal read: {e:?}"))?,
+            }),
+            PrimitiveType::S32 => Ok(Tensor::I32 {
+                shape: dims,
+                data: lit
+                    .to_vec::<i32>()
+                    .map_err(|e| crate::err!("literal read: {e:?}"))?,
+            }),
+            other => crate::bail!("unsupported literal type {other:?}"),
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn literal_roundtrip_f32() {
+    fn constructors_and_shapes() {
         let t = Tensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect());
-        let lit = t.to_literal().unwrap();
-        let back = Tensor::from_literal(&lit).unwrap();
-        assert_eq!(back, t);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        let z = Tensor::zeros_i32(vec![4]);
+        assert_eq!(z.as_i32().unwrap(), &[0, 0, 0, 0]);
     }
 
     #[test]
-    fn literal_roundtrip_i32() {
-        let t = Tensor::i32(vec![4], vec![5, -1, 0, 9]);
-        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
-        assert_eq!(back, t);
-    }
-
-    #[test]
-    fn literal_roundtrip_scalar() {
-        let t = Tensor::scalar_f32(3.25);
-        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
-        assert_eq!(back.item_f32().unwrap(), 3.25);
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar_f32(3.25).item_f32().unwrap(), 3.25);
+        assert!(Tensor::zeros_f32(vec![2]).item_f32().is_err());
     }
 
     #[test]
@@ -179,5 +178,13 @@ mod tests {
         let t = Tensor::zeros_f32(vec![2]);
         assert!(t.as_i32().is_err());
         assert!(t.as_f32().is_ok());
+        let mut t = t;
+        assert!(t.as_f32_mut().is_ok());
+    }
+
+    #[test]
+    fn dtype_codes_stable() {
+        assert_eq!(dtype_code(&Tensor::scalar_f32(0.0)), 0);
+        assert_eq!(dtype_code(&Tensor::scalar_i32(0)), 1);
     }
 }

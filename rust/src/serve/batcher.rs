@@ -93,7 +93,7 @@ impl Pending {
     pub fn wait(self) -> crate::Result<Response> {
         self.rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("request dropped (batch failed?)"))
+            .map_err(|_| crate::err!("request dropped (batch failed?)"))
     }
 }
 
@@ -145,9 +145,9 @@ impl Server {
         let (tx, rx) = mpsc::channel();
         self.tx
             .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("server is shut down"))?
+            .ok_or_else(|| crate::err!("server is shut down"))?
             .send(Job { request, submitted: Instant::now(), resp: tx })
-            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+            .map_err(|_| crate::err!("server is shut down"))?;
         Ok(Pending { rx })
     }
 
@@ -231,7 +231,7 @@ pub fn generate_batch(
     decision: RoutingDecision,
     requests: &[&Request],
 ) -> crate::Result<(Vec<Vec<u16>>, SessionReport)> {
-    anyhow::ensure!(requests.len() <= batch, "more requests than batch rows");
+    crate::ensure!(requests.len() <= batch, "more requests than batch rows");
     let mut session = DecodeSession::new(bundle, params, batch, decision)?;
     let vocab = bundle.manifest.model.vocab_size;
     let max_len = bundle.manifest.max_decode_len;

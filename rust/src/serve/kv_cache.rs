@@ -11,9 +11,9 @@
 
 /// Slot allocator + statistics for one layer's cache across a batch.
 ///
-/// The actual K/V tensors live as `xla::Literal`s owned by the decode
-/// session (they are executable inputs/outputs); this struct owns the
-/// *bookkeeping*: the write head per batch row and drop counters.
+/// The actual K/V tensors live as backend [`crate::runtime::Value`]s owned
+/// by the decode session (they are executable inputs/outputs); this struct
+/// owns the *bookkeeping*: the write head per batch row and drop counters.
 #[derive(Debug, Clone)]
 pub struct LayerKvCache {
     layer: usize,
@@ -152,5 +152,58 @@ mod tests {
         let (alloc, vanilla, ratio) = memory_savings(&[routed, full]);
         assert!(alloc < vanilla);
         assert!((ratio - (48.0 + 256.0) / 512.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compacted_cache_allocates_less_than_vanilla() {
+        // any routed layer whose compacted length is below the vanilla
+        // decode length must report a real byte saving (paper §4.1)
+        for (cache_len, vanilla_len) in [(12, 64), (48, 256), (1, 8)] {
+            let s = LayerKvCache::new(1, cache_len, 4, true)
+                .stats(32, vanilla_len);
+            assert!(s.bytes_allocated < s.bytes_vanilla, "{s:?}");
+            // bytes = 2 tensors (K+V) * batch * len * kd * 4 bytes
+            assert_eq!(s.bytes_allocated, 2 * 4 * cache_len * 32 * 4);
+            assert_eq!(s.bytes_vanilla, 2 * 4 * vanilla_len * 32 * 4);
+        }
+        // a full-length cache saves nothing
+        let s = LayerKvCache::new(0, 64, 4, false).stats(32, 64);
+        assert_eq!(s.bytes_allocated, s.bytes_vanilla);
+    }
+
+    #[test]
+    fn occupancy_accounts_per_row() {
+        // rows fill independently; occupancy is the mean fill fraction
+        let mut c = LayerKvCache::new(2, 4, 4, true);
+        for _ in 0..4 {
+            c.try_alloc(0); // row 0: full
+        }
+        c.try_alloc(1); // row 1: 1/4
+        c.try_alloc(1);
+        // rows 2, 3 empty
+        let s = c.stats(16, 8);
+        let expect = (1.0 + 0.5 + 0.0 + 0.0) / 4.0;
+        assert!((s.occupancy - expect).abs() < 1e-12, "{s:?}");
+        assert_eq!(s.total_drops, 0);
+    }
+
+    #[test]
+    fn capacity_exceeded_drops_are_per_row_and_counted() {
+        // paper §3.1: once a block's cache is exhausted, further tokens
+        // are dropped from the block (routed around), per batch row
+        let mut c = LayerKvCache::new(1, 2, 3, true);
+        for _ in 0..5 {
+            c.try_alloc(0);
+        }
+        assert_eq!(c.used(0), 2);
+        // the other rows keep allocating
+        assert_eq!(c.try_alloc(1), Some(0));
+        assert_eq!(c.try_alloc(2), Some(0));
+        let s = c.stats(8, 16);
+        assert_eq!(s.total_drops, 3);
+        // reset clears both the write head and the drop count
+        c.reset_row(0);
+        assert_eq!(c.stats(8, 16).total_drops, 0);
+        assert_eq!(c.try_alloc(0), Some(0));
     }
 }

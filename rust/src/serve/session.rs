@@ -1,7 +1,9 @@
 //! One batched decode session over the layer-sliced executables.
 //!
-//! The session owns the per-layer KV-cache literals and the routing
-//! decisions. Per token, per routed block it:
+//! The session owns the per-layer KV-cache values and the routing
+//! decisions, and is written entirely against the backend-agnostic
+//! [`Executable`]/[`Value`] surface — it runs identically on the native
+//! CPU interpreter and on PJRT. Per token, per routed block it:
 //!   1. scores the token with the block's router (gate value, Eq. 1),
 //!   2. decides participation causally — predictor logit > 0 (paper §3.5
 //!      method 2) or router score > 0 (method 1),
@@ -14,11 +16,10 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use xla::Literal;
-
 use crate::config::ModelConfig;
 use crate::flops;
-use crate::runtime::{Bundle, Executable, Tensor};
+use crate::runtime::native::ops;
+use crate::runtime::{Backend, Bundle, Executable, Tensor, Value};
 
 use super::kv_cache::{CacheStats, LayerKvCache};
 
@@ -77,14 +78,15 @@ impl SessionReport {
 struct LayerState {
     routed: bool,
     cache_len: usize,
-    weights: Vec<Literal>, // attn_norm, wq, wk, wv, wo, mlp_norm, w1, w2
+    /// attn_norm, wq, wk, wv, wo, mlp_norm, w1, w2 — backend values.
+    weights: Vec<Value>,
     /// host-side router projection (scores = h . w); routing decisions are
     /// pure coordinator math — no device dispatch (§Perf iteration 1).
     router_w: Option<Vec<f32>>,
     /// host-side predictor MLP (w1 [D,H] row-major, b1 [H], w2 [H]).
     pred: Option<(Vec<f32>, Vec<f32>, Vec<f32>)>,
-    // cache literals: k, v, pos, valid
-    cache: [Literal; 4],
+    /// cache values: k, v, pos, valid
+    cache: [Value; 4],
     book: LayerKvCache,
 }
 
@@ -93,11 +95,12 @@ pub struct DecodeSession {
     cfg: ModelConfig,
     batch: usize,
     decision: RoutingDecision,
-    embed_exe: Arc<Executable>,
-    logits_exe: Arc<Executable>,
-    block_exes: HashMap<usize, Arc<Executable>>,
-    embed_lit: Literal,
-    final_norm_lit: Literal,
+    backend: Arc<dyn Backend>,
+    embed_exe: Arc<dyn Executable>,
+    logits_exe: Arc<dyn Executable>,
+    block_exes: HashMap<usize, Arc<dyn Executable>>,
+    embed_val: Value,
+    final_norm_val: Value,
     layers: Vec<LayerState>,
     /// next position per batch row.
     pos: Vec<i32>,
@@ -114,7 +117,7 @@ impl DecodeSession {
         decision: RoutingDecision,
     ) -> crate::Result<Self> {
         let cfg = bundle.manifest.model.clone();
-        anyhow::ensure!(
+        crate::ensure!(
             bundle.manifest.decode_batches.contains(&batch),
             "bundle {} has no decode executables for batch {batch} \
              (available: {:?})",
@@ -122,21 +125,22 @@ impl DecodeSession {
             bundle.manifest.decode_batches
         );
         let kd = cfg.n_heads * cfg.d_head;
+        let backend = bundle.backend().clone();
 
         let embed_idx = bundle.param_index("embed")?;
         let final_norm_idx = bundle.param_index("final_norm")?;
-        let embed_lit = params[embed_idx].to_literal()?;
-        let final_norm_lit = params[final_norm_idx].to_literal()?;
+        let embed_val = backend.upload(&params[embed_idx])?;
+        let final_norm_val = backend.upload(&params[final_norm_idx])?;
 
         let mut layers = Vec::with_capacity(cfg.n_layers);
-        let mut block_exes = HashMap::new();
+        let mut block_exes: HashMap<usize, Arc<dyn Executable>> = HashMap::new();
         for l in 0..cfg.n_layers {
             let idx = bundle.layer_param_indices(l);
-            let get = |name: &str| -> crate::Result<Literal> {
+            let get = |name: &str| -> crate::Result<Value> {
                 let i = *idx.get(name).ok_or_else(|| {
-                    anyhow::anyhow!("layer {l} missing param {name:?}")
+                    crate::err!("layer {l} missing param {name:?}")
                 })?;
-                params[i].to_literal()
+                backend.upload(&params[i])
             };
             let weights = vec![
                 get("attn_norm")?, get("wq")?, get("wk")?, get("wv")?,
@@ -144,12 +148,13 @@ impl DecodeSession {
             ];
             let routed = cfg.is_routed_block(l);
             let cache_len = bundle.manifest.cache_len(l)?;
-            block_exes.entry(cache_len).or_insert(
-                bundle.block_decode(batch, cache_len)?,
-            );
+            if !block_exes.contains_key(&cache_len) {
+                block_exes
+                    .insert(cache_len, bundle.block_decode(batch, cache_len)?);
+            }
             let host = |name: &str| -> crate::Result<Vec<f32>> {
                 let i = *idx.get(name).ok_or_else(|| {
-                    anyhow::anyhow!("layer {l} missing param {name:?}")
+                    crate::err!("layer {l} missing param {name:?}")
                 })?;
                 Ok(params[i].as_f32()?.to_vec())
             };
@@ -160,10 +165,10 @@ impl DecodeSession {
                 None
             };
             let cache = [
-                Tensor::zeros_f32(vec![batch, cache_len, kd]).to_literal()?,
-                Tensor::zeros_f32(vec![batch, cache_len, kd]).to_literal()?,
-                Tensor::zeros_i32(vec![batch, cache_len]).to_literal()?,
-                Tensor::zeros_f32(vec![batch, cache_len]).to_literal()?,
+                backend.upload(&Tensor::zeros_f32(vec![batch, cache_len, kd]))?,
+                backend.upload(&Tensor::zeros_f32(vec![batch, cache_len, kd]))?,
+                backend.upload(&Tensor::zeros_i32(vec![batch, cache_len]))?,
+                backend.upload(&Tensor::zeros_f32(vec![batch, cache_len]))?,
             ];
             layers.push(LayerState {
                 routed,
@@ -180,13 +185,14 @@ impl DecodeSession {
             embed_exe: bundle.embed_step(batch)?,
             logits_exe: bundle.logits_head(batch)?,
             block_exes,
-            embed_lit,
-            final_norm_lit,
+            embed_val,
+            final_norm_val,
             layers,
             pos: vec![0; batch],
             cfg,
             batch,
             decision,
+            backend,
             report: SessionReport::default(),
             last_trace: StepTrace::default(),
         })
@@ -224,19 +230,23 @@ impl DecodeSession {
     /// (inactive rows are routed around every routed block and their
     /// logits ignored). Returns the logits, row-major [batch, vocab].
     pub fn step(&mut self, tokens: &[i32], active: &[bool]) -> crate::Result<Vec<f32>> {
-        anyhow::ensure!(tokens.len() == self.batch && active.len() == self.batch);
+        crate::ensure!(tokens.len() == self.batch && active.len() == self.batch);
         let t0 = Instant::now();
         let mut stats = StepStats::default();
         self.last_trace = StepTrace::default();
 
-        let tok_lit = Tensor::i32(vec![self.batch], tokens.to_vec()).to_literal()?;
-        let outs = self
-            .embed_exe
-            .run_literals(&[&tok_lit, &self.embed_lit])?;
-        let mut h = outs.into_iter().next().unwrap();
+        let tok_val = self
+            .backend
+            .upload(&Tensor::i32(vec![self.batch], tokens.to_vec()))?;
+        let outs = self.embed_exe.run(&[&tok_val, &self.embed_val])?;
+        let mut h = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| crate::err!("embed step returned no output"))?;
 
-        let pos_lit =
-            Tensor::i32(vec![self.batch], self.pos.clone()).to_literal()?;
+        let pos_val = self
+            .backend
+            .upload(&Tensor::i32(vec![self.batch], self.pos.clone()))?;
 
         let mut ctx_per_layer = Vec::with_capacity(self.layers.len());
         let mut participates_any = Vec::with_capacity(self.layers.len());
@@ -245,15 +255,13 @@ impl DecodeSession {
             // --- routing decision (causal; pure host math, no dispatch) ---
             let (gates, participate) = if self.layers[li].routed {
                 let d = self.cfg.d_model;
-                let h_host = Tensor::from_literal(&h)?;
+                let h_host = self.backend.download(&h)?;
                 let h_host = h_host.as_f32()?;
                 let router_w = self.layers[li].router_w.as_ref().unwrap();
-                let scores: Vec<f32> = (0..self.batch)
-                    .map(|b| {
-                        let row = &h_host[b * d..(b + 1) * d];
-                        row.iter().zip(router_w).map(|(x, w)| x * w).sum()
-                    })
-                    .collect();
+                // same kernels the train-time forward uses — the serving
+                // decision cannot diverge from the trained behaviour
+                let scores =
+                    ops::router_scores(h_host, router_w, self.batch, d);
                 let decide: Vec<bool> = match self.decision {
                     RoutingDecision::AlwaysOn => vec![true; self.batch],
                     RoutingDecision::RouterThreshold => {
@@ -262,26 +270,14 @@ impl DecodeSession {
                     RoutingDecision::Predictor => {
                         let (w1, b1, w2) =
                             self.layers[li].pred.as_ref().ok_or_else(|| {
-                                anyhow::anyhow!(
+                                crate::err!(
                                     "predictor routing requested but bundle \
                                      has no predictor params"
                                 )
                             })?;
-                        let hidden = b1.len();
-                        (0..self.batch)
-                            .map(|b| {
-                                let row = &h_host[b * d..(b + 1) * d];
-                                // logit = w2 . relu(W1^T h + b1)
-                                let mut logit = 0f32;
-                                for j in 0..hidden {
-                                    let mut acc = b1[j];
-                                    for (di, &x) in row.iter().enumerate() {
-                                        acc += x * w1[di * hidden + j];
-                                    }
-                                    logit += w2[j] * acc.max(0.0);
-                                }
-                                logit > 0.0
-                            })
+                        ops::predictor_logits(h_host, w1, b1, w2, self.batch, d)
+                            .iter()
+                            .map(|&logit| logit > 0.0)
                             .collect()
                     }
                 };
@@ -328,22 +324,24 @@ impl DecodeSession {
             stats.blocks_invoked += 1;
 
             // --- block invocation ---
-            let gate_lit =
-                Tensor::f32(vec![self.batch], gates.clone()).to_literal()?;
-            let part_lit =
-                Tensor::f32(vec![self.batch], part_f).to_literal()?;
-            let slot_lit =
-                Tensor::i32(vec![self.batch], slots).to_literal()?;
+            let gate_val = self
+                .backend
+                .upload(&Tensor::f32(vec![self.batch], gates.clone()))?;
+            let part_val = self
+                .backend
+                .upload(&Tensor::f32(vec![self.batch], part_f))?;
+            let slot_val =
+                self.backend.upload(&Tensor::i32(vec![self.batch], slots))?;
             let exe = &self.block_exes[&self.layers[li].cache_len];
             let layer = &self.layers[li];
-            let mut args: Vec<&Literal> = vec![
-                &h, &pos_lit, &gate_lit, &part_lit, &slot_lit,
+            let mut args: Vec<&Value> = vec![
+                &h, &pos_val, &gate_val, &part_val, &slot_val,
                 &layer.cache[0], &layer.cache[1], &layer.cache[2],
                 &layer.cache[3],
             ];
             args.extend(layer.weights.iter());
-            let mut outs = exe.run_literals(&args)?;
-            anyhow::ensure!(outs.len() == 5, "block returned {} outs", outs.len());
+            let mut outs = exe.run(&args)?;
+            crate::ensure!(outs.len() == 5, "block returned {} outs", outs.len());
             let valid = outs.pop().unwrap();
             let posc = outs.pop().unwrap();
             let v = outs.pop().unwrap();
@@ -355,8 +353,8 @@ impl DecodeSession {
         // --- head ---
         let outs = self
             .logits_exe
-            .run_literals(&[&h, &self.final_norm_lit, &self.embed_lit])?;
-        let logits = Tensor::from_literal(&outs[0])?;
+            .run(&[&h, &self.final_norm_val, &self.embed_val])?;
+        let logits = self.backend.download(&outs[0])?;
 
         // --- accounting (per active token, batch-aggregated) ---
         let n_active = active.iter().filter(|&&a| a).count() as f64;

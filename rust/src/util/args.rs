@@ -30,7 +30,7 @@ impl Args {
                     out.flags.push(rest.to_string());
                 } else {
                     let v = it.next().ok_or_else(|| {
-                        anyhow::anyhow!("option --{rest} expects a value")
+                        crate::err!("option --{rest} expects a value")
                     })?;
                     out.options.insert(rest.to_string(), v);
                 }
@@ -58,7 +58,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+                .map_err(|e| crate::err!("--{name} {v:?}: {e}")),
         }
     }
 
@@ -71,7 +71,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+                .map_err(|e| crate::err!("--{name} {v:?}: {e}")),
         }
     }
 
@@ -79,7 +79,7 @@ impl Args {
         match self.opt(name) {
             None => Ok(None),
             Some(v) => Ok(Some(v.parse().map_err(|e| {
-                anyhow::anyhow!("--{name} {v:?}: {e}")
+                crate::err!("--{name} {v:?}: {e}")
             })?)),
         }
     }
@@ -89,7 +89,7 @@ impl Args {
         self.positional
             .get(index)
             .map(|s| s.as_str())
-            .ok_or_else(|| anyhow::anyhow!("missing {what} argument"))
+            .ok_or_else(|| crate::err!("missing {what} argument"))
     }
 }
 

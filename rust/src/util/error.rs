@@ -1,0 +1,137 @@
+//! In-crate error type (offline substitute for `anyhow`).
+//!
+//! The whole crate threads [`crate::Result`] around; errors here are
+//! message-strings with context prepended at each layer (the same ergonomic
+//! shape `anyhow` gives), built by the crate-root macros [`crate::err!`],
+//! [`crate::bail!`] and [`crate::ensure!`]. Keeping the type in-crate means
+//! the default build has zero external dependencies.
+
+use std::fmt;
+
+/// A message-carrying error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(format!("io error: {e}"))
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Self {
+        Error::msg(format!("format error: {e}"))
+    }
+}
+
+impl From<std::string::FromUtf8Error> for Error {
+    fn from(e: std::string::FromUtf8Error) -> Self {
+        Error::msg(format!("utf-8 error: {e}"))
+    }
+}
+
+impl From<std::str::Utf8Error> for Error {
+    fn from(e: std::str::Utf8Error) -> Self {
+        Error::msg(format!("utf-8 error: {e}"))
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::msg(format!("parse error: {e}"))
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::msg(format!("parse error: {e}"))
+    }
+}
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Build an [`Error`](crate::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::Error) built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        crate::ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = crate::err!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        assert_eq!(fails(true).unwrap(), 7);
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn ensure_without_message_names_condition() {
+        fn check(v: usize) -> Result<()> {
+            crate::ensure!(v < 2);
+            Ok(())
+        }
+        assert!(check(1).is_ok());
+        let msg = check(5).unwrap_err().to_string();
+        assert!(msg.contains("v < 2"), "{msg}");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn open() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(open().is_err());
+    }
+
+}

@@ -51,7 +51,7 @@ impl Json {
     /// `get` that errors with the key name (manifest parsing ergonomics).
     pub fn req(&self, key: &str) -> crate::Result<&Json> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing JSON key {key:?}"))
+            .ok_or_else(|| crate::err!("missing JSON key {key:?}"))
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -102,14 +102,14 @@ impl Json {
         Ok(self
             .req(key)?
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("{key:?} is not a string"))?
+            .ok_or_else(|| crate::err!("{key:?} is not a string"))?
             .to_string())
     }
 
     pub fn req_f64(&self, key: &str) -> crate::Result<f64> {
         self.req(key)?
             .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("{key:?} is not a number"))
+            .ok_or_else(|| crate::err!("{key:?} is not a number"))
     }
 
     pub fn req_usize(&self, key: &str) -> crate::Result<usize> {
@@ -119,7 +119,7 @@ impl Json {
     pub fn req_bool(&self, key: &str) -> crate::Result<bool> {
         self.req(key)?
             .as_bool()
-            .ok_or_else(|| anyhow::anyhow!("{key:?} is not a bool"))
+            .ok_or_else(|| crate::err!("{key:?} is not a bool"))
     }
 
     // ---- parse ----
@@ -128,7 +128,7 @@ impl Json {
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
-        anyhow::ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
+        crate::ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
         Ok(v)
     }
 
@@ -248,11 +248,11 @@ impl<'a> Parser<'a> {
         self.bytes
             .get(self.pos)
             .copied()
-            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))
+            .ok_or_else(|| crate::err!("unexpected end of JSON"))
     }
 
     fn expect(&mut self, b: u8) -> crate::Result<()> {
-        anyhow::ensure!(
+        crate::ensure!(
             self.peek()? == b,
             "expected {:?} at byte {}, found {:?}",
             b as char, self.pos, self.peek()? as char
@@ -274,7 +274,7 @@ impl<'a> Parser<'a> {
     }
 
     fn keyword(&mut self, word: &str, v: Json) -> crate::Result<Json> {
-        anyhow::ensure!(
+        crate::ensure!(
             self.bytes[self.pos..].starts_with(word.as_bytes()),
             "bad keyword at byte {}", self.pos
         );
@@ -305,7 +305,7 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Obj(pairs));
                 }
-                other => anyhow::bail!(
+                other => crate::bail!(
                     "expected ',' or '}}' at byte {}, found {:?}",
                     self.pos, other as char
                 ),
@@ -331,7 +331,7 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Arr(items));
                 }
-                other => anyhow::bail!(
+                other => crate::bail!(
                     "expected ',' or ']' at byte {}, found {:?}",
                     self.pos, other as char
                 ),
@@ -363,12 +363,12 @@ impl<'a> Parser<'a> {
                             let cp = self.hex4()?;
                             // surrogate pair?
                             if (0xD800..0xDC00).contains(&cp) {
-                                anyhow::ensure!(
+                                crate::ensure!(
                                     self.peek()? == b'\\',
                                     "lone high surrogate"
                                 );
                                 self.pos += 1;
-                                anyhow::ensure!(
+                                crate::ensure!(
                                     self.peek()? == b'u',
                                     "lone high surrogate"
                                 );
@@ -379,16 +379,16 @@ impl<'a> Parser<'a> {
                                     + (lo - 0xDC00);
                                 out.push(
                                     char::from_u32(c).ok_or_else(|| {
-                                        anyhow::anyhow!("bad surrogate pair")
+                                        crate::err!("bad surrogate pair")
                                     })?,
                                 );
                             } else {
                                 out.push(char::from_u32(cp).ok_or_else(
-                                    || anyhow::anyhow!("bad \\u escape"),
+                                    || crate::err!("bad \\u escape"),
                                 )?);
                             }
                         }
-                        other => anyhow::bail!(
+                        other => crate::bail!(
                             "bad escape \\{:?}", other as char
                         ),
                     }
@@ -402,12 +402,12 @@ impl<'a> Parser<'a> {
                         _ => 4,
                     };
                     let start = self.pos - 1;
-                    anyhow::ensure!(
+                    crate::ensure!(
                         start + len <= self.bytes.len(),
                         "truncated UTF-8"
                     );
                     let s = std::str::from_utf8(&self.bytes[start..start + len])
-                        .map_err(|e| anyhow::anyhow!("bad UTF-8: {e}"))?;
+                        .map_err(|e| crate::err!("bad UTF-8: {e}"))?;
                     out.push_str(s);
                     self.pos = start + len;
                 }
@@ -416,11 +416,11 @@ impl<'a> Parser<'a> {
     }
 
     fn hex4(&mut self) -> crate::Result<u32> {
-        anyhow::ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u");
+        crate::ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u");
         let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
-            .map_err(|e| anyhow::anyhow!("bad \\u: {e}"))?;
+            .map_err(|e| crate::err!("bad \\u: {e}"))?;
         let v = u32::from_str_radix(s, 16)
-            .map_err(|e| anyhow::anyhow!("bad \\u: {e}"))?;
+            .map_err(|e| crate::err!("bad \\u: {e}"))?;
         self.pos += 4;
         Ok(v)
     }
@@ -436,7 +436,7 @@ impl<'a> Parser<'a> {
         let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         let n: f64 = s
             .parse()
-            .map_err(|e| anyhow::anyhow!("bad number {s:?} at {start}: {e}"))?;
+            .map_err(|e| crate::err!("bad number {s:?} at {start}: {e}"))?;
         Ok(Json::Num(n))
     }
 }

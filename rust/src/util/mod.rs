@@ -1,11 +1,13 @@
 //! In-repo substrates that would normally be external crates (this build
-//! is fully offline): JSON codec, CLI argument parsing, micro-bench
+//! is fully offline): error type, JSON codec, CLI parsing, micro-bench
 //! harness, and a minimal property-testing loop.
 
 pub mod args;
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod prop;
 
 pub use args::Args;
+pub use error::{Error, Result};
 pub use json::Json;

@@ -1,30 +1,68 @@
-//! Integration tests over the real artifacts (require `make artifacts`).
+//! Integration tests over the full L3 stack on the native CPU backend.
 //!
-//! Exercises the full L3 stack against the AOT executables: bundle ABI
-//! verification, training-step execution + determinism, checkpoint
-//! resume, held-out evaluation under all routing modes, the layer-sliced
-//! decode runtime (skip semantics, capacity drops, cache accounting), and
-//! the batching server. Tests skip gracefully (with a note) when the
-//! artifacts are absent so `cargo test` stays useful pre-`make artifacts`.
+//! Every test runs against a *synthetic in-memory bundle* — no artifacts,
+//! no Python, no network, nothing skipped. Exercises: bundle ABI
+//! verification, training-step execution + determinism + actual learning,
+//! checkpoint resume, held-out evaluation under all routing modes, the
+//! layer-sliced decode runtime (skip semantics, capacity drops, cache
+//! accounting), and the batching server. The same call sites drive the
+//! PJRT backend when built with `--features pjrt` and real artifacts.
 
-use std::path::Path;
 use std::sync::Arc;
 
-use mod_transformer::config::ServeConfig;
+use mod_transformer::config::{ModelConfig, RoutingMode, ServeConfig, TrainConfig};
 use mod_transformer::coordinator::{checkpoint, Trainer, TrainerOptions};
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus, BOS};
-use mod_transformer::runtime::{Bundle, Engine};
+use mod_transformer::runtime::{Bundle, SyntheticSpec};
 use mod_transformer::serve::batcher::{generate_batch, Request, Server};
 use mod_transformer::serve::{DecodeSession, RoutingDecision};
 
-fn open(name: &str) -> Option<Arc<Bundle>> {
-    let dir = Path::new("artifacts").join(name);
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts/{name} missing (run `make artifacts`)");
-        return None;
+const SEQ: usize = 32;
+const MAX_DECODE: usize = 64;
+
+fn test_model() -> ModelConfig {
+    ModelConfig {
+        vocab_size: 259,
+        d_model: 32,
+        n_layers: 4,
+        n_heads: 2,
+        d_head: 16,
+        d_ff: 64,
+        seq_len: SEQ,
+        routing: RoutingMode::ModInterleaved,
+        capacity_frac: 0.125,
+        train_predictor: true,
+        predictor_hidden: 16,
+        ..Default::default()
     }
-    let engine = Arc::new(Engine::cpu().expect("pjrt cpu client"));
-    Some(Arc::new(Bundle::open(engine, &dir).expect("bundle opens")))
+}
+
+fn test_train() -> TrainConfig {
+    TrainConfig {
+        batch_size: 4,
+        warmup_steps: 5,
+        total_steps: 200,
+        ..Default::default()
+    }
+}
+
+/// A synthetic native bundle — the native-backend analogue of opening
+/// `artifacts/mod_tiny`, scaled down so the whole suite stays fast.
+fn open(name: &str) -> Arc<Bundle> {
+    Arc::new(
+        Bundle::native(
+            name,
+            &test_model(),
+            &test_train(),
+            &SyntheticSpec {
+                seed: 7,
+                decode_batches: vec![1, 4],
+                max_decode_len: MAX_DECODE,
+                ..Default::default()
+            },
+        )
+        .expect("synthetic bundle"),
+    )
 }
 
 fn data_for(bundle: &Arc<Bundle>, seed: u64) -> BatchIter {
@@ -37,9 +75,9 @@ fn data_for(bundle: &Arc<Bundle>, seed: u64) -> BatchIter {
 
 #[test]
 fn bundle_abi_is_consistent() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let m = &bundle.manifest;
-    // rust-side param accounting matches the python-side manifest
+    // rust-side param accounting matches the manifest
     assert_eq!(m.model.n_params(), m.n_params);
     // every routed layer has a compacted cache, full layers a full cache
     for l in 0..m.model.n_layers {
@@ -50,8 +88,8 @@ fn bundle_abi_is_consistent() {
             assert_eq!(cl, m.max_decode_len);
         }
     }
-    // init checkpoint matches the ABI exactly
-    let params = bundle.init_params().expect("init params load");
+    // init params match the ABI exactly
+    let params = bundle.init_params().expect("init params");
     assert_eq!(params.len(), m.params.len());
     for (t, spec) in params.iter().zip(&m.params) {
         assert_eq!(t.shape(), spec.shape.as_slice(), "{}", spec.name);
@@ -60,7 +98,7 @@ fn bundle_abi_is_consistent() {
 
 #[test]
 fn train_step_runs_and_is_deterministic() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let run = |steps: u64| -> Vec<f32> {
         let mut trainer =
             Trainer::new(bundle.clone(), data_for(&bundle, 7), None).unwrap();
@@ -73,18 +111,19 @@ fn train_step_runs_and_is_deterministic() {
     };
     let a = run(2);
     let b = run(2);
+    assert_eq!(a.len(), bundle.manifest.metrics.len());
     assert!(a.iter().all(|v| v.is_finite()), "{a:?}");
     assert_eq!(a, b, "same seed + same steps must reproduce exactly");
 }
 
 #[test]
 fn training_reduces_loss() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let mut trainer =
         Trainer::new(bundle.clone(), data_for(&bundle, 7), None).unwrap();
     let mut first_ce = f32::NAN;
     let mut last_ce = f32::NAN;
-    for s in 0..12 {
+    for s in 0..15 {
         let batch = data_for(&bundle, 7).batch_at(s);
         let m = trainer.train_one(&batch).unwrap();
         if s == 0 {
@@ -100,9 +139,10 @@ fn training_reduces_loss() {
 
 #[test]
 fn checkpoint_resume_is_bit_exact() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let dir = std::env::temp_dir().join("mod_resume_test");
     let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
 
     // run 4 steps straight through
     let mut t1 =
@@ -133,7 +173,7 @@ fn checkpoint_resume_is_bit_exact() {
 
 #[test]
 fn eval_modes_all_run() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let trainer =
         Trainer::new(bundle.clone(), data_for(&bundle, 7), None).unwrap();
     for mode in ["topk", "router", "predictor"] {
@@ -151,7 +191,7 @@ fn eval_modes_all_run() {
 
 #[test]
 fn decode_skips_blocks_and_tracks_caches() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let params = bundle.init_params().unwrap();
     let mut session = DecodeSession::new(
         &bundle, &params, 1, RoutingDecision::RouterThreshold,
@@ -170,15 +210,22 @@ fn decode_skips_blocks_and_tracks_caches() {
     }
     let rep = session.report();
     assert_eq!(rep.steps, 32);
-    // full blocks always invoked; routed blocks sometimes skipped
+    // every block is either invoked or skipped, per step
+    assert_eq!(
+        rep.blocks_invoked + rep.blocks_skipped,
+        (bundle.manifest.model.n_layers * 32) as u64
+    );
+    // full blocks always invoked; routed blocks must skip sometimes —
+    // MoD's decode saving is a real non-invocation (acceptance: >0)
     assert!(rep.blocks_invoked >= 2 * 32, "{rep:?}");
+    assert!(rep.blocks_skipped > 0, "router never skipped: {rep:?}");
     // cache occupancy: full layers hold exactly one slot per step
     for cs in &rep.cache_stats {
         if !cs.routed {
-            assert!((cs.occupancy - 32.0 / 256.0).abs() < 1e-9, "{cs:?}");
+            let expect = 32.0 / cs.cache_len as f64;
+            assert!((cs.occupancy - expect).abs() < 1e-9, "{cs:?}");
         } else {
-            // routed layers hold at most as many as steps
-            assert!(cs.occupancy <= 32.0 / cs.cache_len as f64 + 1e-9);
+            assert!(cs.occupancy <= 1.0 + 1e-9, "{cs:?}");
         }
     }
     // compacted caches save memory vs vanilla
@@ -189,7 +236,7 @@ fn decode_skips_blocks_and_tracks_caches() {
 
 #[test]
 fn decode_always_on_never_skips() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let params = bundle.init_params().unwrap();
     let mut session =
         DecodeSession::new(&bundle, &params, 1, RoutingDecision::AlwaysOn)
@@ -206,15 +253,17 @@ fn decode_always_on_never_skips() {
 
 #[test]
 fn decode_capacity_drops_when_cache_full() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let params = bundle.init_params().unwrap();
     // AlwaysOn routes every token through every block; the routed layers'
-    // caches (48 slots) overflow after 48 steps -> drops (paper 3.1).
+    // compacted caches (12 slots here) overflow -> drops (paper §3.1).
     let mut session =
         DecodeSession::new(&bundle, &params, 1, RoutingDecision::AlwaysOn)
             .unwrap();
+    let routed_cache = bundle.manifest.cache_len(1).unwrap();
+    assert!(routed_cache < 20, "test assumes a small compacted cache");
     let mut tok = BOS as i32;
-    for _ in 0..60 {
+    for _ in 0..(routed_cache + 8) {
         session.step(&[tok], &[true]).unwrap();
         tok = 2;
     }
@@ -228,8 +277,26 @@ fn decode_capacity_drops_when_cache_full() {
 }
 
 #[test]
+fn decode_predictor_decision_runs() {
+    let bundle = open("mod_tiny");
+    let params = bundle.init_params().unwrap();
+    let mut session =
+        DecodeSession::new(&bundle, &params, 1, RoutingDecision::Predictor)
+            .unwrap();
+    let mut tok = BOS as i32;
+    for _ in 0..8 {
+        let logits = session.step(&[tok], &[true]).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        tok = 3;
+    }
+    let rep = session.report();
+    assert_eq!(rep.steps, 8);
+    assert!(rep.blocks_invoked >= 2 * 8);
+}
+
+#[test]
 fn batched_generation_matches_request_count() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let params = bundle.init_params().unwrap();
     let reqs: Vec<Request> = (0..3)
         .map(|i| Request {
@@ -255,7 +322,7 @@ fn batched_generation_matches_request_count() {
 #[test]
 fn greedy_batch_rows_match_single_row_decode() {
     // batching must not change a row's output (greedy, same prompt)
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let params = bundle.init_params().unwrap();
     let req = Request {
         prompt: vec![BOS, 5, 10, 20],
@@ -281,7 +348,7 @@ fn greedy_batch_rows_match_single_row_decode() {
 
 #[test]
 fn server_round_trip() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let params = Arc::new(bundle.init_params().unwrap());
     let server = Server::spawn(
         bundle.clone(),
@@ -313,7 +380,7 @@ fn server_round_trip() {
 
 #[test]
 fn trainer_rejects_mismatched_data_shape() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let bad = BatchIter::new(
         MarkovCorpus::new(CorpusSpec::default(), 7),
         2, // wrong batch size
@@ -323,10 +390,10 @@ fn trainer_rejects_mismatched_data_shape() {
 }
 
 #[test]
-fn checkpoint_format_interops_with_python_abi() {
-    // MODCKPT written by rust parses the same fields python wrote in
-    // init.ckpt — verified by reloading the init checkpoint and re-saving.
-    let Some(bundle) = open("mod_tiny") else { return };
+fn checkpoint_format_roundtrips_through_abi() {
+    // MODCKPT written by the coordinator reloads into the exact same
+    // ABI-ordered tensors (the same codec python reads/writes).
+    let bundle = open("mod_tiny");
     let params = bundle.init_params().unwrap();
     let named = bundle.named_params(&params);
     let dir = std::env::temp_dir().join("mod_ckpt_interop");
@@ -340,7 +407,7 @@ fn checkpoint_format_interops_with_python_abi() {
 
 #[test]
 fn full_run_writes_metrics_and_checkpoint() {
-    let Some(bundle) = open("mod_tiny") else { return };
+    let bundle = open("mod_tiny");
     let dir = std::env::temp_dir().join("mod_full_run_test");
     let _ = std::fs::remove_dir_all(&dir);
     let mut trainer =
@@ -361,4 +428,43 @@ fn full_run_writes_metrics_and_checkpoint() {
             .unwrap();
     assert_eq!(rows.len(), 3);
     assert!(dir.join("metrics.csv").exists());
+}
+
+#[test]
+fn vanilla_bundle_decodes_without_routing() {
+    // a no-routing config: every cache full-length, nothing skipped
+    let model = ModelConfig {
+        routing: RoutingMode::None,
+        train_predictor: false,
+        ..test_model()
+    };
+    let bundle = Arc::new(
+        Bundle::native(
+            "baseline_tiny",
+            &model,
+            &test_train(),
+            &SyntheticSpec {
+                seed: 7,
+                decode_batches: vec![1, 4],
+                max_decode_len: MAX_DECODE,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    assert!(bundle.manifest.routed_layers.is_empty());
+    let params = bundle.init_params().unwrap();
+    let mut session =
+        DecodeSession::new(&bundle, &params, 1, RoutingDecision::RouterThreshold)
+            .unwrap();
+    for t in 0..6 {
+        let logits = session.step(&[t as i32 + 1], &[true]).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+    let rep = session.report();
+    assert_eq!(rep.blocks_skipped, 0);
+    let (alloc, vanilla, ratio) =
+        mod_transformer::serve::kv_cache::memory_savings(&rep.cache_stats);
+    assert_eq!(alloc, vanilla);
+    assert!((ratio - 1.0).abs() < 1e-12);
 }
