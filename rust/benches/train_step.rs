@@ -6,13 +6,19 @@
 //! plus the L3-side batch-synthesis cost (shows the data pipeline is not
 //! the bottleneck — EXPERIMENTS.md §Perf).
 //!
-//! Regenerates: fig 3 "steps/s" column, fig 4 step-speed ordering.
+//! Regenerates: fig 3 "steps/s" column, fig 4 step-speed ordering, and the
+//! fig 7 MoE/MoDE step cost on the native expert interpreter. Results land
+//! in `runs/bench/train_step.json` and the repo-root `BENCH_native.json`
+//! perf ledger.
 //! Run: `cargo bench --bench train_step` (AOT artifacts if present,
 //! synthetic native bundles otherwise).
 
+use std::sync::Arc;
+
+use mod_transformer::config::{FfMode, ModelConfig, TrainConfig};
 use mod_transformer::coordinator::Trainer;
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
-use mod_transformer::runtime::{open_bundle, Bundle};
+use mod_transformer::runtime::{open_bundle, Bundle, SyntheticSpec};
 use mod_transformer::util::bench::Bench;
 
 fn main() -> mod_transformer::Result<()> {
@@ -47,6 +53,49 @@ fn main() -> mod_transformer::Result<()> {
         bench.case(
             &format!("{bundle_name}/train_step"),
             Some((b * s) as f64), // tokens per step
+            || {
+                let batch = trainer_data_batch(&bundle, step);
+                trainer.train_one(&batch).expect("train step");
+                step += 1;
+            },
+        );
+    }
+
+    // fig 7 expert-choice MoE / integrated MoDE: the native experts
+    // interpreter's hot path (router scores → per-expert top-k gather →
+    // GELU MLP → gated scatter, forward and backward)
+    for (name, ff_mode) in [
+        ("fig7_moe", FfMode::Moe),
+        ("fig7_mode_integrated", FfMode::ModeIntegrated),
+    ] {
+        let model = ModelConfig {
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 16,
+            d_ff: 128,
+            seq_len: 64,
+            ff_mode,
+            n_experts: 4,
+            expert_capacity_frac: 0.25,
+            ..Default::default()
+        };
+        let train = TrainConfig { batch_size: 4, ..Default::default() };
+        let bundle = Arc::new(Bundle::native(
+            name,
+            &model,
+            &train,
+            &SyntheticSpec::default(),
+        )?);
+        let b = train.batch_size;
+        let s = model.seq_len;
+        let corpus = MarkovCorpus::new(CorpusSpec::default(), 7);
+        let data = BatchIter::new(corpus, b, s);
+        let mut trainer = Trainer::new(bundle.clone(), data, None)?;
+        let mut step = 0u64;
+        bench.case(
+            &format!("{name}/train_step"),
+            Some((b * s) as f64),
             || {
                 let batch = trainer_data_batch(&bundle, step);
                 trainer.train_one(&batch).expect("train step");

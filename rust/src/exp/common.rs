@@ -71,6 +71,9 @@ pub struct ExpContext {
     pub runs_dir: PathBuf,
     pub scale: Scale,
     pub corpus_seed: u64,
+    /// Overrides [`Scale::steps`] for fixed-step harnesses (CLI
+    /// `--steps N`; CI smoke jobs use tiny values here).
+    pub steps_override: Option<u64>,
 }
 
 impl ExpContext {
@@ -82,7 +85,13 @@ impl ExpContext {
             runs_dir: repo_root.join("runs"),
             scale,
             corpus_seed: 7,
+            steps_override: None,
         })
+    }
+
+    /// Steps for fixed-step comparisons (the `--steps` override wins).
+    pub fn steps(&self) -> u64 {
+        self.steps_override.unwrap_or_else(|| self.scale.steps())
     }
 
     /// Locate the repo root: walk up from cwd until the workspace (or the

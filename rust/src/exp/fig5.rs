@@ -54,7 +54,7 @@ pub fn run(ctx: &ExpContext) -> crate::Result<Fig5Result> {
     };
     let train = TrainConfig {
         batch_size: 8,
-        total_steps: ctx.scale.steps() as usize,
+        total_steps: ctx.steps() as usize,
         ..Default::default()
     };
     let run_dir = ctx.runs_dir.join("fig5");

@@ -68,7 +68,7 @@ impl Fig6Result {
 
 pub fn run(ctx: &ExpContext) -> crate::Result<Fig6Result> {
     let seq = ctx.scale.seq_len();
-    let steps = ctx.scale.steps();
+    let steps = ctx.steps();
     let run_dir = ctx.runs_dir.join("fig6");
     let dims = |routing| ModelConfig {
         d_model: 64,

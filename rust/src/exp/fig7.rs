@@ -4,8 +4,10 @@
 //! around blocks whose MLP is an MoE) and *integrated* (a no-op expert
 //! among the real experts). Findings: both MoDE variants beat the plain
 //! MoE at equal FLOPs, and integrated beats emulating residual routing by
-//! starving expert capacity. Here: all four + dense baseline at fixed
-//! steps on the synthetic corpus.
+//! starving expert capacity. Here: dense baseline, MoE, MoD, staged MoDE,
+//! integrated MoDE and the capacity-starved control at fixed steps on the
+//! synthetic corpus — every variant on the native expert-choice
+//! interpreter (`runtime::native::experts`), no artifacts.
 
 use crate::util::json::Json;
 
@@ -78,12 +80,19 @@ fn variants(seq: usize) -> Vec<(String, ModelConfig)> {
             ff_mode: FfMode::ModeIntegrated,
             ..base.clone()
         }),
+        // control: emulate residual routing by *starving* expert capacity
+        // instead of the explicit no-op expert (paper: clearly worse)
+        ("moe_starved".into(), ModelConfig {
+            ff_mode: FfMode::Moe,
+            expert_capacity_frac: 0.125,
+            ..base.clone()
+        }),
     ]
 }
 
 pub fn run(ctx: &ExpContext) -> crate::Result<Fig7Result> {
     let seq = ctx.scale.seq_len();
-    let steps = ctx.scale.steps();
+    let steps = ctx.steps();
     let run_dir = ctx.runs_dir.join("fig7");
     let train = TrainConfig {
         batch_size: 8,
@@ -92,20 +101,6 @@ pub fn run(ctx: &ExpContext) -> crate::Result<Fig7Result> {
     };
     let mut rows = Vec::new();
     for (name, model) in variants(seq) {
-        // MoE/MoDE feedforward needs compiled expert kernels; the native
-        // interpreter is dense-only, so skip those variants rather than
-        // aborting the whole figure mid-run (see ROADMAP open items).
-        if !matches!(model.ff_mode, FfMode::Dense)
-            && cfg!(not(feature = "pjrt"))
-        {
-            eprintln!(
-                "[fig7] skipping {name}: ff_mode {:?} is pjrt-only (add \
-                 the xla dep per rust/Cargo.toml, build artifacts, then \
-                 --features pjrt)",
-                model.ff_mode
-            );
-            continue;
-        }
         println!("[fig7] {name}: {} params", model.n_params());
         let (_trainer, outcome) = ctx.train_variant(
             &format!("fig7_{name}"),
@@ -160,5 +155,12 @@ pub fn print_summary(r: &Fig7Result) {
             staged.final_ce - moe.final_ce,
             integ.final_ce - moe.final_ce
         );
+        if let Some(starved) = get("moe_starved") {
+            println!(
+                "integrated no-op vs capacity-starved control ΔCE: {:+.4} \
+                 (paper: the explicit no-op expert wins)",
+                integ.final_ce - starved.final_ce
+            );
+        }
     }
 }

@@ -68,8 +68,12 @@ pub fn block_flops(cfg: &ModelConfig, c: usize, s: usize, routed: bool) -> Block
     let ff = match cfg.ff_mode {
         FfMode::Dense => 2.0 * 2.0 * cf * d * cfg.d_ff as f64,
         FfMode::Moe | FfMode::ModeIntegrated => {
-            // each expert processes its own capacity C_e tokens
-            let ce = (cfg.expert_capacity_frac * cf).max(1.0);
+            // each expert processes its own capacity C_e tokens — the
+            // exact count the native interpreter admits
+            let ce = crate::runtime::native::experts::expert_capacity(
+                cfg.expert_capacity_frac,
+                c,
+            ) as f64;
             cfg.n_experts as f64 * 2.0 * 2.0 * ce * d * cfg.d_ff as f64
         }
     };
@@ -139,7 +143,23 @@ pub fn decode_step_flops(
         let ctx = ctx_per_layer[l] as f64;
         total += 4.0 * 2.0 * d * kd; // projections for 1 token
         total += 2.0 * ctx * kd * 2.0; // qk + av over the layer's cache
-        total += 2.0 * 2.0 * d * cfg.d_ff as f64;
+        match cfg.ff_mode {
+            FfMode::Dense => total += 2.0 * 2.0 * d * cfg.d_ff as f64,
+            FfMode::Moe | FfMode::ModeIntegrated => {
+                // expert router scores for this token, plus the expected
+                // expert work: expert-choice admits ~capacity_frac of
+                // tokens per expert in steady state
+                let cols = cfg.n_experts
+                    + usize::from(cfg.ff_mode == FfMode::ModeIntegrated);
+                total += 2.0 * d * cols as f64;
+                total += cfg.n_experts as f64
+                    * cfg.expert_capacity_frac.clamp(0.0, 1.0)
+                    * 2.0
+                    * 2.0
+                    * d
+                    * cfg.d_ff as f64;
+            }
+        }
     }
     total
 }
@@ -308,6 +328,24 @@ mod tests {
         let expect = 3.0 * batch as f64 * fwd;
         let got = train_step_flops(&cfg, batch);
         assert!((got - expect).abs() < 1e-6, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn moe_decode_step_counts_expected_expert_work() {
+        let mut cfg = base();
+        cfg.ff_mode = FfMode::Moe; // defaults: 4 experts, 0.25 capacity
+        let ctx = vec![16; cfg.n_layers];
+        let moe = decode_step_flops(&cfg, &ctx, &vec![true; cfg.n_layers]);
+        let mut dense = cfg.clone();
+        dense.ff_mode = FfMode::Dense;
+        let dfl = decode_step_flops(&dense, &ctx, &vec![true; cfg.n_layers]);
+        // 4 experts × 0.25 expected capacity == the dense MLP work, so the
+        // only difference is the per-layer expert-router scan
+        let router = cfg.n_layers as f64
+            * 2.0
+            * cfg.d_model as f64
+            * cfg.n_experts as f64;
+        assert!((moe - dfl - router).abs() < 1e-6, "{moe} vs {dfl}");
     }
 
     #[test]

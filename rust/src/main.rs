@@ -39,6 +39,8 @@ COMMANDS:
                     [--decision predictor|router|always]
   flops <preset>
   exp <fig3|fig4|fig5|fig6|fig7|all> [--scale smoke|tiny|full]
+                    [--steps N]  (fixed-step figures 5/6/7 only; figs 3/4
+                    derive steps from the isoFLOP budget)
   info <bundle>
 ";
 
@@ -240,7 +242,8 @@ fn main() -> mod_transformer::Result<()> {
             let figure = args.pos(1, "figure")?;
             let scale = Scale::parse(&args.str_or("scale", "tiny"))?;
             let root = ExpContext::repo_root();
-            let ctx = ExpContext::new(&root, scale)?;
+            let mut ctx = ExpContext::new(&root, scale)?;
+            ctx.steps_override = args.opt_u64("steps")?;
             match figure {
                 "fig3" => { exp::fig3::run(&ctx)?; }
                 "fig4" => { exp::fig4::run(&ctx)?; }

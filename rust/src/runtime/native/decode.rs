@@ -13,10 +13,11 @@
 //! slot in mixed batches). Not-written is the semantics the paper's drop
 //! rule describes, and it keeps batched rows exactly independent.
 
-use crate::config::ModelConfig;
+use crate::config::{FfMode, ModelConfig};
 use crate::runtime::backend::{f32_arg, i32_arg, Executable, Value};
 use crate::runtime::tensor::Tensor;
 
+use super::experts;
 use super::ops;
 
 /// `(tokens i32[B], embed f32[V,D]) -> (h f32[B,D],)`
@@ -130,8 +131,13 @@ impl Executable for NativePredictor {
 ///
 /// `(h f32[B,D], pos i32[B], gate f32[B], participate f32[B], slot i32[B],
 ///   cache_k f32[B,L,KD], cache_v f32[B,L,KD], cache_pos i32[B,L],
-///   cache_valid f32[B,L], attn_norm, wq, wk, wv, wo, mlp_norm, w1, w2)`
+///   cache_valid f32[B,L], attn_norm, wq, wk, wv, wo, mlp_norm, *ff)`
 /// `-> (h' f32[B,D], cache_k', cache_v', cache_pos', cache_valid')`
+///
+/// `*ff` is `(w1, w2)` for dense feedforward and
+/// `(moe_router, moe_w1, moe_w2)` for MoE / integrated MoDE — the expert
+/// decision per token is the causal sigmoid-threshold rule of
+/// [`experts::moe_step`].
 pub struct NativeBlockDecode {
     pub(super) cfg: ModelConfig,
     pub(super) cache_len: usize,
@@ -183,8 +189,21 @@ impl Executable for NativeBlockDecode {
         let wv = f32_arg(args, 12, "wv")?;
         let wo = f32_arg(args, 13, "wo")?;
         let mlp_norm = f32_arg(args, 14, "mlp_norm")?;
-        let w1 = f32_arg(args, 15, "w1")?;
-        let w2 = f32_arg(args, 16, "w2")?;
+        enum Ff<'a> {
+            Dense { w1: &'a [f32], w2: &'a [f32] },
+            Moe { router: &'a [f32], w1: &'a [f32], w2: &'a [f32] },
+        }
+        let ff = match cfg.ff_mode {
+            FfMode::Dense => Ff::Dense {
+                w1: f32_arg(args, 15, "w1")?,
+                w2: f32_arg(args, 16, "w2")?,
+            },
+            FfMode::Moe | FfMode::ModeIntegrated => Ff::Moe {
+                router: f32_arg(args, 15, "moe_router")?,
+                w1: f32_arg(args, 16, "moe_w1")?,
+                w2: f32_arg(args, 17, "moe_w2")?,
+            },
+        };
 
         let freqs = &self.freqs;
         let scale = 1.0 / (dh as f32).sqrt();
@@ -255,9 +274,17 @@ impl Executable for NativeBlockDecode {
                 h_mid[j] = hr[j] + attn[j];
             }
             let (xn2, _) = ops::rmsnorm(&h_mid, mlp_norm, 1, d);
-            let u = ops::matmul(&xn2, w1, 1, d, f);
-            let g: Vec<f32> = u.iter().map(|&x| ops::gelu(x)).collect();
-            let mlp = ops::matmul(&g, w2, 1, f, d);
+            let mlp = match &ff {
+                Ff::Dense { w1, w2 } => {
+                    let u = ops::matmul(&xn2, w1, 1, d, f);
+                    let g: Vec<f32> =
+                        u.iter().map(|&x| ops::gelu(x)).collect();
+                    ops::matmul(&g, w2, 1, f, d)
+                }
+                Ff::Moe { router, w1, w2 } => {
+                    experts::moe_step(cfg, &xn2, router, w1, w2)
+                }
+            };
 
             let gp = gate[r]; // participate[r] == 1 here
             let or = &mut h_out[r * d..(r + 1) * d];

@@ -13,9 +13,10 @@
 //! Every intermediate the backward pass needs is cached in [`Forward`];
 //! `native::train` consumes it.
 
-use crate::config::{ModelConfig, RoutingMode};
+use crate::config::{FfMode, ModelConfig, RoutingMode};
 use crate::data::rng::Pcg32;
 
+use super::experts;
 use super::ops;
 use super::ParamTable;
 
@@ -72,10 +73,12 @@ pub struct LayerFwd {
     pub h_mid: Vec<f32>,
     pub xn2: Vec<f32>,
     pub inv2: Vec<f32>,
-    /// Pre-GELU MLP activations `[b*s, d_ff]`.
+    /// Pre-GELU MLP activations `[b*s, d_ff]` (dense FF; empty for MoE).
     pub u: Vec<f32>,
     pub g: Vec<f32>,
     pub mlp: Vec<f32>,
+    /// Expert-choice MoE activations (`FfMode::Moe`/`ModeIntegrated`).
+    pub moe: Option<experts::MoeFwd>,
 }
 
 /// A completed forward pass with everything the backward needs.
@@ -101,11 +104,6 @@ pub fn forward(
     mode: RouteMode,
     seed: i32,
 ) -> crate::Result<Forward> {
-    crate::ensure!(
-        matches!(cfg.ff_mode, crate::config::FfMode::Dense),
-        "native backend supports dense feedforward only (ff_mode {:?})",
-        cfg.ff_mode
-    );
     crate::ensure!(tokens.len() == b * s, "tokens len != b*s");
     let d = cfg.d_model;
     let heads = cfg.n_heads;
@@ -274,11 +272,29 @@ pub fn forward(
         }
         let mlp_norm = params.layer(l, "mlp_norm")?;
         let (xn2, inv2) = ops::rmsnorm(&h_mid, mlp_norm, rows, d);
-        let w1 = params.layer(l, "w1")?;
-        let w2 = params.layer(l, "w2")?;
-        let u = ops::matmul(&xn2, w1, rows, d, f);
-        let g: Vec<f32> = u.iter().map(|&uu| ops::gelu(uu)).collect();
-        let mlp = ops::matmul(&g, w2, rows, f, d);
+        let (u, g, mlp, moe) = match cfg.ff_mode {
+            FfMode::Dense => {
+                let w1 = params.layer(l, "w1")?;
+                let w2 = params.layer(l, "w2")?;
+                let u = ops::matmul(&xn2, w1, rows, d, f);
+                let g: Vec<f32> =
+                    u.iter().map(|&uu| ops::gelu(uu)).collect();
+                let mlp = ops::matmul(&g, w2, rows, f, d);
+                (u, g, mlp, None)
+            }
+            FfMode::Moe | FfMode::ModeIntegrated => {
+                // expert-choice MoE (staged MoDE when the block is also
+                // MoD-routed: eligibility = the block's top-k selection)
+                let router = params.layer(l, "moe_router")?;
+                let w1 = params.layer(l, "moe_w1")?;
+                let w2 = params.layer(l, "moe_w2")?;
+                let mut mf = experts::moe_forward(
+                    cfg, &xn2, router, w1, w2, b, s, &mask, mode,
+                )?;
+                let mlp = std::mem::take(&mut mf.out);
+                (Vec::new(), Vec::new(), mlp, Some(mf))
+            }
+        };
 
         // --- gated residual: x' = x + mask * gate * (attn_out + mlp) ---
         let mut x_next = x;
@@ -318,6 +334,7 @@ pub fn forward(
             u,
             g,
             mlp,
+            moe,
         });
         x = x_next;
     }

@@ -14,6 +14,7 @@
 //! path.
 
 mod decode;
+pub mod experts;
 mod forward;
 pub(crate) mod ops;
 mod train;
@@ -370,13 +371,6 @@ impl Backend for NativeBackend {
         key: &ExecKey,
     ) -> crate::Result<Arc<dyn Executable>> {
         let cfg = manifest.model.clone();
-        crate::ensure!(
-            matches!(cfg.ff_mode, FfMode::Dense),
-            "native backend supports dense feedforward only; MoE/MoDE \
-             ({:?}) needs the pjrt backend: add the xla dependency (see \
-             rust/Cargo.toml), build artifacts, and use --features pjrt",
-            cfg.ff_mode
-        );
         let name = key.label();
         // the manifest's param list is the ABI contract (identical to
         // param_specs for synthetic bundles; authoritative for AOT ones)
@@ -431,27 +425,44 @@ mod tests {
 
     #[test]
     fn param_specs_match_n_params() {
+        // every (routing, ff_mode) combination: n_params must equal the
+        // summed element counts of the interpreted parameter tensors
         for routing in [
             RoutingMode::None,
             RoutingMode::ModEvery,
             RoutingMode::ModInterleaved,
         ] {
-            let mut cfg = ModelConfig::default();
-            cfg.routing = routing;
-            let total: usize = param_specs(&cfg)
-                .iter()
-                .map(|sp| sp.shape.iter().product::<usize>())
-                .sum();
-            assert_eq!(total, cfg.n_params(), "{routing:?}");
+            for ff_mode in
+                [FfMode::Dense, FfMode::Moe, FfMode::ModeIntegrated]
+            {
+                let cfg = ModelConfig {
+                    vocab_size: 61,
+                    d_model: 16,
+                    n_layers: 4,
+                    n_heads: 2,
+                    d_head: 8,
+                    d_ff: 24,
+                    seq_len: 32,
+                    predictor_hidden: 8,
+                    n_experts: 3,
+                    routing,
+                    ff_mode,
+                    ..Default::default()
+                };
+                let total: usize = param_specs(&cfg)
+                    .iter()
+                    .map(|sp| sp.shape.iter().product::<usize>())
+                    .sum();
+                assert_eq!(total, cfg.n_params(), "{routing:?}/{ff_mode:?}");
+                // and the seeded init actually materializes those shapes
+                let init = init_params(&cfg, 1);
+                let n: usize = init
+                    .iter()
+                    .map(|(_, t)| t.as_f32().unwrap().len())
+                    .sum();
+                assert_eq!(n, cfg.n_params(), "{routing:?}/{ff_mode:?}");
+            }
         }
-        // MoE spec accounting must agree too
-        let mut cfg = ModelConfig::default();
-        cfg.ff_mode = crate::config::FfMode::ModeIntegrated;
-        let total: usize = param_specs(&cfg)
-            .iter()
-            .map(|sp| sp.shape.iter().product::<usize>())
-            .sum();
-        assert_eq!(total, cfg.n_params());
     }
 
     #[test]
@@ -521,6 +532,39 @@ mod tests {
             ..Default::default()
         };
         run_parity(cfg, RouteMode::Router);
+    }
+
+    /// MoE / integrated-MoDE parity: the causal single-token expert rule
+    /// used by block decode equals the masked eval forward
+    /// (`RouteMode::Router`) token for token. The staged case (MoD
+    /// routing × MoE feedforward) pins the composition of block-skip
+    /// eligibility with the causal expert rule.
+    #[test]
+    fn decode_matches_teacher_forced_forward_moe() {
+        let cases = [
+            (FfMode::Moe, RoutingMode::None),
+            (FfMode::ModeIntegrated, RoutingMode::None),
+            (FfMode::Moe, RoutingMode::ModEvery), // staged MoDE
+        ];
+        for (ff_mode, routing) in cases {
+            let cfg = ModelConfig {
+                vocab_size: 17,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_head: 8,
+                d_ff: 16,
+                seq_len: 8,
+                routing,
+                capacity_frac: 0.5,
+                train_predictor: false,
+                ff_mode,
+                n_experts: 2,
+                expert_capacity_frac: 0.5,
+                ..Default::default()
+            };
+            run_parity(cfg, RouteMode::Router);
+        }
     }
 
     fn run_parity(cfg: ModelConfig, mode: RouteMode) {
@@ -612,8 +656,15 @@ mod tests {
                 let gate_val: Value = Tensor::f32(vec![1], vec![gate]).into();
                 let part_val: Value = Tensor::f32(vec![1], vec![part]).into();
                 let slot_val: Value = Tensor::i32(vec![1], vec![slot]).into();
-                let lw: Vec<Value> = ["attn_norm", "wq", "wk", "wv", "wo",
-                                      "mlp_norm", "w1", "w2"]
+                let mut wnames =
+                    vec!["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm"];
+                match cfg.ff_mode {
+                    FfMode::Dense => wnames.extend(["w1", "w2"]),
+                    FfMode::Moe | FfMode::ModeIntegrated => {
+                        wnames.extend(["moe_router", "moe_w1", "moe_w2"])
+                    }
+                }
+                let lw: Vec<Value> = wnames
                     .iter()
                     .map(|nm| {
                         let dref = table.layer(l, nm).unwrap();

@@ -20,8 +20,60 @@ pub const RMS_EPS: f32 = 1e-6;
 // Matmuls
 // ---------------------------------------------------------------------------
 
-/// `a [m,k] @ b [k,n] -> [m,n]`.
+/// Tile edge for the blocked matmuls: three 64×64 f32 tiles (48 KiB) fit
+/// comfortably in a typical L1d/L2, so every operand line loaded from
+/// memory is reused TILE times instead of once.
+const TILE: usize = 64;
+
+/// `a [m,k] @ b [k,n] -> [m,n]`, cache-tiled.
+///
+/// Accumulation order per output element is ascending `k`, identical to
+/// [`matmul_naive`], so the two are bitwise-equal (a property test pins
+/// this); the tiling only reorders *which* outputs are touched when.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    if m.min(k).min(n) <= 1 || (m * k + k * n) <= TILE * TILE {
+        // small problems already live in cache; skip the tiling overhead
+        return matmul_naive(a, b, m, k, n);
+    }
+    let mut out = vec![0f32; m * n];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + TILE).min(k);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TILE).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n + j0..i * n + j1];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        k0 = k1;
+    }
+    out
+}
+
+/// Scalar-oracle `a [m,k] @ b [k,n]`: the clarity-first reference loop the
+/// tiled [`matmul`] is property-tested against.
+pub fn matmul_naive(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0f32; m * n];
@@ -41,8 +93,46 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
-/// `a [m,k] @ b^T` with `b [n,k]` -> `[m,n]` (e.g. `dx = dy @ W^T`).
+/// `a [m,k] @ b^T` with `b [n,k]` -> `[m,n]` (e.g. `dx = dy @ W^T`),
+/// blocked over the output so each `b` row tile is reused across the `i`
+/// tile while L1-resident. Dot products run over full ascending `k`, so
+/// results are bitwise-identical to [`matmul_nt_naive`].
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0f32; m * n];
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + TILE).min(m);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TILE).min(n);
+            for i in i0..i1 {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in j0..j1 {
+                    let brow = &b[j * k..(j + 1) * k];
+                    let mut acc = 0f32;
+                    for kk in 0..k {
+                        acc += arow[kk] * brow[kk];
+                    }
+                    out[i * n + j] = acc;
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+    out
+}
+
+/// Scalar-oracle form of [`matmul_nt`].
+pub fn matmul_nt_naive(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     let mut out = vec![0f32; m * n];
@@ -351,6 +441,72 @@ mod tests {
         let b = vec![7., 8., 9., 10., 11., 12.];
         let out = matmul(&a, &b, 2, 3, 2);
         assert_eq!(out, vec![58., 64., 139., 154.]);
+    }
+
+    /// Tiled matmuls must be bitwise-identical to their scalar oracles —
+    /// accumulation order is preserved, so not even the last ulp may move.
+    #[test]
+    fn tiled_matmul_matches_naive_oracle() {
+        let mut rng = crate::data::rng::Pcg32::new(42, 7);
+        // cover: smaller than a tile, exact tile multiples, ragged edges
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 2),
+            (TILE, TILE, TILE),
+            (TILE + 3, 2 * TILE + 1, TILE - 5),
+            (7, 130, 65),
+        ] {
+            let a: Vec<f32> =
+                (0..m * k).map(|_| rng.next_normal() as f32).collect();
+            let b: Vec<f32> =
+                (0..k * n).map(|_| rng.next_normal() as f32).collect();
+            assert_eq!(
+                matmul(&a, &b, m, k, n),
+                matmul_naive(&a, &b, m, k, n),
+                "matmul {m}x{k}x{n}"
+            );
+            let bt: Vec<f32> =
+                (0..n * k).map(|_| rng.next_normal() as f32).collect();
+            assert_eq!(
+                matmul_nt(&a, &bt, m, k, n),
+                matmul_nt_naive(&a, &bt, m, k, n),
+                "matmul_nt {m}x{k}x{n}"
+            );
+        }
+    }
+
+    /// Randomized shapes (property test): tiled == naive, bitwise.
+    #[test]
+    fn prop_tiled_matmul_equals_naive() {
+        use crate::util::prop::{forall, usize_in};
+        forall(
+            23,
+            60,
+            |rng| {
+                let m = usize_in(rng, 1, 80);
+                let k = usize_in(rng, 1, 150);
+                let n = usize_in(rng, 1, 80);
+                let a: Vec<f32> =
+                    (0..m * k).map(|_| rng.next_normal() as f32).collect();
+                let b: Vec<f32> =
+                    (0..k * n).map(|_| rng.next_normal() as f32).collect();
+                let bt: Vec<f32> =
+                    (0..n * k).map(|_| rng.next_normal() as f32).collect();
+                (m, k, n, a, b, bt)
+            },
+            |(m, k, n, a, b, bt)| {
+                if matmul(a, b, *m, *k, *n) != matmul_naive(a, b, *m, *k, *n)
+                {
+                    return Err(format!("matmul tiled!=naive {m}x{k}x{n}"));
+                }
+                if matmul_nt(a, bt, *m, *k, *n)
+                    != matmul_nt_naive(a, bt, *m, *k, *n)
+                {
+                    return Err(format!("nt tiled!=naive {m}x{k}x{n}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

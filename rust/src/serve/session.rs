@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::ModelConfig;
+use crate::config::{FfMode, ModelConfig};
 use crate::flops;
 use crate::runtime::native::ops;
 use crate::runtime::{Backend, Bundle, Executable, Tensor, Value};
@@ -78,7 +78,8 @@ impl SessionReport {
 struct LayerState {
     routed: bool,
     cache_len: usize,
-    /// attn_norm, wq, wk, wv, wo, mlp_norm, w1, w2 — backend values.
+    /// attn_norm, wq, wk, wv, wo, mlp_norm + the feedforward tensors
+    /// (dense: w1, w2; MoE: moe_router, moe_w1, moe_w2) — backend values.
     weights: Vec<Value>,
     /// host-side router projection (scores = h . w); routing decisions are
     /// pure coordinator math — no device dispatch (§Perf iteration 1).
@@ -142,10 +143,21 @@ impl DecodeSession {
                 })?;
                 backend.upload(&params[i])
             };
-            let weights = vec![
+            let mut weights = vec![
                 get("attn_norm")?, get("wq")?, get("wk")?, get("wv")?,
-                get("wo")?, get("mlp_norm")?, get("w1")?, get("w2")?,
+                get("wo")?, get("mlp_norm")?,
             ];
+            match cfg.ff_mode {
+                FfMode::Dense => {
+                    weights.push(get("w1")?);
+                    weights.push(get("w2")?);
+                }
+                FfMode::Moe | FfMode::ModeIntegrated => {
+                    weights.push(get("moe_router")?);
+                    weights.push(get("moe_w1")?);
+                    weights.push(get("moe_w2")?);
+                }
+            }
             let routed = cfg.is_routed_block(l);
             let cache_len = bundle.manifest.cache_len(l)?;
             if !block_exes.contains_key(&cache_len) {

@@ -116,21 +116,62 @@ impl Bench {
         &self.results
     }
 
-    /// Write the JSON report and return its path.
+    /// Write the JSON report (and merge this suite into the repo-root
+    /// `BENCH_native.json` perf ledger); returns the per-suite path.
     pub fn finish(self) -> crate::Result<std::path::PathBuf> {
         let dir = std::path::Path::new("runs/bench");
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{}.json", self.suite));
+        let cases =
+            Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
         let doc = Json::obj(vec![
             ("suite", Json::str(&self.suite)),
-            (
-                "cases",
-                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
-            ),
+            ("cases", cases.clone()),
         ]);
         std::fs::write(&path, doc.to_string_pretty())?;
         println!("[bench] report: {}", path.display());
+
+        // machine-readable perf ledger: one file, one entry per suite,
+        // re-running a suite replaces its entry — the repo's performance
+        // trajectory is greppable from a single JSON document
+        let ledger = ledger_dir().join("BENCH_native.json");
+        let mut suites: Vec<(String, Json)> =
+            std::fs::read_to_string(&ledger)
+                .ok()
+                .and_then(|text| Json::parse(&text).ok())
+                .and_then(|d| {
+                    d.get("suites")
+                        .and_then(|s| s.as_obj().map(|o| o.to_vec()))
+                })
+                .unwrap_or_default();
+        suites.retain(|(k, _)| k != &self.suite);
+        suites.push((self.suite.clone(), cases));
+        suites.sort_by(|a, b| a.0.cmp(&b.0));
+        let ledger_doc = Json::obj(vec![
+            ("backend", Json::str("native-cpu")),
+            ("suites", Json::Obj(suites)),
+        ]);
+        std::fs::write(&ledger, ledger_doc.to_string_pretty())?;
+        println!("[bench] perf ledger: {}", ledger.display());
         Ok(path)
+    }
+}
+
+/// Outermost ancestor (cwd included) holding a `Cargo.toml` — the
+/// workspace root when benches run from `rust/`, the crate root
+/// otherwise. The walk stops at the first `.git` boundary so a stray
+/// `Cargo.toml` *above* the repository can never redirect the ledger.
+fn ledger_dir() -> std::path::PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut best = cwd.clone();
+    let mut dir = cwd;
+    loop {
+        if dir.join("Cargo.toml").exists() {
+            best = dir.clone();
+        }
+        if dir.join(".git").exists() || !dir.pop() {
+            return best;
+        }
     }
 }
 
