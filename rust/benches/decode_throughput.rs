@@ -1,18 +1,24 @@
-//! Bench: decode throughput — the paper's headline sampling-speed claim.
+//! Bench: decode throughput — the paper's headline sampling-speed claim,
+//! at pool width 1 vs all cores.
 //!
 //! Measures tokens/sec through the layer-sliced decode runtime for the
 //! baseline bundle vs the MoD bundle under each routing decision rule, at
-//! batch 1 and 4. The paper's claim (§1): MoD "can be upwards of 50%
-//! faster to step during post-training sampling"; here the skip is a real
-//! non-invocation of the block executable, so the speedup is wall-clock.
+//! batch 1 and 4, at `RP_THREADS=1` and `RP_THREADS=max` (batched decode
+//! parallelizes across rows; batch-1 stays serial, so its `t1`/`tN` pair
+//! doubles as an overhead check). The paper's claim (§1): MoD "can be
+//! upwards of 50% faster to step during post-training sampling"; here the
+//! skip is a real non-invocation of the block executable, so the speedup
+//! is wall-clock.
 //!
-//! Regenerates: fig 6 speed panel + the §1 claim. Run: `cargo bench
-//! --bench decode_throughput` (AOT artifacts if present, synthetic
-//! native bundles otherwise).
+//! Regenerates: fig 6 speed panel + the §1 claim + the threading speedup
+//! rows of the `BENCH_native.json` ledger. Run: `cargo bench --bench
+//! decode_throughput` (AOT artifacts if present, synthetic native bundles
+//! otherwise).
 
 use mod_transformer::runtime::{open_bundle, Bundle};
 use mod_transformer::serve::{DecodeSession, RoutingDecision};
 use mod_transformer::util::bench::Bench;
+use mod_transformer::util::pool;
 
 fn decode_tokens(
     bundle: &Bundle,
@@ -45,6 +51,9 @@ fn decode_tokens(
 fn main() -> mod_transformer::Result<()> {
     let mut bench = Bench::new("decode_throughput");
     let n_tokens = 32usize;
+    let t_max = pool::threads();
+    let widths: Vec<usize> =
+        if t_max > 1 { vec![1, t_max] } else { vec![1] };
 
     for bundle_name in ["baseline_tiny", "mod_tiny"] {
         let bundle =
@@ -62,17 +71,21 @@ fn main() -> mod_transformer::Result<()> {
             };
         for &batch in &[1usize, 4] {
             for &(dname, decision) in decisions {
-                let mut skip = 0.0;
-                bench.case(
-                    &format!("{bundle_name}/B{batch}/{dname}"),
-                    Some((n_tokens * batch) as f64),
-                    || {
-                        skip = decode_tokens(
-                            &bundle, &params, batch, decision, n_tokens,
-                        );
-                    },
-                );
-                println!("    (skip fraction {skip:.3})");
+                for &nt in &widths {
+                    pool::set_threads(Some(nt));
+                    let mut skip = 0.0;
+                    bench.case(
+                        &format!("{bundle_name}/B{batch}/{dname}/t{nt}"),
+                        Some((n_tokens * batch) as f64),
+                        || {
+                            skip = decode_tokens(
+                                &bundle, &params, batch, decision, n_tokens,
+                            );
+                        },
+                    );
+                    println!("    (skip fraction {skip:.3})");
+                }
+                pool::set_threads(None);
             }
         }
     }

@@ -1,14 +1,19 @@
-//! Bench: training step time — baseline vs MoD at identical dims.
+//! Bench: training step time — baseline vs MoD at identical dims, at
+//! pool width 1 vs all cores.
 //!
 //! The paper (figs 3 & 4): MoD variants step faster because routed blocks
 //! compute on capacity-sized tensors. Measures wall-clock per train step
-//! (full fwd+bwd+AdamW executable) for every default bundle present,
-//! plus the L3-side batch-synthesis cost (shows the data pipeline is not
-//! the bottleneck — EXPERIMENTS.md §Perf).
+//! (full fwd+bwd+AdamW executable) for every default bundle present at
+//! `RP_THREADS=1` and `RP_THREADS=max` — the `t1` vs `tN` pairs are the
+//! repo's threading speedup record (results are bitwise identical across
+//! widths, so the pairs measure pure wall-clock) — plus the L3-side
+//! batch-synthesis cost (shows the data pipeline is not the bottleneck —
+//! EXPERIMENTS.md §Perf).
 //!
-//! Regenerates: fig 3 "steps/s" column, fig 4 step-speed ordering, and the
-//! fig 7 MoE/MoDE step cost on the native expert interpreter. Results land
-//! in `runs/bench/train_step.json` and the repo-root `BENCH_native.json`
+//! Regenerates: fig 3 "steps/s" column, fig 4 step-speed ordering, the
+//! fig 7 MoE/MoDE step cost on the native expert interpreter, and the
+//! threads=1 vs threads=N speedup rows. Results land in
+//! `runs/bench/train_step.json` and the repo-root `BENCH_native.json`
 //! perf ledger.
 //! Run: `cargo bench --bench train_step` (AOT artifacts if present,
 //! synthetic native bundles otherwise).
@@ -20,20 +25,53 @@ use mod_transformer::coordinator::Trainer;
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
 use mod_transformer::runtime::{open_bundle, Bundle, SyntheticSpec};
 use mod_transformer::util::bench::Bench;
+use mod_transformer::util::pool;
+
+/// Time `<name>/train_step/t<width>` for every pool width (shared by the
+/// preset-bundle and fig-7 sections so the t1/tN rows stay consistent).
+fn bench_train_widths(
+    bench: &mut Bench,
+    name: &str,
+    bundle: &Arc<Bundle>,
+    widths: &[usize],
+) -> mod_transformer::Result<()> {
+    let b = bundle.manifest.train.batch_size;
+    let s = bundle.manifest.model.seq_len;
+    for &nt in widths {
+        pool::set_threads(Some(nt));
+        let data = BatchIter::new(
+            MarkovCorpus::new(CorpusSpec::default(), 7), b, s,
+        );
+        let mut trainer = Trainer::new(bundle.clone(), data, None)?;
+        let mut step = 0u64;
+        bench.case(
+            &format!("{name}/train_step/t{nt}"),
+            Some((b * s) as f64), // tokens per step
+            || {
+                let batch = trainer_data_batch(bundle, step);
+                trainer.train_one(&batch).expect("train step");
+                step += 1;
+            },
+        );
+    }
+    pool::set_threads(None);
+    Ok(())
+}
 
 fn main() -> mod_transformer::Result<()> {
     let mut bench = Bench::new("train_step");
+    let t_max = pool::threads();
+    let widths: Vec<usize> =
+        if t_max > 1 { vec![1, t_max] } else { vec![1] };
 
     for bundle_name in ["baseline_tiny", "mod_tiny"] {
         let bundle =
             open_bundle(std::path::Path::new("artifacts"), bundle_name)?;
         let b = bundle.manifest.train.batch_size;
         let s = bundle.manifest.model.seq_len;
-        let corpus = MarkovCorpus::new(CorpusSpec::default(), 7);
-        let data = BatchIter::new(corpus, b, s);
 
-        // batch synthesis alone (L3 data pipeline cost)
-        let data2 = BatchIter::new(
+        // batch synthesis alone (L3 data pipeline cost; width-independent)
+        let data = BatchIter::new(
             MarkovCorpus::new(CorpusSpec::default(), 7), b, s,
         );
         let mut step_counter = 0u64;
@@ -41,29 +79,19 @@ fn main() -> mod_transformer::Result<()> {
             &format!("{bundle_name}/batch_synthesis"),
             Some((b * s) as f64),
             || {
-                let batch = data2.batch_at(step_counter);
+                let batch = data.batch_at(step_counter);
                 std::hint::black_box(&batch);
                 step_counter += 1;
             },
         );
 
-        // full train step through the backend
-        let mut trainer = Trainer::new(bundle.clone(), data, None)?;
-        let mut step = 0u64;
-        bench.case(
-            &format!("{bundle_name}/train_step"),
-            Some((b * s) as f64), // tokens per step
-            || {
-                let batch = trainer_data_batch(&bundle, step);
-                trainer.train_one(&batch).expect("train step");
-                step += 1;
-            },
-        );
+        // full train step through the backend, per pool width
+        bench_train_widths(&mut bench, bundle_name, &bundle, &widths)?;
     }
 
     // fig 7 expert-choice MoE / integrated MoDE: the native experts
     // interpreter's hot path (router scores → per-expert top-k gather →
-    // GELU MLP → gated scatter, forward and backward)
+    // GELU MLP → gated scatter, forward and backward), again t1 vs tN
     for (name, ff_mode) in [
         ("fig7_moe", FfMode::Moe),
         ("fig7_mode_integrated", FfMode::ModeIntegrated),
@@ -87,21 +115,7 @@ fn main() -> mod_transformer::Result<()> {
             &train,
             &SyntheticSpec::default(),
         )?);
-        let b = train.batch_size;
-        let s = model.seq_len;
-        let corpus = MarkovCorpus::new(CorpusSpec::default(), 7);
-        let data = BatchIter::new(corpus, b, s);
-        let mut trainer = Trainer::new(bundle.clone(), data, None)?;
-        let mut step = 0u64;
-        bench.case(
-            &format!("{name}/train_step"),
-            Some((b * s) as f64),
-            || {
-                let batch = trainer_data_batch(&bundle, step);
-                trainer.train_one(&batch).expect("train step");
-                step += 1;
-            },
-        );
+        bench_train_widths(&mut bench, name, &bundle, &widths)?;
     }
     bench.finish()?;
     Ok(())

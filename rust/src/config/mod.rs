@@ -309,6 +309,9 @@ pub struct ServeConfig {
     pub cache_slack: f64,
     /// Dynamic batcher: max time to hold a request waiting for batchmates.
     pub batch_wait_ms: u64,
+    /// Batcher worker threads — concurrent decode sessions overlap across
+    /// them. `0` = auto (the compute pool width, `util::pool::threads`).
+    pub workers: usize,
     /// Sampling temperature (0 = greedy).
     pub temperature: f64,
     /// Top-k sampling cutoff (0 = disabled).
@@ -322,6 +325,7 @@ impl Default for ServeConfig {
             max_decode_len: 256,
             cache_slack: 1.5,
             batch_wait_ms: 2,
+            workers: 0,
             temperature: 0.0,
             top_k: 0,
         }

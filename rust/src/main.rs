@@ -26,7 +26,11 @@ use mod_transformer::util::Args;
 const USAGE: &str = "\
 repro — Mixture-of-Depths transformers (Raposo et al. 2024) rust coordinator
 
-USAGE: repro [--artifacts DIR] <command> [options]
+USAGE: repro [--artifacts DIR] [--threads N] <command> [options]
+
+  --threads N   worker-pool width for the native backend (default: the
+                RP_THREADS env var, else all cores; results are bitwise
+                identical at any width)
 
 COMMANDS:
   train <bundle>    [--steps N] [--run-dir D] [--resume CKPT]
@@ -91,6 +95,9 @@ fn main() -> mod_transformer::Result<()> {
         return Ok(());
     }
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if let Some(n) = args.opt_u64("threads")? {
+        mod_transformer::util::pool::set_threads(Some((n as usize).max(1)));
+    }
     let cmd = args.pos(0, "command")?.to_string();
 
     match cmd.as_str() {

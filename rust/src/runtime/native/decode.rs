@@ -209,9 +209,45 @@ impl Executable for NativeBlockDecode {
         let scale = 1.0 / (dh as f32).sqrt();
         let mut h_out = h.to_vec();
 
+        // validate up front so the per-row pool tasks are infallible
         for r in 0..b {
+            if part[r] > 0.5 {
+                crate::ensure!(
+                    (slot[r] as usize) < cl,
+                    "slot {} out of cache {cl}",
+                    slot[r]
+                );
+            }
+        }
+        let participating = part.iter().filter(|&&p| p > 0.5).count();
+
+        // batch rows are fully independent (each owns its h row and its
+        // cache slab), so they run as pool tasks; per-row math is the
+        // unchanged serial kernel ⇒ bitwise-identical at any width
+        type RowTask<'a> = (
+            usize,
+            &'a mut [f32], // h_out row
+            &'a mut [f32], // cache_k slab
+            &'a mut [f32], // cache_v slab
+            &'a mut [i32], // cache_pos slab
+            &'a mut [f32], // cache_valid slab
+        );
+        let tasks: Vec<RowTask<'_>> = h_out
+            .chunks_mut(d)
+            .zip(cache_k.chunks_mut(cl * kd))
+            .zip(cache_v.chunks_mut(cl * kd))
+            .zip(cache_pos.chunks_mut(cl))
+            .zip(cache_valid.chunks_mut(cl))
+            .enumerate()
+            .map(|(r, ((((ho, ck), cv), cp), cw))| (r, ho, ck, cv, cp, cw))
+            .collect();
+        let row_work = 4 * d * kd + 2 * cl * kd + 2 * d * f.max(d);
+        crate::util::pool::par_tasks(
+            participating * row_work,
+            tasks,
+            |(r, h_row, ck, cv, cp, cw)| {
             if part[r] <= 0.5 {
-                continue; // skipped row: h and cache fully untouched
+                return; // skipped row: h and cache fully untouched
             }
             let hr = &h[r * d..(r + 1) * d];
             let (xn, _) = ops::rmsnorm(hr, attn_norm, 1, d);
@@ -224,13 +260,10 @@ impl Executable for NativeBlockDecode {
 
             // write this token's K/V into its slot
             let sl = slot[r] as usize;
-            crate::ensure!(sl < cl, "slot {sl} out of cache {cl}");
-            cache_k[(r * cl + sl) * kd..(r * cl + sl + 1) * kd]
-                .copy_from_slice(&k);
-            cache_v[(r * cl + sl) * kd..(r * cl + sl + 1) * kd]
-                .copy_from_slice(&v);
-            cache_pos[r * cl + sl] = pos[r];
-            cache_valid[r * cl + sl] = 1.0;
+            ck[sl * kd..(sl + 1) * kd].copy_from_slice(&k);
+            cv[sl * kd..(sl + 1) * kd].copy_from_slice(&v);
+            cp[sl] = pos[r];
+            cw[sl] = 1.0;
 
             // attend over valid slots with pos <= current pos
             let mut att = vec![0f32; kd];
@@ -238,11 +271,10 @@ impl Executable for NativeBlockDecode {
             for hd in 0..heads {
                 let qh = &q[hd * dh..(hd + 1) * dh];
                 for li in 0..cl {
-                    let ok = cache_valid[r * cl + li] > 0.5
-                        && cache_pos[r * cl + li] <= pos[r];
+                    let ok = cw[li] > 0.5 && cp[li] <= pos[r];
                     logits[li] = if ok {
-                        let kh = &cache_k
-                            [(r * cl + li) * kd + hd * dh..(r * cl + li) * kd + (hd + 1) * dh];
+                        let kh =
+                            &ck[li * kd + hd * dh..li * kd + (hd + 1) * dh];
                         let mut acc = 0f32;
                         for j in 0..dh {
                             acc += qh[j] * kh[j];
@@ -259,8 +291,7 @@ impl Executable for NativeBlockDecode {
                     if pw == 0.0 {
                         continue;
                     }
-                    let vh = &cache_v
-                        [(r * cl + li) * kd + hd * dh..(r * cl + li) * kd + (hd + 1) * dh];
+                    let vh = &cv[li * kd + hd * dh..li * kd + (hd + 1) * dh];
                     for j in 0..dh {
                         out[j] += pw * vh[j];
                     }
@@ -287,11 +318,11 @@ impl Executable for NativeBlockDecode {
             };
 
             let gp = gate[r]; // participate[r] == 1 here
-            let or = &mut h_out[r * d..(r + 1) * d];
             for j in 0..d {
-                or[j] = hr[j] + gp * (attn[j] + mlp[j]);
+                h_row[j] = hr[j] + gp * (attn[j] + mlp[j]);
             }
-        }
+            },
+        );
 
         Ok(vec![
             Tensor::f32(vec![b, d], h_out).into(),

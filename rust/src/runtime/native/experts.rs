@@ -181,60 +181,81 @@ pub fn moe_forward(
     };
     let noop_count = noop_win.iter().filter(|&&w| w).count();
 
+    // Per-expert gather + MLP run on the pool (experts are independent);
+    // the scatter-add stays serial in ascending expert order because a
+    // token admitted by several experts sums their gated outputs — a
+    // fixed-order reduction keeps that sum bitwise thread-count-invariant.
+    struct ExpertRun {
+        sel: Vec<usize>,
+        gates: Vec<f32>,
+        u: Vec<f32>,
+        g: Vec<f32>,
+        y: Vec<f32>,
+    }
+    let runs: Vec<ExpertRun> = crate::util::pool::par_map(
+        n_e * rows * 2 * d * f,
+        (0..n_e).collect(),
+        |_, e| {
+            let col = e + usize::from(integrated);
+            let sel: Vec<usize> = match mode {
+                RouteMode::Topk => select_topk_eligible(
+                    &scores,
+                    cols,
+                    col,
+                    b,
+                    s,
+                    eligible,
+                    cfg.expert_capacity_frac,
+                ),
+                // causal rule (mirrors MoD's sigmoid > 0.5 decode
+                // decision); must stay identical to `moe_step`
+                RouteMode::Router | RouteMode::Predictor => (0..rows)
+                    .filter(|&r| {
+                        eligible[r] > 0.5
+                            && !noop_win[r]
+                            && scores[r * cols + col] > 0.0
+                    })
+                    .collect(),
+            };
+            let n = sel.len();
+            let w1e = &w1[e * d * f..(e + 1) * d * f];
+            let w2e = &w2[e * f * d..(e + 1) * f * d];
+            // gather → expert MLP (Eq. 1's block computation)
+            let mut xc = vec![0f32; n * d];
+            for (i, &r) in sel.iter().enumerate() {
+                xc[i * d..(i + 1) * d]
+                    .copy_from_slice(&xn[r * d..(r + 1) * d]);
+            }
+            let u = ops::matmul(&xc, w1e, n, d, f);
+            let g: Vec<f32> = u.iter().map(|&x| ops::gelu(x)).collect();
+            let y = ops::matmul(&g, w2e, n, f, d);
+            let gates: Vec<f32> = sel
+                .iter()
+                .map(|&r| ops::sigmoid(scores[r * cols + col]))
+                .collect();
+            ExpertRun { sel, gates, u, g, y }
+        },
+    );
+
+    // sigmoid-gated scatter-add, fixed expert order
     let mut out = vec![0f32; rows * d];
     let mut selected = Vec::with_capacity(n_e);
     let mut gates_all = Vec::with_capacity(n_e);
     let mut u_all = Vec::with_capacity(n_e);
     let mut g_all = Vec::with_capacity(n_e);
-    for e in 0..n_e {
-        let col = e + usize::from(integrated);
-        let sel: Vec<usize> = match mode {
-            RouteMode::Topk => select_topk_eligible(
-                &scores,
-                cols,
-                col,
-                b,
-                s,
-                eligible,
-                cfg.expert_capacity_frac,
-            ),
-            // causal rule (mirrors MoD's sigmoid > 0.5 decode decision);
-            // must stay identical to `moe_step`
-            RouteMode::Router | RouteMode::Predictor => (0..rows)
-                .filter(|&r| {
-                    eligible[r] > 0.5
-                        && !noop_win[r]
-                        && scores[r * cols + col] > 0.0
-                })
-                .collect(),
-        };
-        let n = sel.len();
-        let w1e = &w1[e * d * f..(e + 1) * d * f];
-        let w2e = &w2[e * f * d..(e + 1) * f * d];
-        // gather → expert MLP → sigmoid-gated scatter-add (Eq. 1)
-        let mut xc = vec![0f32; n * d];
-        for (i, &r) in sel.iter().enumerate() {
-            xc[i * d..(i + 1) * d].copy_from_slice(&xn[r * d..(r + 1) * d]);
-        }
-        let u = ops::matmul(&xc, w1e, n, d, f);
-        let g: Vec<f32> = u.iter().map(|&x| ops::gelu(x)).collect();
-        let y = ops::matmul(&g, w2e, n, f, d);
-        let gates: Vec<f32> = sel
-            .iter()
-            .map(|&r| ops::sigmoid(scores[r * cols + col]))
-            .collect();
-        for (i, &r) in sel.iter().enumerate() {
-            let gate = gates[i];
+    for run in runs {
+        for (i, &r) in run.sel.iter().enumerate() {
+            let gate = run.gates[i];
             let orow = &mut out[r * d..(r + 1) * d];
-            let yrow = &y[i * d..(i + 1) * d];
+            let yrow = &run.y[i * d..(i + 1) * d];
             for j in 0..d {
                 orow[j] += gate * yrow[j];
             }
         }
-        selected.push(sel);
-        gates_all.push(gates);
-        u_all.push(u);
-        g_all.push(g);
+        selected.push(run.sel);
+        gates_all.push(run.gates);
+        u_all.push(run.u);
+        g_all.push(run.g);
     }
 
     Ok(MoeFwd {
@@ -275,77 +296,92 @@ pub fn moe_backward(
     let mut d_w2 = vec![0f32; n_e * f * d];
     let mut dxn = vec![0f32; rows * d];
 
-    for e in 0..n_e {
+    // Per-expert backward on the pool: each task owns its expert's d_w1 /
+    // d_w2 chunk and returns (dxc, ds) for the shared-buffer scatter,
+    // which runs serially in ascending expert order (tokens may be
+    // selected by several experts, so dxn/d_router are reductions).
+    struct ExpertBwd {
+        dxc: Vec<f32>,
+        ds: Vec<f32>,
+    }
+    let work: usize =
+        fwd.selected.iter().map(|sel| sel.len()).sum::<usize>() * 2 * d * f;
+    let tasks: Vec<(usize, &mut [f32], &mut [f32])> = d_w1
+        .chunks_mut(d * f)
+        .zip(d_w2.chunks_mut(f * d))
+        .enumerate()
+        .map(|(e, (gw1, gw2))| (e, gw1, gw2))
+        .collect();
+    let parts: Vec<ExpertBwd> =
+        crate::util::pool::par_map(work, tasks, |_, (e, gw1, gw2)| {
+            let sel = &fwd.selected[e];
+            let n = sel.len();
+            if n == 0 {
+                return ExpertBwd { dxc: Vec::new(), ds: Vec::new() };
+            }
+            let gates = &fwd.gates[e];
+            let u = &fwd.u[e];
+            let g = &fwd.g[e];
+            let w1e = &w1[e * d * f..(e + 1) * d * f];
+            let w2e = &w2[e * f * d..(e + 1) * f * d];
+
+            // gather the upstream grads of the selected tokens
+            let mut dout = vec![0f32; n * d];
+            for (i, &r) in sel.iter().enumerate() {
+                dout[i * d..(i + 1) * d]
+                    .copy_from_slice(&dmlp[r * d..(r + 1) * d]);
+            }
+            // t = dout @ w2ᵀ [n, f] — shared by the hidden grad
+            // (gate-scaled) and the gate grad
+            // (dgate_i = y_i·dout_i = g_i·t_i, y = g @ w2)
+            let t = ops::matmul_nt(&dout, w2e, n, d, f);
+            // out += gate * y  ⇒  dy = gate * dout ; dW2 += gᵀ dy
+            let mut dy = dout;
+            for i in 0..n {
+                let gi = gates[i];
+                for j in 0..d {
+                    dy[i * d + j] *= gi;
+                }
+            }
+            ops::matmul_tn_acc(g, &dy, n, f, d, gw2);
+            // du = gate * t * gelu'(u)
+            let mut du = vec![0f32; n * f];
+            for i in 0..n {
+                let gi = gates[i];
+                for j in 0..f {
+                    du[i * f + j] =
+                        gi * t[i * f + j] * ops::gelu_grad(u[i * f + j]);
+                }
+            }
+            // dW1 += xcᵀ du ; dxc = du @ w1ᵀ
+            let mut xc = vec![0f32; n * d];
+            for (i, &r) in sel.iter().enumerate() {
+                xc[i * d..(i + 1) * d]
+                    .copy_from_slice(&xn[r * d..(r + 1) * d]);
+            }
+            ops::matmul_tn_acc(&xc, &du, n, d, f, gw1);
+            let dxc = ops::matmul_nt(&du, w1e, n, f, d);
+
+            // ds = dgate · σ'(score): the sigmoid-gate backward scalar
+            let ds: Vec<f32> = (0..n)
+                .map(|i| {
+                    let gi = gates[i];
+                    let mut dgate = 0f32;
+                    for j in 0..f {
+                        dgate += g[i * f + j] * t[i * f + j];
+                    }
+                    dgate * gi * (1.0 - gi)
+                })
+                .collect();
+            ExpertBwd { dxc, ds }
+        });
+
+    // scatter into the shared buffers, fixed expert order
+    for (e, part) in parts.iter().enumerate() {
         let col = e + usize::from(fwd.integrated);
-        let sel = &fwd.selected[e];
-        let n = sel.len();
-        if n == 0 {
-            continue;
-        }
-        let gates = &fwd.gates[e];
-        let u = &fwd.u[e];
-        let g = &fwd.g[e];
-        let w1e = &w1[e * d * f..(e + 1) * d * f];
-        let w2e = &w2[e * f * d..(e + 1) * f * d];
-
-        // gather the upstream grads of the selected tokens
-        let mut dout = vec![0f32; n * d];
-        for (i, &r) in sel.iter().enumerate() {
-            dout[i * d..(i + 1) * d]
-                .copy_from_slice(&dmlp[r * d..(r + 1) * d]);
-        }
-        // t = dout @ w2ᵀ [n, f] — shared by the hidden grad (gate-scaled)
-        // and the gate grad (dgate_i = y_i·dout_i = g_i·t_i, y = g @ w2)
-        let t = ops::matmul_nt(&dout, w2e, n, d, f);
-        // out += gate * y  ⇒  dy = gate * dout ; dW2 += gᵀ dy
-        let mut dy = dout;
-        for i in 0..n {
-            let gi = gates[i];
-            for j in 0..d {
-                dy[i * d + j] *= gi;
-            }
-        }
-        ops::matmul_tn_acc(
-            g,
-            &dy,
-            n,
-            f,
-            d,
-            &mut d_w2[e * f * d..(e + 1) * f * d],
-        );
-        // du = gate * t * gelu'(u)
-        let mut du = vec![0f32; n * f];
-        for i in 0..n {
-            let gi = gates[i];
-            for j in 0..f {
-                du[i * f + j] =
-                    gi * t[i * f + j] * ops::gelu_grad(u[i * f + j]);
-            }
-        }
-        // dW1 += xcᵀ du ; dxc = du @ w1ᵀ
-        let mut xc = vec![0f32; n * d];
-        for (i, &r) in sel.iter().enumerate() {
-            xc[i * d..(i + 1) * d].copy_from_slice(&xn[r * d..(r + 1) * d]);
-        }
-        ops::matmul_tn_acc(
-            &xc,
-            &du,
-            n,
-            d,
-            f,
-            &mut d_w1[e * d * f..(e + 1) * d * f],
-        );
-        let dxc = ops::matmul_nt(&du, w1e, n, f, d);
-
-        // scatter: sigmoid-gate backward into the router column + input
-        for (i, &r) in sel.iter().enumerate() {
-            let gi = gates[i];
-            let mut dgate = 0f32;
-            for j in 0..f {
-                dgate += g[i * f + j] * t[i * f + j];
-            }
-            let ds = dgate * gi * (1.0 - gi);
-            let dxcr = &dxc[i * d..(i + 1) * d];
+        for (i, &r) in fwd.selected[e].iter().enumerate() {
+            let ds = part.ds[i];
+            let dxcr = &part.dxc[i * d..(i + 1) * d];
             let dxr = &mut dxn[r * d..(r + 1) * d];
             for j in 0..d {
                 dxr[j] += dxcr[j] + ds * router[j * cols + col];

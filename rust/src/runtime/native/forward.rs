@@ -207,54 +207,66 @@ pub fn forward(
         let mut probs = vec![0f32; b * heads * s * s];
         let mut att = vec![0f32; rows * kd];
         let valid: Option<&[f32]> = if routed { Some(&mask) } else { None };
-        for bi in 0..b {
-            for h in 0..heads {
-                for qi in 0..s {
-                    let qr = bi * s + qi;
-                    let qh = &q[qr * kd + h * dh..qr * kd + h * dh + dh];
-                    let prow_base = ((bi * heads + h) * s + qi) * s;
-                    // masked logits
-                    for ki in 0..=qi {
-                        let ok = match valid {
-                            Some(m) => m[bi * s + ki] > 0.5,
-                            None => true,
-                        };
-                        let kr = bi * s + ki;
-                        probs[prow_base + ki] = if ok {
-                            let kh =
-                                &k[kr * kd + h * dh..kr * kd + h * dh + dh];
-                            let mut acc = 0f32;
-                            for j in 0..dh {
-                                acc += qh[j] * kh[j];
+        // one pool task per batch row: each owns its contiguous probs/att
+        // chunk, so any worker count reproduces the serial result bitwise
+        let attn_tasks: Vec<(usize, &mut [f32], &mut [f32])> = probs
+            .chunks_mut(heads * s * s)
+            .zip(att.chunks_mut(s * kd))
+            .enumerate()
+            .map(|(bi, (pc, ac))| (bi, pc, ac))
+            .collect();
+        crate::util::pool::par_tasks(
+            b * heads * s * s * dh,
+            attn_tasks,
+            |(bi, pc, ac)| {
+                for h in 0..heads {
+                    for qi in 0..s {
+                        let qr = bi * s + qi;
+                        let qh = &q[qr * kd + h * dh..qr * kd + h * dh + dh];
+                        let prow_base = (h * s + qi) * s;
+                        // masked logits
+                        for ki in 0..=qi {
+                            let ok = match valid {
+                                Some(m) => m[bi * s + ki] > 0.5,
+                                None => true,
+                            };
+                            let kr = bi * s + ki;
+                            pc[prow_base + ki] = if ok {
+                                let kh = &k
+                                    [kr * kd + h * dh..kr * kd + h * dh + dh];
+                                let mut acc = 0f32;
+                                for j in 0..dh {
+                                    acc += qh[j] * kh[j];
+                                }
+                                acc * scale
+                            } else {
+                                ops::NEG_INF
+                            };
+                        }
+                        for ki in (qi + 1)..s {
+                            pc[prow_base + ki] = ops::NEG_INF;
+                        }
+                        ops::softmax_inplace(&mut pc[prow_base..prow_base + s]);
+                        // weighted value sum
+                        let mut out = vec![0f32; dh];
+                        for ki in 0..=qi {
+                            let p = pc[prow_base + ki];
+                            if p == 0.0 {
+                                continue;
                             }
-                            acc * scale
-                        } else {
-                            ops::NEG_INF
-                        };
-                    }
-                    for ki in (qi + 1)..s {
-                        probs[prow_base + ki] = ops::NEG_INF;
-                    }
-                    ops::softmax_inplace(&mut probs[prow_base..prow_base + s]);
-                    // weighted value sum
-                    let mut out = vec![0f32; dh];
-                    for ki in 0..=qi {
-                        let p = probs[prow_base + ki];
-                        if p == 0.0 {
-                            continue;
+                            let kr = bi * s + ki;
+                            let vh = &v_proj
+                                [kr * kd + h * dh..kr * kd + h * dh + dh];
+                            for j in 0..dh {
+                                out[j] += p * vh[j];
+                            }
                         }
-                        let kr = bi * s + ki;
-                        let vh =
-                            &v_proj[kr * kd + h * dh..kr * kd + h * dh + dh];
-                        for j in 0..dh {
-                            out[j] += p * vh[j];
-                        }
+                        ac[qi * kd + h * dh..qi * kd + h * dh + dh]
+                            .copy_from_slice(&out);
                     }
-                    att[qr * kd + h * dh..qr * kd + h * dh + dh]
-                        .copy_from_slice(&out);
                 }
-            }
-        }
+            },
+        );
         let attn_out = ops::matmul(&att, wo, rows, kd, d);
 
         // --- residual + MLP ---
@@ -277,8 +289,7 @@ pub fn forward(
                 let w1 = params.layer(l, "w1")?;
                 let w2 = params.layer(l, "w2")?;
                 let u = ops::matmul(&xn2, w1, rows, d, f);
-                let g: Vec<f32> =
-                    u.iter().map(|&uu| ops::gelu(uu)).collect();
+                let g = ops::gelu_map(&u);
                 let mlp = ops::matmul(&g, w2, rows, f, d);
                 (u, g, mlp, None)
             }
@@ -357,6 +368,9 @@ pub fn forward(
 
 /// Next-token cross entropy in nats/token (predicts `tokens[:,1:]` from
 /// `logits[:,:-1]`), matching `train.cross_entropy`.
+///
+/// Per-row terms are computed in parallel; the final fold runs serially
+/// in ascending row order, so the value is thread-count-invariant.
 pub fn cross_entropy(
     logits: &[f32],
     tokens: &[i32],
@@ -364,11 +378,17 @@ pub fn cross_entropy(
     s: usize,
     v: usize,
 ) -> f32 {
-    let mut total = 0f64;
-    for bi in 0..b {
-        for t in 0..s.saturating_sub(1) {
-            let row = &logits[(bi * s + t) * v..(bi * s + t + 1) * v];
-            let tgt = tokens[bi * s + t + 1] as usize;
+    let rows = b * s;
+    let mut per_row = vec![0f64; rows];
+    crate::util::pool::par_rows(rows * v * 8, &mut per_row, 1, |first, band| {
+        for (i, slot) in band.iter_mut().enumerate() {
+            let r = first + i;
+            let t = r % s;
+            if t + 1 >= s {
+                continue; // last position predicts nothing
+            }
+            let row = &logits[r * v..(r + 1) * v];
+            let tgt = tokens[r + 1] as usize;
             // stable log-softmax
             let mut max = f32::MIN;
             for &x in row {
@@ -380,9 +400,10 @@ pub fn cross_entropy(
             for &x in row {
                 sum += ((x - max) as f64).exp();
             }
-            total += sum.ln() + (max as f64) - (row[tgt] as f64);
+            *slot = sum.ln() + (max as f64) - (row[tgt] as f64);
         }
-    }
+    });
+    let total: f64 = per_row.iter().sum();
     (total / (b * s.saturating_sub(1).max(1)) as f64) as f32
 }
 

@@ -7,17 +7,21 @@
 //! L3 stack (trainer, decode server, experiment harnesses, tests) run
 //! end-to-end on a bare `cargo build`.
 //!
-//! It is a *reference* backend: clarity over speed. Semantics are pinned
-//! to the L2 sources (`python/compile/{layers,model,train,sampling}.py`);
-//! a finite-difference test pins the backward pass, and a decode-vs-
-//! teacher-forced parity test pins the serving path against the training
-//! path.
+//! It is a *reference* backend with production manners: semantics are
+//! pinned to the L2 sources
+//! (`python/compile/{layers,model,train,sampling}.py`), while the hot
+//! kernels are cache-tiled and run on the deterministic worker pool
+//! ([`crate::util::pool`], `RP_THREADS`) — results are bitwise identical
+//! at any thread count. A finite-difference test pins the backward pass,
+//! a decode-vs-teacher-forced parity test pins the serving path against
+//! the training path, and a thread-parity property suite pins
+//! width-invariance of logits, gradients and decode outputs.
 
 mod decode;
 pub mod experts;
-mod forward;
-pub(crate) mod ops;
-mod train;
+pub mod forward;
+pub mod ops;
+pub mod train;
 
 pub use forward::RouteMode;
 
@@ -357,6 +361,17 @@ impl NativeBackend {
     pub fn new() -> Self {
         Self
     }
+
+    /// [`Self::new`] with the worker-pool width pinned. NOTE: the pool is
+    /// **process-global** (the backend holds no per-instance state), so
+    /// this is exactly [`crate::util::pool::set_threads`] in Backend-knob
+    /// spelling — it affects every session until changed again. Width
+    /// never changes results — every kernel is bitwise-identical at any
+    /// thread count — only wall-clock.
+    pub fn with_threads(n: usize) -> Self {
+        crate::util::pool::set_threads(Some(n.max(1)));
+        Self
+    }
 }
 
 impl Backend for NativeBackend {
@@ -567,7 +582,19 @@ mod tests {
         }
     }
 
+    /// Re-runs the decode-vs-forward parity at pool widths 1 and 7 (the
+    /// odd width chunks batch rows and matmul bands unevenly); the
+    /// min-work gate is disabled so the threaded path really executes.
     fn run_parity(cfg: ModelConfig, mode: RouteMode) {
+        let _g = crate::util::pool::knob_guard();
+        for nt in [1usize, 7] {
+            crate::util::pool::with_threads(nt, || {
+                run_parity_at(cfg.clone(), mode)
+            });
+        }
+    }
+
+    fn run_parity_at(cfg: ModelConfig, mode: RouteMode) {
         let s = cfg.seq_len;
         let d = cfg.d_model;
         let kd = cfg.n_heads * cfg.d_head;

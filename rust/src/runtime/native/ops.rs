@@ -9,6 +9,14 @@
 //! Each forward kernel that training needs has a hand-derived backward
 //! next to it; `native::train` composes them and a finite-difference test
 //! pins the composition.
+//!
+//! The heavy kernels run on the deterministic worker pool
+//! ([`crate::util::pool`]): parallel regions partition *output rows* and
+//! keep every per-element accumulation in its serial ascending-`k` order,
+//! so results are bitwise identical to the scalar oracles at any
+//! `RP_THREADS` (property-tested below).
+
+use crate::util::pool;
 
 /// Additive-mask value (finite to stay NaN-free in f32, as in ref.py).
 pub const NEG_INF: f32 = -1e30;
@@ -25,11 +33,12 @@ pub const RMS_EPS: f32 = 1e-6;
 /// memory is reused TILE times instead of once.
 const TILE: usize = 64;
 
-/// `a [m,k] @ b [k,n] -> [m,n]`, cache-tiled.
+/// `a [m,k] @ b [k,n] -> [m,n]`, cache-tiled and row-parallel.
 ///
 /// Accumulation order per output element is ascending `k`, identical to
 /// [`matmul_naive`], so the two are bitwise-equal (a property test pins
-/// this); the tiling only reorders *which* outputs are touched when.
+/// this); the tiling only reorders *which* outputs are touched when, and
+/// the pool only partitions output rows between workers.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -38,30 +47,34 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         return matmul_naive(a, b, m, k, n);
     }
     let mut out = vec![0f32; m * n];
-    let mut k0 = 0;
-    while k0 < k {
-        let k1 = (k0 + TILE).min(k);
-        let mut j0 = 0;
-        while j0 < n {
-            let j1 = (j0 + TILE).min(n);
-            for i in 0..m {
-                let arow = &a[i * k..(i + 1) * k];
-                let orow = &mut out[i * n + j0..i * n + j1];
-                for kk in k0..k1 {
-                    let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n + j0..kk * n + j1];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
+    pool::par_rows(m * k * n, &mut out, n, |r0, band| {
+        let rows = band.len() / n;
+        let a_band = &a[r0 * k..(r0 + rows) * k];
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + TILE).min(k);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + TILE).min(n);
+                for i in 0..rows {
+                    let arow = &a_band[i * k..(i + 1) * k];
+                    let orow = &mut band[i * n + j0..i * n + j1];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n + j0..kk * n + j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
                     }
                 }
+                j0 = j1;
             }
-            j0 = j1;
+            k0 = k1;
         }
-        k0 = k1;
-    }
+    });
     out
 }
 
@@ -95,33 +108,37 @@ pub fn matmul_naive(
 
 /// `a [m,k] @ b^T` with `b [n,k]` -> `[m,n]` (e.g. `dx = dy @ W^T`),
 /// blocked over the output so each `b` row tile is reused across the `i`
-/// tile while L1-resident. Dot products run over full ascending `k`, so
-/// results are bitwise-identical to [`matmul_nt_naive`].
+/// tile while L1-resident, with output rows partitioned across the pool.
+/// Dot products run over full ascending `k`, so results are
+/// bitwise-identical to [`matmul_nt_naive`].
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     let mut out = vec![0f32; m * n];
-    let mut i0 = 0;
-    while i0 < m {
-        let i1 = (i0 + TILE).min(m);
-        let mut j0 = 0;
-        while j0 < n {
-            let j1 = (j0 + TILE).min(n);
-            for i in i0..i1 {
-                let arow = &a[i * k..(i + 1) * k];
-                for j in j0..j1 {
-                    let brow = &b[j * k..(j + 1) * k];
-                    let mut acc = 0f32;
-                    for kk in 0..k {
-                        acc += arow[kk] * brow[kk];
+    pool::par_rows(m * k * n, &mut out, n, |r0, band| {
+        let rows = band.len() / n;
+        let mut i0 = 0;
+        while i0 < rows {
+            let i1 = (i0 + TILE).min(rows);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + TILE).min(n);
+                for i in i0..i1 {
+                    let arow = &a[(r0 + i) * k..(r0 + i + 1) * k];
+                    for j in j0..j1 {
+                        let brow = &b[j * k..(j + 1) * k];
+                        let mut acc = 0f32;
+                        for kk in 0..k {
+                            acc += arow[kk] * brow[kk];
+                        }
+                        band[i * n + j] = acc;
                     }
-                    out[i * n + j] = acc;
                 }
+                j0 = j1;
             }
-            j0 = j1;
+            i0 = i1;
         }
-        i0 = i1;
-    }
+    });
     out
 }
 
@@ -151,8 +168,58 @@ pub fn matmul_nt_naive(
 }
 
 /// `a^T @ b` with `a [k,m]`, `b [k,n]` -> `[m,n]` (e.g. `dW = x^T dy`),
-/// accumulated into `out`.
+/// accumulated into `out`, tiled over `j`/`k` and parallel over output
+/// rows `i`.
+///
+/// Per output element the reduction stays ascending `kk` (the `j` tile is
+/// outermost, and `i` bands are disjoint), so this is bitwise-identical
+/// to [`matmul_tn_acc_naive`] at any thread count — property-tested
+/// below.
 pub fn matmul_tn_acc(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if k.min(m).min(n) <= 1 || (k * m + k * n) <= TILE * TILE {
+        return matmul_tn_acc_naive(a, b, k, m, n, out);
+    }
+    pool::par_rows(k * m * n, out, n, |i0, band| {
+        let rows = band.len() / n;
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TILE).min(n);
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + TILE).min(k);
+                for kk in k0..k1 {
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    for i in 0..rows {
+                        let av = a[kk * m + i0 + i];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut band[i * n + j0..i * n + j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+                k0 = k1;
+            }
+            j0 = j1;
+        }
+    });
+}
+
+/// Scalar-oracle form of [`matmul_tn_acc`] (the pre-tiling reference
+/// loop, kept as the bitwise ground truth).
+pub fn matmul_tn_acc_naive(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -255,6 +322,32 @@ pub fn gelu_grad(u: f32) -> f32 {
     let inner = GELU_C * (u + GELU_A * u * u * u);
     let t = inner.tanh();
     0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * u * u)
+}
+
+/// tanh costs ~an order of magnitude more than a MAC; weight GELU-shaped
+/// work accordingly in the pool's serial-fallback gate.
+const GELU_WORK: usize = 16;
+
+/// Elementwise [`gelu`] over a buffer, parallel across the pool (purely
+/// elementwise, so trivially bitwise-identical at any width).
+pub fn gelu_map(u: &[f32]) -> Vec<f32> {
+    let mut g = vec![0f32; u.len()];
+    pool::par_rows(u.len() * GELU_WORK, &mut g, 1, |first, band| {
+        for (i, o) in band.iter_mut().enumerate() {
+            *o = gelu(u[first + i]);
+        }
+    });
+    g
+}
+
+/// `du[i] *= gelu'(u[i])` in place, parallel across the pool.
+pub fn gelu_grad_mul(du: &mut [f32], u: &[f32]) {
+    debug_assert_eq!(du.len(), u.len());
+    pool::par_rows(u.len() * GELU_WORK, du, 1, |first, band| {
+        for (i, o) in band.iter_mut().enumerate() {
+            *o *= gelu_grad(u[first + i]);
+        }
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -445,68 +538,104 @@ mod tests {
 
     /// Tiled matmuls must be bitwise-identical to their scalar oracles —
     /// accumulation order is preserved, so not even the last ulp may move.
+    /// Swept across pool widths (1, 2, 7) so banding is exercised too.
     #[test]
     fn tiled_matmul_matches_naive_oracle() {
-        let mut rng = crate::data::rng::Pcg32::new(42, 7);
-        // cover: smaller than a tile, exact tile multiples, ragged edges
-        for &(m, k, n) in &[
-            (1usize, 1usize, 1usize),
-            (3, 5, 2),
-            (TILE, TILE, TILE),
-            (TILE + 3, 2 * TILE + 1, TILE - 5),
-            (7, 130, 65),
-        ] {
-            let a: Vec<f32> =
-                (0..m * k).map(|_| rng.next_normal() as f32).collect();
-            let b: Vec<f32> =
-                (0..k * n).map(|_| rng.next_normal() as f32).collect();
-            assert_eq!(
-                matmul(&a, &b, m, k, n),
-                matmul_naive(&a, &b, m, k, n),
-                "matmul {m}x{k}x{n}"
-            );
-            let bt: Vec<f32> =
-                (0..n * k).map(|_| rng.next_normal() as f32).collect();
-            assert_eq!(
-                matmul_nt(&a, &bt, m, k, n),
-                matmul_nt_naive(&a, &bt, m, k, n),
-                "matmul_nt {m}x{k}x{n}"
-            );
+        let _g = pool::knob_guard();
+        for nt in [1usize, 2, 7] {
+            pool::with_threads(nt, || {
+                let mut rng = crate::data::rng::Pcg32::new(42, 7);
+                // cover: smaller than a tile, exact tile multiples, ragged
+                // edges, and row counts that chunk unevenly across 7 workers
+                for &(m, k, n) in &[
+                    (1usize, 1usize, 1usize),
+                    (3, 5, 2),
+                    (TILE, TILE, TILE),
+                    (TILE + 3, 2 * TILE + 1, TILE - 5),
+                    (7, 130, 65),
+                ] {
+                    let a: Vec<f32> =
+                        (0..m * k).map(|_| rng.next_normal() as f32).collect();
+                    let b: Vec<f32> =
+                        (0..k * n).map(|_| rng.next_normal() as f32).collect();
+                    assert_eq!(
+                        matmul(&a, &b, m, k, n),
+                        matmul_naive(&a, &b, m, k, n),
+                        "matmul {m}x{k}x{n} @ {nt} threads"
+                    );
+                    let bt: Vec<f32> =
+                        (0..n * k).map(|_| rng.next_normal() as f32).collect();
+                    assert_eq!(
+                        matmul_nt(&a, &bt, m, k, n),
+                        matmul_nt_naive(&a, &bt, m, k, n),
+                        "matmul_nt {m}x{k}x{n} @ {nt} threads"
+                    );
+                    // tn_acc accumulates: seed both outputs identically
+                    let at: Vec<f32> =
+                        (0..k * m).map(|_| rng.next_normal() as f32).collect();
+                    let seed: Vec<f32> =
+                        (0..m * n).map(|_| rng.next_normal() as f32).collect();
+                    let mut tiled = seed.clone();
+                    matmul_tn_acc(&at, &b, k, m, n, &mut tiled);
+                    let mut naive = seed;
+                    matmul_tn_acc_naive(&at, &b, k, m, n, &mut naive);
+                    assert_eq!(
+                        tiled, naive,
+                        "matmul_tn_acc {k}x{m}x{n} @ {nt} threads"
+                    );
+                }
+            });
         }
     }
 
-    /// Randomized shapes (property test): tiled == naive, bitwise.
+    /// Randomized shapes (property test): tiled == naive, bitwise, for all
+    /// three blocked matmuls, at a deliberately odd pool width.
     #[test]
     fn prop_tiled_matmul_equals_naive() {
         use crate::util::prop::{forall, usize_in};
-        forall(
-            23,
-            60,
-            |rng| {
-                let m = usize_in(rng, 1, 80);
-                let k = usize_in(rng, 1, 150);
-                let n = usize_in(rng, 1, 80);
-                let a: Vec<f32> =
-                    (0..m * k).map(|_| rng.next_normal() as f32).collect();
-                let b: Vec<f32> =
-                    (0..k * n).map(|_| rng.next_normal() as f32).collect();
-                let bt: Vec<f32> =
-                    (0..n * k).map(|_| rng.next_normal() as f32).collect();
-                (m, k, n, a, b, bt)
-            },
-            |(m, k, n, a, b, bt)| {
-                if matmul(a, b, *m, *k, *n) != matmul_naive(a, b, *m, *k, *n)
-                {
-                    return Err(format!("matmul tiled!=naive {m}x{k}x{n}"));
-                }
-                if matmul_nt(a, bt, *m, *k, *n)
-                    != matmul_nt_naive(a, bt, *m, *k, *n)
-                {
-                    return Err(format!("nt tiled!=naive {m}x{k}x{n}"));
-                }
-                Ok(())
-            },
-        );
+        let _g = pool::knob_guard();
+        pool::with_threads(3, || {
+            forall(
+                23,
+                60,
+                |rng| {
+                    let m = usize_in(rng, 1, 80);
+                    let k = usize_in(rng, 1, 150);
+                    let n = usize_in(rng, 1, 80);
+                    let a: Vec<f32> =
+                        (0..m * k).map(|_| rng.next_normal() as f32).collect();
+                    let b: Vec<f32> =
+                        (0..k * n).map(|_| rng.next_normal() as f32).collect();
+                    let bt: Vec<f32> =
+                        (0..n * k).map(|_| rng.next_normal() as f32).collect();
+                    let at: Vec<f32> =
+                        (0..k * m).map(|_| rng.next_normal() as f32).collect();
+                    (m, k, n, a, b, bt, at)
+                },
+                |(m, k, n, a, b, bt, at)| {
+                    if matmul(a, b, *m, *k, *n)
+                        != matmul_naive(a, b, *m, *k, *n)
+                    {
+                        return Err(format!("matmul tiled!=naive {m}x{k}x{n}"));
+                    }
+                    if matmul_nt(a, bt, *m, *k, *n)
+                        != matmul_nt_naive(a, bt, *m, *k, *n)
+                    {
+                        return Err(format!("nt tiled!=naive {m}x{k}x{n}"));
+                    }
+                    let mut tiled = vec![0f32; m * n];
+                    matmul_tn_acc(at, b, *k, *m, *n, &mut tiled);
+                    let mut naive = vec![0f32; m * n];
+                    matmul_tn_acc_naive(at, b, *k, *m, *n, &mut naive);
+                    if tiled != naive {
+                        return Err(format!(
+                            "tn_acc tiled!=naive {k}x{m}x{n}"
+                        ));
+                    }
+                    Ok(())
+                },
+            );
+        });
     }
 
     #[test]

@@ -133,13 +133,17 @@ fn backward(
         };
 
     // --- CE backward: dlogits = (softmax - onehot) / (b*(s-1)) ---
+    // (row-parallel: each logits row is written by exactly one task)
     let denom = (b * s.saturating_sub(1).max(1)) as f32;
     let mut dlogits = vec![0f32; rows * v];
-    for bi in 0..b {
-        for t in 0..s.saturating_sub(1) {
-            let r = bi * s + t;
+    crate::util::pool::par_rows(rows * v * 8, &mut dlogits, v, |first, band| {
+        for (i, drow) in band.chunks_mut(v).enumerate() {
+            let r = first + i;
+            let t = r % s;
+            if t + 1 >= s {
+                continue;
+            }
             let lrow = &fwd.logits[r * v..(r + 1) * v];
-            let drow = &mut dlogits[r * v..(r + 1) * v];
             let mut max = f32::MIN;
             for &x in lrow {
                 if x > max {
@@ -155,10 +159,10 @@ fn backward(
             for dst in drow.iter_mut() {
                 *dst *= inv / denom;
             }
-            let tgt = tokens[bi * s + t + 1] as usize;
+            let tgt = tokens[r + 1] as usize;
             drow[tgt] -= 1.0 / denom;
         }
-    }
+    });
 
     // --- unembed backward: logits = xn_final @ embed^T ---
     let embed = params.get("embed")?;
@@ -224,9 +228,7 @@ fn backward(
                 );
                 let dg = ops::matmul_nt(&d_delta, w2, rows, d, f);
                 let mut du = dg;
-                for (dst, &uu) in du.iter_mut().zip(&lf.u) {
-                    *dst *= ops::gelu_grad(uu);
-                }
+                ops::gelu_grad_mul(&mut du, &lf.u);
                 ops::matmul_tn_acc(
                     &lf.xn2,
                     &du,
@@ -308,65 +310,85 @@ fn backward(
         let mut dq = vec![0f32; rows * kd];
         let mut dk = vec![0f32; rows * kd];
         let mut dv = vec![0f32; rows * kd];
-        let mut dlog = vec![0f32; s];
-        for bi in 0..b {
-            for h in 0..heads {
-                for qi in 0..s {
-                    let qr = bi * s + qi;
-                    let datt_h =
-                        &datt[qr * kd + h * dh..qr * kd + h * dh + dh];
-                    let prow_base = ((bi * heads + h) * s + qi) * s;
-                    let prow = &fwd.layers[l].probs[prow_base..prow_base + s];
-                    // dP and the softmax Jacobian (masked entries have P=0)
-                    let mut inner = 0f32; // sum_k dP_k * P_k
-                    for ki in 0..=qi {
-                        let p = prow[ki];
-                        if p == 0.0 {
-                            dlog[ki] = 0.0;
-                            continue;
+        // one pool task per batch row: the cross-query accumulations into
+        // dk/dv stay inside a row's own contiguous chunk, in the same
+        // serial qi order, so any worker count is bitwise-identical
+        type AttnBwdTask<'a> =
+            (usize, &'a mut [f32], &'a mut [f32], &'a mut [f32]);
+        let bwd_tasks: Vec<AttnBwdTask<'_>> = dq
+            .chunks_mut(s * kd)
+            .zip(dk.chunks_mut(s * kd))
+            .zip(dv.chunks_mut(s * kd))
+            .enumerate()
+            .map(|(bi, ((dqc, dkc), dvc))| (bi, dqc, dkc, dvc))
+            .collect();
+        crate::util::pool::par_tasks(
+            2 * b * heads * s * s * dh,
+            bwd_tasks,
+            |(bi, dqc, dkc, dvc)| {
+                let mut dlog = vec![0f32; s];
+                for h in 0..heads {
+                    for qi in 0..s {
+                        let qr = bi * s + qi;
+                        let datt_h =
+                            &datt[qr * kd + h * dh..qr * kd + h * dh + dh];
+                        let prow_base = ((bi * heads + h) * s + qi) * s;
+                        let prow =
+                            &fwd.layers[l].probs[prow_base..prow_base + s];
+                        // dP and the softmax Jacobian (masked entries P=0)
+                        let mut inner = 0f32; // sum_k dP_k * P_k
+                        for ki in 0..=qi {
+                            let p = prow[ki];
+                            if p == 0.0 {
+                                dlog[ki] = 0.0;
+                                continue;
+                            }
+                            let kr = bi * s + ki;
+                            let vh = &lf.v
+                                [kr * kd + h * dh..kr * kd + h * dh + dh];
+                            let mut dp = 0f32;
+                            for j in 0..dh {
+                                dp += datt_h[j] * vh[j];
+                            }
+                            dlog[ki] = dp;
+                            inner += dp * p;
+                            // dV accumulates P * datt
+                            let dvh = &mut dvc
+                                [ki * kd + h * dh..ki * kd + h * dh + dh];
+                            for j in 0..dh {
+                                dvh[j] += p * datt_h[j];
+                            }
                         }
-                        let kr = bi * s + ki;
-                        let vh = &lf.v[kr * kd + h * dh..kr * kd + h * dh + dh];
-                        let mut dp = 0f32;
-                        for j in 0..dh {
-                            dp += datt_h[j] * vh[j];
-                        }
-                        dlog[ki] = dp;
-                        inner += dp * p;
-                        // dV accumulates P * datt
-                        let dvh =
-                            &mut dv[kr * kd + h * dh..kr * kd + h * dh + dh];
-                        for j in 0..dh {
-                            dvh[j] += p * datt_h[j];
-                        }
-                    }
-                    // dlogits = P * (dP - inner); then dQ/dK
-                    let qh = &lf.q[qr * kd + h * dh..qr * kd + h * dh + dh];
-                    for ki in 0..=qi {
-                        let p = prow[ki];
-                        if p == 0.0 {
-                            continue;
-                        }
-                        let dl = p * (dlog[ki] - inner) * scale;
-                        if dl == 0.0 {
-                            continue;
-                        }
-                        let kr = bi * s + ki;
-                        let kh = &lf.k[kr * kd + h * dh..kr * kd + h * dh + dh];
-                        let dqh =
-                            &mut dq[qr * kd + h * dh..qr * kd + h * dh + dh];
-                        for j in 0..dh {
-                            dqh[j] += dl * kh[j];
-                        }
-                        let dkh =
-                            &mut dk[kr * kd + h * dh..kr * kd + h * dh + dh];
-                        for j in 0..dh {
-                            dkh[j] += dl * qh[j];
+                        // dlogits = P * (dP - inner); then dQ/dK
+                        let qh =
+                            &lf.q[qr * kd + h * dh..qr * kd + h * dh + dh];
+                        for ki in 0..=qi {
+                            let p = prow[ki];
+                            if p == 0.0 {
+                                continue;
+                            }
+                            let dl = p * (dlog[ki] - inner) * scale;
+                            if dl == 0.0 {
+                                continue;
+                            }
+                            let kr = bi * s + ki;
+                            let kh = &lf.k
+                                [kr * kd + h * dh..kr * kd + h * dh + dh];
+                            let dqh = &mut dqc
+                                [qi * kd + h * dh..qi * kd + h * dh + dh];
+                            for j in 0..dh {
+                                dqh[j] += dl * kh[j];
+                            }
+                            let dkh = &mut dkc
+                                [ki * kd + h * dh..ki * kd + h * dh + dh];
+                            for j in 0..dh {
+                                dkh[j] += dl * qh[j];
+                            }
                         }
                     }
                 }
-            }
-        }
+            },
+        );
         // RoPE backward = inverse rotation
         ops::rope(&mut dq, &positions, rows, heads, dh, &freqs, -1.0);
         ops::rope(&mut dk, &positions, rows, heads, dh, &freqs, -1.0);
@@ -537,6 +559,10 @@ pub fn lr_schedule(step: f32, tc: &TrainConfig) -> f32 {
 }
 
 /// One AdamW update in place; returns `(lr, pre-clip grad norm)`.
+///
+/// Pool-parallel over tensors: the grad norm is a per-tensor partial sum
+/// folded serially in tensor order (thread-count-invariant), and the
+/// elementwise update owns one tensor per task.
 pub fn adamw(
     tc: &TrainConfig,
     names: &[String],
@@ -546,12 +572,19 @@ pub fn adamw(
     v: &mut [Vec<f32>],
     step: i64,
 ) -> (f32, f32) {
-    let mut sq = 0f64;
-    for g in grads {
-        for &x in g {
-            sq += (x as f64) * (x as f64);
-        }
-    }
+    let total: usize = grads.iter().map(|g| g.len()).sum();
+    let partials = crate::util::pool::par_map(
+        2 * total,
+        grads.iter().collect::<Vec<_>>(),
+        |_, g| {
+            let mut sq = 0f64;
+            for &x in g.iter() {
+                sq += (x as f64) * (x as f64);
+            }
+            sq
+        },
+    );
+    let sq: f64 = partials.iter().sum();
     let gnorm = sq.sqrt() as f32;
     let clip = (1.0f32).min(tc.grad_clip as f32 / (gnorm + 1e-9));
     let lr = lr_schedule(step as f32, tc);
@@ -561,12 +594,18 @@ pub fn adamw(
     let (b1, b2) = (tc.beta1 as f32, tc.beta2 as f32);
     let eps = tc.eps as f32;
     let wd = tc.weight_decay as f32;
-    for i in 0..names.len() {
-        let decayed = is_decayed(&names[i]);
-        let p = &mut params[i];
-        let mm = &mut m[i];
-        let vv = &mut v[i];
-        let g = &grads[i];
+    type UpdateTask<'a> =
+        (&'a String, &'a mut Vec<f32>, &'a mut Vec<f32>, &'a mut Vec<f32>, &'a Vec<f32>);
+    let tasks: Vec<UpdateTask<'_>> = names
+        .iter()
+        .zip(params.iter_mut())
+        .zip(m.iter_mut())
+        .zip(v.iter_mut())
+        .zip(grads.iter())
+        .map(|((((name, p), mm), vv), g)| (name, p, mm, vv, g))
+        .collect();
+    crate::util::pool::par_tasks(8 * total, tasks, |(name, p, mm, vv, g)| {
+        let decayed = is_decayed(name);
         for j in 0..p.len() {
             let gc = g[j] * clip;
             mm[j] = b1 * mm[j] + (1.0 - b1) * gc;
@@ -577,7 +616,7 @@ pub fn adamw(
             }
             p[j] -= lr * upd;
         }
-    }
+    });
     (lr, gnorm)
 }
 
@@ -615,8 +654,18 @@ mod tests {
         lg.metrics.loss
     }
 
+    /// Parameterized over pool widths: the analytic backward must match
+    /// finite differences *and* be the same computation at every width
+    /// (the min-work gate is disabled so even this tiny model threads).
     #[test]
     fn gradients_match_finite_differences() {
+        let _g = crate::util::pool::knob_guard();
+        for nt in [1usize, 4] {
+            crate::util::pool::with_threads(nt, fd_check_dense);
+        }
+    }
+
+    fn fd_check_dense() {
         let cfg = tiny_cfg();
         let named: Vec<(String, Vec<f32>)> = init_params(&cfg, 3)
             .into_iter()
@@ -676,6 +725,14 @@ mod tests {
     /// trick as the MoD test above.
     #[test]
     fn moe_gradients_match_finite_differences() {
+        let _g = crate::util::pool::knob_guard();
+        // width 7 chunks the per-expert fan-out unevenly on purpose
+        for nt in [1usize, 7] {
+            crate::util::pool::with_threads(nt, fd_check_moe);
+        }
+    }
+
+    fn fd_check_moe() {
         use crate::config::FfMode;
         let cases: &[(FfMode, RoutingMode)] = &[
             (FfMode::Moe, RoutingMode::None),

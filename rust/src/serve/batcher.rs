@@ -3,14 +3,18 @@
 //! runtime substrate is a hand-rolled worker loop + channels rather than
 //! tokio).
 //!
-//! Requests arrive on a channel; the batcher groups up to the largest
-//! compiled decode batch (waiting at most `batch_wait_ms` for batchmates),
-//! picks the smallest compiled batch size that fits, and runs one
-//! [`DecodeSession`] to completion per group. Prompt processing ("prefill")
-//! reuses the decode path token-by-token — rows with longer prompts keep
-//! consuming prompt tokens while shorter rows already generate; finished
-//! rows are marked inactive, so routed blocks skip them (free) while full
-//! blocks carry them (the cost of static batch shapes, visible in stats).
+//! Requests arrive on a channel; a pool of batcher workers
+//! ([`ServeConfig::workers`], default = the compute pool width) each pull
+//! a group of up to the largest compiled decode batch (waiting at most
+//! `batch_wait_ms` for batchmates), pick the smallest compiled batch size
+//! that fits, and run one [`DecodeSession`] to completion per group —
+//! the intake channel is locked only while *gathering* a group, so
+//! concurrent decode sessions genuinely overlap on the worker threads.
+//! Prompt processing ("prefill") reuses the decode path token-by-token —
+//! rows with longer prompts keep consuming prompt tokens while shorter
+//! rows already generate; finished rows are marked inactive, so routed
+//! blocks skip them (free) while full blocks carry them (the cost of
+//! static batch shapes, visible in stats).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -52,7 +56,16 @@ pub struct ServerStats {
     pub blocks_skipped: u64,
     pub capacity_drops: u64,
     pub total_flops: f64,
+    /// Summed per-session decode seconds (compute time, double-counts
+    /// overlapping sessions — divide by it for per-session speed).
     pub decode_wall_s: f64,
+    /// Most decode sessions ever running simultaneously across the
+    /// batcher workers (proves the workers genuinely overlap).
+    pub peak_in_flight_batches: u64,
+    /// First batch start / latest batch end: the elapsed-span denominator
+    /// for aggregate throughput (overlap must not double-count time).
+    pub first_batch_start: Option<Instant>,
+    pub last_batch_end: Option<Instant>,
 }
 
 impl ServerStats {
@@ -72,8 +85,15 @@ impl ServerStats {
         self.blocks_skipped as f64 / t.max(1) as f64
     }
 
+    /// Aggregate server throughput over the elapsed first-start → last-end
+    /// span, so overlapping sessions count once (the summed per-session
+    /// time in `decode_wall_s` would understate it by ~the worker count).
     pub fn tokens_per_sec(&self) -> f64 {
-        self.tokens_generated as f64 / self.decode_wall_s.max(1e-9)
+        let span = match (self.first_batch_start, self.last_batch_end) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        self.tokens_generated as f64 / span.max(1e-9)
     }
 }
 
@@ -81,6 +101,16 @@ struct Job {
     request: Request,
     submitted: Instant,
     resp: mpsc::Sender<Response>,
+}
+
+/// Decrements the shared in-flight session counter on drop (even if a
+/// batch errors out), so the kernel-serialization heuristic can't leak.
+struct InFlight<'a>(&'a std::sync::atomic::AtomicUsize);
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+    }
 }
 
 /// Handle to a pending response.
@@ -97,16 +127,16 @@ impl Pending {
     }
 }
 
-/// The serving coordinator: a background worker thread running the
-/// dynamic-batching loop.
+/// The serving coordinator: a pool of background batcher workers running
+/// the dynamic-batching loop (decode sessions overlap across workers).
 pub struct Server {
     tx: Option<mpsc::Sender<Job>>,
     stats: Arc<Mutex<ServerStats>>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Spawn the batcher worker.
+    /// Spawn the batcher workers.
     pub fn spawn(
         bundle: Arc<Bundle>,
         params: Arc<Vec<Tensor>>,
@@ -114,30 +144,87 @@ impl Server {
         decision: RoutingDecision,
     ) -> Self {
         let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(Mutex::new(ServerStats::default()));
-        let stats2 = stats.clone();
-        let handle = std::thread::spawn(move || {
-            let max_batch =
-                serve_cfg.decode_batches.iter().copied().max().unwrap_or(1);
-            while let Ok(first) = rx.recv() {
-                // gather batchmates up to max_batch within the wait window
-                let mut jobs = vec![first];
-                let deadline = Instant::now()
-                    + Duration::from_millis(serve_cfg.batch_wait_ms);
-                while jobs.len() < max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
+        let in_flight = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let workers = if serve_cfg.workers > 0 {
+            serve_cfg.workers
+        } else {
+            crate::util::pool::threads()
+        };
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let rx = rx.clone();
+                let stats = stats.clone();
+                let in_flight = in_flight.clone();
+                let bundle = bundle.clone();
+                let params = params.clone();
+                let serve_cfg = serve_cfg.clone();
+                std::thread::spawn(move || {
+                    let max_batch = serve_cfg
+                        .decode_batches
+                        .iter()
+                        .copied()
+                        .max()
+                        .unwrap_or(1);
+                    loop {
+                        // hold the intake lock only while gathering one
+                        // group; the decode session below runs unlocked so
+                        // other workers pull + decode the next group
+                        // concurrently
+                        let jobs = {
+                            let rx = rx.lock().unwrap();
+                            let first = match rx.recv() {
+                                Ok(job) => job,
+                                Err(_) => break, // sender gone: shut down
+                            };
+                            let mut jobs = vec![first];
+                            let deadline = Instant::now()
+                                + Duration::from_millis(serve_cfg.batch_wait_ms);
+                            while jobs.len() < max_batch {
+                                let now = Instant::now();
+                                if now >= deadline {
+                                    break;
+                                }
+                                match rx.recv_timeout(deadline - now) {
+                                    Ok(job) => jobs.push(job),
+                                    Err(_) => break,
+                                }
+                            }
+                            jobs
+                        };
+                        let cur = in_flight
+                            .fetch_add(1, std::sync::atomic::Ordering::SeqCst)
+                            + 1;
+                        let _dec = InFlight(in_flight.as_ref());
+                        {
+                            let mut st = stats.lock().unwrap();
+                            st.peak_in_flight_batches =
+                                st.peak_in_flight_batches.max(cur as u64);
+                        }
+                        if cur > 1 {
+                            // another session is already decoding:
+                            // session-level concurrency replaces kernel
+                            // fan-out, so total threads stay ~ the pool
+                            // width instead of multiplying against it. A
+                            // lone session keeps full kernel parallelism.
+                            crate::util::pool::run_as_worker(|| {
+                                run_batch(
+                                    &bundle, &params, &serve_cfg, decision,
+                                    jobs, &stats,
+                                )
+                            });
+                        } else {
+                            run_batch(
+                                &bundle, &params, &serve_cfg, decision, jobs,
+                                &stats,
+                            );
+                        }
                     }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(job) => jobs.push(job),
-                        Err(_) => break,
-                    }
-                }
-                run_batch(&bundle, &params, &serve_cfg, decision, jobs, &stats2);
-            }
-        });
-        Self { tx: Some(tx), stats, handle: Some(handle) }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), stats, handles }
     }
 
     /// Submit a request; returns a handle to wait on.
@@ -160,10 +247,10 @@ impl Server {
         self.stats.lock().unwrap().clone()
     }
 
-    /// Stop accepting requests and join the worker.
+    /// Stop accepting requests and join the workers.
     pub fn shutdown(mut self) {
         drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -172,7 +259,7 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -198,6 +285,7 @@ fn run_batch(
     jobs: Vec<Job>,
     stats: &Mutex<ServerStats>,
 ) {
+    let t0 = Instant::now();
     let n = jobs.len();
     let batch = pick_batch(&serve_cfg.decode_batches, n);
     let requests: Vec<Request> =
@@ -205,7 +293,15 @@ fn run_batch(
     let refs: Vec<&Request> = requests.iter().collect();
     match generate_batch(bundle, params, batch, decision, &refs) {
         Ok((outputs, report)) => {
-            stats.lock().unwrap().absorb(&report, n);
+            {
+                let mut st = stats.lock().unwrap();
+                st.absorb(&report, n);
+                st.first_batch_start = Some(match st.first_batch_start {
+                    Some(a) => a.min(t0), // earliest start, any worker
+                    None => t0,
+                });
+                st.last_batch_end = Some(Instant::now());
+            }
             for (job, out) in jobs.into_iter().zip(outputs) {
                 let _ = job.resp.send(Response {
                     decode_tokens: out.len(),

@@ -1,11 +1,13 @@
 //! In-repo substrates that would normally be external crates (this build
 //! is fully offline): error type, JSON codec, CLI parsing, micro-bench
-//! harness, and a minimal property-testing loop.
+//! harness, a minimal property-testing loop, and the deterministic
+//! scoped-thread worker pool the native backend computes on.
 
 pub mod args;
 pub mod bench;
 pub mod error;
 pub mod json;
+pub mod pool;
 pub mod prop;
 
 pub use args::Args;

@@ -1,0 +1,320 @@
+//! Deterministic scoped-thread worker pool for the native backend.
+//!
+//! MoD's pitch is compute that is "predictable in sum total" — the native
+//! interpreter should spend that total on every core without changing a
+//! single bit of the answer. The pool therefore enforces one contract on
+//! every call site:
+//!
+//! **Parallelism may only partition independent outputs; it may never
+//! reorder a floating-point reduction.** Each task owns a disjoint slice
+//! of the output and runs the exact serial inner loop over it (same
+//! ascending-`k` accumulation, same everything), and any cross-task
+//! reduction is expressed as "parallel per-item partials, then a serial
+//! fold in fixed order". Under that contract results are **bitwise
+//! identical at any thread count** — the `tests/properties.rs` parity
+//! suite pins logits, gradients and decode outputs across
+//! `RP_THREADS ∈ {1, 2, 4, 7}`.
+//!
+//! Width resolution (first match wins):
+//! 1. [`set_threads`] override (the Backend knob / `--threads` CLI flag),
+//! 2. the `RP_THREADS` environment variable,
+//! 3. [`std::thread::available_parallelism`].
+//!
+//! Workers are *scoped* (`std::thread::scope`), spawned per parallel
+//! region: no channels, no 'static bounds, no shutdown protocol, zero
+//! dependencies. Spawn cost (~tens of µs) is amortized by a minimum-work
+//! gate — regions smaller than [`set_min_work`]'s threshold (in roughly
+//! MAC-sized units) run serially on the caller. Nested regions (a kernel
+//! called from inside a pool task) also run serially, so fan-out never
+//! multiplies.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Below this much work (~MAC-sized units ≈ ns of scalar math) a region
+/// runs serially: thread spawns cost tens of µs and must pay for
+/// themselves.
+const DEFAULT_MIN_WORK: usize = 32 * 1024;
+
+/// `0` = no override (fall back to `RP_THREADS` / available parallelism).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+/// `usize::MAX` = no override (use [`DEFAULT_MIN_WORK`]).
+static MIN_WORK_OVERRIDE: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+thread_local! {
+    /// Set while this thread is executing a pool task: nested regions run
+    /// serially instead of spawning a second level of workers.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn env_default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("RP_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// Effective pool width for the next parallel region.
+pub fn threads() -> usize {
+    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => env_default_threads(),
+        n => n,
+    }
+}
+
+/// Pin the pool width (`None` restores the `RP_THREADS`/auto default).
+/// Safe to flip at any time: results are width-invariant by contract.
+pub fn set_threads(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.unwrap_or(0), Ordering::Relaxed);
+}
+
+fn min_work() -> usize {
+    match MIN_WORK_OVERRIDE.load(Ordering::Relaxed) {
+        usize::MAX => DEFAULT_MIN_WORK,
+        w => w,
+    }
+}
+
+/// Override the serial-fallback work threshold (`None` restores the
+/// default). Tests set `Some(0)` so test-sized problems still exercise
+/// the parallel code paths.
+pub fn set_min_work(w: Option<usize>) {
+    MIN_WORK_OVERRIDE.store(w.unwrap_or(usize::MAX), Ordering::Relaxed);
+}
+
+/// Serializes tests that reconfigure the global knobs, so a test premised
+/// on "this ran at width N" cannot race a sibling's reconfiguration.
+/// (Correctness never needs this — results are width-invariant — only
+/// test premises do.) Poison-tolerant: an earlier test's panic must not
+/// cascade into every later knob-using test.
+pub fn knob_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` at a pinned width with the min-work gate disabled, restoring
+/// the previous configuration afterwards — also on panic, so one failed
+/// assertion cannot pin the knobs for the rest of the process (the
+/// parity-test harness).
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize, usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.store(self.0, Ordering::Relaxed);
+            MIN_WORK_OVERRIDE.store(self.1, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(
+        THREAD_OVERRIDE.swap(n, Ordering::Relaxed),
+        MIN_WORK_OVERRIDE.swap(0, Ordering::Relaxed),
+    );
+    f()
+}
+
+/// Marks the thread as a pool worker for its lifetime, restoring the
+/// previous state on drop — even if the body panics (the panic still
+/// propagates through the scope join).
+struct WorkerFlag(bool);
+
+impl WorkerFlag {
+    fn set() -> Self {
+        let prev = IN_WORKER.with(|c| c.replace(true));
+        WorkerFlag(prev)
+    }
+}
+
+impl Drop for WorkerFlag {
+    fn drop(&mut self) {
+        let prev = self.0;
+        IN_WORKER.with(|c| c.set(prev));
+    }
+}
+
+/// Run `f` with this thread marked as a pool worker: every parallel
+/// region inside executes serially (results are identical by contract —
+/// only scheduling changes). For coordinators that provide their own
+/// thread-level concurrency (e.g. the serve batcher's session workers),
+/// so kernel fan-out does not multiply against it.
+pub fn run_as_worker<R>(f: impl FnOnce() -> R) -> R {
+    let _flag = WorkerFlag::set();
+    f()
+}
+
+/// Execute every task exactly once across the pool. `work` is the
+/// caller's honest total-work estimate (~MAC units) for the serial
+/// fallback gate. Tasks must be independent: each may only write state it
+/// exclusively owns (hand tasks disjoint `&mut` chunks of the output).
+/// Execution *order* is unspecified — determinism comes from ownership,
+/// not scheduling. The calling thread participates as a worker.
+pub fn par_tasks<T: Send>(work: usize, tasks: Vec<T>, body: impl Fn(T) + Sync) {
+    let nt = threads().min(tasks.len());
+    if nt <= 1 || work < min_work() || IN_WORKER.with(|c| c.get()) {
+        for t in tasks {
+            body(t);
+        }
+        return;
+    }
+    let queue = Mutex::new(tasks.into_iter());
+    let drain = || {
+        let _flag = WorkerFlag::set();
+        loop {
+            // take the next task with the lock released before running it
+            let t = queue.lock().unwrap().next();
+            match t {
+                Some(t) => body(t),
+                None => break,
+            }
+        }
+    };
+    std::thread::scope(|s| {
+        for _ in 1..nt {
+            s.spawn(&drain);
+        }
+        drain();
+    });
+}
+
+/// Partition `out` (rows of `row_len` elements) into one contiguous band
+/// per worker and run `body(first_row, band)` on each. The serial path is
+/// literally `body(0, out)` — the band kernel *is* the full kernel, so
+/// banding cannot change per-row math and results are bitwise identical
+/// at any width.
+pub fn par_rows<T: Send>(
+    work: usize,
+    out: &mut [T],
+    row_len: usize,
+    body: impl Fn(usize, &mut [T]) + Sync,
+) {
+    debug_assert!(row_len > 0 && out.len() % row_len == 0);
+    let n_rows = out.len() / row_len;
+    let nt = threads().min(n_rows.max(1));
+    if nt <= 1 || work < min_work() || IN_WORKER.with(|c| c.get()) {
+        body(0, out);
+        return;
+    }
+    let band = n_rows.div_ceil(nt);
+    let tasks: Vec<(usize, &mut [T])> = out
+        .chunks_mut(band * row_len)
+        .enumerate()
+        .map(|(ci, chunk)| (ci * band, chunk))
+        .collect();
+    par_tasks(work, tasks, |(first_row, chunk)| body(first_row, chunk));
+}
+
+/// Parallel map preserving input order: `out[i] = f(i, items[i])`.
+/// The building block for deterministic reductions — map in parallel,
+/// then fold the returned `Vec` serially in its fixed order.
+pub fn par_map<T: Send, R: Send>(
+    work: usize,
+    items: Vec<T>,
+    f: impl Fn(usize, T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let tasks: Vec<(usize, T, &mut Option<R>)> = items
+        .into_iter()
+        .zip(out.iter_mut())
+        .enumerate()
+        .map(|(i, (t, slot))| (i, t, slot))
+        .collect();
+    par_tasks(work, tasks, |(i, t, slot)| {
+        *slot = Some(f(i, t));
+    });
+    out.into_iter()
+        .map(|o| o.expect("par_map task did not run"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let _g = knob_guard();
+        with_threads(4, || {
+            let hits: Vec<AtomicU64> =
+                (0..23).map(|_| AtomicU64::new(0)).collect();
+            par_tasks(usize::MAX / 2, (0..23).collect(), |i: usize| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn par_rows_covers_all_rows_with_correct_offsets() {
+        let _g = knob_guard();
+        // 7 workers over 23 rows: uneven bands, every row exactly once
+        with_threads(7, || {
+            let mut out = vec![0u32; 23 * 3];
+            par_rows(usize::MAX / 2, &mut out, 3, |first, band| {
+                for (i, row) in band.chunks_mut(3).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (first + i) as u32 + 1;
+                    }
+                }
+            });
+            for (r, row) in out.chunks(3).enumerate() {
+                assert!(row.iter().all(|&v| v == r as u32 + 1), "row {r}");
+            }
+        });
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let _g = knob_guard();
+        with_threads(4, || {
+            let items: Vec<usize> = (0..50).collect();
+            let got = par_map(usize::MAX / 2, items, |i, x| {
+                assert_eq!(i, x);
+                x * x
+            });
+            let want: Vec<usize> = (0..50).map(|x| x * x).collect();
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn nested_regions_run_serially() {
+        let _g = knob_guard();
+        with_threads(4, || {
+            let ran = AtomicU64::new(0);
+            par_tasks(usize::MAX / 2, vec![(), (), (), ()], |_| {
+                // inner region must not spawn: its body observes the flag
+                par_tasks(usize::MAX / 2, vec![(), ()], |_| {
+                    assert!(IN_WORKER.with(|c| c.get()));
+                    ran.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+            assert_eq!(ran.load(Ordering::Relaxed), 8);
+        });
+    }
+
+    #[test]
+    fn min_work_gate_keeps_small_regions_serial() {
+        let _g = knob_guard();
+        let prev = threads();
+        set_threads(Some(4));
+        set_min_work(None); // default gate
+        let main_id = std::thread::current().id();
+        par_tasks(1, vec![(), ()], |_| {
+            assert_eq!(std::thread::current().id(), main_id);
+        });
+        set_threads(if prev > 0 { Some(prev) } else { None });
+    }
+}

@@ -2,15 +2,22 @@
 //! harness; proptest is unavailable offline). Each property runs hundreds
 //! of randomized cases from a fixed seed.
 
-use mod_transformer::config::{FfMode, ModelConfig, RoutingMode};
+use mod_transformer::config::{
+    FfMode, ModelConfig, RoutingMode, TrainConfig,
+};
 use mod_transformer::data::bpe::Bpe;
 use mod_transformer::data::rng::Pcg32;
 use mod_transformer::data::tokenizer::{ByteTokenizer, Tokenizer};
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
 use mod_transformer::flops;
+use mod_transformer::runtime::native::{
+    forward, init_params, train, ParamTable, RouteMode,
+};
+use mod_transformer::runtime::{Bundle, SyntheticSpec};
 use mod_transformer::serve::batcher::sample;
-use mod_transformer::serve::LayerKvCache;
+use mod_transformer::serve::{DecodeSession, LayerKvCache, RoutingDecision};
 use mod_transformer::util::json::Json;
+use mod_transformer::util::pool;
 use mod_transformer::util::prop::{forall, normal_vec, usize_in};
 
 fn random_model(rng: &mut Pcg32) -> ModelConfig {
@@ -292,6 +299,138 @@ fn prop_byte_tokenizer_roundtrip() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Thread-count parity: the worker pool must be invisible in the numbers.
+// ---------------------------------------------------------------------------
+
+fn parity_model(ff_mode: FfMode, routing: RoutingMode) -> ModelConfig {
+    ModelConfig {
+        vocab_size: 61,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: 16,
+        d_ff: 64,
+        seq_len: 32,
+        routing,
+        capacity_frac: 0.5,
+        train_predictor: routing != RoutingMode::None,
+        predictor_hidden: 8,
+        ff_mode,
+        n_experts: 2,
+        expert_capacity_frac: 0.5,
+        ..Default::default()
+    }
+}
+
+/// Everything the parity claim covers, as raw bit patterns: teacher-forced
+/// logits, full train-step gradients, and batched layer-sliced decode
+/// logits.
+struct StackBits {
+    logits: Vec<u32>,
+    grads: Vec<Vec<u32>>,
+    decode: Vec<u32>,
+}
+
+fn f32_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn run_stack(cfg: &ModelConfig) -> StackBits {
+    let named = init_params(cfg, 11);
+    let names: Vec<String> = named.iter().map(|(n, _)| n.clone()).collect();
+    let data: Vec<&[f32]> =
+        named.iter().map(|(_, t)| t.as_f32().unwrap()).collect();
+    let table = ParamTable::from_named(&names, data).unwrap();
+    let (b, s) = (3usize, cfg.seq_len);
+    let tokens: Vec<i32> = (0..b * s)
+        .map(|r| ((r * 7 + 3) % cfg.vocab_size) as i32)
+        .collect();
+    let fwd =
+        forward::forward(cfg, &table, &tokens, b, s, RouteMode::Topk, 0)
+            .unwrap();
+    let lg = train::loss_and_grads(cfg, &table, &tokens, b, s, 0).unwrap();
+
+    // batched decode through the layer-sliced executables (2 rows so the
+    // per-row block-decode tasks actually fan out)
+    let bundle = Bundle::native(
+        "thread_parity",
+        cfg,
+        &TrainConfig::default(),
+        &SyntheticSpec {
+            seed: 11,
+            decode_batches: vec![2],
+            max_decode_len: s,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let params = bundle.init_params().unwrap();
+    let mut session =
+        DecodeSession::new(&bundle, &params, 2, RoutingDecision::RouterThreshold)
+            .unwrap();
+    let mut decode = Vec::new();
+    let mut toks = vec![1i32, 2];
+    for step in 0..16usize {
+        let logits = session.step(&toks, &[true, true]).unwrap();
+        decode.extend(f32_bits(&logits));
+        toks = vec![
+            ((step * 5 + 3) % cfg.vocab_size) as i32,
+            ((step * 3 + 1) % cfg.vocab_size) as i32,
+        ];
+    }
+
+    StackBits {
+        logits: f32_bits(&fwd.logits),
+        grads: lg.grads.iter().map(|g| f32_bits(g)).collect(),
+        decode,
+    }
+}
+
+/// The tentpole invariant: forward logits, train-step gradients and
+/// decode outputs are **bitwise identical** across `RP_THREADS ∈
+/// {1, 2, 4, 7}` for dense, MoE and integrated-MoDE variants. Width 7 is
+/// deliberately odd so row bands and batch chunks split unevenly; the
+/// min-work gate is disabled inside `with_threads` so every parallel
+/// region really runs parallel.
+#[test]
+fn prop_threaded_stack_bitwise_equal_across_thread_counts() {
+    let _g = pool::knob_guard();
+    let cases: &[(FfMode, RoutingMode)] = &[
+        (FfMode::Dense, RoutingMode::None),
+        (FfMode::Dense, RoutingMode::ModInterleaved),
+        (FfMode::Moe, RoutingMode::ModInterleaved), // staged MoDE
+        (FfMode::ModeIntegrated, RoutingMode::None),
+    ];
+    for &(ff_mode, routing) in cases {
+        let cfg = parity_model(ff_mode, routing);
+        let reference = pool::with_threads(1, || run_stack(&cfg));
+        for &nt in &[2usize, 4, 7] {
+            let got = pool::with_threads(nt, || run_stack(&cfg));
+            assert_eq!(
+                got.logits, reference.logits,
+                "{ff_mode:?}/{routing:?}: forward logits diverged at {nt} \
+                 threads"
+            );
+            assert_eq!(got.grads.len(), reference.grads.len());
+            for (i, (a, b)) in
+                got.grads.iter().zip(&reference.grads).enumerate()
+            {
+                assert_eq!(
+                    a, b,
+                    "{ff_mode:?}/{routing:?}: grad tensor {i} diverged at \
+                     {nt} threads"
+                );
+            }
+            assert_eq!(
+                got.decode, reference.decode,
+                "{ff_mode:?}/{routing:?}: decode logits diverged at {nt} \
+                 threads"
+            );
+        }
+    }
 }
 
 #[test]
