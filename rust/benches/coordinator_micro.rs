@@ -11,8 +11,7 @@ use mod_transformer::data::rng::Pcg32;
 use mod_transformer::runtime::{Backend, NativeBackend};
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
 use mod_transformer::runtime::Tensor;
-use mod_transformer::serve::batcher::sample;
-use mod_transformer::serve::LayerKvCache;
+use mod_transformer::serve::{sample, sample_sort_oracle, LayerKvCache};
 use mod_transformer::util::bench::Bench;
 use mod_transformer::util::json::Json;
 
@@ -47,6 +46,16 @@ fn main() -> mod_transformer::Result<()> {
     bench.case("sample/topk32_temp_v259", Some(1.0), || {
         std::hint::black_box(sample(&logits, 0.8, 32, &mut rng));
     });
+    // the partial-selection win grows with vocab: O(V + k log k) vs the
+    // old full-sort O(V log V) path (kept as the property-test oracle)
+    let big: Vec<f32> =
+        (0..50_000).map(|i| ((i * 37) % 1000) as f32 / 500.0).collect();
+    bench.case("sample/topk64_select_v50k", Some(1.0), || {
+        std::hint::black_box(sample(&big, 0.8, 64, &mut rng));
+    });
+    bench.case("sample/topk64_sort_oracle_v50k", Some(1.0), || {
+        std::hint::black_box(sample_sort_oracle(&big, 0.8, 64, &mut rng));
+    });
 
     // --- KV-cache bookkeeping ---
     bench.case("kv_cache/alloc_reset_cycle_B4", Some(48.0 * 4.0), || {
@@ -55,7 +64,7 @@ fn main() -> mod_transformer::Result<()> {
             for _ in 0..60 {
                 std::hint::black_box(c.try_alloc(row));
             }
-            c.reset_row(row);
+            c.release_row(row);
         }
     });
 

@@ -1,0 +1,198 @@
+//! Bench: serving throughput + latency — static batch groups vs the
+//! continuously-batched engine, under a 32-request Poisson-ish arrival
+//! pattern (seeded PCG32 exponential inter-arrivals; no wall-clock
+//! randomness).
+//!
+//! The `static_group` baseline emulates the pre-engine server: arrivals
+//! are grouped (up to the largest compiled batch) and each group's
+//! `DecodeSession` runs to completion, so a request arriving one tick
+//! after a group forms waits an entire batch lifetime and finished rows
+//! ride along as dead weight. The `engine` case serves the *same*
+//! arrival schedule through `Engine` continuous batching: a row is
+//! released and re-seated the step its request finishes.
+//!
+//! Per-request p50/p95 latencies are recorded as `…/latency_ms` cases in
+//! the `BENCH_native.json` ledger next to the throughput rows.
+//! Run: `cargo bench --bench serve_throughput`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mod_transformer::config::ServeConfig;
+use mod_transformer::data::rng::Pcg32;
+use mod_transformer::data::{CorpusSpec, MarkovCorpus};
+use mod_transformer::runtime::{open_bundle, Bundle, Tensor};
+use mod_transformer::serve::{
+    generate_batch, Engine, GenerateParams, RoutingDecision,
+};
+use mod_transformer::util::bench::{Bench, CaseResult};
+
+const N_REQ: usize = 32;
+const MAX_NEW: usize = 12;
+const DECISION: RoutingDecision = RoutingDecision::RouterThreshold;
+
+/// Seeded Poisson-ish arrival offsets (exponential inter-arrival, mean
+/// `mean_ms`), identical for every case and every iteration.
+fn arrival_offsets(mean_ms: f64) -> Vec<Duration> {
+    let mut rng = Pcg32::new(20_240_402, 0);
+    let mut t = 0.0f64;
+    (0..N_REQ)
+        .map(|_| {
+            let u = (rng.next_u32() as f64 + 1.0) / (u32::MAX as f64 + 1.0);
+            t += -mean_ms * u.ln();
+            Duration::from_secs_f64(t / 1000.0)
+        })
+        .collect()
+}
+
+fn requests() -> Vec<GenerateParams> {
+    let corpus = MarkovCorpus::new(CorpusSpec::default(), 99);
+    (0..N_REQ)
+        .map(|i| {
+            GenerateParams::new(corpus.sequence(i as u64, 6))
+                .max_new(MAX_NEW)
+                .temperature(0.8)
+                .top_k(16)
+                .seed(i as u64)
+        })
+        .collect()
+}
+
+fn sleep_until(t0: Instant, offset: Duration) {
+    let now = t0.elapsed();
+    if offset > now {
+        std::thread::sleep(offset - now);
+    }
+}
+
+/// Pre-engine behaviour: group arrivals in order (up to `batch`), run
+/// each group to completion. Returns per-request latency (arrival →
+/// group completion) in seconds.
+fn run_static_groups(
+    bundle: &Bundle,
+    params: &[Tensor],
+    reqs: &[GenerateParams],
+    offsets: &[Duration],
+    batch: usize,
+) -> Vec<f64> {
+    let t0 = Instant::now();
+    let mut latencies = vec![0f64; reqs.len()];
+    let mut i = 0;
+    while i < reqs.len() {
+        sleep_until(t0, offsets[i]);
+        let mut group = vec![i];
+        while group.len() < batch && i + group.len() < reqs.len() {
+            let j = i + group.len();
+            if t0.elapsed() >= offsets[j] {
+                group.push(j); // already arrived: joins the group
+            } else {
+                break; // not yet arrived: waits for the NEXT group
+            }
+        }
+        let refs: Vec<&GenerateParams> =
+            group.iter().map(|&j| &reqs[j]).collect();
+        generate_batch(bundle, params, batch, DECISION, &refs)
+            .expect("static group");
+        let end = t0.elapsed();
+        for &j in &group {
+            latencies[j] = (end - offsets[j]).as_secs_f64();
+        }
+        i += group.len();
+    }
+    latencies
+}
+
+/// The same arrival schedule through the continuous-batching engine.
+fn run_engine(
+    bundle: &Arc<Bundle>,
+    params: &Arc<Vec<Tensor>>,
+    reqs: &[GenerateParams],
+    offsets: &[Duration],
+    workers: usize,
+) -> Vec<f64> {
+    let engine = Engine::start(
+        bundle.clone(),
+        params.clone(),
+        ServeConfig { workers, ..Default::default() },
+        DECISION,
+    )
+    .expect("engine");
+    let t0 = Instant::now();
+    let mut gens = Vec::with_capacity(reqs.len());
+    for (i, r) in reqs.iter().enumerate() {
+        sleep_until(t0, offsets[i]);
+        gens.push(engine.submit(r.clone()).expect("submit"));
+    }
+    let latencies: Vec<f64> = gens
+        .into_iter()
+        .map(|g| g.wait().expect("response").latency.as_secs_f64())
+        .collect();
+    engine.shutdown();
+    latencies
+}
+
+/// Fold per-request latencies into a ledger case (ms percentiles).
+fn latency_case(name: &str, latencies: &[f64]) -> CaseResult {
+    let mut ms: Vec<f64> = latencies.iter().map(|l| l * 1000.0).collect();
+    ms.sort_by(|a, b| a.total_cmp(b));
+    let mean = ms.iter().sum::<f64>() / ms.len().max(1) as f64;
+    let var = ms.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+        / ms.len().max(1) as f64;
+    CaseResult {
+        name: name.to_string(),
+        iters: ms.len(),
+        mean_ms: mean,
+        p50_ms: ms.get(ms.len() / 2).copied().unwrap_or(0.0),
+        p95_ms: ms
+            .get((ms.len() * 95 / 100).min(ms.len().saturating_sub(1)))
+            .copied()
+            .unwrap_or(0.0),
+        std_ms: var.sqrt(),
+        units: None,
+    }
+}
+
+fn main() -> mod_transformer::Result<()> {
+    let mut bench = Bench::new("serve_throughput");
+    let bundle = open_bundle(std::path::Path::new("artifacts"), "mod_tiny")?;
+    let params = Arc::new(bundle.init_params()?);
+    let batch = bundle
+        .manifest
+        .decode_batches
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(1);
+    let reqs = requests();
+    let offsets = arrival_offsets(2.0);
+    let units = (N_REQ * MAX_NEW) as f64; // nominal tokens per run
+
+    let mut static_lat = Vec::new();
+    bench.case("serve/static_group_32req", Some(units), || {
+        static_lat =
+            run_static_groups(&bundle, &params, &reqs, &offsets, batch);
+    });
+    bench.record_case(latency_case(
+        "serve/static_group_32req/latency_ms",
+        &static_lat,
+    ));
+
+    for workers in [1usize, 2] {
+        let mut engine_lat = Vec::new();
+        bench.case(
+            &format!("serve/engine_32req_w{workers}"),
+            Some(units),
+            || {
+                engine_lat =
+                    run_engine(&bundle, &params, &reqs, &offsets, workers);
+            },
+        );
+        bench.record_case(latency_case(
+            &format!("serve/engine_32req_w{workers}/latency_ms"),
+            &engine_lat,
+        ));
+    }
+
+    bench.finish()?;
+    Ok(())
+}

@@ -1,22 +1,26 @@
-//! Serving demo: the dynamic-batching MoD server under concurrent load.
+//! Serving demo: the continuously-batched MoD engine under concurrent
+//! load.
 //!
-//! Spawns the batcher worker, submits a stream of prompts (optionally from
-//! a trained checkpoint), and reports per-request latency percentiles,
-//! aggregate throughput, the measured block-skip fraction, capacity drops,
-//! and the KV-cache memory saving vs a vanilla cache — the serving-side
-//! view of the paper's decode-time claims.
+//! Starts the [`Engine`] (persistent decode sessions whose rows are a
+//! slot pool), submits a burst of prompts, streams the first request's
+//! tokens as they land, and reports per-request latency percentiles,
+//! aggregate throughput, mid-flight admissions (the continuous-batching
+//! proof), the measured block-skip fraction, capacity drops, and the
+//! KV-cache memory saving vs a vanilla cache — the serving-side view of
+//! the paper's decode-time claims.
 //!
 //! Run: `cargo run --release --example serve_mod -- \
 //!         [--bundle mod_tiny] [--ckpt runs/.../final.ckpt] \
-//!         [--requests 12] [--max-new 24] [--decision router]`
+//!         [--requests 12] [--max-new 24] [--decision router] \
+//!         [--deadline-ms 30000]`
 
+use std::io::Write as _;
 use std::sync::Arc;
 
 use mod_transformer::config::ServeConfig;
 use mod_transformer::data::{CorpusSpec, MarkovCorpus};
 use mod_transformer::runtime::open_bundle;
-use mod_transformer::serve::batcher::{Request, Server};
-use mod_transformer::serve::RoutingDecision;
+use mod_transformer::serve::{Engine, Event, GenerateParams, RoutingDecision};
 use mod_transformer::util::Args;
 
 fn main() -> mod_transformer::Result<()> {
@@ -24,6 +28,7 @@ fn main() -> mod_transformer::Result<()> {
     let bundle_name = args.str_or("bundle", "mod_tiny");
     let n_requests = args.usize_or("requests", 12)?;
     let max_new = args.usize_or("max-new", 24)?;
+    let deadline_ms = args.opt_u64("deadline-ms")?;
     let decision = match args.str_or("decision", "router").as_str() {
         "predictor" => RoutingDecision::Predictor,
         "always" => RoutingDecision::AlwaysOn,
@@ -56,53 +61,81 @@ fn main() -> mod_transformer::Result<()> {
         bundle.manifest.n_params, bundle.manifest.decode_batches
     );
 
-    let server = Server::spawn(
+    let engine = Engine::start(
         bundle.clone(),
         params,
-        ServeConfig { batch_wait_ms: 5, ..Default::default() },
+        ServeConfig::default(),
         decision,
-    );
+    )?;
 
-    // submit a burst of prompts (the batcher groups them into sessions)
+    // submit a burst of prompts; the engine admits each into a session
+    // row the moment one frees up — no batch boundaries, no drain bubble
     let corpus = MarkovCorpus::new(CorpusSpec::default(), 99);
-    let pendings: Vec<_> = (0..n_requests)
+    let gens: Vec<_> = (0..n_requests)
         .map(|i| {
-            server.submit(Request {
-                prompt: corpus.sequence(i as u64, 8),
-                max_new,
-                temperature: 0.8,
-                top_k: 32,
-                seed: i as u64,
-            })
+            let mut p = GenerateParams::new(corpus.sequence(i as u64, 8))
+                .max_new(max_new)
+                .temperature(0.8)
+                .top_k(32)
+                .seed(i as u64);
+            if let Some(ms) = deadline_ms {
+                p = p.deadline_ms(ms);
+            }
+            engine.submit(p)
         })
         .collect::<mod_transformer::Result<_>>()?;
 
     let mut latencies = Vec::new();
-    for (i, p) in pendings.into_iter().enumerate() {
-        let resp = p.wait()?;
-        latencies.push(resp.latency.as_secs_f64());
-        if i < 3 {
-            println!(
-                "  request {i}: {} prompt + {} generated tokens in {:.2}s",
-                resp.prefill_tokens,
-                resp.decode_tokens,
-                resp.latency.as_secs_f64()
-            );
+    for (i, mut gen) in gens.into_iter().enumerate() {
+        if i == 0 {
+            // the streaming view: tokens print as each decode step lands
+            print!("  request 0 streams:");
+            while let Some(ev) = gen.next_event() {
+                match ev {
+                    Event::Token { token, .. } => {
+                        print!(" {token}");
+                        let _ = std::io::stdout().flush();
+                    }
+                    Event::Done(u) => {
+                        println!(
+                            "\n  request 0: {} prompt + {} generated tokens \
+                             in {:.2}s (queued {:.3}s)",
+                            u.prefill_tokens,
+                            u.decode_tokens,
+                            u.latency.as_secs_f64(),
+                            u.queue_latency.as_secs_f64()
+                        );
+                        latencies.push(u.latency.as_secs_f64());
+                    }
+                    Event::Error(e) => println!("\n  request 0 failed: {e}"),
+                }
+            }
+        } else {
+            // the blocking view: wait() folds the stream into a Response
+            match gen.wait() {
+                Ok(resp) => latencies.push(resp.latency.as_secs_f64()),
+                Err(e) => println!("  request {i} failed: {e}"),
+            }
         }
     }
     latencies.sort_by(|a, b| a.total_cmp(b));
 
-    let stats = server.stats();
-    let p = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
-    println!("\n=== server report ===");
+    let stats = engine.shutdown();
+    println!("\n=== engine report ===");
     println!(
-        "requests: {} in {} batches | throughput {:.1} tok/s",
-        stats.requests, stats.batches, stats.tokens_per_sec()
+        "requests: {} completed on {} persistent session(s), {} admitted \
+         mid-flight | throughput {:.1} tok/s",
+        stats.completed, stats.sessions, stats.mid_session_admissions,
+        stats.tokens_per_sec()
     );
-    println!(
-        "latency p50 {:.2}s  p90 {:.2}s  p99 {:.2}s",
-        p(0.5), p(0.9), p(0.99)
-    );
+    if !latencies.is_empty() {
+        let p =
+            |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+        println!(
+            "latency p50 {:.2}s  p90 {:.2}s  p99 {:.2}s",
+            p(0.5), p(0.9), p(0.99)
+        );
+    }
     println!(
         "MoD effect: {:.0}% of block invocations skipped, {} capacity \
          drops, {:.2e} FLOPs/token",
@@ -110,6 +143,5 @@ fn main() -> mod_transformer::Result<()> {
         stats.capacity_drops,
         stats.total_flops / stats.tokens_generated.max(1) as f64
     );
-    server.shutdown();
     Ok(())
 }

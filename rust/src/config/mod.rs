@@ -307,15 +307,10 @@ pub struct ServeConfig {
     pub max_decode_len: usize,
     /// KV-cache slack factor over the expected capacity occupancy.
     pub cache_slack: f64,
-    /// Dynamic batcher: max time to hold a request waiting for batchmates.
-    pub batch_wait_ms: u64,
-    /// Batcher worker threads — concurrent decode sessions overlap across
-    /// them. `0` = auto (the compute pool width, `util::pool::threads`).
+    /// Engine workers, each owning one persistent decode session whose
+    /// rows form the continuous-batching slot pool. `0` = auto (the
+    /// compute pool width, `util::pool::threads`).
     pub workers: usize,
-    /// Sampling temperature (0 = greedy).
-    pub temperature: f64,
-    /// Top-k sampling cutoff (0 = disabled).
-    pub top_k: usize,
 }
 
 impl Default for ServeConfig {
@@ -324,10 +319,7 @@ impl Default for ServeConfig {
             decode_batches: vec![1, 4],
             max_decode_len: 256,
             cache_slack: 1.5,
-            batch_wait_ms: 2,
             workers: 0,
-            temperature: 0.0,
-            top_k: 0,
         }
     }
 }

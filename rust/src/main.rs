@@ -11,16 +11,17 @@
 //!   exp <figure>       regenerate a paper figure (fig3..fig7 | all)
 //!   info <bundle>      inspect an artifact bundle
 
+use std::io::Write as _;
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use mod_transformer::config::{preset, ServeConfig};
 use mod_transformer::coordinator::{Trainer, TrainerOptions};
-use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus, Pcg32};
+use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
 use mod_transformer::exp::{self, ExpContext, Scale};
 use mod_transformer::flops;
 use mod_transformer::runtime::{Bundle, Tensor};
-use mod_transformer::serve::{batcher, DecodeSession, RoutingDecision};
+use mod_transformer::serve::{Engine, Event, GenerateParams, RoutingDecision};
 use mod_transformer::util::Args;
 
 const USAGE: &str = "\
@@ -39,8 +40,13 @@ COMMANDS:
                     [--batches N] [--corpus-seed N]
   generate <bundle> [--ckpt CKPT] [--max-new N]
                     [--decision predictor|router|always] [--temperature T]
+                    (tokens print as each decode step streams in)
   serve <bundle>    [--ckpt CKPT] [--requests N] [--max-new N]
-                    [--decision predictor|router|always]
+                    [--decision predictor|router|always] [--workers N]
+                    [--stream] [--deadline-ms N]
+                    continuously-batched engine demo; --stream prints the
+                    first request's tokens live; --deadline-ms attaches a
+                    per-request deadline (late requests fail typed)
   flops <preset>
   exp <fig3|fig4|fig5|fig6|fig7|all> [--scale smoke|tiny|full]
                     [--steps N]  (fixed-step figures 5/6/7 only; figs 3/4
@@ -89,7 +95,7 @@ fn data_for(bundle: &Arc<Bundle>, corpus_seed: u64) -> BatchIter {
 }
 
 fn main() -> mod_transformer::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["help"])?;
+    let args = Args::parse(std::env::args().skip(1), &["help", "stream"])?;
     if args.has_flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -141,31 +147,54 @@ fn main() -> mod_transformer::Result<()> {
         "generate" => {
             let bundle = args.pos(1, "bundle")?;
             let b = mod_transformer::runtime::open_bundle(&artifacts, bundle)?;
-            let params = load_params(&b, args.opt("ckpt"))?;
+            let params = Arc::new(load_params(&b, args.opt("ckpt"))?);
             let decision = parse_decision(&args.str_or("decision", "router"))?;
             let temperature = args.f64_or("temperature", 0.8)?;
-            let max_new = args.usize_or("max-new", 64)?;
-            let mut session = DecodeSession::new(&b, &params, 1, decision)?;
-            let mut rng = Pcg32::new(42, 0);
-            let vocab = b.manifest.model.vocab_size;
-            let mut tok = mod_transformer::data::BOS as i32;
-            let mut toks = Vec::new();
-            for _ in 0..max_new.min(b.manifest.max_decode_len) {
-                let logits = session.step(&[tok], &[true])?;
-                let next =
-                    batcher::sample(&logits[..vocab], temperature, 0, &mut rng);
-                toks.push(next as u16);
-                tok = next as i32;
+            let max_new = args
+                .usize_or("max-new", 64)?
+                .min(b.manifest.max_decode_len.saturating_sub(1));
+            let engine = Engine::start(
+                b.clone(),
+                params,
+                // single stream: a batch-1 session, not the slot pool —
+                // no inactive rows riding through the full blocks
+                ServeConfig {
+                    decode_batches: vec![1],
+                    workers: 1,
+                    ..Default::default()
+                },
+                decision,
+            )?;
+            let mut gen = engine.submit(
+                GenerateParams::new(vec![mod_transformer::data::BOS])
+                    .max_new(max_new)
+                    .temperature(temperature)
+                    .seed(42),
+            )?;
+            // tokens print the moment each decode step lands
+            print!("tokens:");
+            while let Some(ev) = gen.next_event() {
+                match ev {
+                    Event::Token { token, .. } => {
+                        print!(" {token}");
+                        let _ = std::io::stdout().flush();
+                    }
+                    Event::Done(_) => break,
+                    Event::Error(e) => {
+                        println!();
+                        return Err(e.into());
+                    }
+                }
             }
-            let rep = session.report();
-            println!("tokens: {toks:?}");
+            println!();
+            let stats = engine.shutdown();
             println!(
                 "decode: {:.1} tok/s, {:.0}% blocks skipped, {} capacity \
                  drops, {:.2e} FLOPs/token",
-                rep.tokens_per_sec(),
-                100.0 * rep.skip_fraction(),
-                rep.capacity_drops,
-                rep.total_flops / rep.tokens_generated.max(1) as f64
+                stats.tokens_per_sec(),
+                100.0 * stats.skip_fraction(),
+                stats.capacity_drops,
+                stats.total_flops / stats.tokens_generated.max(1) as f64
             );
         }
         "serve" => {
@@ -175,33 +204,70 @@ fn main() -> mod_transformer::Result<()> {
             let decision = parse_decision(&args.str_or("decision", "router"))?;
             let n_requests = args.usize_or("requests", 16)?;
             let max_new = args.usize_or("max-new", 32)?;
-            let server = batcher::Server::spawn(
+            let stream = args.has_flag("stream");
+            let deadline_ms = args.opt_u64("deadline-ms")?;
+            let engine = Engine::start(
                 b.clone(),
                 params,
-                ServeConfig::default(),
+                ServeConfig {
+                    workers: args.usize_or("workers", 0)?,
+                    ..Default::default()
+                },
                 decision,
-            );
+            )?;
             let corpus = MarkovCorpus::new(CorpusSpec::default(), 99);
-            // submit all requests, then wait (the batcher groups them)
-            let pendings: Vec<_> = (0..n_requests)
+            // submit everything up front; the engine admits each request
+            // into a session row the moment one frees up (mid-flight)
+            let gens: Vec<_> = (0..n_requests)
                 .map(|i| {
-                    server.submit(batcher::Request {
-                        prompt: corpus.sequence(i as u64, 9),
-                        max_new,
-                        temperature: 0.8,
-                        top_k: 32,
-                        seed: i as u64,
-                    })
+                    let mut p = GenerateParams::new(
+                        corpus.sequence(i as u64, 9),
+                    )
+                    .max_new(max_new)
+                    .temperature(0.8)
+                    .top_k(32)
+                    .seed(i as u64);
+                    if let Some(ms) = deadline_ms {
+                        p = p.deadline_ms(ms);
+                    }
+                    engine.submit(p)
                 })
                 .collect::<mod_transformer::Result<_>>()?;
             let mut latencies: Vec<f64> = Vec::new();
-            for p in pendings {
-                if let Ok(resp) = p.wait() {
-                    latencies.push(resp.latency.as_secs_f64());
+            let mut failed = 0usize;
+            for (i, mut gen) in gens.into_iter().enumerate() {
+                if stream && i == 0 {
+                    print!("request 0 tokens:");
+                    while let Some(ev) = gen.next_event() {
+                        match ev {
+                            Event::Token { token, .. } => {
+                                print!(" {token}");
+                                let _ = std::io::stdout().flush();
+                            }
+                            Event::Done(u) => {
+                                latencies.push(u.latency.as_secs_f64());
+                            }
+                            Event::Error(e) => {
+                                print!(" [{e}]");
+                                failed += 1;
+                            }
+                        }
+                    }
+                    println!();
+                } else {
+                    match gen.wait() {
+                        Ok(resp) => {
+                            latencies.push(resp.latency.as_secs_f64());
+                        }
+                        Err(e) => {
+                            println!("request {i} failed: {e}");
+                            failed += 1;
+                        }
+                    }
                 }
             }
             latencies.sort_by(|a, b| a.total_cmp(b));
-            let stats = server.stats();
+            let stats = engine.shutdown();
             let p50 = latencies.get(latencies.len() / 2).copied().unwrap_or(0.0);
             let p95 = latencies
                 .get((latencies.len() * 95 / 100)
@@ -209,12 +275,20 @@ fn main() -> mod_transformer::Result<()> {
                 .copied()
                 .unwrap_or(0.0);
             println!(
-                "served {} requests in {} batches: {:.1} tok/s, \
-                 {:.0}% blocks skipped, latency p50 {:.2}s p95 {:.2}s",
-                stats.requests, stats.batches, stats.tokens_per_sec(),
-                100.0 * stats.skip_fraction(), p50, p95
+                "served {}/{} requests ({failed} failed) on {} persistent \
+                 session(s): {:.1} tok/s, {:.0}% blocks skipped, \
+                 {} mid-flight admissions, latency p50 {p50:.2}s p95 {p95:.2}s",
+                stats.completed, n_requests, stats.sessions,
+                stats.tokens_per_sec(), 100.0 * stats.skip_fraction(),
+                stats.mid_session_admissions
             );
-            server.shutdown();
+            // a serving regression must fail the process (and CI's
+            // serve-smoke job), not just print a sad report
+            if failed > 0 {
+                mod_transformer::bail!(
+                    "{failed} of {n_requests} requests failed"
+                );
+            }
         }
         "flops" => {
             let name = args.pos(1, "preset")?;

@@ -65,6 +65,19 @@ impl Value {
             _ => None,
         }
     }
+
+    /// Mutably borrow the host tensor, if this value is host-resident —
+    /// the in-place fast path for owner-side bookkeeping updates (e.g.
+    /// clearing one batch row's cache-validity lane on release) that
+    /// would otherwise round-trip the whole tensor through
+    /// download/upload.
+    pub fn as_host_mut(&mut self) -> Option<&mut Tensor> {
+        match self {
+            Value::Host(t) => Some(t),
+            #[cfg(feature = "pjrt")]
+            _ => None,
+        }
+    }
 }
 
 impl From<Tensor> for Value {

@@ -87,6 +87,13 @@ impl Tensor {
         }
     }
 
+    pub fn as_i32_mut(&mut self) -> crate::Result<&mut [i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => crate::bail!("tensor is f32, expected i32"),
+        }
+    }
+
     /// Scalar extraction (any rank-0 or single-element tensor).
     pub fn item_f32(&self) -> crate::Result<f32> {
         let d = self.as_f32()?;

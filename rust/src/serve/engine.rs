@@ -1,0 +1,821 @@
+//! The serving [`Engine`]: streaming, continuously-batched generation.
+//!
+//! Each worker owns one *persistent* [`DecodeSession`] whose batch rows
+//! form a slot pool. Requests are admitted into free rows **mid-flight**:
+//! when a row finishes (EOS / stop token / `max_new` / deadline / cancel)
+//! the engine releases that row's KV-cache slots
+//! ([`DecodeSession::release_row`]) and seats the next queued request in
+//! it while the other rows keep decoding — the session's step counter
+//! never resets and there is no batch-drain bubble, so MoD's skip-fraction
+//! speedup compounds with continuous admission under real traffic.
+//!
+//! Contrast with the old design (one `DecodeSession` per request *group*,
+//! run to completion): a request arriving one tick after a group formed
+//! waited an entire batch lifetime, and finished rows rode along as dead
+//! weight. Here admission latency is one decode step.
+//!
+//! Every request's lifecycle is streamed as [`Event`]s over its
+//! [`Generation`] handle, and failures are **typed per-request
+//! [`ServeError`] events** — a failed decode step delivers its underlying
+//! cause to every affected caller instead of vanishing into stderr.
+//!
+//! Determinism: a request's token stream depends only on its
+//! [`GenerateParams`] (seed included) — never on which row or worker
+//! served it, nor on its batchmates — so streamed output is bitwise
+//! identical to a direct [`generate_batch`] run at any `RP_THREADS`.
+//!
+//! Tradeoff: sessions are compiled per batch size, so each persistent
+//! session is sized to the **largest** compiled decode batch — under
+//! sustained traffic rows stay full (the win), but a lone request pays
+//! the full-batch embed/head cost for empty rows (routed blocks still
+//! skip them). Single-stream callers should pass
+//! `ServeConfig { decode_batches: vec![1], .. }` (as `repro generate`
+//! does); adaptive per-worker sizing is future work.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::config::ServeConfig;
+use crate::data::rng::Pcg32;
+use crate::data::tokenizer::{EOS, PAD};
+use crate::runtime::{Bundle, Tensor};
+use crate::util::pool;
+
+use super::request::{
+    Event, FinishReason, GenerateParams, Generation, Response, ServeError,
+    ServeErrorKind, Usage,
+};
+use super::sampling::sample;
+use super::session::{DecodeSession, RoutingDecision, SessionReport};
+
+/// Aggregate engine statistics.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub deadline_exceeded: u64,
+    pub failed: u64,
+    /// Persistent decode sessions (== worker count; never torn down
+    /// between requests).
+    pub sessions: u64,
+    /// Decode steps executed across all sessions.
+    pub steps: u64,
+    pub tokens_generated: u64,
+    pub blocks_invoked: u64,
+    pub blocks_skipped: u64,
+    pub capacity_drops: u64,
+    pub total_flops: f64,
+    /// Summed per-session decode seconds (double-counts overlapping
+    /// sessions — divide by it for per-session speed).
+    pub decode_wall_s: f64,
+    /// Requests admitted into a session that had already stepped with
+    /// other rows still active — the continuous-batching proof: >0 means
+    /// a row was recycled mid-flight with zero drain bubble.
+    pub mid_session_admissions: u64,
+    /// Rows released back to the pool (one per finished/cancelled/failed
+    /// request that reached a row).
+    pub rows_released: u64,
+    /// Most rows ever generating simultaneously across all workers.
+    pub peak_active_rows: u64,
+    /// Most workers ever decoding simultaneously (sessions overlap).
+    pub peak_active_workers: u64,
+    /// First step start / latest step end: the elapsed-span denominator
+    /// for aggregate throughput (overlap must not double-count time).
+    pub first_step_start: Option<Instant>,
+    pub last_step_end: Option<Instant>,
+}
+
+impl EngineStats {
+    pub fn skip_fraction(&self) -> f64 {
+        let t = self.blocks_invoked + self.blocks_skipped;
+        self.blocks_skipped as f64 / t.max(1) as f64
+    }
+
+    /// Aggregate throughput over the elapsed first-start → last-end span,
+    /// so overlapping sessions count once.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let span = match (self.first_step_start, self.last_step_end) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        self.tokens_generated as f64 / span.max(1e-9)
+    }
+}
+
+/// A submitted request waiting for (or occupying) a session row.
+struct Job {
+    params: GenerateParams,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    tx: mpsc::Sender<Event>,
+    cancel: Arc<AtomicBool>,
+}
+
+/// State shared between the [`Engine`] handle and its workers.
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cond: Condvar,
+    shutdown: AtomicBool,
+    /// Rows currently generating, across all workers.
+    active_rows: AtomicUsize,
+    /// Workers currently stepping a session (kernel-serialization
+    /// heuristic: >1 ⇒ session-level concurrency replaces kernel fan-out).
+    decoding_workers: AtomicUsize,
+    /// Workers whose loop is still running. When the last one exits it
+    /// drains the queue with typed errors, so no caller can block
+    /// forever on a request no worker will ever pick up.
+    live_workers: AtomicUsize,
+    stats: Mutex<EngineStats>,
+}
+
+impl Shared {
+    fn stat(&self, f: impl FnOnce(&mut EngineStats)) {
+        f(&mut self.stats.lock().unwrap());
+    }
+}
+
+/// Fail every queued job with a typed terminal event.
+fn drain_queue(shared: &Shared, why: &str) {
+    let mut q = shared.queue.lock().unwrap();
+    while let Some(job) = q.pop_front() {
+        shared.stat(|s| s.failed += 1);
+        let _ = job.tx.send(Event::Error(ServeError::new(
+            ServeErrorKind::Shutdown,
+            why,
+        )));
+    }
+}
+
+/// Typed rejection for a job still in the queue, if it was cancelled or
+/// its deadline expired (shared by the per-step queue sweep and the
+/// admission pop — one source of truth for queue-side semantics).
+fn queued_rejection(j: &Job, now: Instant) -> Option<ServeError> {
+    if j.cancel.load(Ordering::SeqCst) {
+        Some(ServeError::new(
+            ServeErrorKind::Cancelled,
+            "cancelled before admission",
+        ))
+    } else if matches!(j.deadline, Some(dl) if now >= dl) {
+        Some(ServeError::new(
+            ServeErrorKind::DeadlineExceeded,
+            format!("deadline passed after {:?} in queue", j.submitted.elapsed()),
+        ))
+    } else {
+        None
+    }
+}
+
+/// Deliver a queue-side rejection: count it, then send the terminal event.
+fn reject_queued(shared: &Shared, j: &Job, err: ServeError) {
+    shared.stat(|s| match err.kind {
+        ServeErrorKind::Cancelled => s.cancelled += 1,
+        ServeErrorKind::DeadlineExceeded => s.deadline_exceeded += 1,
+        _ => s.failed += 1,
+    });
+    let _ = j.tx.send(Event::Error(err));
+}
+
+/// The serving facade: spawn once, [`Engine::submit`] per request.
+pub struct Engine {
+    shared: Arc<Shared>,
+    max_decode_len: usize,
+    vocab: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Build the per-worker persistent decode sessions and start the
+    /// workers. `serve_cfg.workers == 0` means one worker per pool
+    /// thread; the session batch size is the largest compiled decode
+    /// batch available in both the config and the bundle.
+    pub fn start(
+        bundle: Arc<Bundle>,
+        params: Arc<Vec<Tensor>>,
+        serve_cfg: ServeConfig,
+        decision: RoutingDecision,
+    ) -> crate::Result<Self> {
+        let compiled = &bundle.manifest.decode_batches;
+        // a misconfiguration must fail loudly: silently falling back to
+        // the bundle's largest batch would make callers pay full-batch
+        // cost they explicitly configured away
+        let batch = serve_cfg
+            .decode_batches
+            .iter()
+            .copied()
+            .filter(|b| compiled.contains(b))
+            .max()
+            .ok_or_else(|| {
+                crate::err!(
+                    "none of the configured decode batches {:?} are compiled \
+                     in bundle {} (available: {:?})",
+                    serve_cfg.decode_batches,
+                    bundle.manifest.name,
+                    compiled
+                )
+            })?;
+        let workers = if serve_cfg.workers > 0 {
+            serve_cfg.workers
+        } else {
+            pool::threads()
+        };
+        let workers = workers.max(1);
+        let vocab = bundle.manifest.model.vocab_size;
+        let max_len = bundle.manifest.max_decode_len;
+
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            active_rows: AtomicUsize::new(0),
+            decoding_workers: AtomicUsize::new(0),
+            live_workers: AtomicUsize::new(workers),
+            stats: Mutex::new(EngineStats::default()),
+        });
+        // build every session BEFORE spawning any worker: a failure here
+        // must not leave already-started threads parked on the condvar
+        let mut sessions = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            sessions.push(DecodeSession::new(&bundle, &params, batch, decision)?);
+        }
+        let mut handles = Vec::with_capacity(workers);
+        for session in sessions {
+            let shared = shared.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(&shared, session, batch, vocab, max_len);
+            }));
+        }
+        shared.stat(|s| s.sessions = workers as u64);
+        Ok(Self { shared, max_decode_len: max_len, vocab, handles })
+    }
+
+    /// Submit a request; returns the streaming [`Generation`] handle.
+    /// Structurally invalid requests are rejected synchronously.
+    pub fn submit(&self, params: GenerateParams) -> crate::Result<Generation> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(ServeError::new(
+                ServeErrorKind::Shutdown,
+                "engine is shut down",
+            )
+            .into());
+        }
+        if params.max_new == 0 {
+            return Err(ServeError::new(
+                ServeErrorKind::Rejected,
+                "max_new must be at least 1",
+            )
+            .into());
+        }
+        if params.prompt.len() + params.max_new > self.max_decode_len {
+            return Err(ServeError::new(
+                ServeErrorKind::Rejected,
+                format!(
+                    "prompt ({}) + max_new ({}) exceed the bundle's decode \
+                     budget ({})",
+                    params.prompt.len(),
+                    params.max_new,
+                    self.max_decode_len
+                ),
+            )
+            .into());
+        }
+        // scope bad prompts to their own request: letting one reach the
+        // shared session would fail every batchmate with a Batch error
+        if let Some(&t) =
+            params.prompt.iter().find(|&&t| t as usize >= self.vocab)
+        {
+            return Err(ServeError::new(
+                ServeErrorKind::Rejected,
+                format!("prompt token {t} outside the vocab ({})", self.vocab),
+            )
+            .into());
+        }
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let now = Instant::now();
+        let job = Job {
+            deadline: params.deadline.map(|d| now + d),
+            params,
+            submitted: now,
+            tx,
+            cancel: cancel.clone(),
+        };
+        self.shared.stat(|s| s.submitted += 1);
+        self.shared.queue.lock().unwrap().push_back(job);
+        self.shared.cond.notify_one();
+        // every worker died (poisoned rows): fail the job now instead of
+        // letting the caller block on a queue nobody serves
+        if self.shared.live_workers.load(Ordering::SeqCst) == 0 {
+            drain_queue(&self.shared, "engine has no live workers");
+        }
+        Ok(Generation::new(rx, cancel))
+    }
+
+    /// Submit and block until completion (convenience).
+    pub fn generate(&self, params: GenerateParams) -> crate::Result<Response> {
+        self.submit(params)?.wait()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Stop accepting requests, serve everything already submitted, join
+    /// the workers, and return the final statistics (read *after* the
+    /// last step's accounting landed — no worker/reader race).
+    pub fn shutdown(mut self) -> EngineStats {
+        self.halt(); // Drop re-runs halt() afterwards; it is idempotent
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    fn halt(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cond.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // Normally the workers drained the queue before exiting; this
+        // catches jobs that raced in, failing them typed rather than
+        // dropping them silently.
+        drain_queue(
+            &self.shared,
+            "engine shut down before the request was admitted",
+        );
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// One occupied session row: a request mid-generation.
+struct RowState {
+    job: Job,
+    admitted: Instant,
+    prompt_idx: usize,
+    last: Option<u16>,
+    emitted: usize,
+    /// Total session steps this row has consumed (prefill + decode);
+    /// capped at the bundle's `max_decode_len`.
+    steps: usize,
+    rng: Pcg32,
+}
+
+/// What happened to a row during one decode step.
+enum RowFate {
+    Running,
+    Finished(FinishReason),
+    /// The caller dropped its `Generation` handle: release silently.
+    Abandoned,
+}
+
+fn worker_loop(
+    shared: &Shared,
+    mut session: DecodeSession,
+    batch: usize,
+    vocab: usize,
+    max_len: usize,
+) {
+    let mut rows: Vec<Option<RowState>> = (0..batch).map(|_| None).collect();
+    // rows whose release failed: never reused (cache state unknown)
+    let mut dead = vec![false; batch];
+    let mut prev = SessionReport::default();
+    let mut decoding = false;
+    // true once this session has stepped since it was last fully idle —
+    // distinguishes genuine mid-flight admissions from initial batch
+    // formation when counting `mid_session_admissions`
+    let mut stepped_since_idle = false;
+
+    'outer: loop {
+        if dead.iter().all(|&d| d) {
+            break; // no usable rows left
+        }
+
+        let occupied = rows.iter().filter(|r| r.is_some()).count();
+        if occupied == 0 {
+            // fully idle: this session is no longer decoding — stop
+            // counting it *before* potentially blocking on the queue, so
+            // a lone busy worker keeps full kernel parallelism, and
+            // reset the mid-flight marker so the next admission wave
+            // counts as batch formation, not recycling
+            stepped_since_idle = false;
+            if decoding {
+                shared.decoding_workers.fetch_sub(1, Ordering::SeqCst);
+                decoding = false;
+            }
+        }
+
+        // --- enforce cancel + deadline for QUEUED jobs every iteration,
+        // even with no free row: a deadline must shed load (and cancel
+        // must answer) within ~one decode step, not one queue turn ---
+        {
+            let mut q = shared.queue.lock().unwrap();
+            let now = Instant::now();
+            q.retain(|j| match queued_rejection(j, now) {
+                Some(err) => {
+                    reject_queued(shared, j, err);
+                    false
+                }
+                None => true,
+            });
+        }
+
+        // --- admit: seat queued requests in free rows (mid-flight) ---
+        if rows.iter().zip(&dead).any(|(r, &d)| r.is_none() && !d) {
+            let mut q = shared.queue.lock().unwrap();
+            if occupied == 0 {
+                // fully idle: block until work arrives or shutdown
+                loop {
+                    if !q.is_empty() {
+                        break;
+                    }
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        break 'outer;
+                    }
+                    q = shared.cond.wait(q).unwrap();
+                }
+            }
+            let now = Instant::now();
+            'seat: for b in 0..batch {
+                if rows[b].is_some() || dead[b] {
+                    continue;
+                }
+                // pop the next admissible job, failing expired ones typed
+                let job = loop {
+                    let Some(j) = q.pop_front() else { break 'seat };
+                    if let Some(err) = queued_rejection(&j, now) {
+                        reject_queued(shared, &j, err);
+                        continue;
+                    }
+                    break j;
+                };
+                if let Err(e) = session.admit_row(b) {
+                    dead[b] = true;
+                    shared.stat(|s| s.failed += 1);
+                    let _ = job.tx.send(Event::Error(ServeError::new(
+                        ServeErrorKind::Batch,
+                        format!("row admission failed: {e}"),
+                    )));
+                    continue;
+                }
+                let others_active = rows.iter().any(|r| r.is_some());
+                let seed = job.params.seed;
+                rows[b] = Some(RowState {
+                    admitted: now,
+                    prompt_idx: 0,
+                    last: None,
+                    emitted: 0,
+                    steps: 0,
+                    // stream depends on the request seed only — never on
+                    // the row index — so placement can't change outputs
+                    rng: Pcg32::new(seed, 0),
+                    job,
+                });
+                let total =
+                    shared.active_rows.fetch_add(1, Ordering::SeqCst) + 1;
+                shared.stat(|s| {
+                    s.peak_active_rows = s.peak_active_rows.max(total as u64);
+                    if others_active && stepped_since_idle {
+                        s.mid_session_admissions += 1;
+                    }
+                });
+            }
+        }
+
+        if rows.iter().all(|r| r.is_none()) {
+            // nothing seated (spurious wake, or another worker took the
+            // jobs): idle bookkeeping re-runs at the top of the loop
+            continue;
+        }
+        if !decoding {
+            let cur =
+                shared.decoding_workers.fetch_add(1, Ordering::SeqCst) + 1;
+            decoding = true;
+            shared.stat(|s| {
+                s.peak_active_workers = s.peak_active_workers.max(cur as u64);
+            });
+        }
+
+        // --- build step inputs; enforce cancel + deadline per row ---
+        let mut tokens = vec![PAD as i32; batch];
+        let mut active = vec![false; batch];
+        let now = Instant::now();
+        for b in 0..batch {
+            let fate = match rows[b].as_mut() {
+                None => continue,
+                Some(row) => {
+                    if row.job.cancel.load(Ordering::SeqCst) {
+                        Err(ServeError::new(
+                            ServeErrorKind::Cancelled,
+                            format!("cancelled after {} tokens", row.emitted),
+                        ))
+                    } else if matches!(row.job.deadline, Some(dl) if now >= dl)
+                    {
+                        Err(ServeError::new(
+                            ServeErrorKind::DeadlineExceeded,
+                            format!(
+                                "deadline passed after {} tokens",
+                                row.emitted
+                            ),
+                        ))
+                    } else {
+                        let p = &row.job.params.prompt;
+                        let t = if row.prompt_idx < p.len() {
+                            let t = p[row.prompt_idx] as i32;
+                            row.prompt_idx += 1;
+                            t
+                        } else if let Some(last) = row.last {
+                            last as i32
+                        } else {
+                            // empty prompt: start from PAD
+                            row.prompt_idx += 1;
+                            PAD as i32
+                        };
+                        row.steps += 1;
+                        Ok(t)
+                    }
+                }
+            };
+            match fate {
+                Ok(t) => {
+                    tokens[b] = t;
+                    active[b] = true;
+                }
+                Err(e) => finish_error(shared, &mut session, &mut rows,
+                                       &mut dead, b, e),
+            }
+        }
+        if !active.iter().any(|&a| a) {
+            continue;
+        }
+
+        // --- one decode step for every active row ---
+        let t_step = Instant::now();
+        let multi = shared.decoding_workers.load(Ordering::SeqCst) > 1;
+        let result = if multi {
+            // another session is decoding concurrently: session-level
+            // concurrency replaces kernel fan-out so threads don't
+            // multiply; a lone session keeps full kernel parallelism
+            pool::run_as_worker(|| session.step(&tokens, &active))
+        } else {
+            session.step(&tokens, &active)
+        };
+        let logits = match result {
+            Ok(l) => l,
+            Err(e) => {
+                // deliver the underlying cause to every affected request
+                // (typed), then reset the rows — nothing goes to stderr
+                for b in 0..batch {
+                    if rows[b].is_none() {
+                        continue;
+                    }
+                    finish_error(
+                        shared,
+                        &mut session,
+                        &mut rows,
+                        &mut dead,
+                        b,
+                        ServeError::new(
+                            ServeErrorKind::Batch,
+                            format!("decode step failed: {e}"),
+                        ),
+                    );
+                }
+                continue;
+            }
+        };
+        stepped_since_idle = true;
+
+        // --- per-row: sample, stream, finish ---
+        for b in 0..batch {
+            let fate = match rows[b].as_mut() {
+                None => continue,
+                // a row released in the input pass is already None; the
+                // guard is belt-and-braces against future refactors
+                Some(_) if !active[b] => continue,
+                Some(row) => {
+                    if row.prompt_idx < row.job.params.prompt.len() {
+                        // still prefilling: logits unused
+                        if row.steps >= max_len {
+                            RowFate::Finished(FinishReason::MaxTokens)
+                        } else {
+                            RowFate::Running
+                        }
+                    } else {
+                        let lrow = &logits[b * vocab..(b + 1) * vocab];
+                        let next = sample(
+                            lrow,
+                            row.job.params.temperature,
+                            row.job.params.top_k,
+                            &mut row.rng,
+                        ) as u16;
+                        row.last = Some(next);
+                        let index = row.emitted;
+                        row.emitted += 1;
+                        let sent = row
+                            .job
+                            .tx
+                            .send(Event::Token { token: next, index });
+                        if sent.is_err() {
+                            RowFate::Abandoned
+                        } else if next == EOS {
+                            RowFate::Finished(FinishReason::Eos)
+                        } else if row.job.params.stop_tokens.contains(&next) {
+                            RowFate::Finished(FinishReason::Stop)
+                        } else if row.emitted >= row.job.params.max_new
+                            || row.steps >= max_len
+                        {
+                            RowFate::Finished(FinishReason::MaxTokens)
+                        } else {
+                            RowFate::Running
+                        }
+                    }
+                }
+            };
+            match fate {
+                RowFate::Running => {}
+                RowFate::Finished(reason) => {
+                    finish_done(shared, &mut session, &mut rows, &mut dead,
+                                b, reason);
+                }
+                RowFate::Abandoned => {
+                    let _ = rows[b].take();
+                    shared.stat(|s| s.cancelled += 1);
+                    free_row(shared, &mut session, &mut dead, b);
+                }
+            }
+        }
+
+        // --- absorb this step into the engine stats (delta vs last) ---
+        let rep = session.report();
+        let end = Instant::now();
+        shared.stat(|s| {
+            s.steps += rep.steps - prev.steps;
+            s.tokens_generated += rep.tokens_generated - prev.tokens_generated;
+            s.blocks_invoked += rep.blocks_invoked - prev.blocks_invoked;
+            s.blocks_skipped += rep.blocks_skipped - prev.blocks_skipped;
+            s.capacity_drops += rep.capacity_drops - prev.capacity_drops;
+            s.total_flops += rep.total_flops - prev.total_flops;
+            s.decode_wall_s += rep.wall_s - prev.wall_s;
+            s.first_step_start = Some(match s.first_step_start {
+                Some(a) => a.min(t_step),
+                None => t_step,
+            });
+            s.last_step_end = Some(match s.last_step_end {
+                Some(z) => z.max(end),
+                None => end,
+            });
+        });
+        prev = rep;
+    }
+
+    if decoding {
+        shared.decoding_workers.fetch_sub(1, Ordering::SeqCst);
+    }
+    // the last worker to exit fails whatever is still queued — a caller
+    // blocked in wait() must always receive a terminal event
+    if shared.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
+        drain_queue(shared, "engine has no live workers");
+    }
+}
+
+/// Release row `b` back to the slot pool (KV slots freed, bookkeeping
+/// re-seated without touching other rows). A failed release poisons the
+/// row instead of risking cross-request cache leakage.
+fn free_row(
+    shared: &Shared,
+    session: &mut DecodeSession,
+    dead: &mut [bool],
+    b: usize,
+) {
+    shared.active_rows.fetch_sub(1, Ordering::SeqCst);
+    match session.release_row(b) {
+        Ok(()) => shared.stat(|s| s.rows_released += 1),
+        Err(_) => dead[b] = true,
+    }
+}
+
+fn finish_done(
+    shared: &Shared,
+    session: &mut DecodeSession,
+    rows: &mut [Option<RowState>],
+    dead: &mut [bool],
+    b: usize,
+    finish: FinishReason,
+) {
+    let row = rows[b].take().expect("finish_done on empty row");
+    // release + count BEFORE the terminal event: a caller that returns
+    // from wait() and immediately reads stats() must see this request
+    free_row(shared, session, dead, b);
+    shared.stat(|s| s.completed += 1);
+    let _ = row.job.tx.send(Event::Done(Usage {
+        prefill_tokens: row.job.params.prompt.len(),
+        decode_tokens: row.emitted,
+        latency: row.job.submitted.elapsed(),
+        queue_latency: row.admitted.duration_since(row.job.submitted),
+        finish,
+    }));
+}
+
+fn finish_error(
+    shared: &Shared,
+    session: &mut DecodeSession,
+    rows: &mut [Option<RowState>],
+    dead: &mut [bool],
+    b: usize,
+    err: ServeError,
+) {
+    let row = rows[b].take().expect("finish_error on empty row");
+    free_row(shared, session, dead, b);
+    shared.stat(|s| match err.kind {
+        ServeErrorKind::Cancelled => s.cancelled += 1,
+        ServeErrorKind::DeadlineExceeded => s.deadline_exceeded += 1,
+        _ => s.failed += 1,
+    });
+    let _ = row.job.tx.send(Event::Error(err));
+}
+
+/// Core batched generation loop (synchronous, one session run to
+/// completion; used by the benches, the determinism tests, and as the
+/// static-batching baseline the engine is measured against).
+pub fn generate_batch(
+    bundle: &Bundle,
+    params: &[Tensor],
+    batch: usize,
+    decision: RoutingDecision,
+    requests: &[&GenerateParams],
+) -> crate::Result<(Vec<Vec<u16>>, SessionReport)> {
+    crate::ensure!(requests.len() <= batch, "more requests than batch rows");
+    let mut session = DecodeSession::new(bundle, params, batch, decision)?;
+    let vocab = bundle.manifest.model.vocab_size;
+    let max_len = bundle.manifest.max_decode_len;
+
+    // per-row cursors
+    let mut prompt_idx = vec![0usize; batch];
+    let mut generated: Vec<Vec<u16>> = vec![Vec::new(); batch];
+    let mut done = vec![false; batch];
+    // per-request RNG stream: seed only (row-placement independent, same
+    // seeding the engine uses — the bitwise-parity contract between paths)
+    let mut rngs: Vec<Pcg32> = (0..batch)
+        .map(|b| Pcg32::new(requests.get(b).map(|r| r.seed).unwrap_or(0), 0))
+        .collect();
+    // rows beyond requests.len() are padding, and a zero-token budget
+    // generates nothing (the engine rejects max_new == 0 at submit)
+    for b in requests.len()..batch {
+        done[b] = true;
+    }
+    for (b, req) in requests.iter().enumerate() {
+        if req.max_new == 0 {
+            done[b] = true;
+        }
+    }
+
+    for _step in 0..max_len {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let mut tokens = vec![PAD as i32; batch];
+        let mut active = vec![false; batch];
+        for b in 0..requests.len() {
+            if done[b] {
+                continue;
+            }
+            let req = requests[b];
+            if prompt_idx[b] < req.prompt.len() {
+                tokens[b] = req.prompt[prompt_idx[b]] as i32;
+                prompt_idx[b] += 1;
+            } else if let Some(&last) = generated[b].last() {
+                tokens[b] = last as i32;
+            } else {
+                // empty prompt: start from PAD
+                tokens[b] = PAD as i32;
+                prompt_idx[b] += 1;
+            }
+            active[b] = true;
+        }
+        let logits = session.step(&tokens, &active)?;
+        for b in 0..requests.len() {
+            if done[b] || prompt_idx[b] < requests[b].prompt.len() {
+                continue; // still prefilling: logits unused
+            }
+            let row = &logits[b * vocab..(b + 1) * vocab];
+            let req = requests[b];
+            let next =
+                sample(row, req.temperature, req.top_k, &mut rngs[b]) as u16;
+            generated[b].push(next);
+            if next == EOS
+                || req.stop_tokens.contains(&next)
+                || generated[b].len() >= req.max_new
+            {
+                done[b] = true;
+            }
+        }
+    }
+    let report = session.report();
+    generated.truncate(requests.len());
+    Ok((generated, report))
+}

@@ -75,9 +75,23 @@ impl LayerKvCache {
         }
     }
 
-    /// Reset one row (request finished / slot reused by the batcher).
-    pub fn reset_row(&mut self, row: usize) {
+    /// Free one row's slots (its request finished / was cancelled): the
+    /// write head and drop counter reset so the row can be re-seated by
+    /// the continuous batcher. Other rows are untouched.
+    pub fn release_row(&mut self, row: usize) {
         self.used[row] = 0;
+        self.drops[row] = 0;
+    }
+
+    /// Seat a new request in a released (or fresh) row. Bookkeeping-only:
+    /// the row must already be empty — admitting over live slots would
+    /// leak another request's cache into this one.
+    pub fn admit_row(&mut self, row: usize) {
+        debug_assert_eq!(
+            self.used[row], 0,
+            "admit_row over live slots (layer {}, row {row})",
+            self.layer
+        );
         self.drops[row] = 0;
     }
 
@@ -134,12 +148,13 @@ mod tests {
     }
 
     #[test]
-    fn reset_row_reclaims() {
+    fn release_row_reclaims() {
         let mut c = LayerKvCache::new(0, 2, 1, true);
         c.try_alloc(0);
         c.try_alloc(0);
         assert_eq!(c.try_alloc(0), None);
-        c.reset_row(0);
+        c.release_row(0);
+        c.admit_row(0);
         assert_eq!(c.try_alloc(0), Some(0));
         assert_eq!(c.stats(8, 8).total_drops, 0);
     }
@@ -201,8 +216,8 @@ mod tests {
         assert_eq!(c.try_alloc(2), Some(0));
         let s = c.stats(8, 16);
         assert_eq!(s.total_drops, 3);
-        // reset clears both the write head and the drop count
-        c.reset_row(0);
+        // release clears both the write head and the drop count
+        c.release_row(0);
         assert_eq!(c.stats(8, 16).total_drops, 0);
         assert_eq!(c.try_alloc(0), Some(0));
     }

@@ -1,24 +1,50 @@
-//! Layer-sliced decode runtime + serving coordinator (Layer 3, serve side).
+//! Layer-sliced decode runtime + serving engine (Layer 3, serve side).
 //!
 //! This is where MoD's decode-time savings become *real* on this testbed
 //! (paper §1: "upwards of 50% faster to step during post-training
-//! sampling"). Each transformer block is a separate PJRT executable; the
+//! sampling"). Each transformer block is a separate executable; the
 //! coordinator consults the causal router (predictor or aux-BCE threshold,
 //! paper §3.5) per token per routed block and **skips the block executable
 //! entirely** when the token routes around it. Skipped blocks cost zero
 //! FLOPs and zero KV-cache slots.
 //!
+//! The serving surface is the continuously-batched [`engine::Engine`]:
+//!
+//! ```text
+//!   submit(GenerateParams) ──► queue ──► admit into a free session row
+//!        ▲                                  │ (mid-flight: other rows
+//!        │ cancel()                         │  keep decoding)
+//!   Generation handle ◄── Event::Token per step ◄── persistent
+//!        │                                           DecodeSession
+//!        └─► Event::Done(Usage) / Event::Error(ServeError)
+//!                        ▲
+//!            row released (KV slots freed) ──► next queued request
+//! ```
+//!
 //! Components:
-//! * [`session::DecodeSession`] — one batched generation: per-layer
-//!   compacted KV caches, routing decisions, the step loop.
+//! * [`request`] — the typed public surface: [`GenerateParams`] builder,
+//!   streaming [`Generation`] handle, [`Event`]/[`Usage`]/[`ServeError`].
+//! * [`engine::Engine`] — continuous batcher: persistent per-worker
+//!   sessions whose rows are a slot pool; plus the synchronous
+//!   [`engine::generate_batch`] baseline.
+//! * [`session::DecodeSession`] — batched decode: per-layer compacted KV
+//!   caches, routing decisions, the step loop, per-row release/admit.
 //! * [`kv_cache::LayerKvCache`] — slot allocator + occupancy/drop stats
 //!   (capacity-exceeded tokens are *dropped from the block*, §3.1).
-//! * [`batcher::Server`] — async request router / dynamic batcher on tokio.
+//! * [`sampling`] — greedy / temperature / top-k (partial-selection)
+//!   sampling.
 
-pub mod batcher;
+pub mod engine;
 pub mod kv_cache;
+pub mod request;
+pub mod sampling;
 pub mod session;
 
-pub use batcher::{Server, ServerStats};
+pub use engine::{generate_batch, Engine, EngineStats};
 pub use kv_cache::{CacheStats, LayerKvCache};
+pub use request::{
+    Event, FinishReason, GenerateParams, Generation, Response, ServeError,
+    ServeErrorKind, Usage,
+};
+pub use sampling::{argmax, sample, sample_sort_oracle};
 pub use session::{DecodeSession, RoutingDecision, SessionReport, StepStats, StepTrace};

@@ -1,0 +1,371 @@
+//! The public request/response surface of the serving [`Engine`].
+//!
+//! A caller builds a [`GenerateParams`] (builder-style), submits it, and
+//! gets back a [`Generation`] — a handle that *streams* the request's
+//! lifecycle as [`Event`]s: one `Event::Token` per decode step the moment
+//! the step lands, then exactly one terminal event (`Event::Done` with a
+//! [`Usage`] summary, or `Event::Error` with a typed [`ServeError`]).
+//! [`Generation::wait`] folds the stream back into the blocking
+//! [`Response`] shape for callers that don't care about streaming, and
+//! [`Generation::cancel`] releases the request's batch row mid-flight so
+//! a queued request can take it over.
+//!
+//! [`Engine`]: super::engine::Engine
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// One generation request: prompt + sampling/stopping knobs.
+///
+/// Build with the fluent setters:
+/// ```ignore
+/// let params = GenerateParams::new(prompt)
+///     .max_new(64)
+///     .temperature(0.8)
+///     .top_k(32)
+///     .seed(7)
+///     .stop_token(my_sep)
+///     .deadline_ms(5_000);
+/// ```
+#[derive(Debug, Clone)]
+pub struct GenerateParams {
+    pub prompt: Vec<u16>,
+    /// Max tokens to generate — must be ≥ 1 (the engine rejects 0 at
+    /// submit, typed). The engine also caps every row at the bundle's
+    /// `max_decode_len` total steps.
+    pub max_new: usize,
+    /// Sampling temperature; `0.0` = greedy (argmax).
+    pub temperature: f64,
+    /// Top-k cutoff for sampling; `0` = full vocabulary.
+    pub top_k: usize,
+    /// Seed of the per-request sampling RNG. The stream depends only on
+    /// this seed (never on which batch row served the request), so the
+    /// same request reproduces bitwise under any batch composition.
+    pub seed: u64,
+    /// Extra stop tokens (EOS always stops). The stop token is emitted
+    /// before the stream finishes, mirroring EOS.
+    pub stop_tokens: Vec<u16>,
+    /// Relative deadline from submission; a request that exceeds it (in
+    /// queue or mid-decode) fails with [`ServeErrorKind::DeadlineExceeded`].
+    pub deadline: Option<Duration>,
+}
+
+impl GenerateParams {
+    pub fn new(prompt: Vec<u16>) -> Self {
+        Self {
+            prompt,
+            max_new: 32,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            stop_tokens: Vec::new(),
+            deadline: None,
+        }
+    }
+
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = n;
+        self
+    }
+
+    pub fn temperature(mut self, t: f64) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn stop_token(mut self, t: u16) -> Self {
+        self.stop_tokens.push(t);
+        self
+    }
+
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn deadline_ms(self, ms: u64) -> Self {
+        self.deadline(Duration::from_millis(ms))
+    }
+}
+
+/// Why a generation finished successfully.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The model emitted EOS.
+    Eos,
+    /// The model emitted one of the request's `stop_tokens`.
+    Stop,
+    /// `max_new` tokens were generated, or the row hit the bundle's
+    /// `max_decode_len` step budget.
+    MaxTokens,
+}
+
+/// Terminal accounting for one finished generation.
+#[derive(Debug, Clone)]
+pub struct Usage {
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    /// Submission → completion.
+    pub latency: Duration,
+    /// Submission → admission into a decode-session row (the continuous
+    /// batcher's queueing delay; ≈0 when a row was free at submit time).
+    pub queue_latency: Duration,
+    pub finish: FinishReason,
+}
+
+/// What went wrong, typed — so callers can branch without parsing text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeErrorKind {
+    /// [`Generation::cancel`] was called.
+    Cancelled,
+    /// The request's deadline passed (in queue or mid-decode).
+    DeadlineExceeded,
+    /// The decode session failed mid-step; `message` carries the
+    /// underlying cause (every affected row receives it — nothing is
+    /// lost to stderr).
+    Batch,
+    /// The engine shut down (or dropped the stream) before the request
+    /// completed.
+    Shutdown,
+    /// The request was rejected up front (e.g. prompt + max_new exceed
+    /// the bundle's decode budget).
+    Rejected,
+}
+
+impl ServeErrorKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Cancelled => "cancelled",
+            Self::DeadlineExceeded => "deadline_exceeded",
+            Self::Batch => "batch_failed",
+            Self::Shutdown => "engine_shutdown",
+            Self::Rejected => "rejected",
+        }
+    }
+}
+
+/// A typed per-request serving error (delivered as [`Event::Error`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeError {
+    pub kind: ServeErrorKind,
+    pub message: String,
+}
+
+impl ServeError {
+    pub fn new(kind: ServeErrorKind, message: impl Into<String>) -> Self {
+        Self { kind, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ServeError> for crate::Error {
+    fn from(e: ServeError) -> Self {
+        crate::Error::msg(e.to_string())
+    }
+}
+
+/// One element of a generation's event stream.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A decode step landed: `token` is the `index`-th generated token
+    /// (0-based), streamed the moment it was sampled.
+    Token { token: u16, index: usize },
+    /// Terminal: the generation finished.
+    Done(Usage),
+    /// Terminal: the generation failed (typed, per-request).
+    Error(ServeError),
+}
+
+/// Completed generation (the blocking view; same shape as before the
+/// streaming redesign).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub tokens: Vec<u16>,
+    pub latency: Duration,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+}
+
+/// Handle to one in-flight generation: an iterator of [`Event`]s.
+///
+/// The stream always ends with exactly one terminal event; if the engine
+/// drops the channel without one (worker death), the iterator synthesizes
+/// an `Event::Error` of kind [`ServeErrorKind::Shutdown`] — a request can
+/// never silently vanish.
+pub struct Generation {
+    rx: mpsc::Receiver<Event>,
+    cancel: Arc<AtomicBool>,
+    finished: bool,
+}
+
+impl Generation {
+    pub(super) fn new(rx: mpsc::Receiver<Event>, cancel: Arc<AtomicBool>) -> Self {
+        Self { rx, cancel, finished: false }
+    }
+
+    /// Ask the engine to stop this generation. The row is released at the
+    /// next decode step (freeing its KV-cache slots for a queued request)
+    /// and the stream ends with `Event::Error(kind: Cancelled)`. Safe to
+    /// call at any point, including before admission or after completion.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the next event without consuming the handle.
+    pub fn next_event(&mut self) -> Option<Event> {
+        if self.finished {
+            return None;
+        }
+        let ev = match self.rx.recv() {
+            Ok(ev) => ev,
+            Err(_) => Event::Error(ServeError::new(
+                ServeErrorKind::Shutdown,
+                "event stream dropped before completion",
+            )),
+        };
+        if matches!(ev, Event::Done(_) | Event::Error(_)) {
+            self.finished = true;
+        }
+        Some(ev)
+    }
+
+    /// Block until the generation ends, folding the token stream into the
+    /// blocking [`Response`] shape. Typed failures become `Err` with the
+    /// full cause in the message.
+    pub fn wait(mut self) -> crate::Result<Response> {
+        let mut tokens = Vec::new();
+        while let Some(ev) = self.next_event() {
+            match ev {
+                Event::Token { token, .. } => tokens.push(token),
+                Event::Done(u) => {
+                    return Ok(Response {
+                        tokens,
+                        latency: u.latency,
+                        prefill_tokens: u.prefill_tokens,
+                        decode_tokens: u.decode_tokens,
+                    });
+                }
+                Event::Error(e) => return Err(e.into()),
+            }
+        }
+        crate::bail!("event stream ended without a terminal event")
+    }
+}
+
+impl Iterator for Generation {
+    type Item = Event;
+
+    fn next(&mut self) -> Option<Event> {
+        self.next_event()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_fields() {
+        let p = GenerateParams::new(vec![1, 2])
+            .max_new(9)
+            .temperature(0.5)
+            .top_k(3)
+            .seed(42)
+            .stop_token(7)
+            .deadline_ms(100);
+        assert_eq!(p.prompt, vec![1, 2]);
+        assert_eq!(p.max_new, 9);
+        assert!((p.temperature - 0.5).abs() < 1e-12);
+        assert_eq!(p.top_k, 3);
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.stop_tokens, vec![7]);
+        assert_eq!(p.deadline, Some(Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn wait_folds_tokens_then_done() {
+        let (tx, rx) = mpsc::channel();
+        let g = Generation::new(rx, Arc::new(AtomicBool::new(false)));
+        tx.send(Event::Token { token: 5, index: 0 }).unwrap();
+        tx.send(Event::Token { token: 6, index: 1 }).unwrap();
+        tx.send(Event::Done(Usage {
+            prefill_tokens: 3,
+            decode_tokens: 2,
+            latency: Duration::from_millis(1),
+            queue_latency: Duration::ZERO,
+            finish: FinishReason::MaxTokens,
+        }))
+        .unwrap();
+        let r = g.wait().unwrap();
+        assert_eq!(r.tokens, vec![5, 6]);
+        assert_eq!(r.prefill_tokens, 3);
+        assert_eq!(r.decode_tokens, 2);
+    }
+
+    #[test]
+    fn wait_surfaces_typed_error_message() {
+        let (tx, rx) = mpsc::channel();
+        let g = Generation::new(rx, Arc::new(AtomicBool::new(false)));
+        tx.send(Event::Error(ServeError::new(
+            ServeErrorKind::Batch,
+            "token 9999 out of vocab",
+        )))
+        .unwrap();
+        let err = g.wait().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("batch_failed"), "{msg}");
+        assert!(msg.contains("token 9999 out of vocab"), "{msg}");
+    }
+
+    #[test]
+    fn dropped_stream_synthesizes_shutdown_error() {
+        let (tx, rx) = mpsc::channel::<Event>();
+        drop(tx); // engine died without a terminal event
+        let mut g = Generation::new(rx, Arc::new(AtomicBool::new(false)));
+        match g.next_event() {
+            Some(Event::Error(e)) => {
+                assert_eq!(e.kind, ServeErrorKind::Shutdown);
+            }
+            other => panic!("expected shutdown error, got {other:?}"),
+        }
+        assert!(g.next_event().is_none(), "stream must end after terminal");
+    }
+
+    #[test]
+    fn iterator_ends_after_terminal_event() {
+        let (tx, rx) = mpsc::channel();
+        let g = Generation::new(rx, Arc::new(AtomicBool::new(false)));
+        tx.send(Event::Token { token: 1, index: 0 }).unwrap();
+        tx.send(Event::Done(Usage {
+            prefill_tokens: 0,
+            decode_tokens: 1,
+            latency: Duration::ZERO,
+            queue_latency: Duration::ZERO,
+            finish: FinishReason::Eos,
+        }))
+        .unwrap();
+        // extra events after the terminal must never be yielded
+        tx.send(Event::Token { token: 2, index: 1 }).unwrap();
+        let events: Vec<Event> = g.collect();
+        assert_eq!(events.len(), 2);
+        assert!(matches!(events[1], Event::Done(_)));
+    }
+}

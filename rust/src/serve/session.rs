@@ -389,6 +389,86 @@ impl DecodeSession {
         Ok(logits.as_f32()?.to_vec())
     }
 
+    /// Free `row`'s KV-cache slots in every layer and reset its
+    /// bookkeeping, **without touching any other row** — the continuous
+    /// batcher calls this when a request finishes (EOS / budget /
+    /// deadline / cancel) so the row can be re-seated mid-flight.
+    ///
+    /// Only the per-row *validity* and *position* lanes of the cache are
+    /// cleared device-side: attention skips invalid slots exactly (the
+    /// softmax weight of a `valid == 0` slot is identically zero and its
+    /// K/V are never read), so stale K/V slabs cannot perturb a recycled
+    /// row — the re-seated row is bitwise-identical to a fresh session.
+    pub fn release_row(&mut self, row: usize) -> crate::Result<()> {
+        crate::ensure!(
+            row < self.batch,
+            "release_row: row {row} out of batch {}",
+            self.batch
+        );
+        for li in 0..self.layers.len() {
+            let cl = self.layers[li].cache_len;
+            self.layers[li].book.release_row(row);
+
+            // pos lane (i32): in place when host-resident (the session is
+            // the sole owner between steps), download→clear→upload
+            // otherwise — only this row's `cl` elements are touched.
+            if let Some(t) = self.layers[li].cache[2].as_host_mut() {
+                for p in &mut t.as_i32_mut()?[row * cl..(row + 1) * cl] {
+                    *p = 0;
+                }
+            } else {
+                let pos_t = self.backend.download(&self.layers[li].cache[2])?;
+                let mut pos_host = pos_t.as_i32()?.to_vec();
+                for p in &mut pos_host[row * cl..(row + 1) * cl] {
+                    *p = 0;
+                }
+                self.layers[li].cache[2] = self
+                    .backend
+                    .upload(&Tensor::i32(vec![self.batch, cl], pos_host))?;
+            }
+
+            // valid lane (f32): same two paths.
+            if let Some(t) = self.layers[li].cache[3].as_host_mut() {
+                for v in &mut t.as_f32_mut()?[row * cl..(row + 1) * cl] {
+                    *v = 0.0;
+                }
+            } else {
+                let valid_t =
+                    self.backend.download(&self.layers[li].cache[3])?;
+                let mut valid_host = valid_t.as_f32()?.to_vec();
+                for v in &mut valid_host[row * cl..(row + 1) * cl] {
+                    *v = 0.0;
+                }
+                self.layers[li].cache[3] = self
+                    .backend
+                    .upload(&Tensor::f32(vec![self.batch, cl], valid_host))?;
+            }
+        }
+        self.pos[row] = 0;
+        Ok(())
+    }
+
+    /// Seat a new request in a free row: its position restarts at zero
+    /// while every other row (and the session's step counter) keeps
+    /// advancing. The row must be fresh or previously [`Self::release_row`]ed.
+    pub fn admit_row(&mut self, row: usize) -> crate::Result<()> {
+        crate::ensure!(
+            row < self.batch,
+            "admit_row: row {row} out of batch {}",
+            self.batch
+        );
+        for layer in &mut self.layers {
+            crate::ensure!(
+                layer.book.used(row) == 0,
+                "admit_row: row {row} still holds cache slots (release it \
+                 first)"
+            );
+            layer.book.admit_row(row);
+        }
+        self.pos[row] = 0;
+        Ok(())
+    }
+
     /// [`Self::step`] + the row-0 routing trace (analysis harnesses).
     pub fn step_traced(
         &mut self,

@@ -99,16 +99,15 @@ impl Bench {
             std_ms: var.sqrt(),
             units,
         };
-        println!(
-            "  {name:<40} {mean:>9.3} ms/iter  (p50 {:.3}, p95 {:.3}, σ {:.3}){}",
-            result.p50_ms,
-            result.p95_ms,
-            result.std_ms,
-            match units {
-                Some(u) => format!("  {:.1} units/s", u / (mean / 1000.0)),
-                None => String::new(),
-            }
-        );
+        print_row(&result);
+        self.results.push(result);
+    }
+
+    /// Record an externally-measured case (e.g. per-request latency
+    /// percentiles a serving bench computed itself) so it lands in the
+    /// table and the `BENCH_native.json` ledger alongside timed cases.
+    pub fn record_case(&mut self, result: CaseResult) {
+        print_row(&result);
         self.results.push(result);
     }
 
@@ -155,6 +154,22 @@ impl Bench {
         println!("[bench] perf ledger: {}", ledger.display());
         Ok(path)
     }
+}
+
+/// One table row on stdout, shared by timed and recorded cases.
+fn print_row(r: &CaseResult) {
+    println!(
+        "  {:<40} {:>9.3} ms/iter  (p50 {:.3}, p95 {:.3}, σ {:.3}){}",
+        r.name,
+        r.mean_ms,
+        r.p50_ms,
+        r.p95_ms,
+        r.std_ms,
+        match r.units {
+            Some(u) => format!("  {:.1} units/s", u / (r.mean_ms / 1000.0)),
+            None => String::new(),
+        }
+    );
 }
 
 /// Outermost ancestor (cwd included) holding a `Cargo.toml` — the

@@ -144,7 +144,7 @@ impl Drop for WorkerFlag {
 /// Run `f` with this thread marked as a pool worker: every parallel
 /// region inside executes serially (results are identical by contract —
 /// only scheduling changes). For coordinators that provide their own
-/// thread-level concurrency (e.g. the serve batcher's session workers),
+/// thread-level concurrency (e.g. the serve engine's session workers),
 /// so kernel fan-out does not multiply against it.
 pub fn run_as_worker<R>(f: impl FnOnce() -> R) -> R {
     let _flag = WorkerFlag::set();

@@ -14,8 +14,9 @@ use mod_transformer::runtime::native::{
     forward, init_params, train, ParamTable, RouteMode,
 };
 use mod_transformer::runtime::{Bundle, SyntheticSpec};
-use mod_transformer::serve::batcher::sample;
-use mod_transformer::serve::{DecodeSession, LayerKvCache, RoutingDecision};
+use mod_transformer::serve::{
+    sample, sample_sort_oracle, DecodeSession, LayerKvCache, RoutingDecision,
+};
 use mod_transformer::util::json::Json;
 use mod_transformer::util::pool;
 use mod_transformer::util::prop::{forall, normal_vec, usize_in};
@@ -125,7 +126,8 @@ fn prop_kv_cache_never_over_allocates() {
         let mut used = vec![0usize; *batch];
         for &(row, reset) in ops {
             if reset {
-                cache.reset_row(row);
+                cache.release_row(row);
+                cache.admit_row(row);
                 used[row] = 0;
             } else {
                 match cache.try_alloc(row) {
@@ -177,6 +179,44 @@ fn prop_sampling_in_topk_support() {
                 "sampled {idx} (logit {}) below top-{k} threshold {threshold}",
                 logits[idx]
             ));
+        }
+        Ok(())
+    });
+}
+
+/// The partial-selection (`select_nth_unstable_by`) top-k fast path must
+/// emit the exact token stream of the old full-sort path for fixed seeds
+/// — across vocab sizes, k values, temperatures, and repeated logit
+/// values (ties at the top-k boundary).
+#[test]
+fn prop_topk_selection_matches_sort_oracle() {
+    forall(17, 400, |rng| {
+        let n = usize_in(rng, 2, 400);
+        let mut logits = normal_vec(rng, n);
+        // inject ties: duplicate a few values so the boundary is contested
+        for _ in 0..usize_in(rng, 0, 8) {
+            let src = usize_in(rng, 0, n - 1);
+            let dst = usize_in(rng, 0, n - 1);
+            logits[dst] = logits[src];
+        }
+        let k = usize_in(rng, 1, n + 2); // occasionally k >= n (no cutoff)
+        let temp = 0.1 + 2.0 * (usize_in(rng, 0, 100) as f64 / 100.0);
+        let seed = rng.next_u32() as u64;
+        let draws = usize_in(rng, 1, 8);
+        (logits, k, temp, seed, draws)
+    }, |(logits, k, temp, seed, draws)| {
+        let mut fast_rng = Pcg32::new(*seed, 0);
+        let mut slow_rng = Pcg32::new(*seed, 0);
+        for d in 0..*draws {
+            let fast = sample(logits, *temp, *k, &mut fast_rng);
+            let slow = sample_sort_oracle(logits, *temp, *k, &mut slow_rng);
+            if fast != slow {
+                return Err(format!(
+                    "draw {d}: fast path {fast} != sort oracle {slow} \
+                     (n={}, k={k}, temp={temp})",
+                    logits.len()
+                ));
+            }
         }
         Ok(())
     });
