@@ -1,0 +1,126 @@
+//! Bench: HTTP/SSE gateway overhead over the in-process engine.
+//!
+//! Three layers, same 16 requests against the synthetic `mod_tiny`
+//! bundle: `inproc` submits straight to the `Engine`, `nonstream` goes
+//! through `POST /v1/generate` (JSON in/out, one fresh connection per
+//! request, the worst case for the gateway), `sse` streams every token
+//! as an SSE frame. The spread between `inproc` and the wire cases *is*
+//! the serialization + parsing + loopback-TCP cost of the gateway. A
+//! `parse_request` microcase isolates the request parser itself.
+//!
+//! Results merge into the repo-root `BENCH_native.json` ledger.
+//! Run: `cargo bench --bench http_gateway`.
+
+use std::io::{Cursor, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use mod_transformer::config::ServeConfig;
+use mod_transformer::runtime::open_bundle;
+use mod_transformer::serve::http::parser::{parse_request, Limits};
+use mod_transformer::serve::{
+    Engine, GenerateParams, HttpConfig, HttpServer, RoutingDecision,
+};
+use mod_transformer::util::bench::Bench;
+
+const N_REQ: usize = 16;
+const MAX_NEW: usize = 8;
+
+fn body(i: usize) -> String {
+    format!(
+        "{{\"prompt\":[256,{},10],\"max_new\":{MAX_NEW},\
+         \"temperature\":0.8,\"top_k\":16,\"seed\":{i}}}",
+        1 + (i % 200)
+    )
+}
+
+fn exchange(addr: SocketAddr, raw: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(raw).expect("write");
+    s.shutdown(std::net::Shutdown::Write).expect("half-close");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("read");
+    buf
+}
+
+fn post(addr: SocketAddr, path: &str, json: &str) -> Vec<u8> {
+    let raw = format!(
+        "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{json}",
+        json.len()
+    );
+    let resp = exchange(addr, raw.as_bytes());
+    assert!(
+        resp.starts_with(b"HTTP/1.1 200"),
+        "non-200 from gateway: {:?}",
+        String::from_utf8_lossy(&resp[..resp.len().min(120)])
+    );
+    resp
+}
+
+fn main() -> mod_transformer::Result<()> {
+    let mut bench = Bench::new("http_gateway");
+
+    // parser microcase: 1k parses of a canned request per iteration
+    let canned = {
+        let b = body(0);
+        format!(
+            "POST /v1/generate?stream=1 HTTP/1.1\r\nHost: bench\r\n\
+             Content-Length: {}\r\n\r\n{}",
+            b.len(),
+            b
+        )
+        .into_bytes()
+    };
+    let limits = Limits::default();
+    bench.case("gateway/parse_request", Some(1000.0), || {
+        for _ in 0..1000 {
+            let req =
+                parse_request(&mut Cursor::new(canned.as_slice()), &limits)
+                    .expect("parse")
+                    .expect("request");
+            assert_eq!(req.path, "/v1/generate");
+        }
+    });
+
+    let bundle = open_bundle(std::path::Path::new("artifacts"), "mod_tiny")?;
+    let params = Arc::new(bundle.init_params()?);
+    let engine = Arc::new(Engine::start(
+        bundle,
+        params,
+        ServeConfig { workers: 1, ..Default::default() },
+        RoutingDecision::RouterThreshold,
+    )?);
+    let server = HttpServer::start(engine.clone(), HttpConfig::default())?;
+    let addr = server.local_addr();
+    let units = (N_REQ * MAX_NEW) as f64; // nominal tokens per run
+
+    bench.case("gateway/inproc_16req", Some(units), || {
+        for i in 0..N_REQ {
+            let p = GenerateParams::new(vec![256, (1 + (i % 200)) as u16, 10])
+                .max_new(MAX_NEW)
+                .temperature(0.8)
+                .top_k(16)
+                .seed(i as u64);
+            engine.generate(p).expect("inproc generate");
+        }
+    });
+
+    bench.case("gateway/nonstream_16req", Some(units), || {
+        for i in 0..N_REQ {
+            post(addr, "/v1/generate", &body(i));
+        }
+    });
+
+    bench.case("gateway/sse_16req", Some(units), || {
+        for i in 0..N_REQ {
+            let resp = post(addr, "/v1/generate?stream=1", &body(i));
+            let text = String::from_utf8_lossy(&resp);
+            assert!(text.contains("event: done"), "stream must complete");
+        }
+    });
+
+    server.shutdown();
+    bench.finish()?;
+    Ok(())
+}

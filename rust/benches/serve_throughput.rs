@@ -131,25 +131,13 @@ fn run_engine(
     latencies
 }
 
-/// Fold per-request latencies into a ledger case (ms percentiles).
+/// Fold per-request latencies into a ledger case (ms percentiles). The
+/// shared `CaseResult::from_samples` math is hardened against an empty
+/// sample set — every percentile reports 0, never NaN/inf (unit-tested
+/// in `util::bench`).
 fn latency_case(name: &str, latencies: &[f64]) -> CaseResult {
-    let mut ms: Vec<f64> = latencies.iter().map(|l| l * 1000.0).collect();
-    ms.sort_by(|a, b| a.total_cmp(b));
-    let mean = ms.iter().sum::<f64>() / ms.len().max(1) as f64;
-    let var = ms.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
-        / ms.len().max(1) as f64;
-    CaseResult {
-        name: name.to_string(),
-        iters: ms.len(),
-        mean_ms: mean,
-        p50_ms: ms.get(ms.len() / 2).copied().unwrap_or(0.0),
-        p95_ms: ms
-            .get((ms.len() * 95 / 100).min(ms.len().saturating_sub(1)))
-            .copied()
-            .unwrap_or(0.0),
-        std_ms: var.sqrt(),
-        units: None,
-    }
+    let ms: Vec<f64> = latencies.iter().map(|l| l * 1000.0).collect();
+    CaseResult::from_samples(name, &ms)
 }
 
 fn main() -> mod_transformer::Result<()> {

@@ -1,0 +1,75 @@
+//! Serve a MoD bundle over the zero-dependency HTTP/SSE gateway and
+//! print a curl walkthrough, then live one-line stats snapshots (the
+//! same numbers `GET /metrics` exposes in Prometheus format).
+//!
+//! Run: `cargo run --release --example http_gateway -- \
+//!         [--bundle mod_tiny] [--port 8080] [--workers 0] \
+//!         [--decision router] [--stats-every-ms 5000]`
+//!
+//! Then, from another shell:
+//!
+//! ```bash
+//! curl -s localhost:8080/healthz
+//! curl -s -X POST localhost:8080/v1/generate \
+//!      -d '{"prompt":[256,7,10],"max_new":16,"seed":3}'
+//! curl -sN -X POST 'localhost:8080/v1/generate?stream=1' \
+//!      -d '{"prompt":[256,7,10],"max_new":16,"seed":3}'
+//! curl -s localhost:8080/metrics | grep engine_
+//! ```
+
+use std::sync::Arc;
+
+use mod_transformer::config::ServeConfig;
+use mod_transformer::runtime::open_bundle;
+use mod_transformer::serve::{HttpConfig, HttpServer, RoutingDecision};
+use mod_transformer::util::Args;
+
+fn main() -> mod_transformer::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let bundle_name = args.str_or("bundle", "mod_tiny");
+    let port = args.usize_or("port", 8080)?;
+    let stats_every = args.u64_or("stats-every-ms", 5000)?.max(500);
+    let decision = match args.str_or("decision", "router").as_str() {
+        "predictor" => RoutingDecision::Predictor,
+        "always" => RoutingDecision::AlwaysOn,
+        _ => RoutingDecision::RouterThreshold,
+    };
+
+    let bundle = open_bundle(std::path::Path::new("artifacts"), &bundle_name)?;
+    let params = Arc::new(bundle.init_params()?);
+    let engine = Arc::new(mod_transformer::serve::Engine::start(
+        bundle,
+        params,
+        ServeConfig {
+            workers: args.usize_or("workers", 0)?,
+            ..Default::default()
+        },
+        decision,
+    )?);
+
+    let server = HttpServer::start(
+        engine.clone(),
+        HttpConfig { addr: format!("127.0.0.1:{port}"), ..Default::default() },
+    )?;
+    let addr = server.local_addr();
+    println!("serving {bundle_name} on http://{addr}");
+    println!();
+    println!("try it:");
+    println!("  curl -s {addr}/healthz");
+    println!(
+        "  curl -s -X POST {addr}/v1/generate \\\n       \
+         -d '{{\"prompt\":[256,7,10],\"max_new\":16,\"seed\":3}}'"
+    );
+    println!(
+        "  curl -sN -X POST '{addr}/v1/generate?stream=1' \\\n       \
+         -d '{{\"prompt\":[256,7,10],\"max_new\":16,\"seed\":3}}'"
+    );
+    println!("  curl -s {addr}/metrics | grep engine_");
+    println!();
+    println!("(ctrl-c to stop; snapshots every {stats_every} ms)");
+
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(stats_every));
+        println!("{}", engine.stats().snapshot_line());
+    }
+}

@@ -21,7 +21,9 @@ use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
 use mod_transformer::exp::{self, ExpContext, Scale};
 use mod_transformer::flops;
 use mod_transformer::runtime::{Bundle, Tensor};
-use mod_transformer::serve::{Engine, Event, GenerateParams, RoutingDecision};
+use mod_transformer::serve::{
+    Engine, Event, GenerateParams, HttpConfig, HttpServer, RoutingDecision,
+};
 use mod_transformer::util::Args;
 
 const USAGE: &str = "\
@@ -43,10 +45,18 @@ COMMANDS:
                     (tokens print as each decode step streams in)
   serve <bundle>    [--ckpt CKPT] [--requests N] [--max-new N]
                     [--decision predictor|router|always] [--workers N]
-                    [--stream] [--deadline-ms N]
-                    continuously-batched engine demo; --stream prints the
+                    [--stream] [--deadline-ms N] [--http PORT]
+                    [--stats-every-ms N]
+                    continuously-batched engine. Default (loopback mode):
+                    demo over N synthetic requests; --stream prints the
                     first request's tokens live; --deadline-ms attaches a
-                    per-request deadline (late requests fail typed)
+                    per-request deadline (late requests fail typed).
+                    --http PORT serves the HTTP/SSE gateway instead
+                    (POST /v1/generate[?stream=1], GET /healthz,
+                    GET /metrics Prometheus text; PORT 0 = ephemeral).
+                    Both modes print a one-line stats snapshot every
+                    --stats-every-ms (default 2000; 0 disables in
+                    loopback mode)
   flops <preset>
   exp <fig3|fig4|fig5|fig6|fig7|all> [--scale smoke|tiny|full]
                     [--steps N]  (fixed-step figures 5/6/7 only; figs 3/4
@@ -206,6 +216,7 @@ fn main() -> mod_transformer::Result<()> {
             let max_new = args.usize_or("max-new", 32)?;
             let stream = args.has_flag("stream");
             let deadline_ms = args.opt_u64("deadline-ms")?;
+            let stats_every = args.u64_or("stats-every-ms", 2000)?;
             let engine = Engine::start(
                 b.clone(),
                 params,
@@ -215,6 +226,44 @@ fn main() -> mod_transformer::Result<()> {
                 },
                 decision,
             )?;
+
+            if let Some(port) = args.opt("http") {
+                // gateway mode: serve the wire protocol until killed,
+                // printing the live snapshot /metrics also exposes
+                let engine = Arc::new(engine);
+                let server = HttpServer::start(
+                    engine.clone(),
+                    HttpConfig {
+                        addr: format!("127.0.0.1:{port}"),
+                        ..Default::default()
+                    },
+                )?;
+                println!(
+                    "gateway listening on http://{}",
+                    server.local_addr()
+                );
+                println!(
+                    "  POST /v1/generate            \
+                     {{\"prompt\":[..],\"max_new\":..,\"seed\":..}}"
+                );
+                println!(
+                    "  POST /v1/generate?stream=1   \
+                     SSE: token / done / error frames"
+                );
+                println!(
+                    "  GET  /healthz | /metrics     \
+                     liveness | Prometheus text exposition"
+                );
+                let _ = std::io::stdout().flush();
+                loop {
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        stats_every.max(250),
+                    ));
+                    println!("{}", engine.stats().snapshot_line());
+                    let _ = std::io::stdout().flush();
+                }
+            }
+
             let corpus = MarkovCorpus::new(CorpusSpec::default(), 99);
             // submit everything up front; the engine admits each request
             // into a session row the moment one frees up (mid-flight)
@@ -235,37 +284,66 @@ fn main() -> mod_transformer::Result<()> {
                 .collect::<mod_transformer::Result<_>>()?;
             let mut latencies: Vec<f64> = Vec::new();
             let mut failed = 0usize;
-            for (i, mut gen) in gens.into_iter().enumerate() {
-                if stream && i == 0 {
-                    print!("request 0 tokens:");
-                    while let Some(ev) = gen.next_event() {
-                        match ev {
-                            Event::Token { token, .. } => {
-                                print!(" {token}");
-                                let _ = std::io::stdout().flush();
+            // periodic live snapshot (the same numbers the gateway's
+            // /metrics serves) while the demo requests drain
+            let stop = std::sync::atomic::AtomicBool::new(false);
+            std::thread::scope(|s| {
+                use std::sync::atomic::Ordering;
+                if stats_every > 0 {
+                    s.spawn(|| {
+                        // sleep in short slices so setting `stop` ends the
+                        // demo within ~100ms, not a full interval
+                        let mut waited = 0u64;
+                        while !stop.load(Ordering::Relaxed) {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(100),
+                            );
+                            waited += 100;
+                            if waited < stats_every {
+                                continue;
                             }
-                            Event::Done(u) => {
-                                latencies.push(u.latency.as_secs_f64());
+                            waited = 0;
+                            if stop.load(Ordering::Relaxed) {
+                                break;
                             }
-                            Event::Error(e) => {
-                                print!(" [{e}]");
+                            println!("{}", engine.stats().snapshot_line());
+                            let _ = std::io::stdout().flush();
+                        }
+                    });
+                }
+                for (i, mut gen) in gens.into_iter().enumerate() {
+                    if stream && i == 0 {
+                        print!("request 0 tokens:");
+                        while let Some(ev) = gen.next_event() {
+                            match ev {
+                                Event::Token { token, .. } => {
+                                    print!(" {token}");
+                                    let _ = std::io::stdout().flush();
+                                }
+                                Event::Done(u) => {
+                                    latencies.push(u.latency.as_secs_f64());
+                                }
+                                Event::Error(e) => {
+                                    print!(" [{e}]");
+                                    failed += 1;
+                                }
+                            }
+                        }
+                        println!();
+                    } else {
+                        match gen.wait() {
+                            Ok(resp) => {
+                                latencies.push(resp.latency.as_secs_f64());
+                            }
+                            Err(e) => {
+                                println!("request {i} failed: {e}");
                                 failed += 1;
                             }
                         }
                     }
-                    println!();
-                } else {
-                    match gen.wait() {
-                        Ok(resp) => {
-                            latencies.push(resp.latency.as_secs_f64());
-                        }
-                        Err(e) => {
-                            println!("request {i} failed: {e}");
-                            failed += 1;
-                        }
-                    }
                 }
-            }
+                stop.store(true, Ordering::Relaxed);
+            });
             latencies.sort_by(|a, b| a.total_cmp(b));
             let stats = engine.shutdown();
             let p50 = latencies.get(latencies.len() / 2).copied().unwrap_or(0.0);

@@ -41,6 +41,7 @@ use crate::config::ServeConfig;
 use crate::data::rng::Pcg32;
 use crate::data::tokenizer::{EOS, PAD};
 use crate::runtime::{Bundle, Tensor};
+use crate::util::metrics::{self, Counter, Gauge, Histogram};
 use crate::util::pool;
 
 use super::request::{
@@ -49,6 +50,102 @@ use super::request::{
 };
 use super::sampling::sample;
 use super::session::{DecodeSession, RoutingDecision, SessionReport};
+
+/// Pre-resolved handles into the process-global metrics registry
+/// ([`crate::util::metrics`]) — one lookup at engine start, relaxed
+/// atomics per event afterwards. Every engine in the process shares the
+/// same series, the way one Prometheus scrape sees one process; each
+/// handle mirrors the [`EngineStats`] field it sits next to in the code,
+/// so `/metrics` and [`Engine::stats`] cannot drift.
+struct EngineMetrics {
+    submitted: &'static Counter,
+    completed: &'static Counter,
+    cancelled: &'static Counter,
+    deadline_exceeded: &'static Counter,
+    failed: &'static Counter,
+    queue_depth: &'static Gauge,
+    active_rows: &'static Gauge,
+    mid_session_admissions: &'static Counter,
+    rows_released: &'static Counter,
+    steps: &'static Counter,
+    tokens: &'static Counter,
+    blocks_invoked: &'static Counter,
+    blocks_skipped: &'static Counter,
+    capacity_drops: &'static Counter,
+    latency: &'static Histogram,
+}
+
+/// Latency buckets (seconds) for `engine_request_latency_seconds`.
+const LATENCY_BUCKETS: [f64; 12] = [
+    0.001, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+fn engine_metrics() -> &'static EngineMetrics {
+    static M: std::sync::OnceLock<EngineMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| EngineMetrics {
+        submitted: metrics::counter(
+            "engine_requests_total",
+            "Requests accepted by Engine::submit",
+        ),
+        completed: metrics::counter(
+            "engine_completed_total",
+            "Requests that finished with Event::Done",
+        ),
+        cancelled: metrics::counter(
+            "engine_cancelled_total",
+            "Requests cancelled (or whose stream was abandoned)",
+        ),
+        deadline_exceeded: metrics::counter(
+            "engine_deadline_exceeded_total",
+            "Requests that failed their deadline in queue or mid-decode",
+        ),
+        failed: metrics::counter(
+            "engine_failed_total",
+            "Requests failed by batch errors, row poisoning or shutdown",
+        ),
+        queue_depth: metrics::gauge(
+            "engine_queue_depth",
+            "Requests waiting for a session row",
+        ),
+        active_rows: metrics::gauge(
+            "engine_active_rows",
+            "Session rows currently generating, across all workers",
+        ),
+        mid_session_admissions: metrics::counter(
+            "engine_mid_session_admissions_total",
+            "Requests admitted into an already-stepping session",
+        ),
+        rows_released: metrics::counter(
+            "engine_rows_released_total",
+            "Rows released back to the slot pool",
+        ),
+        steps: metrics::counter(
+            "engine_steps_total",
+            "Decode steps executed across all sessions",
+        ),
+        tokens: metrics::counter(
+            "engine_tokens_generated_total",
+            "Tokens sampled and streamed to callers",
+        ),
+        blocks_invoked: metrics::counter(
+            "engine_blocks_invoked_total",
+            "Transformer block executions during decode",
+        ),
+        blocks_skipped: metrics::counter(
+            "engine_blocks_skipped_total",
+            "Transformer block executions skipped by MoD routing",
+        ),
+        capacity_drops: metrics::counter(
+            "engine_capacity_drops_total",
+            "Tokens dropped from a routed block by capacity limits",
+        ),
+        latency: metrics::histogram(
+            "engine_request_latency_seconds",
+            &LATENCY_BUCKETS,
+            "Per-request submission-to-completion latency",
+        ),
+    })
+}
 
 /// Aggregate engine statistics.
 #[derive(Debug, Clone, Default)]
@@ -86,6 +183,10 @@ pub struct EngineStats {
     /// for aggregate throughput (overlap must not double-count time).
     pub first_step_start: Option<Instant>,
     pub last_step_end: Option<Instant>,
+    /// Requests waiting for a session row at the moment [`Engine::stats`]
+    /// was called (momentary, not cumulative; 0 in a final
+    /// [`Engine::shutdown`] report — the queue is always drained).
+    pub queue_depth: u64,
 }
 
 impl EngineStats {
@@ -95,13 +196,39 @@ impl EngineStats {
     }
 
     /// Aggregate throughput over the elapsed first-start → last-end span,
-    /// so overlapping sessions count once.
+    /// so overlapping sessions count once. Degenerate inputs — no steps
+    /// recorded yet, zero tokens, or a zero-length span (both instants
+    /// equal, e.g. a single sub-resolution step) — report 0.0, never
+    /// NaN or infinity.
     pub fn tokens_per_sec(&self) -> f64 {
         let span = match (self.first_step_start, self.last_step_end) {
             (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
             _ => 0.0,
         };
-        self.tokens_generated as f64 / span.max(1e-9)
+        if self.tokens_generated == 0 || span <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / span
+    }
+
+    /// One-line live snapshot (the `repro serve` periodic status line;
+    /// the same numbers `/metrics` exposes).
+    pub fn snapshot_line(&self) -> String {
+        format!(
+            "[stats] submitted {} completed {} failed {} queue {} | \
+             {} tokens ({:.1} tok/s) skip {:.0}% | \
+             {} mid-flight admissions, peak {} rows / {} workers",
+            self.submitted,
+            self.completed,
+            self.failed + self.cancelled + self.deadline_exceeded,
+            self.queue_depth,
+            self.tokens_generated,
+            self.tokens_per_sec(),
+            100.0 * self.skip_fraction(),
+            self.mid_session_admissions,
+            self.peak_active_rows,
+            self.peak_active_workers,
+        )
     }
 }
 
@@ -129,6 +256,8 @@ struct Shared {
     /// forever on a request no worker will ever pick up.
     live_workers: AtomicUsize,
     stats: Mutex<EngineStats>,
+    /// Registry handles, resolved once at start (shared process-wide).
+    metrics: &'static EngineMetrics,
 }
 
 impl Shared {
@@ -142,6 +271,8 @@ fn drain_queue(shared: &Shared, why: &str) {
     let mut q = shared.queue.lock().unwrap();
     while let Some(job) = q.pop_front() {
         shared.stat(|s| s.failed += 1);
+        shared.metrics.failed.inc();
+        shared.metrics.queue_depth.sub(1.0);
         let _ = job.tx.send(Event::Error(ServeError::new(
             ServeErrorKind::Shutdown,
             why,
@@ -168,13 +299,23 @@ fn queued_rejection(j: &Job, now: Instant) -> Option<ServeError> {
     }
 }
 
-/// Deliver a queue-side rejection: count it, then send the terminal event.
+/// Deliver a queue-side rejection: count it, then send the terminal
+/// event. Every call corresponds to one job leaving the queue, so the
+/// depth gauge decrements here.
 fn reject_queued(shared: &Shared, j: &Job, err: ServeError) {
     shared.stat(|s| match err.kind {
         ServeErrorKind::Cancelled => s.cancelled += 1,
         ServeErrorKind::DeadlineExceeded => s.deadline_exceeded += 1,
         _ => s.failed += 1,
     });
+    match err.kind {
+        ServeErrorKind::Cancelled => shared.metrics.cancelled.inc(),
+        ServeErrorKind::DeadlineExceeded => {
+            shared.metrics.deadline_exceeded.inc();
+        }
+        _ => shared.metrics.failed.inc(),
+    }
+    shared.metrics.queue_depth.sub(1.0);
     let _ = j.tx.send(Event::Error(err));
 }
 
@@ -233,6 +374,7 @@ impl Engine {
             decoding_workers: AtomicUsize::new(0),
             live_workers: AtomicUsize::new(workers),
             stats: Mutex::new(EngineStats::default()),
+            metrics: engine_metrics(),
         });
         // build every session BEFORE spawning any worker: a failure here
         // must not leave already-started threads parked on the condvar
@@ -254,19 +396,27 @@ impl Engine {
     /// Submit a request; returns the streaming [`Generation`] handle.
     /// Structurally invalid requests are rejected synchronously.
     pub fn submit(&self, params: GenerateParams) -> crate::Result<Generation> {
+        self.submit_typed(params).map_err(Into::into)
+    }
+
+    /// [`Engine::submit`] with the rejection *kind* preserved — the HTTP
+    /// gateway maps [`ServeErrorKind`] to status codes (`Rejected` → 400,
+    /// `Shutdown` → 503, …), which a stringly error cannot carry.
+    pub fn submit_typed(
+        &self,
+        params: GenerateParams,
+    ) -> std::result::Result<Generation, ServeError> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(ServeError::new(
                 ServeErrorKind::Shutdown,
                 "engine is shut down",
-            )
-            .into());
+            ));
         }
         if params.max_new == 0 {
             return Err(ServeError::new(
                 ServeErrorKind::Rejected,
                 "max_new must be at least 1",
-            )
-            .into());
+            ));
         }
         if params.prompt.len() + params.max_new > self.max_decode_len {
             return Err(ServeError::new(
@@ -278,8 +428,7 @@ impl Engine {
                     params.max_new,
                     self.max_decode_len
                 ),
-            )
-            .into());
+            ));
         }
         // scope bad prompts to their own request: letting one reach the
         // shared session would fail every batchmate with a Batch error
@@ -289,8 +438,7 @@ impl Engine {
             return Err(ServeError::new(
                 ServeErrorKind::Rejected,
                 format!("prompt token {t} outside the vocab ({})", self.vocab),
-            )
-            .into());
+            ));
         }
         let (tx, rx) = mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
@@ -303,7 +451,9 @@ impl Engine {
             cancel: cancel.clone(),
         };
         self.shared.stat(|s| s.submitted += 1);
+        self.shared.metrics.submitted.inc();
         self.shared.queue.lock().unwrap().push_back(job);
+        self.shared.metrics.queue_depth.add(1.0);
         self.shared.cond.notify_one();
         // every worker died (poisoned rows): fail the job now instead of
         // letting the caller block on a queue nobody serves
@@ -319,7 +469,13 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.shared.stats.lock().unwrap().clone()
+        // queue lock taken and released BEFORE the stats lock — never
+        // nested, because workers take stats while holding the queue
+        // (reject sweep) and nesting the other way would deadlock
+        let queue_depth = self.shared.queue.lock().unwrap().len() as u64;
+        let mut s = self.shared.stats.lock().unwrap().clone();
+        s.queue_depth = queue_depth;
+        s
     }
 
     /// Stop accepting requests, serve everything already submitted, join
@@ -327,7 +483,7 @@ impl Engine {
     /// last step's accounting landed — no worker/reader race).
     pub fn shutdown(mut self) -> EngineStats {
         self.halt(); // Drop re-runs halt() afterwards; it is idempotent
-        self.shared.stats.lock().unwrap().clone()
+        self.stats() // queue_depth == 0: halt drained the queue
     }
 
     fn halt(&mut self) {
@@ -453,9 +609,11 @@ fn worker_loop(
                     }
                     break j;
                 };
+                shared.metrics.queue_depth.sub(1.0);
                 if let Err(e) = session.admit_row(b) {
                     dead[b] = true;
                     shared.stat(|s| s.failed += 1);
+                    shared.metrics.failed.inc();
                     let _ = job.tx.send(Event::Error(ServeError::new(
                         ServeErrorKind::Batch,
                         format!("row admission failed: {e}"),
@@ -477,10 +635,12 @@ fn worker_loop(
                 });
                 let total =
                     shared.active_rows.fetch_add(1, Ordering::SeqCst) + 1;
+                shared.metrics.active_rows.add(1.0);
                 shared.stat(|s| {
                     s.peak_active_rows = s.peak_active_rows.max(total as u64);
                     if others_active && stepped_since_idle {
                         s.mid_session_admissions += 1;
+                        shared.metrics.mid_session_admissions.inc();
                     }
                 });
             }
@@ -645,6 +805,7 @@ fn worker_loop(
                 RowFate::Abandoned => {
                     let _ = rows[b].take();
                     shared.stat(|s| s.cancelled += 1);
+                    shared.metrics.cancelled.inc();
                     free_row(shared, &mut session, &mut dead, b);
                 }
             }
@@ -653,6 +814,23 @@ fn worker_loop(
         // --- absorb this step into the engine stats (delta vs last) ---
         let rep = session.report();
         let end = Instant::now();
+        shared.metrics.steps.add(rep.steps - prev.steps);
+        shared
+            .metrics
+            .tokens
+            .add(rep.tokens_generated - prev.tokens_generated);
+        shared
+            .metrics
+            .blocks_invoked
+            .add(rep.blocks_invoked - prev.blocks_invoked);
+        shared
+            .metrics
+            .blocks_skipped
+            .add(rep.blocks_skipped - prev.blocks_skipped);
+        shared
+            .metrics
+            .capacity_drops
+            .add(rep.capacity_drops - prev.capacity_drops);
         shared.stat(|s| {
             s.steps += rep.steps - prev.steps;
             s.tokens_generated += rep.tokens_generated - prev.tokens_generated;
@@ -693,8 +871,12 @@ fn free_row(
     b: usize,
 ) {
     shared.active_rows.fetch_sub(1, Ordering::SeqCst);
+    shared.metrics.active_rows.sub(1.0);
     match session.release_row(b) {
-        Ok(()) => shared.stat(|s| s.rows_released += 1),
+        Ok(()) => {
+            shared.stat(|s| s.rows_released += 1);
+            shared.metrics.rows_released.inc();
+        }
         Err(_) => dead[b] = true,
     }
 }
@@ -712,6 +894,11 @@ fn finish_done(
     // from wait() and immediately reads stats() must see this request
     free_row(shared, session, dead, b);
     shared.stat(|s| s.completed += 1);
+    shared.metrics.completed.inc();
+    shared
+        .metrics
+        .latency
+        .observe(row.job.submitted.elapsed().as_secs_f64());
     let _ = row.job.tx.send(Event::Done(Usage {
         prefill_tokens: row.job.params.prompt.len(),
         decode_tokens: row.emitted,
@@ -736,6 +923,13 @@ fn finish_error(
         ServeErrorKind::DeadlineExceeded => s.deadline_exceeded += 1,
         _ => s.failed += 1,
     });
+    match err.kind {
+        ServeErrorKind::Cancelled => shared.metrics.cancelled.inc(),
+        ServeErrorKind::DeadlineExceeded => {
+            shared.metrics.deadline_exceeded.inc();
+        }
+        _ => shared.metrics.failed.inc(),
+    }
     let _ = row.job.tx.send(Event::Error(err));
 }
 
@@ -818,4 +1012,65 @@ pub fn generate_batch(
     let report = session.report();
     generated.truncate(requests.len());
     Ok((generated, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn tokens_per_sec_is_zero_on_degenerate_inputs() {
+        // no steps ever recorded
+        let s = EngineStats::default();
+        assert_eq!(s.tokens_per_sec(), 0.0);
+
+        // tokens but no recorded span (e.g. stats cloned mid-construction)
+        let mut s = EngineStats { tokens_generated: 42, ..Default::default() };
+        assert_eq!(s.tokens_per_sec(), 0.0);
+
+        // zero-length span: first start == last end
+        let t = Instant::now();
+        s.first_step_start = Some(t);
+        s.last_step_end = Some(t);
+        let v = s.tokens_per_sec();
+        assert!(v == 0.0 && v.is_finite(), "{v}");
+
+        // a span with zero tokens is still 0, not NaN
+        s.tokens_generated = 0;
+        s.last_step_end = Some(t + Duration::from_millis(5));
+        assert_eq!(s.tokens_per_sec(), 0.0);
+
+        // sanity: a real span with tokens reports a finite positive rate
+        s.tokens_generated = 10;
+        let v = s.tokens_per_sec();
+        assert!(v > 0.0 && v.is_finite(), "{v}");
+    }
+
+    #[test]
+    fn skip_fraction_is_zero_not_nan_with_no_blocks() {
+        let s = EngineStats::default();
+        let f = s.skip_fraction();
+        assert!(f == 0.0 && f.is_finite(), "{f}");
+    }
+
+    #[test]
+    fn snapshot_line_carries_the_live_numbers() {
+        let s = EngineStats {
+            submitted: 7,
+            completed: 5,
+            failed: 1,
+            queue_depth: 2,
+            tokens_generated: 160,
+            mid_session_admissions: 3,
+            ..Default::default()
+        };
+        let line = s.snapshot_line();
+        for needle in
+            ["submitted 7", "completed 5", "queue 2", "160 tokens",
+             "3 mid-flight"]
+        {
+            assert!(line.contains(needle), "{needle:?} missing in {line:?}");
+        }
+    }
 }

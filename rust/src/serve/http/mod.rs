@@ -1,0 +1,602 @@
+//! Zero-dependency HTTP/1.1 + SSE gateway in front of the serving
+//! [`Engine`] — the wire protocol that turns the continuously-batched
+//! engine from a library into a network service.
+//!
+//! ```text
+//!   TcpListener (blocking accept thread; shutdown wakes it with a
+//!        │       loopback connection)
+//!        │  bounded queue (natural backpressure: a full queue
+//!        ▼   stalls accept, overflow waits in the TCP backlog)
+//!   connection-thread pool (HttpConfig::conn_threads)
+//!        │  per connection: parse → route → respond, keep-alive loop
+//!        ▼
+//!   POST /v1/generate            JSON in, JSON out (tokens + usage)
+//!   POST /v1/generate?stream=1   SSE: `event: token` per decode step,
+//!                                terminal `done` / `error` frame
+//!   GET  /healthz                liveness
+//!   GET  /metrics                Prometheus text exposition (the
+//!                                process-global util::metrics registry)
+//! ```
+//!
+//! Failure containment mirrors the engine's: malformed requests map to
+//! 4xx via the [`parser`] limits (oversized head → 431, oversized body →
+//! 413, bad framing → 400) and the connection is closed — one bad client
+//! never takes down the listener. Engine-side failures keep their typed
+//! [`ServeErrorKind`] and map to status codes ([`status_for`]): `Rejected`
+//! → 400, `DeadlineExceeded` → 504, `Batch` → 500, `Shutdown` → 503.
+//! Once an SSE stream has started the status line is already on the wire,
+//! so mid-stream failures arrive as a terminal `event: error` frame —
+//! exactly the engine's event contract, serialized.
+//!
+//! Shutdown is a graceful drain: the accept loop stops, already-accepted
+//! connections (including in-flight SSE streams) run to completion, and
+//! [`HttpServer::shutdown`] joins every thread before returning. The
+//! engine outlives the gateway (`Arc<Engine>`), so callers shut down the
+//! gateway first, then the engine.
+
+pub mod parser;
+pub mod sse;
+
+use std::collections::HashMap;
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::serve::engine::Engine;
+use crate::serve::request::{Event, GenerateParams, ServeError, ServeErrorKind};
+use crate::util::json::Json;
+use crate::util::metrics::{self, Counter};
+
+use parser::{HttpRequest, Limits};
+
+/// Gateway knobs. The defaults suit tests and the `repro serve --http`
+/// CLI; production fronting would raise `conn_threads`.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks an ephemeral
+    /// port — read it back via [`HttpServer::local_addr`]).
+    pub addr: String,
+    /// Connection-handler threads (max concurrently served connections).
+    pub conn_threads: usize,
+    /// Accepted-but-unserved connection backlog before accept stalls.
+    pub backlog: usize,
+    /// Per-read socket timeout; an idle keep-alive connection is closed
+    /// after this long with no next request.
+    pub read_timeout: Duration,
+    /// Request parsing limits.
+    pub limits: Limits,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            conn_threads: 4,
+            backlog: 64,
+            read_timeout: Duration::from_secs(10),
+            limits: Limits::default(),
+        }
+    }
+}
+
+/// Map a typed engine error to the HTTP status it is answered with
+/// (pre-stream; mid-stream it becomes an `event: error` frame instead).
+pub fn status_for(kind: ServeErrorKind) -> u16 {
+    match kind {
+        ServeErrorKind::Rejected => 400,
+        ServeErrorKind::Cancelled => 499,
+        ServeErrorKind::DeadlineExceeded => 504,
+        ServeErrorKind::Batch => 500,
+        ServeErrorKind::Shutdown => 503,
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+/// Shared state of one running gateway.
+struct Gateway {
+    engine: Arc<Engine>,
+    limits: Limits,
+    read_timeout: Duration,
+    draining: Arc<AtomicBool>,
+    /// `(path label, status)` → resolved counter. Per-request accounting
+    /// must not go through the global registry mutex (a `/metrics`
+    /// render holds that for a whole scrape); this gateway-local cache
+    /// pays one small lock + hash per request after first resolution.
+    request_counters: Mutex<HashMap<(&'static str, u16), &'static Counter>>,
+}
+
+impl Gateway {
+    /// Bounded-cardinality path label: known endpoints keep their name,
+    /// everything else collapses into `other`.
+    fn path_label(path: &str) -> &'static str {
+        match path {
+            "/healthz" => "/healthz",
+            "/metrics" => "/metrics",
+            "/v1/generate" => "/v1/generate",
+            _ => "other",
+        }
+    }
+
+    fn count_request(&self, path: &str, status: u16) {
+        let key = (Self::path_label(path), status);
+        let counter = *self
+            .request_counters
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| {
+                let status = key.1.to_string();
+                metrics::counter_with(
+                    "gateway_requests_total",
+                    &[("path", key.0), ("status", status.as_str())],
+                    "HTTP requests served, by endpoint and status",
+                )
+            });
+        counter.inc();
+    }
+}
+
+/// Handle to a running gateway. Dropping it (or calling
+/// [`HttpServer::shutdown`]) stops accepting and drains in-flight
+/// connections before returning.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    draining: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind, spawn the accept loop + connection pool, return immediately.
+    pub fn start(engine: Arc<Engine>, cfg: HttpConfig) -> crate::Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| crate::err!("binding {}: {e}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        let draining = Arc::new(AtomicBool::new(false));
+
+        let gw = Arc::new(Gateway {
+            engine,
+            limits: cfg.limits.clone(),
+            read_timeout: cfg.read_timeout,
+            draining: draining.clone(),
+            request_counters: Mutex::new(HashMap::new()),
+        });
+        let in_flight = metrics::gauge(
+            "gateway_in_flight_connections",
+            "Connections currently being served",
+        );
+        let accepted = metrics::counter(
+            "gateway_connections_total",
+            "Connections accepted by the gateway",
+        );
+
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(cfg.backlog.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(cfg.conn_threads.max(1));
+        for _ in 0..cfg.conn_threads.max(1) {
+            let rx = rx.clone();
+            let gw = gw.clone();
+            workers.push(std::thread::spawn(move || loop {
+                // holding the lock while blocked in recv() is fine: only
+                // one worker can pop at a time anyway
+                let conn = rx.lock().unwrap().recv();
+                match conn {
+                    Ok(stream) => {
+                        in_flight.add(1.0);
+                        handle_connection(&gw, stream);
+                        in_flight.sub(1.0);
+                    }
+                    // sender dropped: queued connections are drained
+                    // first (sync_channel delivers buffered items before
+                    // erroring), then the pool winds down
+                    Err(_) => break,
+                }
+            }));
+        }
+
+        // Blocking accept (no poll interval on the connect path); halt()
+        // interrupts it with a wake connection to the loopback address.
+        let drain_flag = draining.clone();
+        let accept_handle = std::thread::spawn(move || {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if drain_flag.load(Ordering::SeqCst) {
+                            break; // woken for shutdown (or racing client)
+                        }
+                        accepted.inc();
+                        let _ = stream.set_nodelay(true);
+                        if tx.send(stream).is_err() {
+                            break; // workers gone; nothing to serve with
+                        }
+                    }
+                    Err(_) => {
+                        if drain_flag.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // transient accept error (e.g. EMFILE): back off
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+            // tx drops here → workers drain the backlog and exit
+        });
+
+        Ok(Self {
+            local_addr,
+            draining,
+            accept_handle: Some(accept_handle),
+            workers,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the ephemeral port chosen).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful drain: stop accepting, serve every connection already
+    /// accepted (including in-flight SSE streams) to completion, join
+    /// all gateway threads.
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.draining.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            // wake the blocking accept() so it observes the drain flag;
+            // the loopback port is reachable whatever address we bound
+            let wake = std::net::SocketAddr::from((
+                [127, 0, 0, 1],
+                self.local_addr.port(),
+            ));
+            let _ = TcpStream::connect_timeout(
+                &wake,
+                Duration::from_millis(250),
+            );
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+// ---------------------------------------------------------------------
+// connection + request handling
+// ---------------------------------------------------------------------
+
+fn write_response(
+    w: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+fn error_body(err: &ServeError) -> Vec<u8> {
+    Json::obj(vec![("error", sse::error_json(err))])
+        .to_string()
+        .into_bytes()
+}
+
+fn write_json_error(
+    w: &mut TcpStream,
+    status: u16,
+    err: &ServeError,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write_response(w, status, "application/json", &error_body(err), keep_alive)
+}
+
+fn handle_connection(gw: &Gateway, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(gw.read_timeout));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+
+    loop {
+        match parser::parse_request(&mut reader, &gw.limits) {
+            Ok(None) => break, // clean close / idle timeout
+            Err(e) => {
+                // malformed request: answer typed, then close — the
+                // framing is unreliable past this point
+                gw.count_request("(parse)", e.status);
+                let err = ServeError::new(ServeErrorKind::Rejected, e.message);
+                let _ = write_json_error(&mut writer, e.status, &err, false);
+                // drain (bounded) whatever the client already sent:
+                // closing with unread bytes in the receive buffer RSTs
+                // the connection and can discard the 4xx in flight
+                let _ = reader
+                    .get_ref()
+                    .set_read_timeout(Some(Duration::from_millis(250)));
+                let mut scratch = [0u8; 4096];
+                let mut drained = 0usize;
+                while drained < 64 * 1024 {
+                    match reader.read(&mut scratch) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => drained += n,
+                    }
+                }
+                break;
+            }
+            Ok(Some(req)) => {
+                // during drain, finish this request but don't invite more
+                let keep = req.keep_alive
+                    && !gw.draining.load(Ordering::SeqCst);
+                match handle_request(gw, &req, &mut writer, keep) {
+                    Ok(true) => continue,
+                    _ => break, // streamed (conn closed), io error, close
+                }
+            }
+        }
+    }
+}
+
+/// Route + answer one request. `Ok(true)` means the connection can serve
+/// another request (response written with keep-alive framing).
+fn handle_request(
+    gw: &Gateway,
+    req: &HttpRequest,
+    w: &mut TcpStream,
+    keep: bool,
+) -> std::io::Result<bool> {
+    let (status, usable) = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = Json::obj(vec![
+                ("status", Json::str("ok")),
+                (
+                    "queue_depth",
+                    Json::num(gw.engine.stats().queue_depth as f64),
+                ),
+            ]);
+            write_response(
+                w,
+                200,
+                "application/json",
+                body.to_string().as_bytes(),
+                keep,
+            )?;
+            (200, keep)
+        }
+        ("GET", "/metrics") => {
+            write_response(
+                w,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                metrics::render().as_bytes(),
+                keep,
+            )?;
+            (200, keep)
+        }
+        ("POST", "/v1/generate") => handle_generate(gw, req, w, keep)?,
+        // known path, wrong verb → 405; anything else → 404
+        (_, "/healthz" | "/metrics" | "/v1/generate") => {
+            let err = ServeError::new(
+                ServeErrorKind::Rejected,
+                format!("method {} not allowed on {}", req.method, req.path),
+            );
+            write_json_error(w, 405, &err, keep)?;
+            (405, keep)
+        }
+        _ => {
+            let err = ServeError::new(
+                ServeErrorKind::Rejected,
+                format!("no such endpoint {}", req.path),
+            );
+            write_json_error(w, 404, &err, keep)?;
+            (404, keep)
+        }
+    };
+    gw.count_request(&req.path, status);
+    Ok(usable)
+}
+
+/// Decode the `/v1/generate` JSON body into [`GenerateParams`].
+fn parse_generate_body(body: &[u8]) -> Result<GenerateParams, ServeError> {
+    let reject = |m: String| ServeError::new(ServeErrorKind::Rejected, m);
+    let text = std::str::from_utf8(body)
+        .map_err(|e| reject(format!("body is not UTF-8: {e}")))?;
+    let j = Json::parse(text)
+        .map_err(|e| reject(format!("body is not valid JSON: {e}")))?;
+
+    let prompt_j = j
+        .get("prompt")
+        .ok_or_else(|| reject("missing \"prompt\" array".to_string()))?;
+    let arr = prompt_j
+        .as_arr()
+        .ok_or_else(|| reject("\"prompt\" must be an array".to_string()))?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        let v = t.as_f64().ok_or_else(|| {
+            reject(format!("prompt[{i}] is not a number"))
+        })?;
+        if !(0.0..65536.0).contains(&v) || v.trunc() != v {
+            return Err(reject(format!(
+                "prompt[{i}] = {v} is not a u16 token id"
+            )));
+        }
+        prompt.push(v as u16);
+    }
+
+    let mut p = GenerateParams::new(prompt);
+    let opt_usize = |key: &str| -> Result<Option<usize>, ServeError> {
+        match j.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .filter(|x| *x >= 0.0 && x.trunc() == *x)
+                .map(|x| Some(x as usize))
+                .ok_or_else(|| {
+                    reject(format!("{key:?} must be a non-negative integer"))
+                }),
+        }
+    };
+    if let Some(n) = opt_usize("max_new")? {
+        p = p.max_new(n);
+    }
+    if let Some(k) = opt_usize("top_k")? {
+        p = p.top_k(k);
+    }
+    if let Some(s) = opt_usize("seed")? {
+        p = p.seed(s as u64);
+    }
+    if let Some(ms) = opt_usize("deadline_ms")? {
+        p = p.deadline_ms(ms as u64);
+    }
+    match j.get("temperature") {
+        None | Some(Json::Null) => {}
+        Some(v) => {
+            let t = v
+                .as_f64()
+                .filter(|t| t.is_finite() && *t >= 0.0)
+                .ok_or_else(|| {
+                    reject("\"temperature\" must be a finite number >= 0"
+                        .to_string())
+                })?;
+            p = p.temperature(t);
+        }
+    }
+    match j.get("stop_tokens") {
+        None | Some(Json::Null) => {}
+        Some(v) => {
+            let arr = v.as_arr().ok_or_else(|| {
+                reject("\"stop_tokens\" must be an array".to_string())
+            })?;
+            for (i, t) in arr.iter().enumerate() {
+                let v = t
+                    .as_f64()
+                    .filter(|x| {
+                        (0.0..65536.0).contains(x) && x.trunc() == *x
+                    })
+                    .ok_or_else(|| {
+                        reject(format!(
+                            "stop_tokens[{i}] is not a u16 token id"
+                        ))
+                    })?;
+                p = p.stop_token(v as u16);
+            }
+        }
+    }
+    Ok(p)
+}
+
+fn handle_generate(
+    gw: &Gateway,
+    req: &HttpRequest,
+    w: &mut TcpStream,
+    keep: bool,
+) -> std::io::Result<(u16, bool)> {
+    let stream = req.query_flag("stream");
+    let params = match parse_generate_body(&req.body) {
+        Ok(p) => p,
+        Err(e) => {
+            let status = status_for(e.kind);
+            write_json_error(w, status, &e, keep)?;
+            return Ok((status, keep));
+        }
+    };
+    // submit-time rejections happen before any response bytes, so even a
+    // stream=1 request gets a proper status line
+    let mut gen = match gw.engine.submit_typed(params) {
+        Ok(g) => g,
+        Err(e) => {
+            let status = status_for(e.kind);
+            write_json_error(w, status, &e, keep)?;
+            return Ok((status, keep));
+        }
+    };
+
+    if stream {
+        // SSE: headers first, then one frame per engine event. No
+        // Content-Length ⇒ the connection closes when the stream ends.
+        w.write_all(
+            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+              Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+        )?;
+        w.flush()?;
+        while let Some(ev) = gen.next_event() {
+            if w.write_all(sse::event_frame(&ev).as_bytes()).is_err()
+                || w.flush().is_err()
+            {
+                // client went away: release the row at the next decode
+                // step; dropping `gen` makes the engine abandon the rest
+                gen.cancel();
+                break;
+            }
+        }
+        return Ok((200, false));
+    }
+
+    // blocking JSON: fold the stream, keeping the full Usage (wait()
+    // drops finish/queue latency)
+    let mut tokens: Vec<Json> = Vec::new();
+    let mut outcome: Option<(u16, Vec<u8>)> = None;
+    while let Some(ev) = gen.next_event() {
+        match ev {
+            Event::Token { token, .. } => {
+                tokens.push(Json::num(token as f64));
+            }
+            Event::Done(u) => {
+                let body = Json::obj(vec![
+                    ("tokens", Json::Arr(std::mem::take(&mut tokens))),
+                    ("usage", sse::usage_json(&u)),
+                ]);
+                outcome = Some((200, body.to_string().into_bytes()));
+            }
+            Event::Error(e) => {
+                let status = status_for(e.kind);
+                outcome = Some((status, error_body(&e)));
+            }
+        }
+    }
+    let (status, body) = outcome.unwrap_or_else(|| {
+        let e = ServeError::new(
+            ServeErrorKind::Shutdown,
+            "stream ended without a terminal event",
+        );
+        (503, error_body(&e))
+    });
+    write_response(w, status, "application/json", &body, keep)?;
+    Ok((status, keep))
+}

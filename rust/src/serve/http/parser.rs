@@ -1,0 +1,493 @@
+//! Hand-rolled HTTP/1.1 request parser with hard limits.
+//!
+//! Reads one request (request line, headers, Content-Length body) from a
+//! `BufRead`, enforcing three limits so a malicious or broken client is
+//! answered with a typed 4xx and disconnected instead of holding memory
+//! or wedging the listener:
+//!
+//! * [`Limits::max_head_bytes`] — request line + headers, enforced via an
+//!   `io::Take` so oversized heads are never buffered (→ 431),
+//! * [`Limits::max_headers`] — header count (→ 431),
+//! * [`Limits::max_body`] — declared Content-Length cap, checked *before*
+//!   the body buffer is allocated (→ 413).
+//!
+//! Framing rules: lines end in CRLF (a bare LF is tolerated, a stray CR
+//! inside a line is a 400), blank lines before the request line are
+//! skipped (RFC 9112 §2.2), `Transfer-Encoding` other than `identity` is
+//! refused with 501 (the gateway never needs chunked requests), and
+//! conflicting duplicate `Content-Length` headers are a 400. Pipelining
+//! works by construction: parsing consumes exactly one request's bytes,
+//! so the next call picks up the following request.
+
+use std::io::{BufRead, Read};
+
+/// Hard limits on one request. Defaults are generous for the gateway's
+/// tiny JSON bodies while keeping worst-case memory per connection small.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Max bytes for the request line + all headers.
+    pub max_head_bytes: usize,
+    /// Max number of headers.
+    pub max_headers: usize,
+    /// Max declared Content-Length.
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self { max_head_bytes: 16 * 1024, max_headers: 64, max_body: 1 << 20 }
+    }
+}
+
+/// A parse failure carrying the HTTP status the connection should be
+/// answered with before closing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, message: impl Into<String>) -> Self {
+        Self { status, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.status, self.message)
+    }
+}
+
+/// One parsed request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path without the query string, e.g. `/v1/generate`.
+    pub path: String,
+    /// Decoded `k=v` query pairs, in order of appearance.
+    pub query: Vec<(String, String)>,
+    /// Headers with names lowercased, in order of appearance.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection may serve another request afterwards
+    /// (HTTP/1.1 default keep-alive unless `Connection: close`).
+    pub keep_alive: bool,
+}
+
+impl HttpRequest {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Query value by key.
+    pub fn query_value(&self, key: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Truthy query flag: present with value `1`, `true`, or empty
+    /// (`?stream`, `?stream=1`, `?stream=true`).
+    pub fn query_flag(&self, key: &str) -> bool {
+        matches!(self.query_value(key), Some("1" | "true" | ""))
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Outcome of reading one header-section line.
+enum Line {
+    Text(String),
+    /// Clean EOF at a line boundary.
+    Eof,
+    /// Read timeout with **no bytes received** for this line — an idle
+    /// keep-alive connection, not a stalled request (that is a 408).
+    IdleTimeout,
+}
+
+/// One header-section line. Reads through the `Take` guarding
+/// [`Limits::max_head_bytes`]: the limit running out mid-line is a 431,
+/// a genuine EOF mid-line a 400, a timeout mid-line a 408.
+fn read_line<R: BufRead>(
+    head: &mut std::io::Take<R>,
+) -> Result<Line, HttpError> {
+    let mut buf = Vec::new();
+    match head.read_until(b'\n', &mut buf) {
+        Err(e) if is_timeout(&e) => {
+            return if buf.is_empty() {
+                Ok(Line::IdleTimeout)
+            } else {
+                Err(HttpError::new(408, "timed out mid header line"))
+            };
+        }
+        Err(e) => return Err(HttpError::new(400, format!("read error: {e}"))),
+        Ok(0) => {
+            return if head.limit() == 0 {
+                Err(HttpError::new(431, "request head exceeds the limit"))
+            } else {
+                Ok(Line::Eof)
+            };
+        }
+        Ok(_) => {}
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(if head.limit() == 0 {
+            HttpError::new(431, "request head exceeds the limit")
+        } else {
+            HttpError::new(400, "truncated header line")
+        });
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    // a stray CR inside the line is a smuggling vector, not whitespace
+    if buf.contains(&b'\r') {
+        return Err(HttpError::new(400, "stray CR inside header line"));
+    }
+    String::from_utf8(buf)
+        .map(Line::Text)
+        .map_err(|_| HttpError::new(400, "non-UTF-8 bytes in request head"))
+}
+
+fn parse_query(qs: &str) -> Vec<(String, String)> {
+    qs.split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| {
+            let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+            (k.to_string(), v.to_string())
+        })
+        .collect()
+}
+
+/// Parse one request. `Ok(None)` means the client closed (or went idle
+/// past the read timeout) cleanly *between* requests — the keep-alive
+/// exit path, not an error.
+pub fn parse_request<R: BufRead>(
+    reader: &mut R,
+    limits: &Limits,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let (method, target, version, headers) = {
+        let mut head = reader.by_ref().take(limits.max_head_bytes as u64);
+
+        // request line; tolerate blank line(s) before it (RFC 9112 §2.2).
+        // EOF or an idle timeout *before any request byte* is the clean
+        // keep-alive close; a timeout after bytes arrived is a 408.
+        let line = loop {
+            match read_line(&mut head)? {
+                Line::Eof | Line::IdleTimeout => return Ok(None),
+                Line::Text(l) if l.is_empty() => continue,
+                Line::Text(l) => break l,
+            }
+        };
+        let mut parts = line.split(' ').filter(|p| !p.is_empty());
+        let (method, target, version) =
+            match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(m), Some(t), Some(v), None) => {
+                    (m.to_string(), t.to_string(), v.to_string())
+                }
+                _ => {
+                    return Err(HttpError::new(
+                        400,
+                        format!("malformed request line {line:?}"),
+                    ));
+                }
+            };
+        if !version.starts_with("HTTP/1.") {
+            return Err(HttpError::new(
+                505,
+                format!("unsupported version {version:?}"),
+            ));
+        }
+
+        // headers
+        let mut headers: Vec<(String, String)> = Vec::new();
+        loop {
+            let line = match read_line(&mut head)? {
+                Line::Text(l) => l,
+                Line::Eof => {
+                    return Err(HttpError::new(
+                        400,
+                        "connection closed inside headers",
+                    ));
+                }
+                Line::IdleTimeout => {
+                    return Err(HttpError::new(
+                        408,
+                        "timed out reading headers",
+                    ));
+                }
+            };
+            if line.is_empty() {
+                break;
+            }
+            if headers.len() >= limits.max_headers {
+                return Err(HttpError::new(431, "too many headers"));
+            }
+            let (name, value) = line.split_once(':').ok_or_else(|| {
+                HttpError::new(400, format!("header without colon {line:?}"))
+            })?;
+            let name = name.trim().to_ascii_lowercase();
+            if name.is_empty() || name.contains(' ') {
+                return Err(HttpError::new(
+                    400,
+                    format!("bad header name in {line:?}"),
+                ));
+            }
+            headers.push((name, value.trim().to_string()));
+        }
+        (method, target, version, headers)
+    }; // head limit released; the body reads from the raw reader
+
+    // body framing
+    let mut content_length = 0usize;
+    let mut seen_cl: Option<&str> = None;
+    for (k, v) in &headers {
+        if k == "transfer-encoding" && !v.eq_ignore_ascii_case("identity") {
+            return Err(HttpError::new(
+                501,
+                format!("transfer-encoding {v:?} not supported"),
+            ));
+        }
+        if k == "content-length" {
+            if let Some(prev) = seen_cl {
+                if prev != v.as_str() {
+                    return Err(HttpError::new(
+                        400,
+                        "conflicting content-length headers",
+                    ));
+                }
+                continue;
+            }
+            seen_cl = Some(v.as_str());
+            content_length = v.parse().map_err(|_| {
+                HttpError::new(400, format!("bad content-length {v:?}"))
+            })?;
+        }
+    }
+    if content_length > limits.max_body {
+        return Err(HttpError::new(
+            413,
+            format!(
+                "content-length {content_length} exceeds the {} byte limit",
+                limits.max_body
+            ),
+        ));
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body).map_err(|e| {
+            if is_timeout(&e) {
+                HttpError::new(408, "timed out reading request body")
+            } else {
+                HttpError::new(400, "body shorter than content-length")
+            }
+        })?;
+    }
+
+    let (path, qs) = target.split_once('?').unwrap_or((target.as_str(), ""));
+    let conn = headers
+        .iter()
+        .find(|(k, _)| k == "connection")
+        .map(|(_, v)| v.to_ascii_lowercase())
+        .unwrap_or_default();
+    let keep_alive = if version == "HTTP/1.0" {
+        conn == "keep-alive"
+    } else {
+        conn != "close"
+    };
+
+    Ok(Some(HttpRequest {
+        method,
+        path: path.to_string(),
+        query: parse_query(qs),
+        headers,
+        body,
+        keep_alive,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Option<HttpRequest>, HttpError> {
+        parse_request(&mut Cursor::new(raw.to_vec()), &Limits::default())
+    }
+
+    fn parse_limited(
+        raw: &[u8],
+        limits: &Limits,
+    ) -> Result<Option<HttpRequest>, HttpError> {
+        parse_request(&mut Cursor::new(raw.to_vec()), limits)
+    }
+
+    #[test]
+    fn simple_get_with_query() {
+        let r = parse(b"GET /v1/generate?stream=1&x=y HTTP/1.1\r\nHost: h\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/generate");
+        assert!(r.query_flag("stream"));
+        assert_eq!(r.query_value("x"), Some("y"));
+        assert_eq!(r.header("host"), Some("h"));
+        assert_eq!(r.header("HOST"), Some("h"));
+        assert!(r.body.is_empty());
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn post_reads_exactly_content_length_bytes() {
+        let r = parse(
+            b"POST /v1/generate HTTP/1.1\r\nContent-Length: 4\r\n\r\n{\"a\"TRAILING",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.body, b"{\"a\"");
+    }
+
+    /// The satellite's table: malformed heads map to the right status.
+    #[test]
+    fn malformed_requests_map_to_typed_statuses() {
+        let table: Vec<(&[u8], u16, &str)> = vec![
+            // truncated request line: EOF before CRLF
+            (b"GET /healthz", 400, "truncated request line"),
+            // request line with too few / too many parts
+            (b"GET\r\n\r\n", 400, "one-part request line"),
+            (b"GET / extra HTTP/1.1\r\n\r\n", 400, "four-part request line"),
+            // bad versions
+            (b"GET / HTTP/2.0\r\n\r\n", 505, "http/2 preface"),
+            (b"GET / SPAGHETTI\r\n\r\n", 505, "non-http version"),
+            // headers
+            (b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n", 400, "no colon"),
+            (b"GET / HTTP/1.1\r\nbad name: v\r\n\r\n", 400, "space in name"),
+            (b"GET / HTTP/1.1\r\nHost: h\r\nX: y", 400, "EOF in headers"),
+            // content-length
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+                400,
+                "non-numeric content-length",
+            ),
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: 5\r\n\r\nabc",
+                400,
+                "body shorter than content-length",
+            ),
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 4\r\n\r\nabcd",
+                400,
+                "conflicting content-lengths",
+            ),
+            (
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+                501,
+                "chunked body",
+            ),
+            // CRLF edge cases
+            (b"GET / HTTP/1.1\r\nX: a\rb\r\n\r\n", 400, "stray CR in line"),
+        ];
+        for (raw, want, what) in table {
+            match parse(raw) {
+                Err(e) => assert_eq!(e.status, want, "{what}: {e:?}"),
+                other => panic!("{what}: expected {want}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_content_length_is_413_before_allocation() {
+        let limits = Limits { max_body: 8, ..Default::default() };
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\n123456789";
+        let e = parse_limited(raw, &limits).unwrap_err();
+        assert_eq!(e.status, 413);
+        // a huge declared length must not try to allocate either
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n";
+        let e = parse_limited(raw, &limits).unwrap_err();
+        assert_eq!(e.status, 413);
+    }
+
+    #[test]
+    fn header_section_byte_limit_is_431() {
+        let limits = Limits { max_head_bytes: 48, ..Default::default() };
+        let raw =
+            b"GET / HTTP/1.1\r\nX-Padding: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n\r\n";
+        let e = parse_limited(raw, &limits).unwrap_err();
+        assert_eq!(e.status, 431);
+    }
+
+    #[test]
+    fn header_count_limit_is_431() {
+        let limits = Limits { max_headers: 2, ..Default::default() };
+        let raw = b"GET / HTTP/1.1\r\nA: 1\r\nB: 2\r\nC: 3\r\n\r\n";
+        let e = parse_limited(raw, &limits).unwrap_err();
+        assert_eq!(e.status, 431);
+    }
+
+    #[test]
+    fn pipelined_second_request_parses_from_the_same_stream() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+                    GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut cur = Cursor::new(raw.to_vec());
+        let first = parse_request(&mut cur, &Limits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(first.path, "/v1/generate");
+        assert_eq!(first.body, b"hi");
+        assert!(first.keep_alive);
+        let second = parse_request(&mut cur, &Limits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(second.path, "/healthz");
+        assert!(!second.keep_alive, "Connection: close honoured");
+        // and then a clean end-of-stream
+        assert!(parse_request(&mut cur, &Limits::default())
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn crlf_edge_cases_leading_blank_lines_and_bare_lf() {
+        // leading CRLFs before the request line are skipped (RFC 9112)
+        let r = parse(b"\r\n\r\nGET /healthz HTTP/1.1\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.path, "/healthz");
+        // bare-LF line endings are tolerated
+        let r = parse(b"GET /healthz HTTP/1.1\nHost: h\n\n").unwrap().unwrap();
+        assert_eq!(r.header("host"), Some("h"));
+    }
+
+    #[test]
+    fn empty_stream_is_a_clean_close_not_an_error() {
+        assert!(parse(b"").unwrap().is_none());
+        assert!(parse(b"\r\n").unwrap().is_none());
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let r = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive);
+        let r = parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(r.keep_alive);
+        let r = parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.keep_alive);
+    }
+}

@@ -1,0 +1,135 @@
+//! Server-Sent Events framing for the streaming `/v1/generate` endpoint.
+//!
+//! Every frame is `event: <name>\ndata: <json>\n\n` — one frame per
+//! engine [`Event`]: `token` frames while decoding, then exactly one
+//! terminal `done` (carrying [`Usage`]) or `error` (carrying the typed
+//! [`ServeError`]). The JSON payload is emitted by the in-crate writer,
+//! which escapes control characters, so the `data:` payload is always a
+//! single line and a frame boundary can never split a UTF-8 sequence —
+//! frames are whole `String`s, and Rust strings are valid UTF-8 by
+//! construction (unit-tested below anyway, multi-byte payload included).
+
+use crate::serve::request::{Event, ServeError, Usage};
+use crate::util::json::Json;
+
+/// Wrap a JSON payload in one SSE frame.
+pub fn frame(event: &str, data: &Json) -> String {
+    debug_assert!(
+        !event.contains('\n') && !event.contains('\r'),
+        "SSE event names are single-line"
+    );
+    format!("event: {event}\ndata: {}\n\n", data.to_string())
+}
+
+/// JSON shape of a [`Usage`] summary (latencies in milliseconds).
+pub fn usage_json(u: &Usage) -> Json {
+    Json::obj(vec![
+        ("prefill_tokens", Json::num(u.prefill_tokens as f64)),
+        ("decode_tokens", Json::num(u.decode_tokens as f64)),
+        ("latency_ms", Json::num(u.latency.as_secs_f64() * 1000.0)),
+        (
+            "queue_ms",
+            Json::num(u.queue_latency.as_secs_f64() * 1000.0),
+        ),
+        ("finish", Json::str(u.finish.as_str())),
+    ])
+}
+
+/// JSON shape of a typed [`ServeError`].
+pub fn error_json(e: &ServeError) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str(e.kind.as_str())),
+        ("message", Json::str(&e.message)),
+    ])
+}
+
+/// Render one engine [`Event`] as its SSE frame.
+pub fn event_frame(ev: &Event) -> String {
+    match ev {
+        Event::Token { token, index } => frame(
+            "token",
+            &Json::obj(vec![
+                ("token", Json::num(*token as f64)),
+                ("index", Json::num(*index as f64)),
+            ]),
+        ),
+        Event::Done(u) => frame("done", &usage_json(u)),
+        Event::Error(e) => frame("error", &error_json(e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::{FinishReason, ServeErrorKind};
+    use std::time::Duration;
+
+    /// Every frame is exactly `event: <name>\ndata: <json>\n\n`: three
+    /// lines, one `data:` line, JSON payload reparseable.
+    fn assert_well_framed(f: &str, want_event: &str) -> Json {
+        assert!(f.ends_with("\n\n"), "frame must end with a blank line: {f:?}");
+        let body = &f[..f.len() - 2];
+        let lines: Vec<&str> = body.split('\n').collect();
+        assert_eq!(lines.len(), 2, "one event line + one data line: {f:?}");
+        assert_eq!(lines[0], format!("event: {want_event}"));
+        let data = lines[1].strip_prefix("data: ").expect("data: prefix");
+        Json::parse(data).expect("data payload is one line of valid JSON")
+    }
+
+    #[test]
+    fn token_frame_shape() {
+        let f = event_frame(&Event::Token { token: 257, index: 3 });
+        let j = assert_well_framed(&f, "token");
+        assert_eq!(j.req_usize("token").unwrap(), 257);
+        assert_eq!(j.req_usize("index").unwrap(), 3);
+    }
+
+    #[test]
+    fn done_frame_carries_usage() {
+        let f = event_frame(&Event::Done(Usage {
+            prefill_tokens: 4,
+            decode_tokens: 9,
+            latency: Duration::from_millis(125),
+            queue_latency: Duration::from_millis(5),
+            finish: FinishReason::Eos,
+        }));
+        let j = assert_well_framed(&f, "done");
+        assert_eq!(j.req_usize("decode_tokens").unwrap(), 9);
+        assert_eq!(j.req_str("finish").unwrap(), "eos");
+        assert!((j.req_f64("latency_ms").unwrap() - 125.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_frame_is_typed() {
+        let f = event_frame(&Event::Error(ServeError::new(
+            ServeErrorKind::DeadlineExceeded,
+            "deadline passed after 3 tokens",
+        )));
+        let j = assert_well_framed(&f, "error");
+        assert_eq!(j.req_str("kind").unwrap(), "deadline_exceeded");
+        assert!(j.req_str("message").unwrap().contains("3 tokens"));
+    }
+
+    /// Multi-byte payloads: the frame stays valid UTF-8, the payload
+    /// stays on one `data:` line (escaped newlines), and the multi-byte
+    /// sequence survives a JSON round trip — no frame boundary can fall
+    /// inside a UTF-8 sequence because frames are whole strings.
+    #[test]
+    fn frames_never_split_utf8_sequences() {
+        let payload = Json::obj(vec![(
+            "message",
+            Json::str("mixturé ∆ 😀 line1\nline2"),
+        )]);
+        let f = frame("error", &payload);
+        assert!(std::str::from_utf8(f.as_bytes()).is_ok());
+        let j = assert_well_framed(&f, "error");
+        assert_eq!(
+            j.req_str("message").unwrap(),
+            "mixturé ∆ 😀 line1\nline2"
+        );
+        // byte-level check: every frame boundary (the \n\n) sits on a
+        // character boundary by construction
+        let idx = f.len() - 2;
+        assert!(f.is_char_boundary(idx));
+    }
+}

@@ -27,6 +27,9 @@
 //! * [`engine::Engine`] — continuous batcher: persistent per-worker
 //!   sessions whose rows are a slot pool; plus the synchronous
 //!   [`engine::generate_batch`] baseline.
+//! * [`http::HttpServer`] — the zero-dependency HTTP/1.1 + SSE gateway
+//!   in front of the engine (`POST /v1/generate`, `GET /healthz`,
+//!   `GET /metrics` in Prometheus text exposition format).
 //! * [`session::DecodeSession`] — batched decode: per-layer compacted KV
 //!   caches, routing decisions, the step loop, per-row release/admit.
 //! * [`kv_cache::LayerKvCache`] — slot allocator + occupancy/drop stats
@@ -35,12 +38,14 @@
 //!   sampling.
 
 pub mod engine;
+pub mod http;
 pub mod kv_cache;
 pub mod request;
 pub mod sampling;
 pub mod session;
 
 pub use engine::{generate_batch, Engine, EngineStats};
+pub use http::{HttpConfig, HttpServer};
 pub use kv_cache::{CacheStats, LayerKvCache};
 pub use request::{
     Event, FinishReason, GenerateParams, Generation, Response, ServeError,

@@ -111,6 +111,17 @@ pub enum FinishReason {
     MaxTokens,
 }
 
+impl FinishReason {
+    /// Stable wire name (the gateway's JSON `finish` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Eos => "eos",
+            Self::Stop => "stop",
+            Self::MaxTokens => "max_tokens",
+        }
+    }
+}
+
 /// Terminal accounting for one finished generation.
 #[derive(Debug, Clone)]
 pub struct Usage {

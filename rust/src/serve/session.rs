@@ -65,8 +65,14 @@ pub struct SessionReport {
 }
 
 impl SessionReport {
+    /// 0.0 (never NaN/inf) when no tokens were generated or no wall time
+    /// elapsed — same degenerate-input contract as
+    /// `EngineStats::tokens_per_sec`.
     pub fn tokens_per_sec(&self) -> f64 {
-        self.tokens_generated as f64 / self.wall_s.max(1e-9)
+        if self.tokens_generated == 0 || self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.wall_s
     }
 
     pub fn skip_fraction(&self) -> f64 {

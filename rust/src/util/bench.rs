@@ -23,7 +23,48 @@ pub struct CaseResult {
     pub units: Option<f64>,
 }
 
+/// Nearest-rank percentile over an **ascending-sorted** sample set.
+/// Degenerate inputs are well-defined: an empty set reports 0.0 (never
+/// NaN/inf — ledger entries must stay plottable), a singleton reports
+/// its only sample for every q.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q) as usize)
+        .min(sorted.len().saturating_sub(1));
+    sorted[idx]
+}
+
 impl CaseResult {
+    /// Fold externally measured samples (ms) into a ledger case — the
+    /// shared percentile/mean math for serving benches, hardened against
+    /// an empty sample set (all-zero row, not NaN).
+    pub fn from_samples(name: &str, samples_ms: &[f64]) -> CaseResult {
+        let mut ms = samples_ms.to_vec();
+        ms.sort_by(|a, b| a.total_cmp(b));
+        let n = ms.len();
+        let mean = if n == 0 {
+            0.0
+        } else {
+            ms.iter().sum::<f64>() / n as f64
+        };
+        let var = if n == 0 {
+            0.0
+        } else {
+            ms.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64
+        };
+        CaseResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ms: mean,
+            p50_ms: percentile(&ms, 0.50),
+            p95_ms: percentile(&ms, 0.95),
+            std_ms: var.sqrt(),
+            units: None,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(&self.name)),
@@ -193,6 +234,42 @@ fn ledger_dir() -> std::path::PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_handles_degenerate_inputs() {
+        // empty: 0, never NaN/inf
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            let v = percentile(&[], q);
+            assert!(v == 0.0 && v.is_finite(), "q={q}: {v}");
+        }
+        // singleton: the only sample at every q
+        assert_eq!(percentile(&[3.5], 0.5), 3.5);
+        assert_eq!(percentile(&[3.5], 0.95), 3.5);
+        // q=1.0 clamps to the last element, no out-of-bounds
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&s, 1.0), 4.0);
+        assert_eq!(percentile(&s, 0.5), 3.0); // nearest-rank: idx 2
+    }
+
+    #[test]
+    fn from_samples_empty_set_is_all_zero_not_nan() {
+        let r = CaseResult::from_samples("empty", &[]);
+        for v in [r.mean_ms, r.p50_ms, r.p95_ms, r.std_ms] {
+            assert!(v == 0.0 && v.is_finite(), "{r:?}");
+        }
+        assert_eq!(r.iters, 0);
+        // the JSON row must also be finite (Json maps non-finite to null)
+        let j = r.to_json();
+        assert_eq!(j.req_f64("p95_ms").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn from_samples_sorts_before_taking_percentiles() {
+        let r = CaseResult::from_samples("x", &[5.0, 1.0, 3.0]);
+        assert_eq!(r.p50_ms, 3.0);
+        assert_eq!(r.p95_ms, 5.0);
+        assert!((r.mean_ms - 3.0).abs() < 1e-12);
+    }
 
     #[test]
     fn runs_and_aggregates() {

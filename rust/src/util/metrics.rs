@@ -1,0 +1,578 @@
+//! Process-global metrics registry (offline substitute for `metrics-rs`
+//! + `prometheus`): atomic counters, gauges and fixed-bucket histograms,
+//! rendered in the Prometheus text exposition format (version 0.0.4) by
+//! [`render`] — which is exactly what the HTTP gateway serves at
+//! `GET /metrics`.
+//!
+//! Design:
+//! * **Handles are `&'static`.** [`counter`]/[`gauge`]/[`histogram`] look
+//!   a series up by `(name, labels)` under a registry mutex *once* and
+//!   return a leaked `&'static` handle; hot paths (the engine's decode
+//!   loop, the pool's region dispatch) resolve their handles at startup
+//!   and after that pay only relaxed atomic ops — no lock, no map lookup.
+//! * **One global registry.** Every [`Engine`](crate::serve::Engine) /
+//!   gateway / pool in the process shares it, the way a Prometheus scrape
+//!   of a process does. Tests that assert exact values therefore either
+//!   use uniquely named series or compare *deltas* around their own
+//!   traffic while serialized against other engine-driving tests.
+//! * **Zero dependencies, bounded memory.** Series are registered once
+//!   and never dropped (the usual metrics-library leak-by-design);
+//!   histograms have a fixed bucket layout chosen at registration.
+//!
+//! Conventions follow Prometheus: counters end in `_total`, histograms
+//! expose `<name>_bucket{le="..."}` / `<name>_sum` / `<name>_count`,
+//! label values are escaped, and every family gets one `# HELP` +
+//! `# TYPE` header.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Settable gauge (f64, stored as bits in an `AtomicU64`).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: f64) {
+        atomic_f64_add(&self.0, d);
+    }
+
+    pub fn sub(&self, d: f64) {
+        atomic_f64_add(&self.0, -d);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram. `bounds` are ascending upper bounds; an
+/// implicit `+Inf` bucket catches everything above the last bound.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `len == bounds.len() + 1`,
+    /// the last slot being the `+Inf` overflow bucket.
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        debug_assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Self {
+            bounds: bounds.to_vec(),
+            counts: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.sum_bits, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative bucket counts, one per bound plus the final `+Inf`.
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .map(|c| {
+                acc += c.load(Ordering::Relaxed);
+                acc
+            })
+            .collect()
+    }
+}
+
+fn atomic_f64_add(bits: &AtomicU64, d: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + d).to_bits();
+        match bits.compare_exchange_weak(
+            cur,
+            next,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+impl Metric {
+    fn type_str(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Series {
+    name: String,
+    /// Pre-rendered label pairs, e.g. `status="200",path="/healthz"`
+    /// (without braces); empty for an unlabelled series.
+    labels: String,
+    help: &'static str,
+    metric: Metric,
+}
+
+fn registry() -> &'static Mutex<Vec<Series>> {
+    static REG: OnceLock<Mutex<Vec<Series>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().next().is_some_and(|c| {
+            c.is_ascii_alphabetic() || c == '_' || c == ':'
+        })
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    let mut pairs: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    pairs.sort();
+    pairs.join(",")
+}
+
+/// The registry lock, poison-tolerant: a panic in one thread (e.g. a
+/// failed test assertion while a handle was being resolved) must not
+/// cascade into every later metric lookup in the process.
+fn lock() -> std::sync::MutexGuard<'static, Vec<Series>> {
+    registry().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Look up (or register) a series and return its leaked handle through
+/// `select`; panics if the name is already registered with another kind —
+/// that is a programming error, not a runtime condition. The panic fires
+/// *after* the registry lock is released, so it cannot poison the
+/// registry for unrelated call sites.
+fn lookup<T>(
+    name: &str,
+    labels: &[(&str, &str)],
+    help: &'static str,
+    make: impl FnOnce() -> Metric,
+    select: impl Fn(&Metric) -> Option<T>,
+) -> T {
+    assert!(valid_name(name), "invalid metric name {name:?}");
+    let labels = render_labels(labels);
+    let mut reg = lock();
+    let existing = reg
+        .iter()
+        .find(|s| s.name == name && s.labels == labels)
+        .map(|s| (select(&s.metric), s.metric.type_str()));
+    if let Some((found, registered_as)) = existing {
+        drop(reg);
+        return found.unwrap_or_else(|| {
+            panic!("metric {name:?} already registered as a {registered_as}")
+        });
+    }
+    let metric = make();
+    let out = select(&metric).expect("freshly made metric matches kind");
+    reg.push(Series { name: name.to_string(), labels, help, metric });
+    out
+}
+
+/// Get-or-register an unlabelled counter.
+pub fn counter(name: &str, help: &'static str) -> &'static Counter {
+    counter_with(name, &[], help)
+}
+
+/// Get-or-register a counter with label pairs (label *values* select the
+/// series; keep cardinality bounded — statuses and endpoint names, not
+/// request ids).
+pub fn counter_with(
+    name: &str,
+    labels: &[(&str, &str)],
+    help: &'static str,
+) -> &'static Counter {
+    lookup(
+        name,
+        labels,
+        help,
+        || Metric::Counter(Box::leak(Box::new(Counter::default()))),
+        |m| match m {
+            Metric::Counter(c) => Some(*c),
+            _ => None,
+        },
+    )
+}
+
+/// Get-or-register an unlabelled gauge.
+pub fn gauge(name: &str, help: &'static str) -> &'static Gauge {
+    lookup(
+        name,
+        &[],
+        help,
+        || Metric::Gauge(Box::leak(Box::new(Gauge::default()))),
+        |m| match m {
+            Metric::Gauge(g) => Some(*g),
+            _ => None,
+        },
+    )
+}
+
+/// Get-or-register a histogram with the given ascending bucket bounds
+/// (a trailing `+Inf` bucket is implicit). The bounds of the *first*
+/// registration win; later calls with different bounds get the existing
+/// histogram.
+pub fn histogram(
+    name: &str,
+    bounds: &[f64],
+    help: &'static str,
+) -> &'static Histogram {
+    lookup(
+        name,
+        &[],
+        help,
+        || Metric::Histogram(Box::leak(Box::new(Histogram::new(bounds)))),
+        |m| match m {
+            Metric::Histogram(h) => Some(*h),
+            _ => None,
+        },
+    )
+}
+
+/// Render a number the Prometheus text format accepts: integers without
+/// a decimal point, everything else via Rust's shortest-roundtrip float.
+fn fmt_value(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        (if v > 0.0 { "+Inf" } else { "-Inf" }).to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn sample_line(out: &mut String, name: &str, labels: &str, value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        out.push_str(labels);
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&fmt_value(value));
+    out.push('\n');
+}
+
+fn merge_le(labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("le=\"{le}\"")
+    } else {
+        format!("{labels},le=\"{le}\"")
+    }
+}
+
+/// Render every registered series in the Prometheus text exposition
+/// format (one `# HELP` + `# TYPE` header per family, families sorted by
+/// name, series within a family in registration order).
+pub fn render() -> String {
+    let reg = lock();
+    let mut order: Vec<usize> = (0..reg.len()).collect();
+    order.sort_by(|&a, &b| reg[a].name.cmp(&reg[b].name));
+    let mut out = String::new();
+    let mut last_family: Option<&str> = None;
+    for &i in &order {
+        let s = &reg[i];
+        if last_family != Some(s.name.as_str()) {
+            out.push_str(&format!("# HELP {} {}\n", s.name, s.help));
+            out.push_str(&format!(
+                "# TYPE {} {}\n",
+                s.name,
+                s.metric.type_str()
+            ));
+            last_family = Some(s.name.as_str());
+        }
+        match &s.metric {
+            Metric::Counter(c) => {
+                sample_line(&mut out, &s.name, &s.labels, c.get() as f64);
+            }
+            Metric::Gauge(g) => {
+                sample_line(&mut out, &s.name, &s.labels, g.get());
+            }
+            Metric::Histogram(h) => {
+                let cum = h.cumulative();
+                let bucket = format!("{}_bucket", s.name);
+                for (bi, bound) in h.bounds.iter().enumerate() {
+                    sample_line(
+                        &mut out,
+                        &bucket,
+                        &merge_le(&s.labels, &fmt_value(*bound)),
+                        cum[bi] as f64,
+                    );
+                }
+                sample_line(
+                    &mut out,
+                    &bucket,
+                    &merge_le(&s.labels, "+Inf"),
+                    *cum.last().expect("+Inf bucket") as f64,
+                );
+                sample_line(
+                    &mut out,
+                    &format!("{}_sum", s.name),
+                    &s.labels,
+                    h.sum(),
+                );
+                sample_line(
+                    &mut out,
+                    &format!("{}_count", s.name),
+                    &s.labels,
+                    h.count() as f64,
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Read one rendered sample back by exact `name{labels}` key (the same
+/// key `render` emits, braces included when labelled) — the programmatic
+/// accessor tests and the CLI snapshot use so they cannot drift from the
+/// exposition format itself.
+pub fn sample_value(rendered: &str, key: &str) -> Option<f64> {
+    rendered.lines().find_map(|line| {
+        let rest = line.strip_prefix(key)?;
+        let rest = rest.strip_prefix(' ')?;
+        rest.parse::<f64>().ok()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unique metric names per test: the registry is process-global and
+    // tests in this binary run in parallel.
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = counter("selftest_hits_total", "test counter");
+        let before = c.get();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), before + 5);
+
+        let g = gauge("selftest_depth", "test gauge");
+        g.set(3.0);
+        g.add(2.0);
+        g.sub(1.0);
+        assert!((g.get() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_name_returns_same_handle() {
+        let a = counter("selftest_shared_total", "h");
+        let b = counter("selftest_shared_total", "h");
+        a.inc();
+        assert_eq!(b.get(), a.get());
+        assert!(std::ptr::eq(a, b));
+    }
+
+    #[test]
+    fn labels_select_distinct_series() {
+        let ok = counter_with(
+            "selftest_labelled_total",
+            &[("status", "200")],
+            "h",
+        );
+        let bad = counter_with(
+            "selftest_labelled_total",
+            &[("status", "500")],
+            "h",
+        );
+        ok.add(2);
+        bad.add(1);
+        assert!(!std::ptr::eq(ok, bad));
+        let text = render();
+        assert!(
+            text.contains("selftest_labelled_total{status=\"200\"}"),
+            "{text}"
+        );
+        assert!(
+            text.contains("selftest_labelled_total{status=\"500\"}"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_capped_by_inf() {
+        let h = histogram(
+            "selftest_lat_seconds",
+            &[0.1, 1.0, 10.0],
+            "test histogram",
+        );
+        for v in [0.05, 0.5, 0.5, 5.0, 50.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 56.05).abs() < 1e-9);
+        assert_eq!(h.cumulative(), vec![1, 3, 4, 5]);
+
+        let text = render();
+        assert!(
+            text.contains("selftest_lat_seconds_bucket{le=\"0.1\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("selftest_lat_seconds_bucket{le=\"+Inf\"} 5"),
+            "{text}"
+        );
+        assert!(text.contains("selftest_lat_seconds_count 5"), "{text}");
+    }
+
+    #[test]
+    fn boundary_value_lands_in_its_le_bucket() {
+        let h = histogram("selftest_edge_seconds", &[1.0, 2.0], "h");
+        h.observe(1.0); // le="1" is inclusive, Prometheus semantics
+        assert_eq!(h.cumulative()[0], 1);
+    }
+
+    #[test]
+    fn render_has_help_and_type_once_per_family() {
+        counter_with("selftest_family_total", &[("k", "a")], "family help")
+            .inc();
+        counter_with("selftest_family_total", &[("k", "b")], "family help")
+            .inc();
+        let text = render();
+        let helps = text
+            .matches("# HELP selftest_family_total family help")
+            .count();
+        let types =
+            text.matches("# TYPE selftest_family_total counter").count();
+        assert_eq!(helps, 1, "{text}");
+        assert_eq!(types, 1, "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        counter_with(
+            "selftest_escape_total",
+            &[("path", "a\"b\\c\nd")],
+            "h",
+        )
+        .inc();
+        let text = render();
+        assert!(
+            text.contains(r#"selftest_escape_total{path="a\"b\\c\nd"} 1"#),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn sample_value_reads_back_rendered_numbers() {
+        let c = counter("selftest_readback_total", "h");
+        c.add(7);
+        let g = gauge("selftest_readback_depth", "h");
+        g.set(2.5);
+        let text = render();
+        assert_eq!(
+            sample_value(&text, "selftest_readback_total"),
+            Some(c.get() as f64)
+        );
+        assert_eq!(sample_value(&text, "selftest_readback_depth"), Some(2.5));
+        assert_eq!(sample_value(&text, "selftest_absent_total"), None);
+    }
+
+    #[test]
+    fn every_rendered_line_is_well_formed() {
+        counter("selftest_wellformed_total", "h").inc();
+        for line in render().lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (key, value) =
+                line.rsplit_once(' ').expect("name SP value");
+            assert!(!key.is_empty(), "{line}");
+            assert!(
+                value.parse::<f64>().is_ok()
+                    || ["+Inf", "-Inf", "NaN"].contains(&value),
+                "bad value in {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        counter("selftest_kind_total", "h");
+        gauge("selftest_kind_total", "h");
+    }
+}

@@ -1,12 +1,14 @@
 //! In-repo substrates that would normally be external crates (this build
 //! is fully offline): error type, JSON codec, CLI parsing, micro-bench
-//! harness, a minimal property-testing loop, and the deterministic
+//! harness, a minimal property-testing loop, the process-global metrics
+//! registry the `/metrics` endpoint renders, and the deterministic
 //! scoped-thread worker pool the native backend computes on.
 
 pub mod args;
 pub mod bench;
 pub mod error;
 pub mod json;
+pub mod metrics;
 pub mod pool;
 pub mod prop;
 

@@ -32,6 +32,37 @@ use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
+use super::metrics::{self, Counter, Histogram};
+
+/// Registry handles for region accounting, resolved once: the dispatch
+/// path runs for every kernel call, so it must stay at the cost of a
+/// couple of relaxed atomic increments.
+struct PoolMetrics {
+    serial: &'static Counter,
+    parallel: &'static Counter,
+    width: &'static Histogram,
+}
+
+fn pool_metrics() -> &'static PoolMetrics {
+    static M: OnceLock<PoolMetrics> = OnceLock::new();
+    M.get_or_init(|| PoolMetrics {
+        serial: metrics::counter(
+            "pool_regions_serial_total",
+            "Parallel regions run serially (min-work gate, width 1, or \
+             nested inside a pool worker)",
+        ),
+        parallel: metrics::counter(
+            "pool_regions_parallel_total",
+            "Parallel regions fanned out across pool workers",
+        ),
+        width: metrics::histogram(
+            "pool_region_width",
+            &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0],
+            "Worker count used by each fanned-out parallel region",
+        ),
+    })
+}
+
 /// Below this much work (~MAC-sized units ≈ ns of scalar math) a region
 /// runs serially: thread spawns cost tens of µs and must pay for
 /// themselves.
@@ -160,11 +191,14 @@ pub fn run_as_worker<R>(f: impl FnOnce() -> R) -> R {
 pub fn par_tasks<T: Send>(work: usize, tasks: Vec<T>, body: impl Fn(T) + Sync) {
     let nt = threads().min(tasks.len());
     if nt <= 1 || work < min_work() || IN_WORKER.with(|c| c.get()) {
+        pool_metrics().serial.inc();
         for t in tasks {
             body(t);
         }
         return;
     }
+    pool_metrics().parallel.inc();
+    pool_metrics().width.observe(nt as f64);
     let queue = Mutex::new(tasks.into_iter());
     let drain = || {
         let _flag = WorkerFlag::set();
@@ -200,6 +234,7 @@ pub fn par_rows<T: Send>(
     let n_rows = out.len() / row_len;
     let nt = threads().min(n_rows.max(1));
     if nt <= 1 || work < min_work() || IN_WORKER.with(|c| c.get()) {
+        pool_metrics().serial.inc();
         body(0, out);
         return;
     }

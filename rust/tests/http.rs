@@ -1,0 +1,654 @@
+//! Integration tests for the HTTP/SSE gateway + `/metrics` registry.
+//!
+//! Everything runs against a synthetic in-memory bundle and a loopback
+//! `TcpListener` — raw `TcpStream` clients, no HTTP client library.
+//!
+//! The metrics registry is process-global, so every test that drives an
+//! `Engine` holds `pool::knob_guard()` for its full body: engine counter
+//! *deltas* measured around one test's traffic are then exact, and the
+//! thread-width premises of the determinism test can't race either.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use mod_transformer::config::{ModelConfig, RoutingMode, ServeConfig, TrainConfig};
+use mod_transformer::data::BOS;
+use mod_transformer::runtime::{Bundle, SyntheticSpec};
+use mod_transformer::serve::http::parser::Limits;
+use mod_transformer::serve::{
+    generate_batch, Engine, GenerateParams, HttpConfig, HttpServer,
+    RoutingDecision,
+};
+use mod_transformer::util::json::Json;
+use mod_transformer::util::metrics::sample_value;
+use mod_transformer::util::pool;
+
+const SEQ: usize = 32;
+const MAX_DECODE: usize = 64;
+const DECISION: RoutingDecision = RoutingDecision::RouterThreshold;
+
+fn open(name: &str) -> Arc<Bundle> {
+    let model = ModelConfig {
+        vocab_size: 259,
+        d_model: 32,
+        n_layers: 4,
+        n_heads: 2,
+        d_head: 16,
+        d_ff: 64,
+        seq_len: SEQ,
+        routing: RoutingMode::ModInterleaved,
+        capacity_frac: 0.125,
+        train_predictor: true,
+        predictor_hidden: 16,
+        ..Default::default()
+    };
+    let train = TrainConfig {
+        batch_size: 4,
+        warmup_steps: 5,
+        total_steps: 200,
+        ..Default::default()
+    };
+    Arc::new(
+        Bundle::native(
+            name,
+            &model,
+            &train,
+            &SyntheticSpec {
+                seed: 7,
+                decode_batches: vec![1, 4],
+                max_decode_len: MAX_DECODE,
+                ..Default::default()
+            },
+        )
+        .expect("synthetic bundle"),
+    )
+}
+
+fn start_gateway(
+    workers: usize,
+    cfg: HttpConfig,
+) -> (Arc<Engine>, HttpServer) {
+    let bundle = open("mod_tiny_http");
+    let params = Arc::new(bundle.init_params().unwrap());
+    let engine = Arc::new(
+        Engine::start(
+            bundle,
+            params,
+            ServeConfig { workers, ..Default::default() },
+            DECISION,
+        )
+        .unwrap(),
+    );
+    let server = HttpServer::start(engine.clone(), cfg).unwrap();
+    (engine, server)
+}
+
+fn test_config() -> HttpConfig {
+    HttpConfig { read_timeout: Duration::from_secs(5), ..Default::default() }
+}
+
+/// Write one raw request, half-close, read the full response stream.
+/// A 30s client-side timeout turns a wedged server into a loud failure
+/// instead of a hung test binary.
+fn exchange(addr: SocketAddr, raw: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("set timeout");
+    s.write_all(raw).expect("write request");
+    s.shutdown(std::net::Shutdown::Write).expect("half-close");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("read response");
+    buf
+}
+
+/// Split one response into (head, body) at the header terminator.
+fn split_response(buf: &[u8]) -> (String, Vec<u8>) {
+    let pos = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .unwrap_or_else(|| panic!("no header terminator in {:?}",
+                                  String::from_utf8_lossy(buf)));
+    (
+        String::from_utf8(buf[..pos].to_vec()).expect("UTF-8 head"),
+        buf[pos + 4..].to_vec(),
+    )
+}
+
+fn status_of(head: &str) -> u16 {
+    head.split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line: {head:?}"))
+}
+
+fn header_of<'a>(head: &'a str, name: &str) -> Option<&'a str> {
+    head.lines().skip(1).find_map(|l| {
+        let (k, v) = l.split_once(':')?;
+        if k.eq_ignore_ascii_case(name) {
+            Some(v.trim())
+        } else {
+            None
+        }
+    })
+}
+
+/// Parse a sequence of responses (pipelining) using Content-Length.
+fn parse_responses(mut buf: &[u8]) -> Vec<(u16, Vec<u8>)> {
+    let mut out = Vec::new();
+    while !buf.is_empty() {
+        let pos = buf
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+            .expect("header terminator");
+        let head = String::from_utf8(buf[..pos].to_vec()).unwrap();
+        let len: usize = header_of(&head, "content-length")
+            .expect("content-length framed response")
+            .parse()
+            .unwrap();
+        let body = buf[pos + 4..pos + 4 + len].to_vec();
+        out.push((status_of(&head), body));
+        buf = &buf[pos + 4 + len..];
+    }
+    out
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, Vec<u8>) {
+    let raw = format!("GET {path} HTTP/1.1\r\nConnection: close\r\n\r\n");
+    let (head, body) = split_response(&exchange(addr, raw.as_bytes()));
+    (status_of(&head), body)
+}
+
+fn post_json(addr: SocketAddr, path: &str, json: &str) -> (u16, Vec<u8>) {
+    let raw = format!(
+        "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{json}",
+        json.len()
+    );
+    let (head, body) = split_response(&exchange(addr, raw.as_bytes()));
+    (status_of(&head), body)
+}
+
+/// SSE frames of one streamed response body: (event, data) pairs.
+fn parse_sse(body: &[u8]) -> Vec<(String, Json)> {
+    let text = std::str::from_utf8(body).expect("SSE body is UTF-8");
+    text.split("\n\n")
+        .filter(|f| !f.trim().is_empty())
+        .map(|f| {
+            let mut event = None;
+            let mut data = None;
+            for line in f.lines() {
+                if let Some(v) = line.strip_prefix("event: ") {
+                    event = Some(v.to_string());
+                } else if let Some(v) = line.strip_prefix("data: ") {
+                    data = Some(Json::parse(v).expect("frame data is JSON"));
+                }
+            }
+            (
+                event.unwrap_or_else(|| panic!("frame without event: {f:?}")),
+                data.unwrap_or_else(|| panic!("frame without data: {f:?}")),
+            )
+        })
+        .collect()
+}
+
+/// Stream one generation over SSE; returns (tokens, terminal event name).
+fn sse_generate(addr: SocketAddr, body_json: &str) -> (Vec<u16>, String) {
+    let raw = format!(
+        "POST /v1/generate?stream=1 HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body_json.len(),
+        body_json
+    );
+    let (head, body) = split_response(&exchange(addr, raw.as_bytes()));
+    assert_eq!(status_of(&head), 200, "{head}");
+    assert_eq!(
+        header_of(&head, "content-type"),
+        Some("text/event-stream"),
+        "{head}"
+    );
+    let frames = parse_sse(&body);
+    assert!(!frames.is_empty(), "empty SSE stream");
+    let mut tokens = Vec::new();
+    for (i, (event, data)) in frames.iter().enumerate() {
+        match event.as_str() {
+            "token" => {
+                assert_eq!(
+                    data.req_usize("index").unwrap(),
+                    tokens.len(),
+                    "token frames must arrive in order"
+                );
+                tokens.push(data.req_usize("token").unwrap() as u16);
+            }
+            "done" | "error" => {
+                assert_eq!(i, frames.len() - 1, "terminal frame must be last");
+            }
+            other => panic!("unknown SSE event {other:?}"),
+        }
+    }
+    let terminal = frames.last().unwrap().0.clone();
+    assert!(
+        terminal == "done" || terminal == "error",
+        "stream must end with a terminal frame, got {terminal:?}"
+    );
+    (tokens, terminal)
+}
+
+// ---------------------------------------------------------------------
+
+#[test]
+fn healthz_generate_and_error_status_table() {
+    let _g = pool::knob_guard();
+    let (engine, server) = start_gateway(1, test_config());
+    let addr = server.local_addr();
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert_eq!(
+        Json::parse(std::str::from_utf8(&body).unwrap())
+            .unwrap()
+            .req_str("status")
+            .unwrap(),
+        "ok"
+    );
+
+    // the endpoint/status table the README documents
+    let table: Vec<(u16, (u16, Vec<u8>))> = vec![
+        (404, get(addr, "/nope")),
+        (405, post_json(addr, "/healthz", "{}")),
+        (400, post_json(addr, "/v1/generate", "{not json")),
+        (400, post_json(addr, "/v1/generate", "{\"max_new\":4}")), // no prompt
+        (400, post_json(addr, "/v1/generate", "{\"prompt\":[70000]}")),
+        (400, post_json(addr, "/v1/generate", "{\"prompt\":[1.5]}")),
+        // engine-typed rejections surface as 400 too
+        (
+            400,
+            post_json(addr, "/v1/generate", "{\"prompt\":[1],\"max_new\":0}"),
+        ),
+        (
+            400,
+            post_json(
+                addr,
+                "/v1/generate",
+                "{\"prompt\":[1],\"max_new\":100000}",
+            ),
+        ),
+    ];
+    for (want, (got, body)) in table {
+        assert_eq!(got, want, "{}", String::from_utf8_lossy(&body));
+        if want != 200 {
+            let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            assert!(j.get("error").is_some(), "error body is typed JSON");
+        }
+    }
+
+    // a valid non-streaming generation
+    let (status, body) = post_json(
+        addr,
+        "/v1/generate",
+        "{\"prompt\":[256,3],\"max_new\":6,\"seed\":9}",
+    );
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let tokens = j.get("tokens").unwrap().as_arr().unwrap();
+    assert!(!tokens.is_empty() && tokens.len() <= 6);
+    let usage = j.get("usage").unwrap();
+    assert_eq!(usage.req_usize("prefill_tokens").unwrap(), 2);
+    assert_eq!(usage.req_usize("decode_tokens").unwrap(), tokens.len());
+    assert!(["eos", "stop", "max_tokens"]
+        .contains(&usage.req_str("finish").unwrap().as_str()));
+
+    server.shutdown();
+    drop(engine);
+}
+
+#[test]
+fn parser_limits_map_to_413_and_431_over_the_wire() {
+    let _g = pool::knob_guard();
+    let cfg = HttpConfig {
+        limits: Limits {
+            max_head_bytes: 256,
+            max_headers: 4,
+            max_body: 64,
+        },
+        ..test_config()
+    };
+    let (engine, server) = start_gateway(1, cfg);
+    let addr = server.local_addr();
+
+    let big_body = "x".repeat(65);
+    let (status, _) = post_json(addr, "/v1/generate", &big_body);
+    assert_eq!(status, 413);
+
+    let raw = format!(
+        "GET /healthz HTTP/1.1\r\nX-Pad: {}\r\n\r\n",
+        "a".repeat(300)
+    );
+    let (head, _) = split_response(&exchange(addr, raw.as_bytes()));
+    assert_eq!(status_of(&head), 431);
+
+    let raw = "GET /healthz HTTP/1.1\r\nA: 1\r\nB: 2\r\nC: 3\r\nD: 4\r\nE: 5\r\n\r\n";
+    let (head, _) = split_response(&exchange(addr, raw.as_bytes()));
+    assert_eq!(status_of(&head), 431);
+
+    server.shutdown();
+    drop(engine);
+}
+
+#[test]
+fn pipelined_requests_are_served_in_order_on_one_connection() {
+    let _g = pool::knob_guard();
+    let (engine, server) = start_gateway(1, test_config());
+    let addr = server.local_addr();
+
+    let body = "{\"prompt\":[256],\"max_new\":2,\"seed\":1}";
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}\
+         GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n",
+        body.len(),
+        body
+    );
+    let responses = parse_responses(&exchange(addr, raw.as_bytes()));
+    assert_eq!(responses.len(), 2, "both pipelined requests answered");
+    assert_eq!(responses[0].0, 200);
+    let j =
+        Json::parse(std::str::from_utf8(&responses[0].1).unwrap()).unwrap();
+    assert!(j.get("tokens").is_some());
+    assert_eq!(responses[1].0, 200);
+    assert!(String::from_utf8_lossy(&responses[1].1).contains("ok"));
+
+    server.shutdown();
+    drop(engine);
+}
+
+/// Acceptance: N concurrent raw-TcpStream SSE clients receive token
+/// sequences bitwise-identical to an in-process `generate_batch` run of
+/// the same `GenerateParams`, at pool widths 1 and 4 (CI re-runs the
+/// whole file under `RP_THREADS ∈ {1,4}` as well).
+#[test]
+fn concurrent_sse_streams_bitwise_match_engine() {
+    let _g = pool::knob_guard();
+    let bundle = open("mod_tiny_http");
+    let params = bundle.init_params().unwrap();
+    const N: usize = 4;
+    let reqs: Vec<GenerateParams> = (0..N)
+        .map(|i| {
+            GenerateParams::new(vec![BOS, 5 + i as u16, 10])
+                .max_new(8)
+                .temperature(0.8)
+                .top_k(8)
+                .seed(100 + i as u64)
+        })
+        .collect();
+    let bodies: Vec<String> = (0..N)
+        .map(|i| {
+            format!(
+                "{{\"prompt\":[256,{},10],\"max_new\":8,\
+                 \"temperature\":0.8,\"top_k\":8,\"seed\":{}}}",
+                5 + i,
+                100 + i
+            )
+        })
+        .collect();
+
+    for width in [1usize, 4] {
+        pool::with_threads(width, || {
+            let refs: Vec<&GenerateParams> = reqs.iter().collect();
+            let (direct, _) =
+                generate_batch(&bundle, &params, N, DECISION, &refs).unwrap();
+
+            let engine = Arc::new(
+                Engine::start(
+                    bundle.clone(),
+                    Arc::new(params.clone()),
+                    ServeConfig { workers: 1, ..Default::default() },
+                    DECISION,
+                )
+                .unwrap(),
+            );
+            let server =
+                HttpServer::start(engine.clone(), test_config()).unwrap();
+            let addr = server.local_addr();
+
+            let streamed: Vec<Vec<u16>> = std::thread::scope(|s| {
+                let handles: Vec<_> = bodies
+                    .iter()
+                    .map(|b| {
+                        s.spawn(move || {
+                            let (tokens, terminal) = sse_generate(addr, b);
+                            assert_eq!(terminal, "done");
+                            tokens
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+            assert_eq!(
+                streamed, direct,
+                "SSE streams != generate_batch at width {width}"
+            );
+            server.shutdown();
+            drop(engine);
+        });
+    }
+}
+
+/// Validate the whole scrape as Prometheus text exposition format:
+/// every family has HELP + TYPE before its samples, every sample line
+/// is `name[{labels}] value` with a parseable value.
+fn assert_prometheus_well_formed(text: &str) {
+    let mut typed: Vec<String> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let keyword = parts.next().unwrap();
+            let name = parts.next().expect("metric name after # keyword");
+            assert!(
+                keyword == "HELP" || keyword == "TYPE",
+                "unknown comment keyword in {line:?}"
+            );
+            if keyword == "TYPE" {
+                let kind = parts.next().expect("type value");
+                assert!(
+                    ["counter", "gauge", "histogram"].contains(&kind),
+                    "{line:?}"
+                );
+                typed.push(name.to_string());
+            }
+            continue;
+        }
+        let (key, value) = line.rsplit_once(' ').expect("name SP value");
+        assert!(
+            value.parse::<f64>().is_ok()
+                || ["+Inf", "-Inf", "NaN"].contains(&value),
+            "unparseable value in {line:?}"
+        );
+        let name = key.split('{').next().unwrap();
+        assert!(
+            key.matches('{').count() == key.matches('}').count(),
+            "unbalanced braces in {key:?}"
+        );
+        // a sample's family (histograms suffix _bucket/_sum/_count) must
+        // have been TYPEd earlier in the scrape
+        let family_typed = typed.iter().any(|t| {
+            name == t
+                || name == format!("{t}_bucket")
+                || name == format!("{t}_sum")
+                || name == format!("{t}_count")
+        });
+        assert!(family_typed, "sample {name:?} before its # TYPE header");
+    }
+}
+
+/// Acceptance: `/metrics` serves the same numbers `Engine::stats()`
+/// reports (requests, tokens, queue depth, latency histogram) — the
+/// registry is global, so the comparison is over deltas around this
+/// test's traffic while `knob_guard` keeps other engine tests out.
+#[test]
+fn metrics_endpoint_agrees_with_engine_stats() {
+    let _g = pool::knob_guard();
+    let (engine, server) = start_gateway(1, test_config());
+    let addr = server.local_addr();
+
+    let scrape = |addr| {
+        let (status, body) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        String::from_utf8(body).expect("metrics scrape is UTF-8")
+    };
+    let before = scrape(addr);
+    assert_prometheus_well_formed(&before);
+
+    // traffic: 3 non-streamed + 2 streamed + 1 rejected
+    for i in 0..3u64 {
+        let (status, _) = post_json(
+            addr,
+            "/v1/generate",
+            &format!("{{\"prompt\":[256,7],\"max_new\":5,\"seed\":{i}}}"),
+        );
+        assert_eq!(status, 200);
+    }
+    for i in 0..2u64 {
+        let (tokens, terminal) = sse_generate(
+            addr,
+            &format!("{{\"prompt\":[256,9],\"max_new\":4,\"seed\":{i}}}"),
+        );
+        assert!(!tokens.is_empty());
+        assert_eq!(terminal, "done");
+    }
+    let (status, _) =
+        post_json(addr, "/v1/generate", "{\"prompt\":[1],\"max_new\":0}");
+    assert_eq!(status, 400);
+
+    // quiesce: a request's Done event is sent *before* the worker's
+    // end-of-step accounting lands, so wait until two consecutive stats
+    // reads agree before scraping
+    let mut prev = (u64::MAX, u64::MAX);
+    for _ in 0..200 {
+        let s = engine.stats();
+        let cur = (s.steps, s.tokens_generated);
+        if s.completed == 5 && cur == prev {
+            break;
+        }
+        prev = cur;
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let after = scrape(addr);
+    assert_prometheus_well_formed(&after);
+    let stats = engine.stats();
+
+    let delta = |name: &str| {
+        sample_value(&after, name).unwrap_or(0.0)
+            - sample_value(&before, name).unwrap_or(0.0)
+    };
+    // the engine was fresh at the `before` scrape, so deltas == stats
+    assert_eq!(delta("engine_requests_total") as u64, stats.submitted);
+    assert_eq!(stats.submitted, 5, "rejected request never reached submit");
+    assert_eq!(delta("engine_completed_total") as u64, stats.completed);
+    assert_eq!(stats.completed, 5);
+    assert_eq!(
+        delta("engine_tokens_generated_total") as u64,
+        stats.tokens_generated
+    );
+    assert_eq!(delta("engine_steps_total") as u64, stats.steps);
+    assert_eq!(
+        delta("engine_blocks_skipped_total") as u64,
+        stats.blocks_skipped
+    );
+    assert_eq!(
+        delta("engine_rows_released_total") as u64,
+        stats.rows_released
+    );
+    assert_eq!(
+        delta("engine_request_latency_seconds_count") as u64,
+        stats.completed,
+        "one latency observation per completed request"
+    );
+
+    // queue depth: absolute gauge, drained after traffic — and exactly
+    // what Engine::stats() reports
+    assert_eq!(stats.queue_depth, 0);
+    assert_eq!(
+        sample_value(&after, "engine_queue_depth"),
+        Some(stats.queue_depth as f64)
+    );
+    assert_eq!(sample_value(&after, "engine_active_rows"), Some(0.0));
+
+    // latency histogram: cumulative buckets non-decreasing, +Inf == count
+    let buckets: Vec<f64> = after
+        .lines()
+        .filter(|l| l.starts_with("engine_request_latency_seconds_bucket"))
+        .map(|l| l.rsplit_once(' ').unwrap().1.parse::<f64>().unwrap())
+        .collect();
+    assert!(!buckets.is_empty());
+    assert!(
+        buckets.windows(2).all(|w| w[0] <= w[1]),
+        "buckets must be cumulative: {buckets:?}"
+    );
+    assert_eq!(
+        *buckets.last().unwrap(),
+        sample_value(&after, "engine_request_latency_seconds_count").unwrap()
+    );
+
+    // the gateway instruments itself too
+    assert!(delta("gateway_connections_total") >= 6.0);
+    assert!(
+        sample_value(
+            &after,
+            "gateway_requests_total{path=\"/v1/generate\",status=\"200\"}"
+        )
+        .unwrap_or(0.0)
+            >= 5.0
+    );
+
+    // the pool's region accounting showed up (decode ran kernels)
+    assert!(
+        sample_value(&after, "pool_regions_serial_total").unwrap_or(0.0)
+            + sample_value(&after, "pool_regions_parallel_total")
+                .unwrap_or(0.0)
+            > 0.0
+    );
+
+    server.shutdown();
+    drop(engine);
+}
+
+/// Graceful drain: a stream in flight when shutdown starts runs to
+/// completion, then the gateway joins its threads and returns.
+#[test]
+fn shutdown_drains_inflight_streams() {
+    let _g = pool::knob_guard();
+    let (engine, server) = start_gateway(1, test_config());
+    let addr = server.local_addr();
+
+    let client = std::thread::spawn(move || {
+        sse_generate(
+            addr,
+            "{\"prompt\":[256,3],\"max_new\":16,\"seed\":5}",
+        )
+    });
+    // let the stream actually start before draining
+    std::thread::sleep(Duration::from_millis(50));
+    server.shutdown();
+
+    let (tokens, terminal) = client.join().expect("client thread");
+    assert_eq!(terminal, "done", "in-flight stream completed during drain");
+    assert!(!tokens.is_empty());
+
+    // post-drain connections are refused or reset, never half-served
+    let refused = TcpStream::connect(addr)
+        .map(|mut s| {
+            let _ = s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n");
+            let mut buf = Vec::new();
+            // server side is gone: read yields 0 bytes or an error
+            matches!(s.read_to_end(&mut buf), Ok(0) | Err(_))
+        })
+        .unwrap_or(true);
+    assert!(refused, "listener must be closed after shutdown");
+
+    drop(engine);
+}
