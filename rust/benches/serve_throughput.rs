@@ -140,6 +140,90 @@ fn latency_case(name: &str, latencies: &[f64]) -> CaseResult {
     CaseResult::from_samples(name, &ms)
 }
 
+/// N same-prefix requests served sequentially; with a prefix cache the
+/// first request publishes its prompt's pages and every later request
+/// seats them instead of re-prefilling (cold vs warm is the ledger pair).
+fn run_shared_prefix(
+    bundle: &Arc<Bundle>,
+    params: &Arc<Vec<Tensor>>,
+    reqs: &[GenerateParams],
+    prefix_cache_bytes: usize,
+) {
+    let engine = Engine::start(
+        bundle.clone(),
+        params.clone(),
+        ServeConfig {
+            workers: 1,
+            prefill_chunk: 8,
+            prefix_cache_bytes,
+            ..Default::default()
+        },
+        DECISION,
+    )
+    .expect("engine");
+    for r in reqs {
+        engine.generate(r.clone()).expect("response");
+    }
+    let stats = engine.shutdown();
+    if prefix_cache_bytes > 0 {
+        assert!(
+            stats.prefix.hits >= 1 && stats.prefix.tokens_reused > 0,
+            "warm case never hit the prefix cache: {stats:?}"
+        );
+    }
+}
+
+/// One long-prompt request racing short decode requests: chunked prefill
+/// must interleave with decode so the shorts are admitted and finish
+/// while the long prompt is still being ingested. The assertion is the
+/// tentpole's no-stall acceptance criterion, enforced on every bench run.
+fn run_long_prompt_no_stall(
+    bundle: &Arc<Bundle>,
+    params: &Arc<Vec<Tensor>>,
+    prompt_len: usize,
+) {
+    let corpus = MarkovCorpus::new(CorpusSpec::default(), 99);
+    let engine = Engine::start(
+        bundle.clone(),
+        params.clone(),
+        ServeConfig {
+            workers: 1,
+            prefill_chunk: 4,
+            ..Default::default()
+        },
+        DECISION,
+    )
+    .expect("engine");
+    let long = engine
+        .submit(
+            GenerateParams::new(corpus.sequence(7, prompt_len))
+                .max_new(8)
+                .seed(7),
+        )
+        .expect("submit long");
+    let shorts: Vec<_> = (0..6)
+        .map(|i| {
+            engine
+                .submit(
+                    GenerateParams::new(corpus.sequence(100 + i, 2))
+                        .max_new(2)
+                        .seed(i),
+                )
+                .expect("submit short")
+        })
+        .collect();
+    for g in shorts {
+        g.wait().expect("short response");
+    }
+    long.wait().expect("long response");
+    let stats = engine.shutdown();
+    assert!(
+        stats.mid_session_admissions > 0,
+        "decode rows stalled behind the long prompt: {stats:?}"
+    );
+    assert!(stats.prefill_chunks as usize >= prompt_len / 4, "{stats:?}");
+}
+
 fn main() -> mod_transformer::Result<()> {
     let mut bench = Bench::new("serve_throughput");
     let bundle = open_bundle(std::path::Path::new("artifacts"), "mod_tiny")?;
@@ -180,6 +264,62 @@ fn main() -> mod_transformer::Result<()> {
             &engine_lat,
         ));
     }
+
+    // --- chunked-prefill throughput: one long prompt, tokens = prompt ---
+    let max_len = bundle.manifest.max_decode_len;
+    let prompt_len = max_len.saturating_sub(MAX_NEW + 2).min(48).max(8);
+    let corpus = MarkovCorpus::new(CorpusSpec::default(), 99);
+    let long_req = GenerateParams::new(corpus.sequence(1, prompt_len))
+        .max_new(1)
+        .seed(1);
+    bench.case(
+        &format!("serve/prefill_{prompt_len}tok_chunk16"),
+        Some(prompt_len as f64),
+        || {
+            let engine = Engine::start(
+                bundle.clone(),
+                params.clone(),
+                ServeConfig {
+                    workers: 1,
+                    prefill_chunk: 16,
+                    ..Default::default()
+                },
+                DECISION,
+            )
+            .expect("engine");
+            engine.generate(long_req.clone()).expect("response");
+            engine.shutdown();
+        },
+    );
+
+    // --- shared-prefix: 8 requests, common long prompt, distinct seeds.
+    // cold = no cache (every request re-prefills the prompt); warm = the
+    // first request's pages are seated for the other seven ---
+    let shared: Vec<GenerateParams> = (0..8)
+        .map(|i| {
+            GenerateParams::new(corpus.sequence(2, prompt_len))
+                .max_new(4)
+                .temperature(0.8)
+                .top_k(16)
+                .seed(1000 + i)
+        })
+        .collect();
+    let shared_units = (8 * (prompt_len + 4)) as f64;
+    bench.case("serve/shared_prefix_8req_cold", Some(shared_units), || {
+        run_shared_prefix(&bundle, &params, &shared, 0);
+    });
+    bench.case("serve/shared_prefix_8req_warm", Some(shared_units), || {
+        run_shared_prefix(&bundle, &params, &shared, 8 << 20);
+    });
+
+    // --- no-stall scenario (asserts mid_session_admissions > 0) ---
+    bench.case(
+        &format!("serve/long_prompt_{prompt_len}tok_no_stall"),
+        Some((prompt_len + 8 + 6 * 2) as f64),
+        || {
+            run_long_prompt_no_stall(&bundle, &params, prompt_len);
+        },
+    );
 
     bench.finish()?;
     Ok(())

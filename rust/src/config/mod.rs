@@ -311,6 +311,13 @@ pub struct ServeConfig {
     /// rows form the continuous-batching slot pool. `0` = auto (the
     /// compute pool width, `util::pool::threads`).
     pub workers: usize,
+    /// Prompt tokens ingested per chunked-prefill pass. Each worker-loop
+    /// iteration runs at most one chunk per prefilling row before giving
+    /// decode rows a step, so this bounds how long a long prompt can
+    /// stall concurrent streams. `0`/`1` degrade to per-token prefill.
+    pub prefill_chunk: usize,
+    /// Byte budget for the shared-prefix KV cache. `0` disables it.
+    pub prefix_cache_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -320,6 +327,8 @@ impl Default for ServeConfig {
             max_decode_len: 256,
             cache_slack: 1.5,
             workers: 0,
+            prefill_chunk: 16,
+            prefix_cache_bytes: 0,
         }
     }
 }

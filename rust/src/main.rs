@@ -46,7 +46,8 @@ COMMANDS:
   serve <bundle>    [--ckpt CKPT] [--requests N] [--max-new N]
                     [--decision predictor|router|always] [--workers N]
                     [--stream] [--deadline-ms N] [--http PORT]
-                    [--stats-every-ms N]
+                    [--stats-every-ms N] [--prefill-chunk N]
+                    [--prefix-cache-mb N]
                     continuously-batched engine. Default (loopback mode):
                     demo over N synthetic requests; --stream prints the
                     first request's tokens live; --deadline-ms attaches a
@@ -56,7 +57,10 @@ COMMANDS:
                     GET /metrics Prometheus text; PORT 0 = ephemeral).
                     Both modes print a one-line stats snapshot every
                     --stats-every-ms (default 2000; 0 disables in
-                    loopback mode)
+                    loopback mode). --prefill-chunk sets the tokens per
+                    parallel prefill pass (default 16; 1 = per-token);
+                    --prefix-cache-mb enables the shared-prefix KV cache
+                    with that byte budget (default 0 = off)
   flops <preset>
   exp <fig3|fig4|fig5|fig6|fig7|all> [--scale smoke|tiny|full]
                     [--steps N]  (fixed-step figures 5/6/7 only; figs 3/4
@@ -217,12 +221,18 @@ fn main() -> mod_transformer::Result<()> {
             let stream = args.has_flag("stream");
             let deadline_ms = args.opt_u64("deadline-ms")?;
             let stats_every = args.u64_or("stats-every-ms", 2000)?;
+            let defaults = ServeConfig::default();
             let engine = Engine::start(
                 b.clone(),
                 params,
                 ServeConfig {
                     workers: args.usize_or("workers", 0)?,
-                    ..Default::default()
+                    prefill_chunk: args
+                        .usize_or("prefill-chunk", defaults.prefill_chunk)?,
+                    prefix_cache_bytes: args
+                        .usize_or("prefix-cache-mb", 0)?
+                        .saturating_mul(1 << 20),
+                    ..defaults
                 },
                 decision,
             )?;

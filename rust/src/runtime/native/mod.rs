@@ -21,6 +21,7 @@ mod decode;
 pub mod experts;
 pub mod forward;
 pub mod ops;
+pub mod prefill;
 pub mod train;
 
 pub use forward::RouteMode;

@@ -1,0 +1,440 @@
+//! Chunked parallel prefill over a compacted MoD KV cache.
+//!
+//! [`block_prefill_chunk`] runs one transformer block over a *chunk* of
+//! `t` prompt tokens belonging to a single sequence, writing K/V + routing
+//! outcomes straight into that row's compacted cache slab — the serving
+//! analogue of the masked sequence forward in [`super::forward`], but
+//! against the decode-time cache layout so a chunk-prefilled row is
+//! **bitwise identical** to one prefilled token-by-token through
+//! [`super::decode::NativeBlockDecode`] (property-tested below).
+//!
+//! Why bitwise equality holds: every per-token computation here is the
+//! *same serial kernel* the decode executable runs (1-row rmsnorm, 1-row
+//! projections, the same slot-order attention loop), merely re-scheduled
+//! across tokens. Within a block, token `i`'s attention depends only on
+//! slots whose `pos <= pos[i]` — writing the whole chunk's K/V first and
+//! then attending in parallel excludes later tokens through the *same*
+//! `cache_pos` predicate the decode kernel uses (a future slot and an
+//! invalid slot both contribute the identical `NEG_INF` logit), so the
+//! per-token softmax sees the exact same `cache_len`-length vector either
+//! way. The caller allocates slots sequentially in token order, so the
+//! capacity-exceeded drop rule (paper §3.1) also lands on the same tokens
+//! as sequential decode.
+//!
+//! The heavy work (projections, attention, feedforward) is parallel
+//! *across chunk tokens* via [`crate::util::pool`], which is where
+//! chunked prefill's throughput comes from: prompt ingestion becomes a
+//! handful of parallel chunk passes instead of `prompt_len` serial
+//! full-latency decode steps.
+
+use crate::config::ModelConfig;
+use crate::util::pool;
+
+use super::experts;
+use super::ops;
+
+/// Feedforward weights of one block (dense or MoE), borrowed.
+pub enum PrefillFf<'a> {
+    Dense { w1: &'a [f32], w2: &'a [f32] },
+    Moe { router: &'a [f32], w1: &'a [f32], w2: &'a [f32] },
+}
+
+/// Borrowed inputs of one block over one chunk (`t` tokens, one row).
+pub struct PrefillBlock<'a> {
+    /// Block input hidden states `[t, d]`.
+    pub h: &'a [f32],
+    /// Absolute sequence position per chunk token `[t]`.
+    pub pos: &'a [i32],
+    /// Raw router gate per token `[t]` (1.0 on unrouted blocks).
+    pub gate: &'a [f32],
+    /// Participation after the capacity rule `[t]` (0.0 / 1.0).
+    pub part: &'a [f32],
+    /// Allocated cache slot per participating token `[t]`.
+    pub slot: &'a [i32],
+    pub attn_norm: &'a [f32],
+    pub wq: &'a [f32],
+    pub wk: &'a [f32],
+    pub wv: &'a [f32],
+    pub wo: &'a [f32],
+    pub mlp_norm: &'a [f32],
+    pub ff: PrefillFf<'a>,
+}
+
+/// One block over one chunk of a single row, against that row's
+/// `cache_len`-slot cache slab (`ck`/`cv`: `[cl, kd]`, `cp`/`cw`: `[cl]`,
+/// mutated in place). Returns the block output `[t, d]`; tokens with
+/// `part <= 0.5` pass through unchanged and leave the cache untouched.
+pub fn block_prefill_chunk(
+    cfg: &ModelConfig,
+    freqs: &[f32],
+    cl: usize,
+    blk: &PrefillBlock<'_>,
+    ck: &mut [f32],
+    cv: &mut [f32],
+    cp: &mut [i32],
+    cw: &mut [f32],
+) -> crate::Result<Vec<f32>> {
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let dh = cfg.d_head;
+    let kd = heads * dh;
+    let f = cfg.d_ff;
+    let t = blk.pos.len();
+
+    crate::ensure!(
+        blk.h.len() == t * d
+            && blk.gate.len() == t
+            && blk.part.len() == t
+            && blk.slot.len() == t,
+        "prefill chunk: bad per-token input shapes"
+    );
+    crate::ensure!(
+        ck.len() == cl * kd
+            && cv.len() == cl * kd
+            && cp.len() == cl
+            && cw.len() == cl,
+        "prefill chunk: bad cache-slab shapes"
+    );
+    // validate up front so the pool tasks are infallible
+    for i in 0..t {
+        if blk.part[i] > 0.5 {
+            crate::ensure!(
+                (blk.slot[i] as usize) < cl,
+                "prefill slot {} out of cache {cl}",
+                blk.slot[i]
+            );
+        }
+    }
+    let participating = blk.part.iter().filter(|&&p| p > 0.5).count();
+
+    // --- phase 1: per-token projections + RoPE (parallel over tokens;
+    // each token owns disjoint q/k/v scratch rows) ---
+    let mut qbuf = vec![0f32; t * kd];
+    let mut kbuf = vec![0f32; t * kd];
+    let mut vbuf = vec![0f32; t * kd];
+    {
+        type ProjTask<'a> =
+            (usize, &'a mut [f32], &'a mut [f32], &'a mut [f32]);
+        let tasks: Vec<ProjTask<'_>> = qbuf
+            .chunks_mut(kd)
+            .zip(kbuf.chunks_mut(kd))
+            .zip(vbuf.chunks_mut(kd))
+            .enumerate()
+            .map(|(i, ((q, k), v))| (i, q, k, v))
+            .collect();
+        pool::par_tasks(participating * 3 * d * kd, tasks, |(i, q, k, v)| {
+            if blk.part[i] <= 0.5 {
+                return;
+            }
+            // identical per-token math to the decode kernel (1-row calls)
+            let hr = &blk.h[i * d..(i + 1) * d];
+            let (xn, _) = ops::rmsnorm(hr, blk.attn_norm, 1, d);
+            q.copy_from_slice(&ops::matmul(&xn, blk.wq, 1, d, kd));
+            k.copy_from_slice(&ops::matmul(&xn, blk.wk, 1, d, kd));
+            v.copy_from_slice(&ops::matmul(&xn, blk.wv, 1, d, kd));
+            let p = [blk.pos[i]];
+            ops::rope(q, &p, 1, heads, dh, freqs, 1.0);
+            ops::rope(k, &p, 1, heads, dh, freqs, 1.0);
+        });
+    }
+
+    // --- phase 2: serial K/V writes in token order (distinct slots) ---
+    for i in 0..t {
+        if blk.part[i] <= 0.5 {
+            continue;
+        }
+        let sl = blk.slot[i] as usize;
+        ck[sl * kd..(sl + 1) * kd]
+            .copy_from_slice(&kbuf[i * kd..(i + 1) * kd]);
+        cv[sl * kd..(sl + 1) * kd]
+            .copy_from_slice(&vbuf[i * kd..(i + 1) * kd]);
+        cp[sl] = blk.pos[i];
+        cw[sl] = 1.0;
+    }
+
+    // --- phase 3: attention + feedforward (parallel over tokens; the
+    // cache slabs are now read-only shared state) ---
+    let (ck, cv, cp, cw) = (&*ck, &*cv, &*cp, &*cw);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut h_out = blk.h.to_vec();
+    let tasks: Vec<(usize, &mut [f32])> =
+        h_out.chunks_mut(d).enumerate().collect();
+    let row_work = 2 * cl * kd + d * kd + 2 * d * f.max(d);
+    pool::par_tasks(participating * row_work, tasks, |(i, h_row)| {
+        if blk.part[i] <= 0.5 {
+            return; // skipped token: h passes through, cache untouched
+        }
+        let hr = &blk.h[i * d..(i + 1) * d];
+        let q = &qbuf[i * kd..(i + 1) * kd];
+        let pos_i = blk.pos[i];
+
+        // attend over valid slots with pos <= this token's pos — the same
+        // loop (and therefore the same summation order) as NativeBlockDecode
+        let mut att = vec![0f32; kd];
+        let mut logits = vec![0f32; cl];
+        for hd in 0..heads {
+            let qh = &q[hd * dh..(hd + 1) * dh];
+            for li in 0..cl {
+                let ok = cw[li] > 0.5 && cp[li] <= pos_i;
+                logits[li] = if ok {
+                    let kh = &ck[li * kd + hd * dh..li * kd + (hd + 1) * dh];
+                    let mut acc = 0f32;
+                    for j in 0..dh {
+                        acc += qh[j] * kh[j];
+                    }
+                    acc * scale
+                } else {
+                    ops::NEG_INF
+                };
+            }
+            ops::softmax_inplace(&mut logits);
+            let out = &mut att[hd * dh..(hd + 1) * dh];
+            for li in 0..cl {
+                let pw = logits[li];
+                if pw == 0.0 {
+                    continue;
+                }
+                let vh = &cv[li * kd + hd * dh..li * kd + (hd + 1) * dh];
+                for j in 0..dh {
+                    out[j] += pw * vh[j];
+                }
+            }
+        }
+        let attn = ops::matmul(&att, blk.wo, 1, kd, d);
+
+        // h_mid = h + attn; mlp over h_mid; delta = attn + mlp
+        let mut h_mid = vec![0f32; d];
+        for j in 0..d {
+            h_mid[j] = hr[j] + attn[j];
+        }
+        let (xn2, _) = ops::rmsnorm(&h_mid, blk.mlp_norm, 1, d);
+        let mlp = match &blk.ff {
+            PrefillFf::Dense { w1, w2 } => {
+                let u = ops::matmul(&xn2, w1, 1, d, f);
+                let g: Vec<f32> = u.iter().map(|&x| ops::gelu(x)).collect();
+                ops::matmul(&g, w2, 1, f, d)
+            }
+            PrefillFf::Moe { router, w1, w2 } => {
+                experts::moe_step(cfg, &xn2, router, w1, w2)
+            }
+        };
+
+        let gp = blk.gate[i]; // part[i] == 1 here
+        for j in 0..d {
+            h_row[j] = hr[j] + gp * (attn[j] + mlp[j]);
+        }
+    });
+
+    Ok(h_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode::NativeBlockDecode;
+    use super::*;
+    use crate::config::FfMode;
+    use crate::data::rng::Pcg32;
+    use crate::runtime::backend::Executable;
+    use crate::runtime::tensor::Tensor;
+    use crate::runtime::Value;
+
+    fn tiny_cfg(ff_mode: FfMode) -> ModelConfig {
+        ModelConfig {
+            d_model: 16,
+            n_heads: 2,
+            d_head: 4,
+            d_ff: 24,
+            ff_mode,
+            ..ModelConfig::default()
+        }
+    }
+
+    fn randn(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal() as f32 * 0.3).collect()
+    }
+
+    /// The tentpole's bitwise contract at kernel level: prefilling a chunk
+    /// of tokens in one parallel pass produces exactly the hidden states
+    /// and cache slab that stepping the same tokens one-by-one through the
+    /// decode executable does — for dense and MoE feedforwards, including
+    /// routed-around and capacity-dropped tokens, at several pool widths.
+    #[test]
+    fn chunk_prefill_matches_tokenwise_decode_bitwise() {
+        let _g = pool::knob_guard();
+        for ff_mode in [FfMode::Dense, FfMode::Moe] {
+            let cfg = tiny_cfg(ff_mode);
+            let d = cfg.d_model;
+            let kd = cfg.n_heads * cfg.d_head;
+            let f = cfg.d_ff;
+            let cl = 4usize;
+            let t = 6usize;
+            let mut rng = Pcg32::new(7, 1);
+
+            let attn_norm = vec![1.0f32; d];
+            let mlp_norm = vec![1.0f32; d];
+            let wq = randn(&mut rng, d * kd);
+            let wk = randn(&mut rng, d * kd);
+            let wv = randn(&mut rng, d * kd);
+            let wo = randn(&mut rng, kd * d);
+            // dense: (w1 [d,f], w2 [f,d]); moe: (router [d,E], per-expert
+            // w1/w2 stacked) — sized for either mode
+            let (ffa, ffb, ffc) = match ff_mode {
+                FfMode::Dense => {
+                    (randn(&mut rng, d * f), randn(&mut rng, f * d), vec![])
+                }
+                _ => (
+                    randn(&mut rng, d * cfg.n_experts),
+                    randn(&mut rng, cfg.n_experts * d * f),
+                    randn(&mut rng, cfg.n_experts * f * d),
+                ),
+            };
+
+            let h = randn(&mut rng, t * d);
+            let pos: Vec<i32> = (0..t as i32).collect();
+            let gate = randn(&mut rng, t);
+            // tokens 0,1,2,4,5 want in; 3 routed around; capacity 4 drops
+            // the last one — slots assigned in token order like the session
+            let part = vec![1.0f32, 1.0, 1.0, 0.0, 1.0, 0.0];
+            let slot = vec![0i32, 1, 2, 0, 3, 0];
+
+            // reference: the decode executable, one token at a time
+            let exe = NativeBlockDecode {
+                cfg: cfg.clone(),
+                cache_len: cl,
+                freqs: ops::rope_freqs(cfg.d_head, cfg.rope_theta),
+                name: "test_block".into(),
+            };
+            let mut rck = vec![0f32; cl * kd];
+            let mut rcv = vec![0f32; cl * kd];
+            let mut rcp = vec![0i32; cl];
+            let mut rcw = vec![0f32; cl];
+            let mut rh = vec![0f32; t * d];
+            for i in 0..t {
+                let mut args: Vec<Value> = vec![
+                    Tensor::f32(vec![1, d], h[i * d..(i + 1) * d].to_vec())
+                        .into(),
+                    Tensor::i32(vec![1], vec![pos[i]]).into(),
+                    Tensor::f32(vec![1], vec![gate[i]]).into(),
+                    Tensor::f32(vec![1], vec![part[i]]).into(),
+                    Tensor::i32(vec![1], vec![slot[i]]).into(),
+                    Tensor::f32(vec![1, cl, kd], rck.clone()).into(),
+                    Tensor::f32(vec![1, cl, kd], rcv.clone()).into(),
+                    Tensor::i32(vec![1, cl], rcp.clone()).into(),
+                    Tensor::f32(vec![1, cl], rcw.clone()).into(),
+                    Tensor::f32(vec![d], attn_norm.clone()).into(),
+                    Tensor::f32(vec![d, kd], wq.clone()).into(),
+                    Tensor::f32(vec![d, kd], wk.clone()).into(),
+                    Tensor::f32(vec![d, kd], wv.clone()).into(),
+                    Tensor::f32(vec![kd, d], wo.clone()).into(),
+                    Tensor::f32(vec![d], mlp_norm.clone()).into(),
+                ];
+                match ff_mode {
+                    FfMode::Dense => {
+                        args.push(Tensor::f32(vec![d, f], ffa.clone()).into());
+                        args.push(Tensor::f32(vec![f, d], ffb.clone()).into());
+                    }
+                    _ => {
+                        args.push(
+                            Tensor::f32(vec![d, cfg.n_experts], ffa.clone())
+                                .into(),
+                        );
+                        args.push(
+                            Tensor::f32(
+                                vec![cfg.n_experts, d, f],
+                                ffb.clone(),
+                            )
+                            .into(),
+                        );
+                        args.push(
+                            Tensor::f32(
+                                vec![cfg.n_experts, f, d],
+                                ffc.clone(),
+                            )
+                            .into(),
+                        );
+                    }
+                }
+                let refs: Vec<&Value> = args.iter().collect();
+                let outs = exe.run(&refs).unwrap();
+                rh[i * d..(i + 1) * d].copy_from_slice(
+                    outs[0].as_host().unwrap().as_f32().unwrap(),
+                );
+                rck = outs[1].as_host().unwrap().as_f32().unwrap().to_vec();
+                rcv = outs[2].as_host().unwrap().as_f32().unwrap().to_vec();
+                rcp = outs[3].as_host().unwrap().as_i32().unwrap().to_vec();
+                rcw = outs[4].as_host().unwrap().as_f32().unwrap().to_vec();
+            }
+
+            // chunked: the whole chunk in one parallel pass, width-swept
+            for nt in [1usize, 4] {
+                pool::with_threads(nt, || {
+                    let mut ck = vec![0f32; cl * kd];
+                    let mut cv = vec![0f32; cl * kd];
+                    let mut cp = vec![0i32; cl];
+                    let mut cw = vec![0f32; cl];
+                    let ff = match ff_mode {
+                        FfMode::Dense => {
+                            PrefillFf::Dense { w1: &ffa, w2: &ffb }
+                        }
+                        _ => PrefillFf::Moe {
+                            router: &ffa,
+                            w1: &ffb,
+                            w2: &ffc,
+                        },
+                    };
+                    let blk = PrefillBlock {
+                        h: &h,
+                        pos: &pos,
+                        gate: &gate,
+                        part: &part,
+                        slot: &slot,
+                        attn_norm: &attn_norm,
+                        wq: &wq,
+                        wk: &wk,
+                        wv: &wv,
+                        wo: &wo,
+                        mlp_norm: &mlp_norm,
+                        ff,
+                    };
+                    let freqs = ops::rope_freqs(cfg.d_head, cfg.rope_theta);
+                    let got = block_prefill_chunk(
+                        &cfg, &freqs, cl, &blk, &mut ck, &mut cv, &mut cp,
+                        &mut cw,
+                    )
+                    .unwrap();
+                    assert_eq!(got, rh, "{ff_mode:?} h diverged at {nt}t");
+                    assert_eq!(ck, rck, "{ff_mode:?} cache_k at {nt}t");
+                    assert_eq!(cv, rcv, "{ff_mode:?} cache_v at {nt}t");
+                    assert_eq!(cp, rcp, "{ff_mode:?} cache_pos at {nt}t");
+                    assert_eq!(cw, rcw, "{ff_mode:?} cache_valid at {nt}t");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_rejects_bad_shapes() {
+        let cfg = tiny_cfg(FfMode::Dense);
+        let freqs = ops::rope_freqs(cfg.d_head, cfg.rope_theta);
+        let blk = PrefillBlock {
+            h: &[0.0; 16],
+            pos: &[0],
+            gate: &[1.0],
+            part: &[1.0],
+            slot: &[9], // out of a 2-slot cache
+            attn_norm: &[1.0; 16],
+            wq: &[],
+            wk: &[],
+            wv: &[],
+            wo: &[],
+            mlp_norm: &[1.0; 16],
+            ff: PrefillFf::Dense { w1: &[], w2: &[] },
+        };
+        let (mut ck, mut cv) = (vec![0f32; 2 * 8], vec![0f32; 2 * 8]);
+        let (mut cp, mut cw) = (vec![0i32; 2], vec![0f32; 2]);
+        let r = block_prefill_chunk(
+            &cfg, &freqs, 2, &blk, &mut ck, &mut cv, &mut cp, &mut cw,
+        );
+        assert!(r.is_err());
+    }
+}

@@ -44,6 +44,9 @@ use crate::runtime::{Bundle, Tensor};
 use crate::util::metrics::{self, Counter, Gauge, Histogram};
 use crate::util::pool;
 
+use super::prefix_cache::{
+    extend_hash, PrefixCache, PrefixCacheStats, PrefixPage, ROOT_HASH,
+};
 use super::request::{
     Event, FinishReason, GenerateParams, Generation, Response, ServeError,
     ServeErrorKind, Usage,
@@ -69,6 +72,8 @@ struct EngineMetrics {
     rows_released: &'static Counter,
     steps: &'static Counter,
     tokens: &'static Counter,
+    prefill_tokens: &'static Counter,
+    prefill_chunks: &'static Counter,
     blocks_invoked: &'static Counter,
     blocks_skipped: &'static Counter,
     capacity_drops: &'static Counter,
@@ -127,6 +132,15 @@ fn engine_metrics() -> &'static EngineMetrics {
             "engine_tokens_generated_total",
             "Tokens sampled and streamed to callers",
         ),
+        prefill_tokens: metrics::counter(
+            "engine_prefill_tokens_total",
+            "Prompt tokens ingested (chunked prefill; excludes \
+             prefix-cache reuse)",
+        ),
+        prefill_chunks: metrics::counter(
+            "engine_prefill_chunks_total",
+            "Chunked-prefill passes executed across all sessions",
+        ),
         blocks_invoked: metrics::counter(
             "engine_blocks_invoked_total",
             "Transformer block executions during decode",
@@ -160,7 +174,13 @@ pub struct EngineStats {
     pub sessions: u64,
     /// Decode steps executed across all sessions.
     pub steps: u64,
+    /// Tokens sampled and streamed to callers (prefill excluded).
     pub tokens_generated: u64,
+    /// Prompt tokens ingested by chunked prefill (prefix-cache hits
+    /// excluded — reused tokens are in `prefix.tokens_reused`).
+    pub prefill_tokens: u64,
+    /// Chunked-prefill passes executed.
+    pub prefill_chunks: u64,
     pub blocks_invoked: u64,
     pub blocks_skipped: u64,
     pub capacity_drops: u64,
@@ -187,6 +207,8 @@ pub struct EngineStats {
     /// was called (momentary, not cumulative; 0 in a final
     /// [`Engine::shutdown`] report — the queue is always drained).
     pub queue_depth: u64,
+    /// Shared-prefix cache snapshot (all-zero when the cache is disabled).
+    pub prefix: PrefixCacheStats,
 }
 
 impl EngineStats {
@@ -217,6 +239,7 @@ impl EngineStats {
         format!(
             "[stats] submitted {} completed {} failed {} queue {} | \
              {} tokens ({:.1} tok/s) skip {:.0}% | \
+             prefill {} tok in {} chunks, prefix reuse {} tok ({} hits) | \
              {} mid-flight admissions, peak {} rows / {} workers",
             self.submitted,
             self.completed,
@@ -225,6 +248,10 @@ impl EngineStats {
             self.tokens_generated,
             self.tokens_per_sec(),
             100.0 * self.skip_fraction(),
+            self.prefill_tokens,
+            self.prefill_chunks,
+            self.prefix.tokens_reused,
+            self.prefix.hits,
             self.mid_session_admissions,
             self.peak_active_rows,
             self.peak_active_workers,
@@ -256,6 +283,9 @@ struct Shared {
     /// forever on a request no worker will ever pick up.
     live_workers: AtomicUsize,
     stats: Mutex<EngineStats>,
+    /// Shared-prefix KV cache, one per engine across all workers
+    /// (`None` when `ServeConfig::prefix_cache_bytes == 0`).
+    prefix: Option<Arc<PrefixCache>>,
     /// Registry handles, resolved once at start (shared process-wide).
     metrics: &'static EngineMetrics,
 }
@@ -365,6 +395,13 @@ impl Engine {
         let workers = workers.max(1);
         let vocab = bundle.manifest.model.vocab_size;
         let max_len = bundle.manifest.max_decode_len;
+        // 0 and 1 both mean per-token prefill; the chunk size doubles as
+        // the prefix cache's page granularity so seated prefixes always
+        // land on chunk boundaries
+        let chunk = serve_cfg.prefill_chunk.max(1);
+        let prefix = (serve_cfg.prefix_cache_bytes > 0).then(|| {
+            Arc::new(PrefixCache::new(chunk, serve_cfg.prefix_cache_bytes))
+        });
 
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -374,6 +411,7 @@ impl Engine {
             decoding_workers: AtomicUsize::new(0),
             live_workers: AtomicUsize::new(workers),
             stats: Mutex::new(EngineStats::default()),
+            prefix,
             metrics: engine_metrics(),
         });
         // build every session BEFORE spawning any worker: a failure here
@@ -386,7 +424,7 @@ impl Engine {
         for session in sessions {
             let shared = shared.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(&shared, session, batch, vocab, max_len);
+                worker_loop(&shared, session, batch, vocab, max_len, chunk);
             }));
         }
         shared.stat(|s| s.sessions = workers as u64);
@@ -475,6 +513,12 @@ impl Engine {
         let queue_depth = self.shared.queue.lock().unwrap().len() as u64;
         let mut s = self.shared.stats.lock().unwrap().clone();
         s.queue_depth = queue_depth;
+        s.prefix = self
+            .shared
+            .prefix
+            .as_ref()
+            .map(|p| p.stats())
+            .unwrap_or_default();
         s
     }
 
@@ -515,10 +559,18 @@ struct RowState {
     prompt_idx: usize,
     last: Option<u16>,
     emitted: usize,
-    /// Total session steps this row has consumed (prefill + decode);
-    /// capped at the bundle's `max_decode_len`.
+    /// Total sequence positions this row has consumed (prefix-seated +
+    /// prefilled + decoded); capped at the bundle's `max_decode_len`.
     steps: usize,
     rng: Pcg32,
+    /// Last-token logits from the final prefill chunk, pending sampling:
+    /// the first generated token never costs a decode step.
+    pending_first: Option<Vec<f32>>,
+    /// Prefix hash of the prompt through `prompt_idx` (chunk-aligned).
+    chain_hash: u64,
+    /// Still inserting pages: true until the first partial / unaligned /
+    /// failed-extract chunk breaks the chain (or the request opted out).
+    chain_ok: bool,
 }
 
 /// What happened to a row during one decode step.
@@ -535,6 +587,7 @@ fn worker_loop(
     batch: usize,
     vocab: usize,
     max_len: usize,
+    chunk: usize,
 ) {
     let mut rows: Vec<Option<RowState>> = (0..batch).map(|_| None).collect();
     // rows whose release failed: never reused (cache state unknown)
@@ -620,17 +673,63 @@ fn worker_loop(
                     )));
                     continue;
                 }
+                // seat any cached shared prefix: the covered chunks skip
+                // prefill entirely (their K/V land pre-compacted), and
+                // the token stream stays bitwise identical because the
+                // seated slots hold exactly what a cold prefill writes
+                let use_cache =
+                    job.params.prefix_cache && shared.prefix.is_some();
+                let mut prompt_idx = 0usize;
+                let mut chain_hash = ROOT_HASH;
+                if use_cache {
+                    let cache = shared.prefix.as_ref().unwrap();
+                    let prompt_i32: Vec<i32> =
+                        job.params.prompt.iter().map(|&t| t as i32).collect();
+                    let pages = cache.lookup(&prompt_i32);
+                    if let Some(tail) = pages.last() {
+                        match session.seat_prefix(b, &pages) {
+                            Ok(n) => {
+                                prompt_idx = n;
+                                chain_hash = tail.hash;
+                            }
+                            Err(_) => {
+                                // partial seat leaves unknown row state:
+                                // reset the row and prefill cold instead
+                                if session
+                                    .release_row(b)
+                                    .and_then(|()| session.admit_row(b))
+                                    .is_err()
+                                {
+                                    dead[b] = true;
+                                    shared.stat(|s| s.failed += 1);
+                                    shared.metrics.failed.inc();
+                                    let _ = job.tx.send(Event::Error(
+                                        ServeError::new(
+                                            ServeErrorKind::Batch,
+                                            "row reset after failed prefix \
+                                             seat",
+                                        ),
+                                    ));
+                                    continue;
+                                }
+                            }
+                        }
+                    }
+                }
                 let others_active = rows.iter().any(|r| r.is_some());
                 let seed = job.params.seed;
                 rows[b] = Some(RowState {
                     admitted: now,
-                    prompt_idx: 0,
+                    prompt_idx,
                     last: None,
                     emitted: 0,
-                    steps: 0,
+                    steps: prompt_idx,
                     // stream depends on the request seed only — never on
                     // the row index — so placement can't change outputs
                     rng: Pcg32::new(seed, 0),
+                    pending_first: None,
+                    chain_hash,
+                    chain_ok: use_cache,
                     job,
                 });
                 let total =
@@ -660,79 +759,69 @@ fn worker_loop(
             });
         }
 
-        // --- build step inputs; enforce cancel + deadline per row ---
-        let mut tokens = vec![PAD as i32; batch];
-        let mut active = vec![false; batch];
+        // --- enforce cancel + deadline for every seated row ---
         let now = Instant::now();
         for b in 0..batch {
-            let fate = match rows[b].as_mut() {
+            let err = match rows[b].as_ref() {
                 None => continue,
                 Some(row) => {
                     if row.job.cancel.load(Ordering::SeqCst) {
-                        Err(ServeError::new(
+                        ServeError::new(
                             ServeErrorKind::Cancelled,
                             format!("cancelled after {} tokens", row.emitted),
-                        ))
+                        )
                     } else if matches!(row.job.deadline, Some(dl) if now >= dl)
                     {
-                        Err(ServeError::new(
+                        ServeError::new(
                             ServeErrorKind::DeadlineExceeded,
                             format!(
                                 "deadline passed after {} tokens",
                                 row.emitted
                             ),
-                        ))
+                        )
                     } else {
-                        let p = &row.job.params.prompt;
-                        let t = if row.prompt_idx < p.len() {
-                            let t = p[row.prompt_idx] as i32;
-                            row.prompt_idx += 1;
-                            t
-                        } else if let Some(last) = row.last {
-                            last as i32
-                        } else {
-                            // empty prompt: start from PAD
-                            row.prompt_idx += 1;
-                            PAD as i32
-                        };
-                        row.steps += 1;
-                        Ok(t)
+                        continue;
                     }
                 }
             };
-            match fate {
-                Ok(t) => {
-                    tokens[b] = t;
-                    active[b] = true;
-                }
-                Err(e) => finish_error(shared, &mut session, &mut rows,
-                                       &mut dead, b, e),
-            }
-        }
-        if !active.iter().any(|&a| a) {
-            continue;
+            finish_error(shared, &mut session, &mut rows, &mut dead, b, err);
         }
 
-        // --- one decode step for every active row ---
         let t_step = Instant::now();
-        let multi = shared.decoding_workers.load(Ordering::SeqCst) > 1;
-        let result = if multi {
-            // another session is decoding concurrently: session-level
-            // concurrency replaces kernel fan-out so threads don't
-            // multiply; a lone session keeps full kernel parallelism
-            pool::run_as_worker(|| session.step(&tokens, &active))
-        } else {
-            session.step(&tokens, &active)
-        };
-        let logits = match result {
-            Ok(l) => l,
-            Err(e) => {
-                // deliver the underlying cause to every affected request
-                // (typed), then reset the rows — nothing goes to stderr
-                for b in 0..batch {
-                    if rows[b].is_none() {
+
+        // --- chunked prefill: at most ONE chunk per prefilling row per
+        // iteration, interleaved with the decode step below, so a long
+        // prompt never stalls the decode rows seated alongside it ---
+        let mut prefilled = false;
+        for b in 0..batch {
+            let (chunk_tokens, lo, end, need_logits) = match rows[b].as_ref() {
+                None => continue,
+                Some(row) => {
+                    let p = &row.job.params.prompt;
+                    if row.prompt_idx >= p.len() {
                         continue;
                     }
+                    let lo = row.prompt_idx;
+                    let end = (lo + chunk).min(p.len());
+                    let toks: Vec<i32> =
+                        p[lo..end].iter().map(|&t| t as i32).collect();
+                    (toks, lo, end, end == p.len())
+                }
+            };
+            let multi = shared.decoding_workers.load(Ordering::SeqCst) > 1;
+            let result = if multi {
+                pool::run_as_worker(|| {
+                    session.prefill_chunk(b, &chunk_tokens, need_logits)
+                })
+            } else {
+                session.prefill_chunk(b, &chunk_tokens, need_logits)
+            };
+            let out = match result {
+                Ok(out) => out,
+                Err(e) => {
+                    // a prefill failure is scoped to its own row: the
+                    // chunk kernel validates before it writes, and other
+                    // rows' caches are untouched by construction
                     finish_error(
                         shared,
                         &mut session,
@@ -741,58 +830,84 @@ fn worker_loop(
                         b,
                         ServeError::new(
                             ServeErrorKind::Batch,
-                            format!("decode step failed: {e}"),
+                            format!("prefill chunk failed: {e}"),
                         ),
                     );
+                    continue;
                 }
-                continue;
+            };
+            prefilled = true;
+            // grow the shared-prefix cache: full chunk-aligned pages
+            // only, while the chain from the prompt start is unbroken
+            let mut new_hash = None;
+            if rows[b].as_ref().unwrap().chain_ok {
+                if let Some(cache) = shared.prefix.as_ref() {
+                    let row = rows[b].as_ref().unwrap();
+                    if lo % cache.chunk() == 0 && end - lo == cache.chunk() {
+                        let hash = extend_hash(row.chain_hash, &chunk_tokens);
+                        if let Ok(layers) =
+                            session.extract_prefix_layers(b, &out.layer_spans)
+                        {
+                            cache.insert(PrefixPage {
+                                hash,
+                                parent: row.chain_hash,
+                                tokens: chunk_tokens,
+                                n_prefix: end,
+                                layers,
+                            });
+                            new_hash = Some(hash);
+                        }
+                    }
+                }
             }
-        };
-        stepped_since_idle = true;
+            let row = rows[b].as_mut().unwrap();
+            match new_hash {
+                Some(h) => row.chain_hash = h,
+                None => row.chain_ok = false,
+            }
+            row.prompt_idx = end;
+            row.steps += end - lo;
+            row.pending_first = out.logits_last;
+        }
 
-        // --- per-row: sample, stream, finish ---
+        // --- first token for rows whose prompt just completed: sampled
+        // from the final chunk's last-token logits — prompt ingestion
+        // never costs the extra decode step the per-token path paid ---
         for b in 0..batch {
             let fate = match rows[b].as_mut() {
                 None => continue,
-                // a row released in the input pass is already None; the
-                // guard is belt-and-braces against future refactors
-                Some(_) if !active[b] => continue,
                 Some(row) => {
-                    if row.prompt_idx < row.job.params.prompt.len() {
-                        // still prefilling: logits unused
-                        if row.steps >= max_len {
-                            RowFate::Finished(FinishReason::MaxTokens)
-                        } else {
-                            RowFate::Running
-                        }
+                    let Some(lrow) = row.pending_first.take() else {
+                        continue;
+                    };
+                    let next = sample(
+                        &lrow,
+                        row.job.params.temperature,
+                        row.job.params.top_k,
+                        &mut row.rng,
+                    ) as u16;
+                    row.last = Some(next);
+                    let index = row.emitted;
+                    row.emitted += 1;
+                    // the session booked the pass that produced these
+                    // logits as prefill; the sampled token streams to the
+                    // caller, so tokens_generated counts it here
+                    shared.stat(|s| s.tokens_generated += 1);
+                    shared.metrics.tokens.add(1);
+                    let sent =
+                        row.job.tx.send(Event::Token { token: next, index });
+                    if sent.is_err() {
+                        RowFate::Abandoned
+                    } else if next == EOS {
+                        RowFate::Finished(FinishReason::Eos)
+                    } else if row.job.params.stop_tokens.contains(&next) {
+                        RowFate::Finished(FinishReason::Stop)
+                    } else if row.emitted >= row.job.params.max_new
+                        || row.steps >= max_len
+                    {
+                        RowFate::Finished(FinishReason::MaxTokens)
                     } else {
-                        let lrow = &logits[b * vocab..(b + 1) * vocab];
-                        let next = sample(
-                            lrow,
-                            row.job.params.temperature,
-                            row.job.params.top_k,
-                            &mut row.rng,
-                        ) as u16;
-                        row.last = Some(next);
-                        let index = row.emitted;
-                        row.emitted += 1;
-                        let sent = row
-                            .job
-                            .tx
-                            .send(Event::Token { token: next, index });
-                        if sent.is_err() {
-                            RowFate::Abandoned
-                        } else if next == EOS {
-                            RowFate::Finished(FinishReason::Eos)
-                        } else if row.job.params.stop_tokens.contains(&next) {
-                            RowFate::Finished(FinishReason::Stop)
-                        } else if row.emitted >= row.job.params.max_new
-                            || row.steps >= max_len
-                        {
-                            RowFate::Finished(FinishReason::MaxTokens)
-                        } else {
-                            RowFate::Running
-                        }
+                        RowFate::Running
                     }
                 }
             };
@@ -811,7 +926,127 @@ fn worker_loop(
             }
         }
 
-        // --- absorb this step into the engine stats (delta vs last) ---
+        // --- build decode inputs: prompt-complete rows only ---
+        let mut tokens = vec![PAD as i32; batch];
+        let mut active = vec![false; batch];
+        for b in 0..batch {
+            let Some(row) = rows[b].as_mut() else { continue };
+            if row.prompt_idx < row.job.params.prompt.len() {
+                continue; // mid-prefill: next chunk comes next iteration
+            }
+            tokens[b] = match row.last {
+                Some(last) => last as i32,
+                // empty prompt: start from PAD
+                None => PAD as i32,
+            };
+            row.steps += 1;
+            active[b] = true;
+        }
+
+        // --- one decode step for every active row ---
+        let mut stepped = false;
+        if active.iter().any(|&a| a) {
+            let multi = shared.decoding_workers.load(Ordering::SeqCst) > 1;
+            let result = if multi {
+                // another session is decoding concurrently: session-level
+                // concurrency replaces kernel fan-out so threads don't
+                // multiply; a lone session keeps full kernel parallelism
+                pool::run_as_worker(|| session.step(&tokens, &active))
+            } else {
+                session.step(&tokens, &active)
+            };
+            match result {
+                Err(e) => {
+                    // deliver the underlying cause to every affected
+                    // request (typed), then reset the rows — nothing
+                    // goes to stderr
+                    for b in 0..batch {
+                        if rows[b].is_none() {
+                            continue;
+                        }
+                        finish_error(
+                            shared,
+                            &mut session,
+                            &mut rows,
+                            &mut dead,
+                            b,
+                            ServeError::new(
+                                ServeErrorKind::Batch,
+                                format!("decode step failed: {e}"),
+                            ),
+                        );
+                    }
+                }
+                Ok(logits) => {
+                    stepped = true;
+                    // --- per-row: sample, stream, finish ---
+                    for b in 0..batch {
+                        let fate = match rows[b].as_mut() {
+                            None => continue,
+                            // a row released above is already None; the
+                            // guard is belt-and-braces against refactors
+                            Some(_) if !active[b] => continue,
+                            Some(row) => {
+                                let lrow =
+                                    &logits[b * vocab..(b + 1) * vocab];
+                                let next = sample(
+                                    lrow,
+                                    row.job.params.temperature,
+                                    row.job.params.top_k,
+                                    &mut row.rng,
+                                ) as u16;
+                                row.last = Some(next);
+                                let index = row.emitted;
+                                row.emitted += 1;
+                                let sent = row
+                                    .job
+                                    .tx
+                                    .send(Event::Token { token: next, index });
+                                if sent.is_err() {
+                                    RowFate::Abandoned
+                                } else if next == EOS {
+                                    RowFate::Finished(FinishReason::Eos)
+                                } else if row
+                                    .job
+                                    .params
+                                    .stop_tokens
+                                    .contains(&next)
+                                {
+                                    RowFate::Finished(FinishReason::Stop)
+                                } else if row.emitted
+                                    >= row.job.params.max_new
+                                    || row.steps >= max_len
+                                {
+                                    RowFate::Finished(FinishReason::MaxTokens)
+                                } else {
+                                    RowFate::Running
+                                }
+                            }
+                        };
+                        match fate {
+                            RowFate::Running => {}
+                            RowFate::Finished(reason) => {
+                                finish_done(shared, &mut session, &mut rows,
+                                            &mut dead, b, reason);
+                            }
+                            RowFate::Abandoned => {
+                                let _ = rows[b].take();
+                                shared.stat(|s| s.cancelled += 1);
+                                shared.metrics.cancelled.inc();
+                                free_row(shared, &mut session, &mut dead, b);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        if !(prefilled || stepped) {
+            continue;
+        }
+        stepped_since_idle = true;
+
+        // --- absorb this iteration into the engine stats (delta) ---
         let rep = session.report();
         let end = Instant::now();
         shared.metrics.steps.add(rep.steps - prev.steps);
@@ -819,6 +1054,14 @@ fn worker_loop(
             .metrics
             .tokens
             .add(rep.tokens_generated - prev.tokens_generated);
+        shared
+            .metrics
+            .prefill_tokens
+            .add(rep.prefill_tokens - prev.prefill_tokens);
+        shared
+            .metrics
+            .prefill_chunks
+            .add(rep.prefill_chunks - prev.prefill_chunks);
         shared
             .metrics
             .blocks_invoked
@@ -834,6 +1077,8 @@ fn worker_loop(
         shared.stat(|s| {
             s.steps += rep.steps - prev.steps;
             s.tokens_generated += rep.tokens_generated - prev.tokens_generated;
+            s.prefill_tokens += rep.prefill_tokens - prev.prefill_tokens;
+            s.prefill_chunks += rep.prefill_chunks - prev.prefill_chunks;
             s.blocks_invoked += rep.blocks_invoked - prev.blocks_invoked;
             s.blocks_skipped += rep.blocks_skipped - prev.blocks_skipped;
             s.capacity_drops += rep.capacity_drops - prev.capacity_drops;
@@ -974,6 +1219,7 @@ pub fn generate_batch(
         }
         let mut tokens = vec![PAD as i32; batch];
         let mut active = vec![false; batch];
+        let mut prefill = vec![false; batch];
         for b in 0..requests.len() {
             if done[b] {
                 continue;
@@ -982,6 +1228,9 @@ pub fn generate_batch(
             if prompt_idx[b] < req.prompt.len() {
                 tokens[b] = req.prompt[prompt_idx[b]] as i32;
                 prompt_idx[b] += 1;
+                // post-increment: the step that feeds the FINAL prompt
+                // token is a decode step — its logits get sampled
+                prefill[b] = prompt_idx[b] < req.prompt.len();
             } else if let Some(&last) = generated[b].last() {
                 tokens[b] = last as i32;
             } else {
@@ -991,7 +1240,7 @@ pub fn generate_batch(
             }
             active[b] = true;
         }
-        let logits = session.step(&tokens, &active)?;
+        let logits = session.step_mixed(&tokens, &active, &prefill)?;
         for b in 0..requests.len() {
             if done[b] || prompt_idx[b] < requests[b].prompt.len() {
                 continue; // still prefilling: logits unused

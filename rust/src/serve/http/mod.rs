@@ -518,6 +518,15 @@ fn parse_generate_body(body: &[u8]) -> Result<GenerateParams, ServeError> {
             }
         }
     }
+    match j.get("prefix_cache") {
+        None | Some(Json::Null) => {}
+        Some(v) => {
+            let on = v.as_bool().ok_or_else(|| {
+                reject("\"prefix_cache\" must be a boolean".to_string())
+            })?;
+            p = p.prefix_cache(on);
+        }
+    }
     Ok(p)
 }
 

@@ -23,6 +23,11 @@ pub struct LayerKvCache {
     used: Vec<usize>,
     /// tokens dropped because the cache was full (paper 3.1 semantics).
     drops: Vec<u64>,
+    /// drops accumulated by rows that have since been released — folded in
+    /// here so `CacheStats::total_drops` stays *monotone* across row
+    /// recycling instead of silently losing history every time the
+    /// continuous batcher reuses a row.
+    released_drops: u64,
     routed: bool,
 }
 
@@ -34,6 +39,9 @@ pub struct CacheStats {
     pub cache_len: usize,
     /// mean occupancy fraction across batch rows.
     pub occupancy: f64,
+    /// Session-lifetime drop count: live rows' drops plus everything
+    /// accumulated by rows released back to the pool — monotone across
+    /// release/admit cycles, matching `SessionReport::capacity_drops`.
     pub total_drops: u64,
     /// bytes of K+V actually allocated for this layer (f32).
     pub bytes_allocated: usize,
@@ -49,6 +57,7 @@ impl LayerKvCache {
             batch,
             used: vec![0; batch],
             drops: vec![0; batch],
+            released_drops: 0,
             routed,
         }
     }
@@ -76,10 +85,13 @@ impl LayerKvCache {
     }
 
     /// Free one row's slots (its request finished / was cancelled): the
-    /// write head and drop counter reset so the row can be re-seated by
-    /// the continuous batcher. Other rows are untouched.
+    /// write head resets so the row can be re-seated by the continuous
+    /// batcher, and the row's drop count folds into the session-lifetime
+    /// accumulator (so `total_drops` never runs backwards). Other rows
+    /// are untouched.
     pub fn release_row(&mut self, row: usize) {
         self.used[row] = 0;
+        self.released_drops += self.drops[row];
         self.drops[row] = 0;
     }
 
@@ -95,6 +107,25 @@ impl LayerKvCache {
         self.drops[row] = 0;
     }
 
+    /// Seat a shared-prefix cache hit: move the row's write head directly
+    /// to `used` without going through [`Self::try_alloc`], because the
+    /// slots' K/V were copied in from a prefix page rather than computed.
+    /// No drops are recorded — skipped computation can't drop anything.
+    pub fn seat_row(&mut self, row: usize, used: usize) {
+        debug_assert_eq!(
+            self.used[row], 0,
+            "seat_row over live slots (layer {}, row {row})",
+            self.layer
+        );
+        assert!(
+            used <= self.cache_len,
+            "seat_row: prefix occupies {used} slots but layer {} has only {}",
+            self.layer,
+            self.cache_len
+        );
+        self.used[row] = used;
+    }
+
     /// Stats for reporting; `kd` = n_heads * d_head.
     pub fn stats(&self, kd: usize, vanilla_len: usize) -> CacheStats {
         let occ: f64 = self
@@ -108,7 +139,7 @@ impl LayerKvCache {
             routed: self.routed,
             cache_len: self.cache_len,
             occupancy: occ,
-            total_drops: self.drops.iter().sum(),
+            total_drops: self.released_drops + self.drops.iter().sum::<u64>(),
             bytes_allocated: 2 * self.batch * self.cache_len * kd * 4,
             bytes_vanilla: 2 * self.batch * vanilla_len * kd * 4,
         }
@@ -156,7 +187,8 @@ mod tests {
         c.release_row(0);
         c.admit_row(0);
         assert_eq!(c.try_alloc(0), Some(0));
-        assert_eq!(c.stats(8, 8).total_drops, 0);
+        // the released row's drop survives recycling (monotone history)
+        assert_eq!(c.stats(8, 8).total_drops, 1);
     }
 
     #[test]
@@ -216,9 +248,63 @@ mod tests {
         assert_eq!(c.try_alloc(2), Some(0));
         let s = c.stats(8, 16);
         assert_eq!(s.total_drops, 3);
-        // release clears both the write head and the drop count
+        // release clears the write head but the drop history is kept
         c.release_row(0);
-        assert_eq!(c.stats(8, 16).total_drops, 0);
+        assert_eq!(c.stats(8, 16).total_drops, 3);
         assert_eq!(c.try_alloc(0), Some(0));
+    }
+
+    /// Regression for the recycling stats bug: `total_drops` must be
+    /// monotone non-decreasing across release/admit cycles — the old
+    /// `release_row` zeroed the per-row counter, so every recycled row
+    /// erased its drop history from the session report.
+    #[test]
+    fn total_drops_monotone_across_release_admit_cycles() {
+        let mut c = LayerKvCache::new(1, 2, 2, true);
+        let mut last = 0u64;
+        for cycle in 0..3 {
+            // overfill row 0 by `cycle + 1` tokens
+            for _ in 0..2 + cycle + 1 {
+                c.try_alloc(0);
+            }
+            let before = c.stats(8, 8).total_drops;
+            assert!(before >= last, "drops ran backwards in cycle {cycle}");
+            c.release_row(0);
+            let after = c.stats(8, 8).total_drops;
+            assert!(
+                after >= before,
+                "release_row lost drop history in cycle {cycle}: \
+                 {before} -> {after}"
+            );
+            c.admit_row(0);
+            assert_eq!(c.stats(8, 8).total_drops, after, "admit lost history");
+            last = after;
+        }
+        // 1 + 2 + 3 drops across the three cycles
+        assert_eq!(c.stats(8, 8).total_drops, 6);
+    }
+
+    #[test]
+    fn seat_row_moves_write_head_without_drops() {
+        let mut c = LayerKvCache::new(1, 4, 2, true);
+        c.seat_row(0, 3);
+        assert_eq!(c.used(0), 3);
+        assert_eq!(c.stats(8, 8).total_drops, 0);
+        // the next allocation continues after the seated prefix
+        assert_eq!(c.try_alloc(0), Some(3));
+        assert_eq!(c.try_alloc(0), None); // now full -> drop
+        assert_eq!(c.stats(8, 8).total_drops, 1);
+        // other rows are untouched
+        assert_eq!(c.used(1), 0);
+        c.release_row(0);
+        c.admit_row(0);
+        assert_eq!(c.used(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "seat_row")]
+    fn seat_row_rejects_overfull_prefix() {
+        let mut c = LayerKvCache::new(1, 2, 1, true);
+        c.seat_row(0, 3);
     }
 }

@@ -31,15 +31,20 @@
 //!   in front of the engine (`POST /v1/generate`, `GET /healthz`,
 //!   `GET /metrics` in Prometheus text exposition format).
 //! * [`session::DecodeSession`] — batched decode: per-layer compacted KV
-//!   caches, routing decisions, the step loop, per-row release/admit.
+//!   caches, routing decisions, the step loop, chunked prefill, per-row
+//!   release/admit/seat.
 //! * [`kv_cache::LayerKvCache`] — slot allocator + occupancy/drop stats
 //!   (capacity-exceeded tokens are *dropped from the block*, §3.1).
+//! * [`prefix_cache::PrefixCache`] — shared-prefix pages of compacted MoD
+//!   caches (ref-counted, LRU, byte-budgeted) so requests sharing a
+//!   prompt prefix skip its prefill entirely.
 //! * [`sampling`] — greedy / temperature / top-k (partial-selection)
 //!   sampling.
 
 pub mod engine;
 pub mod http;
 pub mod kv_cache;
+pub mod prefix_cache;
 pub mod request;
 pub mod sampling;
 pub mod session;
@@ -47,9 +52,15 @@ pub mod session;
 pub use engine::{generate_batch, Engine, EngineStats};
 pub use http::{HttpConfig, HttpServer};
 pub use kv_cache::{CacheStats, LayerKvCache};
+pub use prefix_cache::{
+    LayerChunk, PrefixCache, PrefixCacheStats, PrefixPage,
+};
 pub use request::{
     Event, FinishReason, GenerateParams, Generation, Response, ServeError,
     ServeErrorKind, Usage,
 };
 pub use sampling::{argmax, sample, sample_sort_oracle};
-pub use session::{DecodeSession, RoutingDecision, SessionReport, StepStats, StepTrace};
+pub use session::{
+    DecodeSession, PrefillOutcome, RoutingDecision, SessionReport, StepStats,
+    StepTrace,
+};

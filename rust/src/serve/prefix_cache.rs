@@ -1,0 +1,462 @@
+//! Shared-prefix KV cache: ref-counted, LRU-evicted, byte-budgeted pages
+//! of compacted MoD decode caches, keyed by prompt-prefix hash at chunk
+//! granularity.
+//!
+//! Production traffic shares prompt prefixes (system prompts, few-shot
+//! preambles); recomputing them per request wastes exactly the compute
+//! MoD exists to avoid spending. A *prefix page* captures everything a
+//! chunk of prompt contributed to a decode row: per layer, the K/V rows,
+//! absolute positions and slot count it deposited in the *compacted*
+//! cache (slot occupancy is part of the state — MoD's routing decisions
+//! decide which tokens deposit K/V at all, so a page is meaningless
+//! without it). Seating a chain of pages into a fresh row
+//! ([`crate::serve::DecodeSession::seat_prefix`]) reproduces the row
+//! bitwise, with zero block executions.
+//!
+//! Pages form hash chains: page `c` covers prompt tokens
+//! `[c*chunk, (c+1)*chunk)` and is keyed by an FNV-1a hash over the whole
+//! prefix through its chunk, parented on the previous chunk's hash.
+//! Lookup walks the chain while pages exist and their stored tokens
+//! verify (hash collisions are checked away), stopping one token short of
+//! the full prompt — at least one token must run through prefill so the
+//! request has last-token logits to sample its first generation from.
+//!
+//! Eviction is LRU by a logical clock, skips pages that are currently
+//! referenced (`Arc::strong_count > 1` — a worker is seating them), and
+//! only runs when an insert would exceed the byte budget. Evicting a
+//! middle page orphans its descendants (lookup stops at the gap); they
+//! age out by the same LRU rule.
+//!
+//! Every statistic has a paired series in the process-global metrics
+//! registry (`prefix_cache_*`), so `GET /metrics` and
+//! [`PrefixCache::stats`] cannot drift.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::metrics::{self, Counter, Gauge};
+
+/// FNV-1a 64-bit offset basis — the hash of the empty prefix, used as the
+/// chain parent of the first chunk.
+pub const ROOT_HASH: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend an FNV-1a prefix hash over `tokens` (little-endian bytes).
+pub fn extend_hash(mut hash: u64, tokens: &[i32]) -> u64 {
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            hash ^= u64::from(b);
+            hash = hash.wrapping_mul(FNV_PRIME);
+        }
+    }
+    hash
+}
+
+/// One layer's contribution of one prompt chunk to a compacted cache:
+/// the K/V rows and absolute positions of the slots the chunk's routed
+/// tokens deposited (`pos.len()` slots; `k`/`v` are `[slots, kd]`).
+/// Validity lanes are implicit — an allocated slot is always written.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerChunk {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub pos: Vec<i32>,
+}
+
+/// One chunk of cached prompt prefix (see module docs).
+#[derive(Debug, Clone)]
+pub struct PrefixPage {
+    /// FNV-1a hash of the whole prompt prefix through this chunk.
+    pub hash: u64,
+    /// Hash of the previous chunk's page ([`ROOT_HASH`] for the first).
+    pub parent: u64,
+    /// This chunk's prompt tokens — verified on lookup so a hash
+    /// collision can never seat another prompt's cache.
+    pub tokens: Vec<i32>,
+    /// Total prompt tokens covered by the chain through this page.
+    pub n_prefix: usize,
+    /// Per model layer, in layer order.
+    pub layers: Vec<LayerChunk>,
+}
+
+impl PrefixPage {
+    /// Heap bytes this page pins (budget accounting).
+    pub fn bytes(&self) -> usize {
+        let layer_bytes: usize = self
+            .layers
+            .iter()
+            .map(|l| 4 * (l.k.len() + l.v.len() + l.pos.len()))
+            .sum();
+        layer_bytes + 4 * self.tokens.len() + std::mem::size_of::<Self>()
+    }
+}
+
+/// Point-in-time statistics snapshot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrefixCacheStats {
+    /// Lookups that found at least one chunk.
+    pub hits: u64,
+    /// Lookups that found nothing.
+    pub misses: u64,
+    /// Pages accepted by [`PrefixCache::insert`].
+    pub inserts: u64,
+    /// Pages evicted to make room.
+    pub evictions: u64,
+    /// Prompt tokens whose prefill was skipped via cache hits.
+    pub tokens_reused: u64,
+    /// Bytes currently resident.
+    pub bytes: usize,
+    /// Pages currently resident.
+    pub pages: usize,
+}
+
+struct PrefixMetrics {
+    hits: &'static Counter,
+    misses: &'static Counter,
+    inserts: &'static Counter,
+    evictions: &'static Counter,
+    tokens_reused: &'static Counter,
+    bytes: &'static Gauge,
+    pages: &'static Gauge,
+}
+
+fn prefix_metrics() -> &'static PrefixMetrics {
+    static M: std::sync::OnceLock<PrefixMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| PrefixMetrics {
+        hits: metrics::counter(
+            "prefix_cache_hits_total",
+            "Prompt-prefix lookups that reused at least one cached chunk",
+        ),
+        misses: metrics::counter(
+            "prefix_cache_misses_total",
+            "Prompt-prefix lookups that found no cached chunk",
+        ),
+        inserts: metrics::counter(
+            "prefix_cache_inserts_total",
+            "Prefix pages inserted into the cache",
+        ),
+        evictions: metrics::counter(
+            "prefix_cache_evictions_total",
+            "Prefix pages evicted by the LRU byte budget",
+        ),
+        tokens_reused: metrics::counter(
+            "prefix_cache_tokens_reused_total",
+            "Prompt tokens whose prefill was skipped via prefix-cache hits",
+        ),
+        bytes: metrics::gauge(
+            "prefix_cache_bytes",
+            "Bytes of prefix pages currently resident",
+        ),
+        pages: metrics::gauge(
+            "prefix_cache_pages",
+            "Prefix pages currently resident",
+        ),
+    })
+}
+
+struct Entry {
+    page: Arc<PrefixPage>,
+    /// Logical LRU clock value at last lookup/insert.
+    last_used: u64,
+}
+
+struct Inner {
+    pages: HashMap<u64, Entry>,
+    bytes: usize,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    inserts: u64,
+    evictions: u64,
+    tokens_reused: u64,
+}
+
+/// The shared, thread-safe prefix-page pool (one per [`super::Engine`]).
+pub struct PrefixCache {
+    chunk: usize,
+    budget: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PrefixCache {
+    /// `chunk` = prompt tokens per page (the engine's prefill chunk size);
+    /// `budget_bytes` = resident-page byte cap.
+    pub fn new(chunk: usize, budget_bytes: usize) -> Self {
+        Self {
+            chunk: chunk.max(1),
+            budget: budget_bytes,
+            inner: Mutex::new(Inner {
+                pages: HashMap::new(),
+                bytes: 0,
+                clock: 0,
+                hits: 0,
+                misses: 0,
+                inserts: 0,
+                evictions: 0,
+                tokens_reused: 0,
+            }),
+        }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The longest cached chain covering a prefix of `prompt`, in chunk
+    /// order; empty on a miss. The walk stops one token short of the full
+    /// prompt (the request's first sampled token needs live logits), at
+    /// the first missing/mismatching page, and at any partial chunk.
+    /// Returned pages are pinned against eviction by their refcount until
+    /// the caller drops them (seat, then drop).
+    pub fn lookup(&self, prompt: &[i32]) -> Vec<Arc<PrefixPage>> {
+        let mut inner = self.lock();
+        let m = prefix_metrics();
+        let mut found = Vec::new();
+        let mut hash = ROOT_HASH;
+        let mut covered = 0usize;
+        let max_cover = prompt.len().saturating_sub(1);
+        while covered + self.chunk <= max_cover {
+            let next = extend_hash(hash, &prompt[covered..covered + self.chunk]);
+            inner.clock += 1;
+            let clock = inner.clock;
+            match inner.pages.get_mut(&next) {
+                Some(e)
+                    if e.page.tokens[..]
+                        == prompt[covered..covered + self.chunk] =>
+                {
+                    e.last_used = clock;
+                    found.push(Arc::clone(&e.page));
+                    hash = next;
+                    covered += self.chunk;
+                }
+                _ => break,
+            }
+        }
+        if found.is_empty() {
+            inner.misses += 1;
+            m.misses.inc();
+        } else {
+            inner.hits += 1;
+            inner.tokens_reused += covered as u64;
+            m.hits.inc();
+            m.tokens_reused.add(covered as u64);
+        }
+        found
+    }
+
+    /// Offer a page. Returns `false` (and drops it) when a page with the
+    /// same hash is already resident, when the page alone exceeds the
+    /// whole budget, or when the budget can't be met because every
+    /// evictable page is pinned by in-flight seats.
+    pub fn insert(&self, page: PrefixPage) -> bool {
+        let size = page.bytes();
+        if size > self.budget {
+            return false;
+        }
+        let mut inner = self.lock();
+        let m = prefix_metrics();
+        if inner.pages.contains_key(&page.hash) {
+            return false;
+        }
+        while inner.bytes + size > self.budget {
+            // LRU victim among unpinned pages
+            let victim = inner
+                .pages
+                .iter()
+                .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&h, _)| h);
+            match victim {
+                Some(h) => {
+                    let e = inner.pages.remove(&h).unwrap();
+                    inner.bytes -= e.page.bytes();
+                    inner.evictions += 1;
+                    m.evictions.inc();
+                }
+                None => {
+                    m.bytes.set(inner.bytes as f64);
+                    m.pages.set(inner.pages.len() as f64);
+                    return false; // everything resident is pinned
+                }
+            }
+        }
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.bytes += size;
+        inner.inserts += 1;
+        inner
+            .pages
+            .insert(page.hash, Entry { page: Arc::new(page), last_used: clock });
+        m.inserts.inc();
+        m.bytes.set(inner.bytes as f64);
+        m.pages.set(inner.pages.len() as f64);
+        true
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        let inner = self.lock();
+        PrefixCacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            inserts: inner.inserts,
+            evictions: inner.evictions,
+            tokens_reused: inner.tokens_reused,
+            bytes: inner.bytes,
+            pages: inner.pages.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn page(
+        parent: u64,
+        tokens: Vec<i32>,
+        n_prefix: usize,
+        slots: usize,
+    ) -> PrefixPage {
+        PrefixPage {
+            hash: extend_hash(parent, &tokens),
+            parent,
+            tokens,
+            n_prefix,
+            layers: vec![LayerChunk {
+                k: vec![0.5; slots * 8],
+                v: vec![0.25; slots * 8],
+                pos: (0..slots as i32).collect(),
+            }],
+        }
+    }
+
+    #[test]
+    fn chain_lookup_walks_full_chunks_and_stops_short_of_prompt_end() {
+        let c = PrefixCache::new(4, 1 << 20);
+        let prompt: Vec<i32> = (10..30).collect(); // 20 tokens, 5 chunks
+        let p0 = page(ROOT_HASH, prompt[0..4].to_vec(), 4, 3);
+        let h0 = p0.hash;
+        let p1 = page(h0, prompt[4..8].to_vec(), 8, 2);
+        assert!(c.insert(p0));
+        assert!(c.insert(p1));
+
+        let hit = c.lookup(&prompt);
+        assert_eq!(hit.len(), 2);
+        assert_eq!(hit[1].n_prefix, 8);
+
+        // a prompt that IS the cached prefix plus nothing may not be fully
+        // covered: the last chunk is held back so one token stays live
+        let exact: Vec<i32> = (10..18).collect(); // 8 tokens = 2 chunks
+        let hit = c.lookup(&exact);
+        assert_eq!(hit.len(), 1, "must leave >= 1 token for live logits");
+
+        let s = c.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.tokens_reused, 8 + 4);
+    }
+
+    #[test]
+    fn lookup_verifies_tokens_not_just_hashes() {
+        let c = PrefixCache::new(2, 1 << 20);
+        let mut p = page(ROOT_HASH, vec![1, 2], 2, 1);
+        // forge a page whose hash claims tokens [3, 4]
+        p.hash = extend_hash(ROOT_HASH, &[3, 4]);
+        assert!(c.insert(p));
+        assert!(c.lookup(&[3, 4, 5, 6]).is_empty(), "collision must miss");
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn chain_gap_stops_the_walk() {
+        let c = PrefixCache::new(2, 1 << 20);
+        let p0 = page(ROOT_HASH, vec![1, 2], 2, 2);
+        let h0 = p0.hash;
+        let p1 = page(h0, vec![3, 4], 4, 2);
+        let h1 = p1.hash;
+        let p2 = page(h1, vec![5, 6], 6, 2);
+        // insert chunks 0 and 2 but NOT 1: the walk must stop after 0
+        assert!(c.insert(p0));
+        assert!(c.insert(p2));
+        let hit = c.lookup(&[1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(hit.len(), 1);
+        assert_eq!(hit[0].n_prefix, 2);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_first() {
+        let p0 = page(ROOT_HASH, vec![1, 2], 2, 4);
+        let p1 = page(ROOT_HASH, vec![3, 4], 2, 4);
+        let p2 = page(ROOT_HASH, vec![5, 6], 2, 4);
+        let budget = p0.bytes() + p1.bytes();
+        let c = PrefixCache::new(2, budget);
+        assert!(c.insert(p0));
+        assert!(c.insert(p1));
+        // touch p0 so p1 becomes the LRU victim
+        assert_eq!(c.lookup(&[1, 2, 99]).len(), 1);
+        assert!(c.insert(p2));
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.pages, 2);
+        assert!(s.bytes <= budget);
+        assert_eq!(c.lookup(&[1, 2, 99]).len(), 1, "MRU page survived");
+        assert!(c.lookup(&[3, 4, 99]).is_empty(), "LRU page evicted");
+    }
+
+    #[test]
+    fn pinned_pages_are_not_evicted() {
+        let p0 = page(ROOT_HASH, vec![1, 2], 2, 4);
+        let p1 = page(ROOT_HASH, vec![3, 4], 2, 4);
+        let budget = p0.bytes();
+        let c = PrefixCache::new(2, budget);
+        assert!(c.insert(p0));
+        // hold the Arc like a worker mid-seat: refcount pins the page
+        let pinned = c.lookup(&[1, 2, 99]);
+        assert_eq!(pinned.len(), 1);
+        assert!(!c.insert(p1), "no evictable victim while pinned");
+        assert_eq!(c.stats().evictions, 0);
+        drop(pinned);
+        let p1 = page(ROOT_HASH, vec![3, 4], 2, 4);
+        assert!(c.insert(p1), "evictable once the seat finished");
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_and_duplicate_pages_are_rejected() {
+        let p = page(ROOT_HASH, vec![1, 2], 2, 4);
+        let c = PrefixCache::new(2, p.bytes() - 1);
+        assert!(!c.insert(p), "page larger than the whole budget");
+
+        let c = PrefixCache::new(2, 1 << 20);
+        let p = page(ROOT_HASH, vec![1, 2], 2, 4);
+        let dup = p.clone();
+        assert!(c.insert(p));
+        assert!(!c.insert(dup), "same hash already resident");
+        assert_eq!(c.stats().inserts, 1);
+    }
+
+    #[test]
+    fn short_prompts_never_hit() {
+        let c = PrefixCache::new(8, 1 << 20);
+        let p = page(ROOT_HASH, (0..8).collect(), 8, 4);
+        assert!(c.insert(p));
+        // 8-token prompt: the only chunk would cover the whole prompt
+        let hit = c.lookup(&(0..8).collect::<Vec<i32>>());
+        assert!(hit.is_empty());
+        // 1-token and empty prompts can't cover a chunk at all
+        assert!(c.lookup(&[0]).is_empty());
+        assert!(c.lookup(&[]).is_empty());
+    }
+
+    #[test]
+    fn extend_hash_is_order_and_boundary_sensitive() {
+        let a = extend_hash(ROOT_HASH, &[1, 2, 3]);
+        let b = extend_hash(ROOT_HASH, &[3, 2, 1]);
+        assert_ne!(a, b);
+        let chained = extend_hash(extend_hash(ROOT_HASH, &[1]), &[2, 3]);
+        assert_eq!(a, chained, "hash must compose across chunk boundaries");
+    }
+}

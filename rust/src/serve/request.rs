@@ -49,6 +49,11 @@ pub struct GenerateParams {
     /// Relative deadline from submission; a request that exceeds it (in
     /// queue or mid-decode) fails with [`ServeErrorKind::DeadlineExceeded`].
     pub deadline: Option<Duration>,
+    /// Opt out of the engine's shared-prefix KV cache for this request
+    /// (`false` = neither reuse cached prefix pages nor publish new
+    /// ones). Irrelevant when the engine runs without a cache; the token
+    /// stream is bitwise identical either way.
+    pub prefix_cache: bool,
 }
 
 impl GenerateParams {
@@ -61,6 +66,7 @@ impl GenerateParams {
             seed: 0,
             stop_tokens: Vec::new(),
             deadline: None,
+            prefix_cache: true,
         }
     }
 
@@ -96,6 +102,11 @@ impl GenerateParams {
 
     pub fn deadline_ms(self, ms: u64) -> Self {
         self.deadline(Duration::from_millis(ms))
+    }
+
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.prefix_cache = on;
+        self
     }
 }
 
@@ -301,7 +312,8 @@ mod tests {
             .top_k(3)
             .seed(42)
             .stop_token(7)
-            .deadline_ms(100);
+            .deadline_ms(100)
+            .prefix_cache(false);
         assert_eq!(p.prompt, vec![1, 2]);
         assert_eq!(p.max_new, 9);
         assert!((p.temperature - 0.5).abs() < 1e-12);
@@ -309,6 +321,8 @@ mod tests {
         assert_eq!(p.seed, 42);
         assert_eq!(p.stop_tokens, vec![7]);
         assert_eq!(p.deadline, Some(Duration::from_millis(100)));
+        assert!(!p.prefix_cache);
+        assert!(GenerateParams::new(vec![]).prefix_cache, "default on");
     }
 
     #[test]

@@ -19,9 +19,13 @@ use std::time::Instant;
 use crate::config::{FfMode, ModelConfig};
 use crate::flops;
 use crate::runtime::native::ops;
+use crate::runtime::native::prefill::{
+    block_prefill_chunk, PrefillBlock, PrefillFf,
+};
 use crate::runtime::{Backend, Bundle, Executable, Tensor, Value};
 
 use super::kv_cache::{CacheStats, LayerKvCache};
+use super::prefix_cache::{LayerChunk, PrefixPage};
 
 /// How the coordinator decides participation at decode time (paper §3.5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,6 +43,18 @@ pub enum RoutingDecision {
 #[derive(Debug, Clone, Default)]
 pub struct StepTrace {
     pub routed: HashMap<usize, (f32, bool)>,
+}
+
+/// Outcome of one [`DecodeSession::prefill_chunk`] call.
+#[derive(Debug, Clone)]
+pub struct PrefillOutcome {
+    /// Logits of the chunk's last token, `[vocab]` — present when the
+    /// caller asked for them (the final prompt chunk: the first generated
+    /// token is sampled from these).
+    pub logits_last: Option<Vec<f32>>,
+    /// Per layer, the half-open cache-slot range `[lo, hi)` this chunk
+    /// deposited in the row's compacted cache (for prefix-page capture).
+    pub layer_spans: Vec<(usize, usize)>,
 }
 
 /// Counters for one decode step.
@@ -60,13 +76,22 @@ pub struct SessionReport {
     pub capacity_drops: u64,
     pub total_flops: f64,
     pub wall_s: f64,
+    /// Decode tokens only: tokens whose logits were actually sampled
+    /// from. Prompt-ingestion tokens are counted separately in
+    /// [`Self::prefill_tokens`] so `tokens_per_sec` can't be inflated by
+    /// prefill steps whose logits are discarded.
     pub tokens_generated: u64,
+    /// Prompt tokens ingested (per-token prefill steps + chunked prefill).
+    pub prefill_tokens: u64,
+    /// Chunked-prefill invocations ([`DecodeSession::prefill_chunk`]).
+    pub prefill_chunks: u64,
     pub cache_stats: Vec<CacheStats>,
 }
 
 impl SessionReport {
-    /// 0.0 (never NaN/inf) when no tokens were generated or no wall time
-    /// elapsed — same degenerate-input contract as
+    /// Decode throughput: generated tokens (prefill excluded) over wall
+    /// time. 0.0 (never NaN/inf) when no tokens were generated or no wall
+    /// time elapsed — same degenerate-input contract as
     /// `EngineStats::tokens_per_sec`.
     pub fn tokens_per_sec(&self) -> f64 {
         if self.tokens_generated == 0 || self.wall_s <= 0.0 {
@@ -79,6 +104,35 @@ impl SessionReport {
         let total = self.blocks_invoked + self.blocks_skipped;
         self.blocks_skipped as f64 / total.max(1) as f64
     }
+}
+
+/// Host-side feedforward weights for the chunked-prefill kernel.
+enum HostFf {
+    Dense { w1: Vec<f32>, w2: Vec<f32> },
+    Moe { router: Vec<f32>, w1: Vec<f32>, w2: Vec<f32> },
+}
+
+/// Host-side copy of one block's weights (chunked prefill runs as
+/// coordinator math on the worker pool, not as a backend dispatch — the
+/// same design as the host-side `router_w`/`pred` copies below).
+struct HostLayer {
+    attn_norm: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    mlp_norm: Vec<f32>,
+    ff: HostFf,
+}
+
+/// Host-side model copy backing [`DecodeSession::prefill_chunk`].
+struct HostModel {
+    embed: Vec<f32>,
+    final_norm: Vec<f32>,
+    /// RoPE frequency table — identical to the one baked into the decode
+    /// executables, so chunked prefill rotates bitwise-identically.
+    freqs: Vec<f32>,
+    layers: Vec<HostLayer>,
 }
 
 struct LayerState {
@@ -109,6 +163,7 @@ pub struct DecodeSession {
     embed_val: Value,
     final_norm_val: Value,
     layers: Vec<LayerState>,
+    host: HostModel,
     /// next position per batch row.
     pos: Vec<i32>,
     report: SessionReport,
@@ -140,6 +195,7 @@ impl DecodeSession {
         let final_norm_val = backend.upload(&params[final_norm_idx])?;
 
         let mut layers = Vec::with_capacity(cfg.n_layers);
+        let mut host_layers = Vec::with_capacity(cfg.n_layers);
         let mut block_exes: HashMap<usize, Arc<dyn Executable>> = HashMap::new();
         for l in 0..cfg.n_layers {
             let idx = bundle.layer_param_indices(l);
@@ -182,6 +238,25 @@ impl DecodeSession {
             } else {
                 None
             };
+            host_layers.push(HostLayer {
+                attn_norm: host("attn_norm")?,
+                wq: host("wq")?,
+                wk: host("wk")?,
+                wv: host("wv")?,
+                wo: host("wo")?,
+                mlp_norm: host("mlp_norm")?,
+                ff: match cfg.ff_mode {
+                    FfMode::Dense => HostFf::Dense {
+                        w1: host("w1")?,
+                        w2: host("w2")?,
+                    },
+                    FfMode::Moe | FfMode::ModeIntegrated => HostFf::Moe {
+                        router: host("moe_router")?,
+                        w1: host("moe_w1")?,
+                        w2: host("moe_w2")?,
+                    },
+                },
+            });
             let cache = [
                 backend.upload(&Tensor::zeros_f32(vec![batch, cache_len, kd]))?,
                 backend.upload(&Tensor::zeros_f32(vec![batch, cache_len, kd]))?,
@@ -199,6 +274,13 @@ impl DecodeSession {
             });
         }
 
+        let host = HostModel {
+            embed: params[embed_idx].as_f32()?.to_vec(),
+            final_norm: params[final_norm_idx].as_f32()?.to_vec(),
+            freqs: ops::rope_freqs(cfg.d_head, cfg.rope_theta),
+            layers: host_layers,
+        };
+
         Ok(Self {
             embed_exe: bundle.embed_step(batch)?,
             logits_exe: bundle.logits_head(batch)?,
@@ -206,6 +288,7 @@ impl DecodeSession {
             embed_val,
             final_norm_val,
             layers,
+            host,
             pos: vec![0; batch],
             cfg,
             batch,
@@ -247,8 +330,30 @@ impl DecodeSession {
     /// Advance every row by one token. `active[b]` = row still generating
     /// (inactive rows are routed around every routed block and their
     /// logits ignored). Returns the logits, row-major [batch, vocab].
+    ///
+    /// Every active token is counted as a *decode* token; use
+    /// [`Self::step_mixed`] when some rows are ingesting prompt tokens so
+    /// the report's throughput split stays honest.
     pub fn step(&mut self, tokens: &[i32], active: &[bool]) -> crate::Result<Vec<f32>> {
-        crate::ensure!(tokens.len() == self.batch && active.len() == self.batch);
+        let prefill = vec![false; active.len()];
+        self.step_mixed(tokens, active, &prefill)
+    }
+
+    /// [`Self::step`] with a per-row prompt-ingestion marker: rows with
+    /// `prefill[b]` set are active (they deposit K/V and advance) but
+    /// their logits are discarded by the caller, so they count toward
+    /// [`SessionReport::prefill_tokens`] instead of `tokens_generated`.
+    pub fn step_mixed(
+        &mut self,
+        tokens: &[i32],
+        active: &[bool],
+        prefill: &[bool],
+    ) -> crate::Result<Vec<f32>> {
+        crate::ensure!(
+            tokens.len() == self.batch
+                && active.len() == self.batch
+                && prefill.len() == self.batch
+        );
         let t0 = Instant::now();
         let mut stats = StepStats::default();
         self.last_trace = StepTrace::default();
@@ -329,7 +434,9 @@ impl DecodeSession {
                     .unwrap_or(0),
             );
             participates_any.push(any);
-            if self.layers[li].routed {
+            // trace only a *live* row 0 — a released row's PAD-token gate
+            // values would poison fig-5 analysis tooling
+            if self.layers[li].routed && active[0] {
                 self.last_trace
                     .routed
                     .insert(li, (gates[0], part_f[0] > 0.5));
@@ -375,12 +482,21 @@ impl DecodeSession {
         let logits = self.backend.download(&outs[0])?;
 
         // --- accounting (per active token, batch-aggregated) ---
-        let n_active = active.iter().filter(|&&a| a).count() as f64;
-        stats.flops = n_active
+        let n_active = active.iter().filter(|&&a| a).count() as u64;
+        let n_prefill = active
+            .iter()
+            .zip(prefill)
+            .filter(|&(&a, &p)| a && p)
+            .count() as u64;
+        stats.flops = n_active as f64
             * flops::decode_step_flops(&self.cfg, &ctx_per_layer, &participates_any);
 
-        for p in self.pos.iter_mut() {
-            *p += 1;
+        // only active rows advance: a row mid-chunked-prefill (or released)
+        // must not have its position disturbed by other rows' decode steps
+        for (b, p) in self.pos.iter_mut().enumerate() {
+            if active[b] {
+                *p += 1;
+            }
         }
         stats.wall_us = t0.elapsed().as_micros();
 
@@ -390,9 +506,233 @@ impl DecodeSession {
         self.report.capacity_drops += stats.capacity_drops as u64;
         self.report.total_flops += stats.flops;
         self.report.wall_s += stats.wall_us as f64 / 1e6;
-        self.report.tokens_generated += n_active as u64;
+        self.report.tokens_generated += n_active - n_prefill;
+        self.report.prefill_tokens += n_prefill;
 
         Ok(logits.as_f32()?.to_vec())
+    }
+
+    /// Ingest a chunk of `row`'s prompt in one parallel pass, starting at
+    /// the row's current position: per layer, routing decisions + slot
+    /// allocation run serially in token order (so capacity drops land on
+    /// the same tokens as sequential decode would) and the heavy math runs
+    /// parallel-per-token through the chunk kernel, writing K/V straight
+    /// into the row's compacted cache slab. Other rows are untouched, so
+    /// the scheduler can interleave these calls with decode steps.
+    ///
+    /// Bitwise contract: after this call the row's cache lanes, position
+    /// and (when `need_logits`) last-token logits are identical to feeding
+    /// the same tokens one per [`Self::step`] — pinned by kernel tests and
+    /// the warm/cold serving property tests.
+    ///
+    /// `layer_spans[li]` in the outcome is the half-open slot range this
+    /// chunk deposited in layer `li` — the engine uses it to extract
+    /// shared-prefix pages.
+    pub fn prefill_chunk(
+        &mut self,
+        row: usize,
+        tokens: &[i32],
+        need_logits: bool,
+    ) -> crate::Result<PrefillOutcome> {
+        crate::ensure!(
+            row < self.batch,
+            "prefill_chunk: row {row} out of batch {}",
+            self.batch
+        );
+        crate::ensure!(!tokens.is_empty(), "prefill_chunk: empty chunk");
+        let t0 = Instant::now();
+        let d = self.cfg.d_model;
+        let kd = self.cfg.n_heads * self.cfg.d_head;
+        let vocab = self.cfg.vocab_size;
+        let t = tokens.len();
+        let n_layers = self.layers.len();
+        let start = self.pos[row];
+
+        // embedding — same math as the embed executable, per-token
+        let sqrt_d = (d as f32).sqrt();
+        let mut h = vec![0f32; t * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            crate::ensure!(
+                tok >= 0 && (tok as usize) < vocab,
+                "token {tok} out of vocab"
+            );
+            let e = &self.host.embed[tok as usize * d..(tok as usize + 1) * d];
+            for j in 0..d {
+                h[i * d + j] = e[j] * sqrt_d;
+            }
+        }
+        let pos: Vec<i32> = (0..t as i32).map(|i| start + i).collect();
+
+        let mut stats = StepStats::default();
+        let mut layer_spans = Vec::with_capacity(n_layers);
+        // per-token context/participation so the flop count is the exact
+        // sum of what per-token decode steps would have reported
+        let mut ctx_tok = vec![vec![0usize; n_layers]; t];
+        let mut part_tok = vec![vec![false; n_layers]; t];
+
+        for li in 0..n_layers {
+            // --- routing over the chunk (row-independent host kernels:
+            // identical per-token results to the decode path) ---
+            let (gates, decide) = if self.layers[li].routed {
+                let router_w = self.layers[li].router_w.as_ref().unwrap();
+                let scores = ops::router_scores(&h, router_w, t, d);
+                let decide: Vec<bool> = match self.decision {
+                    RoutingDecision::AlwaysOn => vec![true; t],
+                    RoutingDecision::RouterThreshold => {
+                        scores.iter().map(|&s| s > 0.0).collect()
+                    }
+                    RoutingDecision::Predictor => {
+                        let (w1, b1, w2) =
+                            self.layers[li].pred.as_ref().ok_or_else(|| {
+                                crate::err!(
+                                    "predictor routing requested but bundle \
+                                     has no predictor params"
+                                )
+                            })?;
+                        ops::predictor_logits(&h, w1, b1, w2, t, d)
+                            .iter()
+                            .map(|&logit| logit > 0.0)
+                            .collect()
+                    }
+                };
+                (scores, decide)
+            } else {
+                (vec![1.0; t], vec![true; t])
+            };
+
+            // --- serial slot allocation in token order (drop parity) ---
+            let span_lo = self.layers[li].book.used(row);
+            let mut part_f = vec![0f32; t];
+            let mut slots = vec![0i32; t];
+            let mut any = false;
+            for i in 0..t {
+                if decide[i] {
+                    match self.layers[li].book.try_alloc(row) {
+                        Some(slot) => {
+                            part_f[i] = 1.0;
+                            slots[i] = slot as i32;
+                            part_tok[i][li] = true;
+                            any = true;
+                        }
+                        None => stats.capacity_drops += 1,
+                    }
+                }
+                ctx_tok[i][li] = self.layers[li].book.used(row);
+            }
+            let span_hi = self.layers[li].book.used(row);
+            layer_spans.push((span_lo, span_hi));
+
+            if !any {
+                stats.blocks_skipped += 1;
+                continue; // whole chunk routed around this block
+            }
+            stats.blocks_invoked += 1;
+
+            // --- chunk kernel over the row's cache slab ---
+            let cl = self.layers[li].cache_len;
+            let DecodeSession { layers, host, cfg, backend, batch, .. } =
+                self;
+            let layer = &mut layers[li];
+            let hostl = &host.layers[li];
+            let blk = PrefillBlock {
+                h: &h,
+                pos: &pos,
+                gate: &gates,
+                part: &part_f,
+                slot: &slots,
+                attn_norm: &hostl.attn_norm,
+                wq: &hostl.wq,
+                wk: &hostl.wk,
+                wv: &hostl.wv,
+                wo: &hostl.wo,
+                mlp_norm: &hostl.mlp_norm,
+                ff: match &hostl.ff {
+                    HostFf::Dense { w1, w2 } => PrefillFf::Dense { w1, w2 },
+                    HostFf::Moe { router, w1, w2 } => {
+                        PrefillFf::Moe { router, w1, w2 }
+                    }
+                },
+            };
+            h = if layer.cache[0].as_host().is_some() {
+                // host-resident caches: mutate the row's slab in place
+                let [ckv, cvv, cpv, cwv] = &mut layer.cache;
+                let ck = &mut ckv
+                    .as_host_mut()
+                    .unwrap()
+                    .as_f32_mut()?[row * cl * kd..(row + 1) * cl * kd];
+                let cv = &mut cvv
+                    .as_host_mut()
+                    .unwrap()
+                    .as_f32_mut()?[row * cl * kd..(row + 1) * cl * kd];
+                let cp = &mut cpv
+                    .as_host_mut()
+                    .unwrap()
+                    .as_i32_mut()?[row * cl..(row + 1) * cl];
+                let cw = &mut cwv
+                    .as_host_mut()
+                    .unwrap()
+                    .as_f32_mut()?[row * cl..(row + 1) * cl];
+                block_prefill_chunk(cfg, &host.freqs, cl, &blk, ck, cv, cp, cw)?
+            } else {
+                // device caches: download, run on the row's slab, upload
+                let mut ckh =
+                    backend.download(&layer.cache[0])?.as_f32()?.to_vec();
+                let mut cvh =
+                    backend.download(&layer.cache[1])?.as_f32()?.to_vec();
+                let mut cph =
+                    backend.download(&layer.cache[2])?.as_i32()?.to_vec();
+                let mut cwh =
+                    backend.download(&layer.cache[3])?.as_f32()?.to_vec();
+                let out = block_prefill_chunk(
+                    cfg,
+                    &host.freqs,
+                    cl,
+                    &blk,
+                    &mut ckh[row * cl * kd..(row + 1) * cl * kd],
+                    &mut cvh[row * cl * kd..(row + 1) * cl * kd],
+                    &mut cph[row * cl..(row + 1) * cl],
+                    &mut cwh[row * cl..(row + 1) * cl],
+                )?;
+                let b = *batch;
+                layer.cache[0] = backend
+                    .upload(&Tensor::f32(vec![b, cl, kd], ckh))?;
+                layer.cache[1] = backend
+                    .upload(&Tensor::f32(vec![b, cl, kd], cvh))?;
+                layer.cache[2] =
+                    backend.upload(&Tensor::i32(vec![b, cl], cph))?;
+                layer.cache[3] =
+                    backend.upload(&Tensor::f32(vec![b, cl], cwh))?;
+                out
+            };
+        }
+
+        // last-token logits — same math as the logits executable, which is
+        // row-independent, so computing only the final row is bitwise-safe
+        let logits_last = if need_logits {
+            let hl = &h[(t - 1) * d..t * d];
+            let (xn, _) = ops::rmsnorm(hl, &self.host.final_norm, 1, d);
+            Some(ops::matmul_nt(&xn, &self.host.embed, 1, d, vocab))
+        } else {
+            None
+        };
+
+        self.pos[row] += t as i32;
+
+        stats.flops = (0..t)
+            .map(|i| {
+                flops::decode_step_flops(&self.cfg, &ctx_tok[i], &part_tok[i])
+            })
+            .sum();
+        stats.wall_us = t0.elapsed().as_micros();
+        self.report.prefill_chunks += 1;
+        self.report.prefill_tokens += t as u64;
+        self.report.blocks_invoked += stats.blocks_invoked as u64;
+        self.report.blocks_skipped += stats.blocks_skipped as u64;
+        self.report.capacity_drops += stats.capacity_drops as u64;
+        self.report.total_flops += stats.flops;
+        self.report.wall_s += stats.wall_us as f64 / 1e6;
+
+        Ok(PrefillOutcome { logits_last, layer_spans })
     }
 
     /// Free `row`'s KV-cache slots in every layer and reset its
@@ -472,6 +812,185 @@ impl DecodeSession {
             layer.book.admit_row(row);
         }
         self.pos[row] = 0;
+        Ok(())
+    }
+
+    /// Seat an admitted row with the cache state of a shared-prefix page
+    /// chain: per layer the pages' K/V/pos slabs fill the row's leading
+    /// slots (validity raised, write head moved past them) and the row's
+    /// position jumps to the prefix length. The seated row is bitwise
+    /// identical to one that prefilled those tokens itself — with zero
+    /// block executions. Returns the number of prompt tokens covered.
+    pub fn seat_prefix(
+        &mut self,
+        row: usize,
+        pages: &[Arc<PrefixPage>],
+    ) -> crate::Result<usize> {
+        crate::ensure!(
+            row < self.batch,
+            "seat_prefix: row {row} out of batch {}",
+            self.batch
+        );
+        if pages.is_empty() {
+            return Ok(0);
+        }
+        let kd = self.cfg.n_heads * self.cfg.d_head;
+        let n_layers = self.layers.len();
+        for page in pages {
+            crate::ensure!(
+                page.layers.len() == n_layers,
+                "prefix page has {} layers, session has {n_layers}",
+                page.layers.len()
+            );
+        }
+        crate::ensure!(
+            self.pos[row] == 0
+                && self.layers.iter().all(|l| l.book.used(row) == 0),
+            "seat_prefix: row {row} is live (release + admit it first)"
+        );
+
+        for li in 0..n_layers {
+            let cl = self.layers[li].cache_len;
+            // assemble the row's leading slots from the chain, in order
+            let mut kh: Vec<f32> = Vec::new();
+            let mut vh: Vec<f32> = Vec::new();
+            let mut ph: Vec<i32> = Vec::new();
+            for page in pages {
+                kh.extend_from_slice(&page.layers[li].k);
+                vh.extend_from_slice(&page.layers[li].v);
+                ph.extend_from_slice(&page.layers[li].pos);
+            }
+            let used = ph.len();
+            crate::ensure!(
+                kh.len() == used * kd && vh.len() == used * kd,
+                "corrupt prefix page (layer {li})"
+            );
+            crate::ensure!(
+                used <= cl,
+                "prefix chain needs {used} slots but layer {li} has {cl}"
+            );
+            if used > 0 {
+                let wh = vec![1.0f32; used]; // allocated ⟹ written
+                self.write_row_lane_f32(li, 0, row, cl * kd, &kh)?;
+                self.write_row_lane_f32(li, 1, row, cl * kd, &vh)?;
+                self.write_row_lane_i32(li, 2, row, cl, &ph)?;
+                self.write_row_lane_f32(li, 3, row, cl, &wh)?;
+            }
+            self.layers[li].book.seat_row(row, used);
+        }
+        let n_prefix = pages.last().unwrap().n_prefix;
+        self.pos[row] = n_prefix as i32;
+        Ok(n_prefix)
+    }
+
+    /// Copy a prefill chunk's cache contributions out of `row` into
+    /// prefix-page layer chunks (`spans` from [`PrefillOutcome`]).
+    pub fn extract_prefix_layers(
+        &self,
+        row: usize,
+        spans: &[(usize, usize)],
+    ) -> crate::Result<Vec<LayerChunk>> {
+        crate::ensure!(
+            spans.len() == self.layers.len(),
+            "extract_prefix_layers: {} spans for {} layers",
+            spans.len(),
+            self.layers.len()
+        );
+        let kd = self.cfg.n_heads * self.cfg.d_head;
+        let mut out = Vec::with_capacity(spans.len());
+        for (li, &(lo, hi)) in spans.iter().enumerate() {
+            let cl = self.layers[li].cache_len;
+            crate::ensure!(
+                lo <= hi && hi <= cl,
+                "extract_prefix_layers: bad span ({lo}, {hi}) in layer {li}"
+            );
+            let base = row * cl;
+            let k = self.read_row_lane_f32(
+                li, 0, (base + lo) * kd, (base + hi) * kd,
+            )?;
+            let v = self.read_row_lane_f32(
+                li, 1, (base + lo) * kd, (base + hi) * kd,
+            )?;
+            let pos = if let Some(t) = self.layers[li].cache[2].as_host() {
+                t.as_i32()?[base + lo..base + hi].to_vec()
+            } else {
+                self.backend.download(&self.layers[li].cache[2])?.as_i32()?
+                    [base + lo..base + hi]
+                    .to_vec()
+            };
+            out.push(LayerChunk { k, v, pos });
+        }
+        Ok(out)
+    }
+
+    fn read_row_lane_f32(
+        &self,
+        li: usize,
+        lane: usize,
+        lo: usize,
+        hi: usize,
+    ) -> crate::Result<Vec<f32>> {
+        if let Some(t) = self.layers[li].cache[lane].as_host() {
+            Ok(t.as_f32()?[lo..hi].to_vec())
+        } else {
+            Ok(self
+                .backend
+                .download(&self.layers[li].cache[lane])?
+                .as_f32()?[lo..hi]
+                .to_vec())
+        }
+    }
+
+    /// Overwrite the leading `data.len()` elements of `row`'s slab in an
+    /// f32 cache lane (`stride` = elements per row), in place when
+    /// host-resident, download→patch→upload otherwise.
+    fn write_row_lane_f32(
+        &mut self,
+        li: usize,
+        lane: usize,
+        row: usize,
+        stride: usize,
+        data: &[f32],
+    ) -> crate::Result<()> {
+        if let Some(t) = self.layers[li].cache[lane].as_host_mut() {
+            t.as_f32_mut()?[row * stride..row * stride + data.len()]
+                .copy_from_slice(data);
+        } else {
+            let tens = self.backend.download(&self.layers[li].cache[lane])?;
+            let shape = match &tens {
+                Tensor::F32 { shape, .. } => shape.clone(),
+                Tensor::I32 { shape, .. } => shape.clone(),
+            };
+            let mut hh = tens.as_f32()?.to_vec();
+            hh[row * stride..row * stride + data.len()].copy_from_slice(data);
+            self.layers[li].cache[lane] =
+                self.backend.upload(&Tensor::f32(shape, hh))?;
+        }
+        Ok(())
+    }
+
+    fn write_row_lane_i32(
+        &mut self,
+        li: usize,
+        lane: usize,
+        row: usize,
+        stride: usize,
+        data: &[i32],
+    ) -> crate::Result<()> {
+        if let Some(t) = self.layers[li].cache[lane].as_host_mut() {
+            t.as_i32_mut()?[row * stride..row * stride + data.len()]
+                .copy_from_slice(data);
+        } else {
+            let tens = self.backend.download(&self.layers[li].cache[lane])?;
+            let shape = match &tens {
+                Tensor::F32 { shape, .. } => shape.clone(),
+                Tensor::I32 { shape, .. } => shape.clone(),
+            };
+            let mut hh = tens.as_i32()?.to_vec();
+            hh[row * stride..row * stride + data.len()].copy_from_slice(data);
+            self.layers[li].cache[lane] =
+                self.backend.upload(&Tensor::i32(shape, hh))?;
+        }
         Ok(())
     }
 

@@ -985,3 +985,205 @@ fn vanilla_bundle_decodes_without_routing() {
     assert_eq!(alloc, vanilla);
     assert!((ratio - 1.0).abs() < 1e-12);
 }
+
+/// Satellite: the step trace must describe row 0's *current* step only.
+/// A step where row 0 is inactive leaves the trace empty instead of
+/// recording row 0's stale gate values as if it had participated.
+#[test]
+fn step_trace_is_gated_on_row_zero_activity() {
+    let bundle = open("mod_tiny");
+    let params = bundle.init_params().unwrap();
+    let mut session =
+        DecodeSession::new(&bundle, &params, 4, RoutingDecision::RouterThreshold)
+            .unwrap();
+    let routed = bundle.manifest.routed_layers.len();
+    assert!(routed > 0, "test model must have routed layers");
+
+    // row 0 active: the trace covers every routed layer
+    let tr = session
+        .step_traced(&[BOS as i32, BOS as i32, 0, 0], &[true, true, false, false])
+        .unwrap();
+    assert_eq!(tr.routed.len(), routed, "{tr:?}");
+
+    // row 0 inactive: the step ran (row 1 decoded) but the trace is empty
+    let tr = session
+        .step_traced(&[0, 7, 0, 0], &[false, true, false, false])
+        .unwrap();
+    assert!(tr.routed.is_empty(), "inactive row 0 must not be traced: {tr:?}");
+}
+
+/// Tentpole acceptance: a prefix-cache-hit request streams bitwise
+/// identically to its cold run while skipping the cached chunks' work —
+/// proven via counters (`prefill_tokens` drops by exactly the reused
+/// tokens; `blocks_invoked` for cold+warm is strictly below 2× cold) —
+/// at pool widths 1 and 4.
+#[test]
+fn warm_prefix_hit_matches_cold_bitwise_and_skips_cached_chunks() {
+    let bundle = open("mod_tiny");
+    let params = bundle.init_params().unwrap();
+    let decision = RoutingDecision::RouterThreshold;
+    // 9-token prompt over 4-token pages: chunks [0..4) and [4..8) are
+    // cacheable, the final token always runs live (its logits seed the
+    // first sampled token)
+    let prompt = vec![BOS, 3, 1, 4, 1, 5, 9, 2, 6];
+    let req = GenerateParams::new(prompt.clone())
+        .max_new(6)
+        .temperature(0.8)
+        .top_k(8)
+        .seed(77);
+    let cfg = || ServeConfig {
+        workers: 1,
+        prefill_chunk: 4,
+        prefix_cache_bytes: 1 << 20,
+        ..Default::default()
+    };
+    let _guard = pool::knob_guard();
+    for width in [1usize, 4] {
+        pool::with_threads(width, || {
+            // cold-only baseline engine: per-request block cost
+            let engine = Engine::start(
+                bundle.clone(),
+                Arc::new(params.clone()),
+                cfg(),
+                decision,
+            )
+            .unwrap();
+            let cold = engine.generate(req.clone()).unwrap().tokens;
+            let cold_stats = engine.shutdown();
+            assert_eq!(cold_stats.prefix.hits, 0, "{cold_stats:?}");
+            assert_eq!(cold_stats.prefill_tokens, prompt.len() as u64);
+
+            // cold + warm on a fresh engine (fresh cache): the second,
+            // identical request reuses the first one's pages
+            let engine = Engine::start(
+                bundle.clone(),
+                Arc::new(params.clone()),
+                cfg(),
+                decision,
+            )
+            .unwrap();
+            let first = engine.generate(req.clone()).unwrap().tokens;
+            let warm = engine.generate(req.clone()).unwrap().tokens;
+            let stats = engine.shutdown();
+
+            assert_eq!(first, cold, "cold runs diverged at width {width}");
+            assert_eq!(
+                warm, cold,
+                "warm (prefix-hit) stream != cold at width {width}"
+            );
+            assert!(stats.prefix.hits >= 1, "{stats:?}");
+            assert_eq!(
+                stats.prefix.tokens_reused, 8,
+                "both full pages must seat: {stats:?}"
+            );
+            // the warm request ingested only the uncached tail
+            assert_eq!(
+                stats.prefill_tokens,
+                2 * prompt.len() as u64 - stats.prefix.tokens_reused,
+                "{stats:?}"
+            );
+            // and the seated chunks' block executions never ran
+            assert!(
+                stats.blocks_invoked < 2 * cold_stats.blocks_invoked,
+                "warm run re-executed cached blocks: {} vs 2*{}",
+                stats.blocks_invoked,
+                cold_stats.blocks_invoked
+            );
+        });
+    }
+}
+
+/// A request that opts out of the prefix cache neither reuses nor
+/// publishes pages, and still streams identically.
+#[test]
+fn prefix_cache_opt_out_stays_cold_and_bitwise_equal() {
+    let bundle = open("mod_tiny");
+    let params = Arc::new(bundle.init_params().unwrap());
+    let prompt = vec![BOS, 2, 7, 1, 8, 2, 8, 1, 8];
+    let req = GenerateParams::new(prompt.clone()).max_new(4).seed(5);
+    let engine = Engine::start(
+        bundle.clone(),
+        params,
+        ServeConfig {
+            workers: 1,
+            prefill_chunk: 4,
+            prefix_cache_bytes: 1 << 20,
+            ..Default::default()
+        },
+        RoutingDecision::RouterThreshold,
+    )
+    .unwrap();
+    let a = engine
+        .generate(req.clone().prefix_cache(false))
+        .unwrap()
+        .tokens;
+    let b = engine
+        .generate(req.clone().prefix_cache(false))
+        .unwrap()
+        .tokens;
+    assert_eq!(a, b);
+    let stats = engine.shutdown();
+    assert_eq!(stats.prefix.hits, 0, "{stats:?}");
+    assert_eq!(stats.prefix.inserts, 0, "opt-out published pages: {stats:?}");
+    assert_eq!(stats.prefix.pages, 0, "{stats:?}");
+}
+
+/// Tentpole acceptance: chunked prefill of a long prompt must not stall
+/// concurrent decode rows — short requests queued behind a full batch
+/// are admitted and complete while the long prompt is still in flight
+/// (`mid_session_admissions > 0` with the long request unfinished at
+/// that moment is only possible if prefill interleaves with decode).
+#[test]
+fn long_prompt_prefill_does_not_stall_decode_rows() {
+    let bundle = open("mod_tiny");
+    let params = Arc::new(bundle.init_params().unwrap());
+    let engine = Engine::start(
+        bundle.clone(),
+        params,
+        ServeConfig {
+            workers: 1,
+            prefill_chunk: 4,
+            ..Default::default()
+        },
+        RoutingDecision::RouterThreshold,
+    )
+    .unwrap();
+    // 40-token prompt over 4-token chunks = 10 prefill iterations, plus
+    // 8 decode steps: the long row outlives several short-request
+    // lifetimes on the other three rows of the 4-row session
+    let long_prompt: Vec<u16> =
+        std::iter::once(BOS).chain((0..39).map(|i| 1 + (i % 200))).collect();
+    let long = engine
+        .submit(GenerateParams::new(long_prompt).max_new(8).seed(9))
+        .unwrap();
+    let shorts: Vec<_> = (0..5)
+        .map(|i| {
+            engine
+                .submit(
+                    GenerateParams::new(vec![BOS, 5 + i as u16])
+                        .max_new(2)
+                        .seed(i),
+                )
+                .unwrap()
+        })
+        .collect();
+    for (i, g) in shorts.into_iter().enumerate() {
+        let resp = g.wait().expect("short response");
+        assert!(
+            !resp.tokens.is_empty() && resp.tokens.len() <= 2,
+            "short {i}: {:?}",
+            resp.tokens
+        );
+    }
+    let resp = long.wait().expect("long response");
+    assert!(!resp.tokens.is_empty() && resp.tokens.len() <= 8);
+    assert_eq!(resp.prefill_tokens, 40);
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed, 6);
+    assert!(
+        stats.mid_session_admissions > 0,
+        "shorts never joined the in-flight session: {stats:?}"
+    );
+    assert_eq!(stats.prefill_tokens, 40 + 5 * 2, "{stats:?}");
+    assert!(stats.prefill_chunks >= 10, "{stats:?}");
+}
