@@ -1,0 +1,598 @@
+//! Open-loop load generator for the HTTP/SSE gateway — `repro loadgen`.
+//!
+//! Drives `POST /v1/generate?stream=1` with N concurrent SSE clients on
+//! a **precomputed arrival schedule**: arrivals do not wait for earlier
+//! requests to complete (open-loop, up to the client concurrency cap),
+//! so queueing shows up in the measured latencies instead of silently
+//! throttling the offered load — the regime where MoD's decode speedup
+//! has to prove itself.
+//!
+//! Three schedules, all seed-deterministic:
+//! * `poisson` — exponential inter-arrivals at a constant mean rate;
+//! * `burst`   — groups of simultaneous arrivals, groups spaced at the
+//!   mean rate (stresses admission and the queue sweep);
+//! * `ramp`    — Poisson with the instantaneous rate climbing linearly
+//!   across the run (finds the knee).
+//!
+//! Each worker thread folds its requests into private [`QuantileSketch`]
+//! shards (request latency, TTFT, inter-token gap); shards merge into
+//! one sketch per family at the end — the same merge the fleet-level
+//! aggregation story relies on. Every schedule's report also lands in
+//! the `BENCH_native.json` perf ledger via the in-crate [`Bench`]
+//! machinery (suite `loadgen`).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::data::rng::Pcg32;
+use crate::data::{CorpusSpec, MarkovCorpus};
+use crate::util::bench::{Bench, CaseResult};
+use crate::util::json::Json;
+use crate::util::sketch::{QuantileSketch, SketchSnapshot, DEFAULT_ALPHA};
+
+/// Per-request socket budget: a request that can't finish in this long
+/// against a local gateway is counted as failed, not waited on forever.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Arrival-schedule shapes (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    Poisson,
+    Burst,
+    Ramp,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "poisson" => Self::Poisson,
+            "burst" => Self::Burst,
+            "ramp" => Self::Ramp,
+            other => crate::bail!(
+                "unknown schedule {other:?} (poisson | burst | ramp)"
+            ),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Burst => "burst",
+            Self::Ramp => "ramp",
+        }
+    }
+
+    /// Arrival offsets in seconds from run start, ascending, length `n`,
+    /// deterministic in `seed`. `rate` is the mean arrival rate (req/s);
+    /// `burst` is the group size for [`Schedule::Burst`].
+    pub fn offsets(
+        &self,
+        n: usize,
+        rate: f64,
+        burst: usize,
+        seed: u64,
+    ) -> Vec<f64> {
+        let rate = if rate > 0.0 && rate.is_finite() { rate } else { 1.0 };
+        let mut rng = Pcg32::new(seed, 17);
+        // inverse-CDF exponential sample with instantaneous rate `r`;
+        // u in (0, 1] so ln never sees zero
+        let mut exp = |r: f64| {
+            let u = (rng.next_u32() as f64 + 1.0) / (u32::MAX as f64 + 1.0);
+            -u.ln() / r
+        };
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        match self {
+            Self::Poisson => {
+                for _ in 0..n {
+                    t += exp(rate);
+                    out.push(t);
+                }
+            }
+            Self::Burst => {
+                let group = burst.max(1);
+                for i in 0..n {
+                    if i > 0 && i % group == 0 {
+                        t += group as f64 / rate;
+                    }
+                    out.push(t);
+                }
+            }
+            Self::Ramp => {
+                // instantaneous rate climbs linearly 0.2·rate → 2·rate
+                // across the run: the tail stresses queueing in a way
+                // the head does not
+                for i in 0..n {
+                    let frac = (i as f64 + 1.0) / n as f64;
+                    t += exp(rate * (0.2 + 1.8 * frac));
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Loadgen knobs (`repro loadgen` flags map onto these 1:1).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Gateway address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Requests per schedule.
+    pub requests: usize,
+    /// Concurrent SSE client threads.
+    pub concurrency: usize,
+    /// Mean arrival rate in requests/second.
+    pub rate: f64,
+    /// Group size for the burst schedule.
+    pub burst: usize,
+    /// `max_new` sent with every request.
+    pub max_new: usize,
+    /// Prompt length drawn from the synthetic corpus.
+    pub prompt_len: usize,
+    /// Seed for schedules and prompts (same seed ⇒ same offered load).
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8080".to_string(),
+            requests: 64,
+            concurrency: 8,
+            rate: 32.0,
+            burst: 8,
+            max_new: 16,
+            prompt_len: 9,
+            seed: 7,
+        }
+    }
+}
+
+/// One schedule's measured outcome (all latency families in seconds).
+#[derive(Debug, Clone)]
+pub struct ScheduleReport {
+    pub schedule: &'static str,
+    pub requests: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub wall_s: f64,
+    pub tokens: u64,
+    pub latency: SketchSnapshot,
+    pub ttft: SketchSnapshot,
+    pub inter_token: SketchSnapshot,
+}
+
+impl ScheduleReport {
+    /// Streamed-token throughput over the schedule's wall clock (0.0 on
+    /// degenerate inputs, never NaN).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.tokens == 0 || self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.wall_s
+    }
+
+    /// Human report block (stdout).
+    pub fn render(&self) -> String {
+        format!(
+            "[loadgen {}] {}/{} ok ({} failed) in {:.2}s: \
+             {} tokens, {:.1} tok/s\n  \
+             request latency p50/p95/p99 {:.1}/{:.1}/{:.1} ms\n  \
+             ttft            p50/p95/p99 {:.1}/{:.1}/{:.1} ms\n  \
+             inter-token     p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
+            self.schedule,
+            self.completed,
+            self.requests,
+            self.failed,
+            self.wall_s,
+            self.tokens,
+            self.tokens_per_sec(),
+            self.latency.p50 * 1000.0,
+            self.latency.p95 * 1000.0,
+            self.latency.p99 * 1000.0,
+            self.ttft.p50 * 1000.0,
+            self.ttft.p95 * 1000.0,
+            self.ttft.p99 * 1000.0,
+            self.inter_token.p50 * 1000.0,
+            self.inter_token.p95 * 1000.0,
+            self.inter_token.p99 * 1000.0,
+        )
+    }
+
+    /// Ledger rows: sketch-backed percentiles as [`CaseResult`]s so the
+    /// loadgen run lands in `BENCH_native.json` next to the micro-benches.
+    pub fn to_cases(&self) -> Vec<CaseResult> {
+        let case = |name: String, s: &SketchSnapshot, units: Option<f64>| {
+            CaseResult {
+                name,
+                iters: s.count as usize,
+                mean_ms: s.mean() * 1000.0,
+                p50_ms: s.p50 * 1000.0,
+                p95_ms: s.p95 * 1000.0,
+                std_ms: s.std() * 1000.0,
+                units,
+            }
+        };
+        let tok_per_req = if self.completed == 0 {
+            None
+        } else {
+            Some(self.tokens as f64 / self.completed as f64)
+        };
+        vec![
+            case(
+                format!("{}_request_latency", self.schedule),
+                &self.latency,
+                tok_per_req,
+            ),
+            case(format!("{}_ttft", self.schedule), &self.ttft, None),
+        ]
+    }
+}
+
+/// Per-worker measurement shard (merged after the run).
+struct ClientTally {
+    completed: usize,
+    failed: usize,
+    tokens: u64,
+    latency: QuantileSketch,
+    ttft: QuantileSketch,
+    inter_token: QuantileSketch,
+}
+
+impl ClientTally {
+    fn new() -> Self {
+        Self {
+            completed: 0,
+            failed: 0,
+            tokens: 0,
+            latency: QuantileSketch::new(DEFAULT_ALPHA),
+            ttft: QuantileSketch::new(DEFAULT_ALPHA),
+            inter_token: QuantileSketch::new(DEFAULT_ALPHA),
+        }
+    }
+}
+
+/// What one SSE request produced.
+#[derive(Default)]
+struct RequestOutcome {
+    /// A terminal `done` frame arrived.
+    ok: bool,
+    tokens: u64,
+    ttft_s: Option<f64>,
+    last_token_s: Option<f64>,
+    gaps_s: Vec<f64>,
+    latency_s: f64,
+}
+
+/// Pop every complete `\n\n`-terminated SSE frame off the front of
+/// `buf`, leaving any partial frame in place for the next read.
+fn drain_frames(buf: &mut Vec<u8>) -> Vec<String> {
+    let mut frames = Vec::new();
+    while let Some(pos) = buf.windows(2).position(|w| w == b"\n\n") {
+        let frame: Vec<u8> = buf.drain(..pos + 2).collect();
+        frames.push(String::from_utf8_lossy(&frame[..pos]).into_owned());
+    }
+    frames
+}
+
+/// JSON body for request `i` (prompt from the synthetic corpus — the
+/// same generator the serve demo and the benches draw from).
+fn request_body(corpus: &MarkovCorpus, i: usize, cfg: &LoadgenConfig) -> String {
+    let prompt = corpus.sequence(i as u64, cfg.prompt_len.max(2));
+    Json::obj(vec![
+        (
+            "prompt",
+            Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("max_new", Json::num(cfg.max_new as f64)),
+        ("seed", Json::num(i as f64)),
+        ("temperature", Json::num(0.8)),
+        ("top_k", Json::num(32.0)),
+    ])
+    .to_string()
+}
+
+/// Run one streaming generate request against the gateway, timestamping
+/// token frames as they arrive. Transport errors and non-200 statuses
+/// come back as `ok == false` outcomes, not process errors — one flaky
+/// request must not abort the run.
+fn run_request(addr: &str, body: &str) -> crate::Result<RequestOutcome> {
+    let t0 = Instant::now();
+    let mut out = RequestOutcome::default();
+    let Ok(mut stream) = TcpStream::connect(addr) else {
+        out.latency_s = t0.elapsed().as_secs_f64();
+        return Ok(out);
+    };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(REQUEST_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(REQUEST_TIMEOUT));
+    let head = format!(
+        "POST /v1/generate?stream=1 HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    if stream.write_all(head.as_bytes()).is_err()
+        || stream.write_all(body.as_bytes()).is_err()
+        || stream.flush().is_err()
+    {
+        out.latency_s = t0.elapsed().as_secs_f64();
+        return Ok(out);
+    }
+
+    let mut raw: Vec<u8> = Vec::new();
+    let mut headers_done = false;
+    let mut scratch = [0u8; 4096];
+    loop {
+        let n = match stream.read(&mut scratch) {
+            Ok(0) => break, // server closed: stream complete
+            Ok(n) => n,
+            Err(_) => break, // timeout / reset: judge what arrived
+        };
+        raw.extend_from_slice(&scratch[..n]);
+        if !headers_done {
+            let Some(pos) = raw.windows(4).position(|w| w == b"\r\n\r\n")
+            else {
+                continue;
+            };
+            let status_ok = raw[..pos]
+                .split(|&b| b == b'\r')
+                .next()
+                .is_some_and(|line| {
+                    String::from_utf8_lossy(line).contains(" 200 ")
+                });
+            raw.drain(..pos + 4);
+            headers_done = true;
+            if !status_ok {
+                break;
+            }
+        }
+        for frame in drain_frames(&mut raw) {
+            let now = t0.elapsed().as_secs_f64();
+            if frame.starts_with("event: token") {
+                if out.tokens == 0 {
+                    out.ttft_s = Some(now);
+                } else if let Some(prev) = out.last_token_s {
+                    out.gaps_s.push(now - prev);
+                }
+                out.last_token_s = Some(now);
+                out.tokens += 1;
+            } else if frame.starts_with("event: done") {
+                out.ok = true;
+            }
+            // `event: error` leaves ok == false
+        }
+    }
+    out.latency_s = t0.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+/// Run one schedule: precompute arrivals, fan requests over the worker
+/// pool, merge the per-worker sketch shards into one report.
+pub fn run_schedule(
+    cfg: &LoadgenConfig,
+    schedule: Schedule,
+) -> crate::Result<ScheduleReport> {
+    crate::ensure!(cfg.requests > 0, "loadgen needs at least one request");
+    let offsets =
+        schedule.offsets(cfg.requests, cfg.rate, cfg.burst, cfg.seed);
+    let corpus =
+        MarkovCorpus::new(CorpusSpec::default(), cfg.seed ^ 0x10ADBEEF);
+    let bodies: Vec<String> = (0..cfg.requests)
+        .map(|i| request_body(&corpus, i, cfg))
+        .collect();
+
+    let next = AtomicUsize::new(0);
+    let workers = cfg.concurrency.clamp(1, cfg.requests);
+    let start = Instant::now();
+    let shards: Vec<ClientTally> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut tally = ClientTally::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::SeqCst);
+                        if i >= offsets.len() {
+                            break;
+                        }
+                        // open-loop: hold to the schedule even when
+                        // earlier requests are still in flight
+                        let due =
+                            start + Duration::from_secs_f64(offsets[i]);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        match run_request(&cfg.addr, &bodies[i]) {
+                            Ok(o) if o.ok => {
+                                tally.completed += 1;
+                                tally.tokens += o.tokens;
+                                tally.latency.observe(o.latency_s);
+                                if let Some(t) = o.ttft_s {
+                                    tally.ttft.observe(t);
+                                }
+                                for g in &o.gaps_s {
+                                    tally.inter_token.observe(*g);
+                                }
+                            }
+                            _ => tally.failed += 1,
+                        }
+                    }
+                    tally
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen worker panicked"))
+            .collect()
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+
+    // merge the shards — the cross-thread aggregation the sketch's
+    // merge property test pins down
+    let latency = QuantileSketch::new(DEFAULT_ALPHA);
+    let ttft = QuantileSketch::new(DEFAULT_ALPHA);
+    let inter_token = QuantileSketch::new(DEFAULT_ALPHA);
+    let (mut completed, mut failed, mut tokens) = (0usize, 0usize, 0u64);
+    for t in &shards {
+        completed += t.completed;
+        failed += t.failed;
+        tokens += t.tokens;
+        latency.merge_from(&t.latency);
+        ttft.merge_from(&t.ttft);
+        inter_token.merge_from(&t.inter_token);
+    }
+    Ok(ScheduleReport {
+        schedule: schedule.as_str(),
+        requests: cfg.requests,
+        completed,
+        failed,
+        wall_s,
+        tokens,
+        latency: latency.snapshot(),
+        ttft: ttft.snapshot(),
+        inter_token: inter_token.snapshot(),
+    })
+}
+
+/// Run every requested schedule, print each report, and merge the
+/// results into the `BENCH_native.json` ledger (suite `loadgen`).
+pub fn run(
+    cfg: &LoadgenConfig,
+    schedules: &[Schedule],
+) -> crate::Result<Vec<ScheduleReport>> {
+    crate::ensure!(!schedules.is_empty(), "no schedules requested");
+    let mut bench = Bench::new("loadgen");
+    let mut reports = Vec::with_capacity(schedules.len());
+    for &schedule in schedules {
+        let report = run_schedule(cfg, schedule)?;
+        println!("{}", report.render());
+        for case in report.to_cases() {
+            bench.record_case(case);
+        }
+        reports.push(report);
+    }
+    bench.finish()?;
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_are_deterministic_monotone_and_sized() {
+        for sched in [Schedule::Poisson, Schedule::Burst, Schedule::Ramp] {
+            let a = sched.offsets(64, 50.0, 8, 7);
+            let b = sched.offsets(64, 50.0, 8, 7);
+            assert_eq!(a, b, "{sched:?} must be seed-deterministic");
+            assert_eq!(a.len(), 64);
+            assert!(
+                a.windows(2).all(|w| w[1] >= w[0]),
+                "{sched:?} offsets must be ascending"
+            );
+            assert!(a.iter().all(|t| t.is_finite() && *t >= 0.0));
+        }
+        // a different seed moves the stochastic schedules
+        assert_ne!(
+            Schedule::Poisson.offsets(64, 50.0, 8, 7),
+            Schedule::Poisson.offsets(64, 50.0, 8, 8)
+        );
+    }
+
+    #[test]
+    fn burst_schedule_groups_simultaneous_arrivals() {
+        let off = Schedule::Burst.offsets(16, 100.0, 4, 1);
+        for g in off.chunks(4) {
+            assert!(
+                g.iter().all(|&t| t == g[0]),
+                "arrivals within a burst share an instant: {g:?}"
+            );
+        }
+        assert!(off[4] > off[0], "groups are spaced apart");
+    }
+
+    #[test]
+    fn ramp_arrivals_tighten_toward_the_tail() {
+        let off = Schedule::Ramp.offsets(200, 50.0, 1, 3);
+        let head = off[49] - off[0];
+        let tail = off[199] - off[150];
+        assert!(
+            tail < head,
+            "ramp must accelerate: head span {head:.3}s, tail {tail:.3}s"
+        );
+    }
+
+    #[test]
+    fn degenerate_rate_is_repaired_not_propagated() {
+        for rate in [0.0, -3.0, f64::NAN] {
+            let off = Schedule::Poisson.offsets(8, rate, 1, 2);
+            assert!(off.iter().all(|t| t.is_finite()), "rate {rate}: {off:?}");
+        }
+    }
+
+    #[test]
+    fn drain_frames_pops_complete_frames_only() {
+        let mut buf = b"event: token\ndata: {}\n\nevent: to".to_vec();
+        let frames = drain_frames(&mut buf);
+        assert_eq!(frames, vec!["event: token\ndata: {}".to_string()]);
+        assert_eq!(buf, b"event: to".to_vec());
+        buf.extend_from_slice(b"ken\ndata: {}\n\nevent: done\ndata: {}\n\n");
+        let frames = drain_frames(&mut buf);
+        assert_eq!(frames.len(), 2);
+        assert!(frames[1].starts_with("event: done"));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn schedule_parse_round_trips() {
+        for (s, v) in [
+            ("poisson", Schedule::Poisson),
+            ("burst", Schedule::Burst),
+            ("ramp", Schedule::Ramp),
+        ] {
+            assert_eq!(Schedule::parse(s).unwrap(), v);
+            assert_eq!(Schedule::parse(v.as_str()).unwrap(), v);
+        }
+        assert!(Schedule::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn request_body_is_valid_json_with_prompt() {
+        let cfg = LoadgenConfig::default();
+        let corpus = MarkovCorpus::new(CorpusSpec::default(), 3);
+        let body = request_body(&corpus, 5, &cfg);
+        let j = Json::parse(&body).expect("body parses");
+        assert_eq!(
+            j.get("prompt").and_then(|p| p.as_arr()).unwrap().len(),
+            cfg.prompt_len
+        );
+        assert_eq!(j.req_usize("max_new").unwrap(), cfg.max_new);
+        assert_eq!(j.req_usize("seed").unwrap(), 5);
+    }
+
+    #[test]
+    fn report_math_is_nan_free_when_empty() {
+        let empty = QuantileSketch::new(DEFAULT_ALPHA).snapshot();
+        let r = ScheduleReport {
+            schedule: "poisson",
+            requests: 0,
+            completed: 0,
+            failed: 0,
+            wall_s: 0.0,
+            tokens: 0,
+            latency: empty,
+            ttft: empty,
+            inter_token: empty,
+        };
+        assert_eq!(r.tokens_per_sec(), 0.0);
+        for c in r.to_cases() {
+            assert!(c.mean_ms.is_finite() && c.std_ms.is_finite());
+        }
+        assert!(r.render().contains("0 tokens"));
+    }
+}

@@ -7,6 +7,7 @@
 //!   eval <bundle>      held-out evaluation under a routing mode
 //!   generate <bundle>  autoregressive generation (layer-sliced runtime)
 //!   serve <bundle>     dynamic-batching server over demo requests
+//!   loadgen            open-loop load generator against a running gateway
 //!   flops <preset>     analytic FLOPs report for a preset config
 //!   exp <figure>       regenerate a paper figure (fig3..fig7 | all)
 //!   info <bundle>      inspect an artifact bundle
@@ -20,10 +21,12 @@ use mod_transformer::coordinator::{Trainer, TrainerOptions};
 use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus};
 use mod_transformer::exp::{self, ExpContext, Scale};
 use mod_transformer::flops;
+use mod_transformer::loadgen::{self, LoadgenConfig, Schedule};
 use mod_transformer::runtime::{Bundle, Tensor};
 use mod_transformer::serve::{
     Engine, Event, GenerateParams, HttpConfig, HttpServer, RoutingDecision,
 };
+use mod_transformer::util::metrics::{init_process_metrics, MetricsExporter};
 use mod_transformer::util::Args;
 
 const USAGE: &str = "\
@@ -47,20 +50,36 @@ COMMANDS:
                     [--decision predictor|router|always] [--workers N]
                     [--stream] [--deadline-ms N] [--http PORT]
                     [--stats-every-ms N] [--prefill-chunk N]
-                    [--prefix-cache-mb N]
+                    [--prefix-cache-mb N] [--push-metrics ADDR|-]
+                    [--push-every-ms N]
                     continuously-batched engine. Default (loopback mode):
                     demo over N synthetic requests; --stream prints the
                     first request's tokens live; --deadline-ms attaches a
                     per-request deadline (late requests fail typed).
                     --http PORT serves the HTTP/SSE gateway instead
                     (POST /v1/generate[?stream=1], GET /healthz,
-                    GET /metrics Prometheus text; PORT 0 = ephemeral).
+                    GET /metrics Prometheus text, GET /v1/debug/requests
+                    flight-recorder ring; PORT 0 = ephemeral).
                     Both modes print a one-line stats snapshot every
-                    --stats-every-ms (default 2000; 0 disables in
-                    loopback mode). --prefill-chunk sets the tokens per
-                    parallel prefill pass (default 16; 1 = per-token);
-                    --prefix-cache-mb enables the shared-prefix KV cache
-                    with that byte budget (default 0 = off)
+                    --stats-every-ms (default 2000; 0 disables it).
+                    --push-metrics streams NDJSON metric snapshots to a
+                    TCP collector (or stdout with `-`) every
+                    --push-every-ms (default 1000; drops, never blocks).
+                    --prefill-chunk sets the tokens per parallel prefill
+                    pass (default 16; 1 = per-token); --prefix-cache-mb
+                    enables the shared-prefix KV cache with that byte
+                    budget (default 0 = off)
+  loadgen           [--addr HOST:PORT] [--schedule poisson|burst|ramp|all]
+                    [--requests N] [--concurrency N] [--rate R] [--burst N]
+                    [--max-new N] [--prompt-len N] [--seed N]
+                    open-loop load generator against a running
+                    `serve --http` gateway: precomputed Poisson / burst /
+                    ramp arrival schedules over N concurrent SSE clients
+                    (default schedules: poisson + burst; comma-separate to
+                    pick several). Reports throughput and sketch-backed
+                    p50/p95/p99 for request latency, TTFT and inter-token
+                    gap, and merges each schedule into BENCH_native.json
+                    (suite `loadgen`)
   flops <preset>
   exp <fig3|fig4|fig5|fig6|fig7|all> [--scale smoke|tiny|full]
                     [--steps N]  (fixed-step figures 5/6/7 only; figs 3/4
@@ -96,6 +115,36 @@ fn load_params(
             bundle.order_params(filtered)
         }
         None => bundle.init_params(),
+    }
+}
+
+/// The one stats printer both serve modes share: prints the engine's
+/// `snapshot_line()` every `every_ms`, sleeping in 100ms
+/// slices so `stop` takes effect within ~100ms rather than a full
+/// interval. `every_ms == 0` disables printing entirely (the loop still
+/// blocks until `stop`, which in gateway mode means forever).
+fn run_stats_printer(
+    engine: &Engine,
+    every_ms: u64,
+    stop: &std::sync::atomic::AtomicBool,
+) {
+    use std::sync::atomic::Ordering;
+    let mut waited = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        if every_ms == 0 {
+            continue;
+        }
+        waited += 100;
+        if waited < every_ms {
+            continue;
+        }
+        waited = 0;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        println!("{}", engine.stats().snapshot_line());
+        let _ = std::io::stdout().flush();
     }
 }
 
@@ -221,6 +270,16 @@ fn main() -> mod_transformer::Result<()> {
             let stream = args.has_flag("stream");
             let deadline_ms = args.opt_u64("deadline-ms")?;
             let stats_every = args.u64_or("stats-every-ms", 2000)?;
+            init_process_metrics();
+            let push_every = args.u64_or("push-every-ms", 1000)?;
+            // the push exporter outlives both serve modes; dropping it
+            // at scope exit joins the push thread
+            let _exporter = args.opt("push-metrics").map(|sink| {
+                MetricsExporter::start(
+                    sink,
+                    std::time::Duration::from_millis(push_every),
+                )
+            });
             let defaults = ServeConfig::default();
             let engine = Engine::start(
                 b.clone(),
@@ -264,14 +323,18 @@ fn main() -> mod_transformer::Result<()> {
                     "  GET  /healthz | /metrics     \
                      liveness | Prometheus text exposition"
                 );
+                println!(
+                    "  GET  /v1/debug/requests      \
+                     flight recorder (recent request traces)"
+                );
                 let _ = std::io::stdout().flush();
-                loop {
-                    std::thread::sleep(std::time::Duration::from_millis(
-                        stats_every.max(250),
-                    ));
-                    println!("{}", engine.stats().snapshot_line());
-                    let _ = std::io::stdout().flush();
-                }
+                // gateway mode never stops on its own: the printer loop
+                // doubles as the serve-forever block (stats-every-ms 0
+                // just silences it)
+                let stop = std::sync::atomic::AtomicBool::new(false);
+                run_stats_printer(&engine, stats_every, &stop);
+                drop(server);
+                return Ok(());
             }
 
             let corpus = MarkovCorpus::new(CorpusSpec::default(), 99);
@@ -300,26 +363,7 @@ fn main() -> mod_transformer::Result<()> {
             std::thread::scope(|s| {
                 use std::sync::atomic::Ordering;
                 if stats_every > 0 {
-                    s.spawn(|| {
-                        // sleep in short slices so setting `stop` ends the
-                        // demo within ~100ms, not a full interval
-                        let mut waited = 0u64;
-                        while !stop.load(Ordering::Relaxed) {
-                            std::thread::sleep(
-                                std::time::Duration::from_millis(100),
-                            );
-                            waited += 100;
-                            if waited < stats_every {
-                                continue;
-                            }
-                            waited = 0;
-                            if stop.load(Ordering::Relaxed) {
-                                break;
-                            }
-                            println!("{}", engine.stats().snapshot_line());
-                            let _ = std::io::stdout().flush();
-                        }
-                    });
+                    s.spawn(|| run_stats_printer(&engine, stats_every, &stop));
                 }
                 for (i, mut gen) in gens.into_iter().enumerate() {
                     if stream && i == 0 {
@@ -376,6 +420,37 @@ fn main() -> mod_transformer::Result<()> {
                 mod_transformer::bail!(
                     "{failed} of {n_requests} requests failed"
                 );
+            }
+        }
+        "loadgen" => {
+            let sched_arg = args.str_or("schedule", "poisson,burst");
+            let schedules: Vec<Schedule> = if sched_arg == "all" {
+                vec![Schedule::Poisson, Schedule::Burst, Schedule::Ramp]
+            } else {
+                sched_arg
+                    .split(',')
+                    .map(|p| Schedule::parse(p.trim()))
+                    .collect::<mod_transformer::Result<_>>()?
+            };
+            let defaults = LoadgenConfig::default();
+            let cfg = LoadgenConfig {
+                addr: args.str_or("addr", &defaults.addr),
+                requests: args.usize_or("requests", defaults.requests)?,
+                concurrency: args
+                    .usize_or("concurrency", defaults.concurrency)?,
+                rate: args.f64_or("rate", defaults.rate)?,
+                burst: args.usize_or("burst", defaults.burst)?,
+                max_new: args.usize_or("max-new", defaults.max_new)?,
+                prompt_len: args
+                    .usize_or("prompt-len", defaults.prompt_len)?,
+                seed: args.u64_or("seed", defaults.seed)?,
+            };
+            let reports = loadgen::run(&cfg, &schedules)?;
+            let failed: usize = reports.iter().map(|r| r.failed).sum();
+            // a dead gateway must fail the process (and CI's
+            // loadgen-smoke job), not just print zeros
+            if failed > 0 {
+                mod_transformer::bail!("{failed} loadgen requests failed");
             }
         }
         "flops" => {

@@ -33,7 +33,7 @@
 //! does); adaptive per-worker sizing is future work.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -41,15 +41,17 @@ use crate::config::ServeConfig;
 use crate::data::rng::Pcg32;
 use crate::data::tokenizer::{EOS, PAD};
 use crate::runtime::{Bundle, Tensor};
+use crate::util::bench;
 use crate::util::metrics::{self, Counter, Gauge, Histogram};
 use crate::util::pool;
+use crate::util::sketch::{QuantileSketch, DEFAULT_ALPHA};
 
 use super::prefix_cache::{
     extend_hash, PrefixCache, PrefixCacheStats, PrefixPage, ROOT_HASH,
 };
 use super::request::{
-    Event, FinishReason, GenerateParams, Generation, Response, ServeError,
-    ServeErrorKind, Usage,
+    DecodeGapSummary, Event, FinishReason, FlightRecord, GenerateParams,
+    Generation, RequestTrace, Response, ServeError, ServeErrorKind, Usage,
 };
 use super::sampling::sample;
 use super::session::{DecodeSession, RoutingDecision, SessionReport};
@@ -78,12 +80,32 @@ struct EngineMetrics {
     blocks_skipped: &'static Counter,
     capacity_drops: &'static Counter,
     latency: &'static Histogram,
+    ttft: &'static Histogram,
+    inter_token: &'static Histogram,
+    /// DDSketch twins of the latency histograms: same observations, but
+    /// true quantiles (α-bounded) instead of fixed buckets — these back
+    /// `EngineStats`' percentile summaries and the `/metrics` summary
+    /// families.
+    latency_sketch: &'static QuantileSketch,
+    ttft_sketch: &'static QuantileSketch,
+    inter_token_sketch: &'static QuantileSketch,
 }
 
 /// Latency buckets (seconds) for `engine_request_latency_seconds`.
 const LATENCY_BUCKETS: [f64; 12] = [
     0.001, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
 ];
+
+/// Buckets (seconds) for the per-token families: TTFT and inter-token
+/// gaps sit one to three orders of magnitude under request latency.
+const TOKEN_LATENCY_BUCKETS: [f64; 12] = [
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+    0.25, 1.0,
+];
+
+/// Flight-recorder ring capacity — how many finished requests
+/// `GET /v1/debug/requests` can look back on.
+const FLIGHT_RING_CAP: usize = 128;
 
 fn engine_metrics() -> &'static EngineMetrics {
     static M: std::sync::OnceLock<EngineMetrics> = std::sync::OnceLock::new();
@@ -158,7 +180,54 @@ fn engine_metrics() -> &'static EngineMetrics {
             &LATENCY_BUCKETS,
             "Per-request submission-to-completion latency",
         ),
+        ttft: metrics::histogram(
+            "engine_ttft_seconds",
+            &TOKEN_LATENCY_BUCKETS,
+            "Submission-to-first-token latency per request",
+        ),
+        inter_token: metrics::histogram(
+            "engine_inter_token_seconds",
+            &TOKEN_LATENCY_BUCKETS,
+            "Gap between consecutive streamed tokens of one request",
+        ),
+        latency_sketch: metrics::sketch(
+            "engine_request_latency_sketch_seconds",
+            DEFAULT_ALPHA,
+            "Streaming quantile sketch of per-request latency",
+        ),
+        ttft_sketch: metrics::sketch(
+            "engine_ttft_sketch_seconds",
+            DEFAULT_ALPHA,
+            "Streaming quantile sketch of submission-to-first-token latency",
+        ),
+        inter_token_sketch: metrics::sketch(
+            "engine_inter_token_sketch_seconds",
+            DEFAULT_ALPHA,
+            "Streaming quantile sketch of inter-token gaps",
+        ),
     })
+}
+
+/// Sketch-backed percentile summary of one latency family (seconds).
+/// Sourced from the process-global sketches — the same series `/metrics`
+/// renders, so the two surfaces cannot disagree.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+impl LatencySummary {
+    fn from_sketch(s: &QuantileSketch) -> Self {
+        Self {
+            count: s.count(),
+            p50_s: s.quantile(0.50),
+            p95_s: s.quantile(0.95),
+            p99_s: s.quantile(0.99),
+        }
+    }
 }
 
 /// Aggregate engine statistics.
@@ -209,6 +278,13 @@ pub struct EngineStats {
     pub queue_depth: u64,
     /// Shared-prefix cache snapshot (all-zero when the cache is disabled).
     pub prefix: PrefixCacheStats,
+    /// Sketch-backed request-latency percentiles. Process-global (every
+    /// engine in the process feeds the same sketch), like `/metrics`.
+    pub request_latency: LatencySummary,
+    /// Sketch-backed time-to-first-token percentiles (process-global).
+    pub ttft: LatencySummary,
+    /// Sketch-backed inter-token gap percentiles (process-global).
+    pub inter_token: LatencySummary,
 }
 
 impl EngineStats {
@@ -240,7 +316,9 @@ impl EngineStats {
             "[stats] submitted {} completed {} failed {} queue {} | \
              {} tokens ({:.1} tok/s) skip {:.0}% | \
              prefill {} tok in {} chunks, prefix reuse {} tok ({} hits) | \
-             {} mid-flight admissions, peak {} rows / {} workers",
+             {} mid-flight admissions, peak {} rows / {} workers | \
+             req p50/p95/p99 {:.0}/{:.0}/{:.0} ms, \
+             ttft {:.1}/{:.1}/{:.1} ms",
             self.submitted,
             self.completed,
             self.failed + self.cancelled + self.deadline_exceeded,
@@ -255,6 +333,12 @@ impl EngineStats {
             self.mid_session_admissions,
             self.peak_active_rows,
             self.peak_active_workers,
+            self.request_latency.p50_s * 1000.0,
+            self.request_latency.p95_s * 1000.0,
+            self.request_latency.p99_s * 1000.0,
+            self.ttft.p50_s * 1000.0,
+            self.ttft.p95_s * 1000.0,
+            self.ttft.p99_s * 1000.0,
         )
     }
 }
@@ -288,6 +372,11 @@ struct Shared {
     prefix: Option<Arc<PrefixCache>>,
     /// Registry handles, resolved once at start (shared process-wide).
     metrics: &'static EngineMetrics,
+    /// Flight-recorder ring: traces of the last [`FLIGHT_RING_CAP`]
+    /// finished requests, newest at the back.
+    recent: Mutex<VecDeque<FlightRecord>>,
+    /// Monotone flight-record id (per engine).
+    trace_seq: AtomicU64,
 }
 
 impl Shared {
@@ -413,6 +502,8 @@ impl Engine {
             stats: Mutex::new(EngineStats::default()),
             prefix,
             metrics: engine_metrics(),
+            recent: Mutex::new(VecDeque::new()),
+            trace_seq: AtomicU64::new(0),
         });
         // build every session BEFORE spawning any worker: a failure here
         // must not leave already-started threads parked on the condvar
@@ -519,7 +610,22 @@ impl Engine {
             .as_ref()
             .map(|p| p.stats())
             .unwrap_or_default();
+        s.request_latency =
+            LatencySummary::from_sketch(self.shared.metrics.latency_sketch);
+        s.ttft = LatencySummary::from_sketch(self.shared.metrics.ttft_sketch);
+        s.inter_token = LatencySummary::from_sketch(
+            self.shared.metrics.inter_token_sketch,
+        );
         s
+    }
+
+    /// The flight recorder: traces of the most recently finished
+    /// requests, newest first (bounded ring of [`FLIGHT_RING_CAP`]).
+    /// Abandoned streams and queue-side rejections never reached a
+    /// terminal accounting point and are not recorded.
+    pub fn recent_traces(&self) -> Vec<FlightRecord> {
+        let ring = self.shared.recent.lock().unwrap();
+        ring.iter().rev().cloned().collect()
     }
 
     /// Stop accepting requests, serve everything already submitted, join
@@ -571,6 +677,16 @@ struct RowState {
     /// Still inserting pages: true until the first partial / unaligned /
     /// failed-extract chunk breaks the chain (or the request opted out).
     chain_ok: bool,
+    /// When this row's first token streamed (the TTFT anchor).
+    first_token_at: Option<Instant>,
+    /// When this row's latest token streamed (inter-token gap anchor).
+    last_token_at: Option<Instant>,
+    /// Chunked-prefill passes this row consumed.
+    prefill_chunks: u64,
+    /// Prompt tokens covered by seated prefix pages (zero compute spent).
+    prefix_reused: usize,
+    /// Inter-token gaps (ms), folded into the flight record at finish.
+    gaps_ms: Vec<f64>,
 }
 
 /// What happened to a row during one decode step.
@@ -730,6 +846,11 @@ fn worker_loop(
                     pending_first: None,
                     chain_hash,
                     chain_ok: use_cache,
+                    first_token_at: None,
+                    last_token_at: None,
+                    prefill_chunks: 0,
+                    prefix_reused: prompt_idx,
+                    gaps_ms: Vec::new(),
                     job,
                 });
                 let total =
@@ -867,6 +988,7 @@ fn worker_loop(
             }
             row.prompt_idx = end;
             row.steps += end - lo;
+            row.prefill_chunks += 1;
             row.pending_first = out.logits_last;
         }
 
@@ -886,6 +1008,7 @@ fn worker_loop(
                         row.job.params.top_k,
                         &mut row.rng,
                     ) as u16;
+                    observe_token_timing(shared, row);
                     row.last = Some(next);
                     let index = row.emitted;
                     row.emitted += 1;
@@ -995,6 +1118,7 @@ fn worker_loop(
                                     row.job.params.top_k,
                                     &mut row.rng,
                                 ) as u16;
+                                observe_token_timing(shared, row);
                                 row.last = Some(next);
                                 let index = row.emitted;
                                 row.emitted += 1;
@@ -1126,6 +1250,71 @@ fn free_row(
     }
 }
 
+/// Token-timing bookkeeping for one sampled token, called at both
+/// sampling sites *before* `row.emitted` is bumped: the first token
+/// feeds the TTFT families, later tokens feed the inter-token families
+/// plus the row's own gap trace.
+fn observe_token_timing(shared: &Shared, row: &mut RowState) {
+    let now = Instant::now();
+    if row.emitted == 0 {
+        let ttft = now.duration_since(row.job.submitted).as_secs_f64();
+        shared.metrics.ttft.observe(ttft);
+        shared.metrics.ttft_sketch.observe(ttft);
+        row.first_token_at = Some(now);
+    } else if let Some(prev) = row.last_token_at {
+        let gap = now.duration_since(prev).as_secs_f64();
+        shared.metrics.inter_token.observe(gap);
+        shared.metrics.inter_token_sketch.observe(gap);
+        row.gaps_ms.push(gap * 1000.0);
+    }
+    row.last_token_at = Some(now);
+}
+
+/// Assemble a finished row's [`RequestTrace`]. Must run BEFORE
+/// [`free_row`]: the next admission resets the session's per-row
+/// compute ledger this reads.
+fn build_trace(
+    session: &DecodeSession,
+    row: &RowState,
+    b: usize,
+) -> RequestTrace {
+    let (blocks_invoked, blocks_skipped) = session.row_block_counts(b);
+    let mut gaps = row.gaps_ms.clone();
+    gaps.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let decode_gaps = if gaps.is_empty() {
+        DecodeGapSummary::default()
+    } else {
+        DecodeGapSummary {
+            count: gaps.len() as u64,
+            mean_ms: gaps.iter().sum::<f64>() / gaps.len() as f64,
+            p50_ms: bench::percentile(&gaps, 0.50),
+            p95_ms: bench::percentile(&gaps, 0.95),
+            max_ms: gaps[gaps.len() - 1],
+        }
+    };
+    RequestTrace {
+        queue_ms: row.admitted.duration_since(row.job.submitted).as_secs_f64()
+            * 1000.0,
+        prefix_reused_tokens: row.prefix_reused,
+        prefill_chunks: row.prefill_chunks,
+        ttft_ms: row.first_token_at.map(|t| {
+            t.duration_since(row.job.submitted).as_secs_f64() * 1000.0
+        }),
+        decode_gaps,
+        blocks_invoked,
+        blocks_skipped,
+    }
+}
+
+/// Push a finished request into the bounded flight-recorder ring.
+fn record_flight(shared: &Shared, rec: FlightRecord) {
+    let mut ring = shared.recent.lock().unwrap();
+    if ring.len() == FLIGHT_RING_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(rec);
+}
+
 fn finish_done(
     shared: &Shared,
     session: &mut DecodeSession,
@@ -1135,21 +1324,33 @@ fn finish_done(
     finish: FinishReason,
 ) {
     let row = rows[b].take().expect("finish_done on empty row");
+    let trace = build_trace(session, &row, b);
     // release + count BEFORE the terminal event: a caller that returns
     // from wait() and immediately reads stats() must see this request
     free_row(shared, session, dead, b);
     shared.stat(|s| s.completed += 1);
     shared.metrics.completed.inc();
-    shared
-        .metrics
-        .latency
-        .observe(row.job.submitted.elapsed().as_secs_f64());
+    let latency_s = row.job.submitted.elapsed().as_secs_f64();
+    shared.metrics.latency.observe(latency_s);
+    shared.metrics.latency_sketch.observe(latency_s);
+    record_flight(
+        shared,
+        FlightRecord {
+            seq: shared.trace_seq.fetch_add(1, Ordering::SeqCst),
+            outcome: finish.as_str(),
+            prompt_tokens: row.job.params.prompt.len(),
+            decode_tokens: row.emitted,
+            latency: row.job.submitted.elapsed(),
+            trace: trace.clone(),
+        },
+    );
     let _ = row.job.tx.send(Event::Done(Usage {
         prefill_tokens: row.job.params.prompt.len(),
         decode_tokens: row.emitted,
         latency: row.job.submitted.elapsed(),
         queue_latency: row.admitted.duration_since(row.job.submitted),
         finish,
+        trace: row.job.params.trace.then_some(trace),
     }));
 }
 
@@ -1162,7 +1363,19 @@ fn finish_error(
     err: ServeError,
 ) {
     let row = rows[b].take().expect("finish_error on empty row");
+    let trace = build_trace(session, &row, b);
     free_row(shared, session, dead, b);
+    record_flight(
+        shared,
+        FlightRecord {
+            seq: shared.trace_seq.fetch_add(1, Ordering::SeqCst),
+            outcome: err.kind.as_str(),
+            prompt_tokens: row.job.params.prompt.len(),
+            decode_tokens: row.emitted,
+            latency: row.job.submitted.elapsed(),
+            trace,
+        },
+    );
     shared.stat(|s| match err.kind {
         ServeErrorKind::Cancelled => s.cancelled += 1,
         ServeErrorKind::DeadlineExceeded => s.deadline_exceeded += 1,

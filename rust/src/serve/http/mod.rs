@@ -16,6 +16,8 @@
 //!   GET  /healthz                liveness
 //!   GET  /metrics                Prometheus text exposition (the
 //!                                process-global util::metrics registry)
+//!   GET  /v1/debug/requests      flight recorder: per-request traces of
+//!                                the most recently finished requests
 //! ```
 //!
 //! Failure containment mirrors the engine's: malformed requests map to
@@ -118,11 +120,13 @@ struct Gateway {
     limits: Limits,
     read_timeout: Duration,
     draining: Arc<AtomicBool>,
-    /// `(path label, status)` → resolved counter. Per-request accounting
-    /// must not go through the global registry mutex (a `/metrics`
-    /// render holds that for a whole scrape); this gateway-local cache
-    /// pays one small lock + hash per request after first resolution.
-    request_counters: Mutex<HashMap<(&'static str, u16), &'static Counter>>,
+    /// `(method label, path label, status)` → resolved counter.
+    /// Per-request accounting must not go through the global registry
+    /// mutex (a `/metrics` render holds that for a whole scrape); this
+    /// gateway-local cache pays one small lock + hash per request after
+    /// first resolution.
+    request_counters:
+        Mutex<HashMap<(&'static str, &'static str, u16), &'static Counter>>,
 }
 
 impl Gateway {
@@ -133,23 +137,39 @@ impl Gateway {
             "/healthz" => "/healthz",
             "/metrics" => "/metrics",
             "/v1/generate" => "/v1/generate",
+            "/v1/debug/requests" => "/v1/debug/requests",
             _ => "other",
         }
     }
 
-    fn count_request(&self, path: &str, status: u16) {
-        let key = (Self::path_label(path), status);
+    /// Bounded-cardinality method label (same reasoning as paths: a
+    /// client can send arbitrary verbs, which must not mint series).
+    fn method_label(method: &str) -> &'static str {
+        match method {
+            "GET" => "GET",
+            "POST" => "POST",
+            _ => "other",
+        }
+    }
+
+    fn count_request(&self, method: &str, path: &str, status: u16) {
+        let key =
+            (Self::method_label(method), Self::path_label(path), status);
         let counter = *self
             .request_counters
             .lock()
             .unwrap()
             .entry(key)
             .or_insert_with(|| {
-                let status = key.1.to_string();
+                let status = key.2.to_string();
                 metrics::counter_with(
                     "gateway_requests_total",
-                    &[("path", key.0), ("status", status.as_str())],
-                    "HTTP requests served, by endpoint and status",
+                    &[
+                        ("method", key.0),
+                        ("path", key.1),
+                        ("status", status.as_str()),
+                    ],
+                    "HTTP requests served, by method, endpoint and status",
                 )
             });
         counter.inc();
@@ -341,7 +361,7 @@ fn handle_connection(gw: &Gateway, stream: TcpStream) {
             Err(e) => {
                 // malformed request: answer typed, then close — the
                 // framing is unreliable past this point
-                gw.count_request("(parse)", e.status);
+                gw.count_request("other", "(parse)", e.status);
                 let err = ServeError::new(ServeErrorKind::Rejected, e.message);
                 let _ = write_json_error(&mut writer, e.status, &err, false);
                 // drain (bounded) whatever the client already sent:
@@ -409,9 +429,39 @@ fn handle_request(
             )?;
             (200, keep)
         }
+        ("GET", "/v1/debug/requests") => {
+            let recs: Vec<Json> = gw
+                .engine
+                .recent_traces()
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("seq", Json::num(r.seq as f64)),
+                        ("outcome", Json::str(r.outcome)),
+                        ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
+                        ("decode_tokens", Json::num(r.decode_tokens as f64)),
+                        (
+                            "latency_ms",
+                            Json::num(r.latency.as_secs_f64() * 1000.0),
+                        ),
+                        ("trace", sse::trace_json(&r.trace)),
+                    ])
+                })
+                .collect();
+            let body = Json::obj(vec![("requests", Json::Arr(recs))]);
+            write_response(
+                w,
+                200,
+                "application/json",
+                body.to_string().as_bytes(),
+                keep,
+            )?;
+            (200, keep)
+        }
         ("POST", "/v1/generate") => handle_generate(gw, req, w, keep)?,
         // known path, wrong verb → 405; anything else → 404
-        (_, "/healthz" | "/metrics" | "/v1/generate") => {
+        (_, "/healthz" | "/metrics" | "/v1/generate"
+            | "/v1/debug/requests") => {
             let err = ServeError::new(
                 ServeErrorKind::Rejected,
                 format!("method {} not allowed on {}", req.method, req.path),
@@ -428,7 +478,7 @@ fn handle_request(
             (404, keep)
         }
     };
-    gw.count_request(&req.path, status);
+    gw.count_request(&req.method, &req.path, status);
     Ok(usable)
 }
 
@@ -525,6 +575,15 @@ fn parse_generate_body(body: &[u8]) -> Result<GenerateParams, ServeError> {
                 reject("\"prefix_cache\" must be a boolean".to_string())
             })?;
             p = p.prefix_cache(on);
+        }
+    }
+    match j.get("trace") {
+        None | Some(Json::Null) => {}
+        Some(v) => {
+            let on = v.as_bool().ok_or_else(|| {
+                reject("\"trace\" must be a boolean".to_string())
+            })?;
+            p = p.trace(on);
         }
     }
     Ok(p)

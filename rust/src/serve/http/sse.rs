@@ -9,7 +9,7 @@
 //! frames are whole `String`s, and Rust strings are valid UTF-8 by
 //! construction (unit-tested below anyway, multi-byte payload included).
 
-use crate::serve::request::{Event, ServeError, Usage};
+use crate::serve::request::{Event, RequestTrace, ServeError, Usage};
 use crate::util::json::Json;
 
 /// Wrap a JSON payload in one SSE frame.
@@ -21,9 +21,10 @@ pub fn frame(event: &str, data: &Json) -> String {
     format!("event: {event}\ndata: {}\n\n", data.to_string())
 }
 
-/// JSON shape of a [`Usage`] summary (latencies in milliseconds).
+/// JSON shape of a [`Usage`] summary (latencies in milliseconds). The
+/// `trace` key is present only when the request opted in.
 pub fn usage_json(u: &Usage) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("prefill_tokens", Json::num(u.prefill_tokens as f64)),
         ("decode_tokens", Json::num(u.decode_tokens as f64)),
         ("latency_ms", Json::num(u.latency.as_secs_f64() * 1000.0)),
@@ -32,6 +33,43 @@ pub fn usage_json(u: &Usage) -> Json {
             Json::num(u.queue_latency.as_secs_f64() * 1000.0),
         ),
         ("finish", Json::str(u.finish.as_str())),
+    ];
+    if let Some(t) = &u.trace {
+        fields.push(("trace", trace_json(t)));
+    }
+    Json::obj(fields)
+}
+
+/// JSON shape of a [`RequestTrace`] (shared between the opt-in `trace`
+/// field on `Usage` and the `/v1/debug/requests` flight-recorder ring).
+pub fn trace_json(t: &RequestTrace) -> Json {
+    Json::obj(vec![
+        ("queue_ms", Json::num(t.queue_ms)),
+        (
+            "prefix_reused_tokens",
+            Json::num(t.prefix_reused_tokens as f64),
+        ),
+        ("prefill_chunks", Json::num(t.prefill_chunks as f64)),
+        (
+            "ttft_ms",
+            match t.ttft_ms {
+                Some(v) => Json::num(v),
+                None => Json::Null,
+            },
+        ),
+        (
+            "decode_gaps",
+            Json::obj(vec![
+                ("count", Json::num(t.decode_gaps.count as f64)),
+                ("mean_ms", Json::num(t.decode_gaps.mean_ms)),
+                ("p50_ms", Json::num(t.decode_gaps.p50_ms)),
+                ("p95_ms", Json::num(t.decode_gaps.p95_ms)),
+                ("max_ms", Json::num(t.decode_gaps.max_ms)),
+            ]),
+        ),
+        ("blocks_invoked", Json::num(t.blocks_invoked as f64)),
+        ("blocks_skipped", Json::num(t.blocks_skipped as f64)),
+        ("skip_fraction", Json::num(t.skip_fraction())),
     ])
 }
 
@@ -92,11 +130,49 @@ mod tests {
             latency: Duration::from_millis(125),
             queue_latency: Duration::from_millis(5),
             finish: FinishReason::Eos,
+            trace: None,
         }));
         let j = assert_well_framed(&f, "done");
         assert_eq!(j.req_usize("decode_tokens").unwrap(), 9);
         assert_eq!(j.req_str("finish").unwrap(), "eos");
         assert!((j.req_f64("latency_ms").unwrap() - 125.0).abs() < 1e-6);
+        assert!(j.get("trace").is_none(), "no trace unless requested");
+    }
+
+    #[test]
+    fn done_frame_carries_opt_in_trace() {
+        use crate::serve::request::{DecodeGapSummary, RequestTrace};
+        let f = event_frame(&Event::Done(Usage {
+            prefill_tokens: 4,
+            decode_tokens: 9,
+            latency: Duration::from_millis(125),
+            queue_latency: Duration::from_millis(5),
+            finish: FinishReason::Eos,
+            trace: Some(RequestTrace {
+                queue_ms: 5.0,
+                prefix_reused_tokens: 2,
+                prefill_chunks: 1,
+                ttft_ms: Some(40.0),
+                decode_gaps: DecodeGapSummary {
+                    count: 8,
+                    mean_ms: 10.0,
+                    p50_ms: 9.0,
+                    p95_ms: 14.0,
+                    max_ms: 15.0,
+                },
+                blocks_invoked: 30,
+                blocks_skipped: 10,
+            }),
+        }));
+        let j = assert_well_framed(&f, "done");
+        let t = j.get("trace").expect("trace present when requested");
+        assert_eq!(t.req_usize("prefix_reused_tokens").unwrap(), 2);
+        assert!((t.req_f64("ttft_ms").unwrap() - 40.0).abs() < 1e-9);
+        assert_eq!(t.req_usize("blocks_skipped").unwrap(), 10);
+        assert!((t.req_f64("skip_fraction").unwrap() - 0.25).abs() < 1e-9);
+        let gaps = t.get("decode_gaps").expect("gap summary");
+        assert_eq!(gaps.req_usize("count").unwrap(), 8);
+        assert!((gaps.req_f64("p95_ms").unwrap() - 14.0).abs() < 1e-9);
     }
 
     #[test]

@@ -49,15 +49,15 @@ pub mod request;
 pub mod sampling;
 pub mod session;
 
-pub use engine::{generate_batch, Engine, EngineStats};
+pub use engine::{generate_batch, Engine, EngineStats, LatencySummary};
 pub use http::{HttpConfig, HttpServer};
 pub use kv_cache::{CacheStats, LayerKvCache};
 pub use prefix_cache::{
     LayerChunk, PrefixCache, PrefixCacheStats, PrefixPage,
 };
 pub use request::{
-    Event, FinishReason, GenerateParams, Generation, Response, ServeError,
-    ServeErrorKind, Usage,
+    DecodeGapSummary, Event, FinishReason, FlightRecord, GenerateParams,
+    Generation, RequestTrace, Response, ServeError, ServeErrorKind, Usage,
 };
 pub use sampling::{argmax, sample, sample_sort_oracle};
 pub use session::{

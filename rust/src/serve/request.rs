@@ -54,6 +54,11 @@ pub struct GenerateParams {
     /// ones). Irrelevant when the engine runs without a cache; the token
     /// stream is bitwise identical either way.
     pub prefix_cache: bool,
+    /// Attach a per-request [`RequestTrace`] (flight-recorder detail) to
+    /// the terminal [`Usage`]. The engine records the trace either way
+    /// for its debug ring; this flag only controls whether it rides on
+    /// the response (`"trace": true` on the wire).
+    pub trace: bool,
 }
 
 impl GenerateParams {
@@ -67,6 +72,7 @@ impl GenerateParams {
             stop_tokens: Vec::new(),
             deadline: None,
             prefix_cache: true,
+            trace: false,
         }
     }
 
@@ -108,6 +114,11 @@ impl GenerateParams {
         self.prefix_cache = on;
         self
     }
+
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
 }
 
 /// Why a generation finished successfully.
@@ -133,6 +144,71 @@ impl FinishReason {
     }
 }
 
+/// Summary of the per-step decode gaps (inter-token latencies) of one
+/// request — the flight recorder's "per-step decode latency" signal,
+/// folded down so a trace stays O(1) regardless of `max_new`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DecodeGapSummary {
+    /// Gaps observed (== streamed tokens − 1 when a first token exists).
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Per-request flight-recorder trace: where this request's wall-clock
+/// and compute actually went. Attached to [`Usage`] when the request
+/// set `trace: true`, and always kept (briefly) in the engine's
+/// in-memory debug ring served at `GET /v1/debug/requests`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RequestTrace {
+    /// Submission → admission into a session row.
+    pub queue_ms: f64,
+    /// Prompt tokens seated from the shared-prefix cache (skipped
+    /// prefill entirely).
+    pub prefix_reused_tokens: usize,
+    /// Chunked-prefill passes this prompt took (0 when fully seated
+    /// from cache or empty).
+    pub prefill_chunks: u64,
+    /// Submission → first streamed token; `None` if the request ended
+    /// before emitting one.
+    pub ttft_ms: Option<f64>,
+    /// Inter-token decode latency summary.
+    pub decode_gaps: DecodeGapSummary,
+    /// Transformer block executions this row participated in — the MoD
+    /// compute-actually-spent signal…
+    pub blocks_invoked: u64,
+    /// …and the block executions MoD routing skipped for this row
+    /// (per-layer capacity drops included).
+    pub blocks_skipped: u64,
+}
+
+impl RequestTrace {
+    /// Fraction of this request's block executions skipped by routing.
+    pub fn skip_fraction(&self) -> f64 {
+        let t = self.blocks_invoked + self.blocks_skipped;
+        self.blocks_skipped as f64 / t.max(1) as f64
+    }
+}
+
+/// One entry of the engine's bounded ring of recent requests (the
+/// `GET /v1/debug/requests` flight recorder). Covers every request that
+/// reached a session row, success or typed failure.
+#[derive(Debug, Clone)]
+pub struct FlightRecord {
+    /// Monotonic per-engine sequence number (higher == more recent).
+    pub seq: u64,
+    /// Terminal outcome: a [`FinishReason`] wire name, or a
+    /// [`ServeErrorKind`] wire name for failures.
+    pub outcome: &'static str,
+    pub prompt_tokens: usize,
+    pub decode_tokens: usize,
+    /// Submission → terminal event.
+    pub latency: Duration,
+    pub trace: RequestTrace,
+}
+
 /// Terminal accounting for one finished generation.
 #[derive(Debug, Clone)]
 pub struct Usage {
@@ -144,6 +220,9 @@ pub struct Usage {
     /// batcher's queueing delay; ≈0 when a row was free at submit time).
     pub queue_latency: Duration,
     pub finish: FinishReason,
+    /// Flight-recorder detail, present iff the request asked for it
+    /// ([`GenerateParams::trace`]).
+    pub trace: Option<RequestTrace>,
 }
 
 /// What went wrong, typed — so callers can branch without parsing text.
@@ -313,7 +392,8 @@ mod tests {
             .seed(42)
             .stop_token(7)
             .deadline_ms(100)
-            .prefix_cache(false);
+            .prefix_cache(false)
+            .trace(true);
         assert_eq!(p.prompt, vec![1, 2]);
         assert_eq!(p.max_new, 9);
         assert!((p.temperature - 0.5).abs() < 1e-12);
@@ -322,7 +402,9 @@ mod tests {
         assert_eq!(p.stop_tokens, vec![7]);
         assert_eq!(p.deadline, Some(Duration::from_millis(100)));
         assert!(!p.prefix_cache);
+        assert!(p.trace);
         assert!(GenerateParams::new(vec![]).prefix_cache, "default on");
+        assert!(!GenerateParams::new(vec![]).trace, "trace is opt-in");
     }
 
     #[test]
@@ -337,6 +419,7 @@ mod tests {
             latency: Duration::from_millis(1),
             queue_latency: Duration::ZERO,
             finish: FinishReason::MaxTokens,
+            trace: None,
         }))
         .unwrap();
         let r = g.wait().unwrap();
@@ -385,6 +468,7 @@ mod tests {
             latency: Duration::ZERO,
             queue_latency: Duration::ZERO,
             finish: FinishReason::Eos,
+            trace: None,
         }))
         .unwrap();
         // extra events after the terminal must never be yielded

@@ -166,6 +166,12 @@ pub struct DecodeSession {
     host: HostModel,
     /// next position per batch row.
     pos: Vec<i32>,
+    /// per-row MoD compute ledger since the row was admitted:
+    /// `[blocks invoked, blocks skipped]` summed over decode steps and
+    /// prefill chunks — the flight recorder's compute-actually-spent
+    /// signal. Unlike [`SessionReport`], which counts each batched block
+    /// dispatch once, this counts per-row *participation*.
+    row_blocks: Vec<[u64; 2]>,
     report: SessionReport,
     last_trace: StepTrace,
 }
@@ -290,6 +296,7 @@ impl DecodeSession {
             layers,
             host,
             pos: vec![0; batch],
+            row_blocks: vec![[0u64; 2]; batch],
             cfg,
             batch,
             decision,
@@ -440,6 +447,14 @@ impl DecodeSession {
                 self.last_trace
                     .routed
                     .insert(li, (gates[0], part_f[0] > 0.5));
+            }
+            // per-row flight-recorder ledger: an active row either ran
+            // this block or was routed around it (capacity drops count
+            // as skipped — the compute genuinely wasn't spent)
+            for b in 0..self.batch {
+                if active[b] {
+                    self.row_blocks[b][usize::from(part_f[b] < 0.5)] += 1;
+                }
             }
 
             if !any {
@@ -718,6 +733,13 @@ impl DecodeSession {
 
         self.pos[row] += t as i32;
 
+        // per-row flight-recorder ledger, token-granular: each prompt
+        // token either entered a block or was routed around it
+        let invoked =
+            part_tok.iter().flatten().filter(|&&p| p).count() as u64;
+        self.row_blocks[row][0] += invoked;
+        self.row_blocks[row][1] += (t * n_layers) as u64 - invoked;
+
         stats.flops = (0..t)
             .map(|i| {
                 flops::decode_step_flops(&self.cfg, &ctx_tok[i], &part_tok[i])
@@ -812,7 +834,17 @@ impl DecodeSession {
             layer.book.admit_row(row);
         }
         self.pos[row] = 0;
+        self.row_blocks[row] = [0, 0];
         Ok(())
+    }
+
+    /// The per-row MoD compute ledger since the row was last admitted:
+    /// `(blocks invoked, blocks skipped)` across its decode steps and
+    /// prefill chunks. Survives [`Self::release_row`] (the engine reads
+    /// it while finishing a request) and resets on [`Self::admit_row`].
+    pub fn row_block_counts(&self, row: usize) -> (u64, u64) {
+        let [invoked, skipped] = self.row_blocks[row];
+        (invoked, skipped)
     }
 
     /// Seat an admitted row with the cache state of a shared-prefix page

@@ -21,11 +21,24 @@
 //!
 //! Conventions follow Prometheus: counters end in `_total`, histograms
 //! expose `<name>_bucket{le="..."}` / `<name>_sum` / `<name>_count`,
-//! label values are escaped, and every family gets one `# HELP` +
-//! `# TYPE` header.
+//! streaming quantile sketches render as `summary` families
+//! (`<name>{quantile="0.5"}` / `_sum` / `_count`), label values are
+//! escaped, and every family gets one `# HELP` + `# TYPE` header.
+//!
+//! Beyond the pull surface, [`snapshot_json`] folds the whole registry
+//! into one JSON object and [`MetricsExporter`] pushes those snapshots
+//! as newline-delimited JSON to stdout or a TCP sink on an interval
+//! (drop-don't-block: a stalled sink loses lines, never backpressures
+//! the process), for scrapeless environments.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant, SystemTime};
+
+use super::json::Json;
+use super::sketch::QuantileSketch;
 
 /// Monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -151,6 +164,7 @@ enum Metric {
     Counter(&'static Counter),
     Gauge(&'static Gauge),
     Histogram(&'static Histogram),
+    Sketch(&'static QuantileSketch),
 }
 
 impl Metric {
@@ -159,6 +173,8 @@ impl Metric {
             Metric::Counter(_) => "counter",
             Metric::Gauge(_) => "gauge",
             Metric::Histogram(_) => "histogram",
+            // a quantile sketch renders exactly like a Prometheus summary
+            Metric::Sketch(_) => "summary",
         }
     }
 }
@@ -274,9 +290,19 @@ pub fn counter_with(
 
 /// Get-or-register an unlabelled gauge.
 pub fn gauge(name: &str, help: &'static str) -> &'static Gauge {
+    gauge_with(name, &[], help)
+}
+
+/// Get-or-register a gauge with label pairs (same cardinality caveats
+/// as [`counter_with`]).
+pub fn gauge_with(
+    name: &str,
+    labels: &[(&str, &str)],
+    help: &'static str,
+) -> &'static Gauge {
     lookup(
         name,
-        &[],
+        labels,
         help,
         || Metric::Gauge(Box::leak(Box::new(Gauge::default()))),
         |m| match m {
@@ -302,6 +328,26 @@ pub fn histogram(
         || Metric::Histogram(Box::leak(Box::new(Histogram::new(bounds)))),
         |m| match m {
             Metric::Histogram(h) => Some(*h),
+            _ => None,
+        },
+    )
+}
+
+/// Get-or-register a streaming quantile sketch (rendered as a Prometheus
+/// `summary` with `quantile="0.5"/"0.95"/"0.99"` samples). The `alpha`
+/// of the *first* registration wins, like histogram bounds.
+pub fn sketch(
+    name: &str,
+    alpha: f64,
+    help: &'static str,
+) -> &'static QuantileSketch {
+    lookup(
+        name,
+        &[],
+        help,
+        || Metric::Sketch(Box::leak(Box::new(QuantileSketch::new(alpha)))),
+        |m| match m {
+            Metric::Sketch(s) => Some(*s),
             _ => None,
         },
     )
@@ -341,10 +387,61 @@ fn merge_le(labels: &str, le: &str) -> String {
     }
 }
 
+fn merge_quantile(labels: &str, q: &str) -> String {
+    if labels.is_empty() {
+        format!("quantile=\"{q}\"")
+    } else {
+        format!("{labels},quantile=\"{q}\"")
+    }
+}
+
+struct ProcessMetrics {
+    start: Instant,
+    uptime: &'static Gauge,
+}
+
+/// `process_uptime_seconds` + `build_info`, lazily registered and
+/// clock-started on first touch. Call [`init_process_metrics`] at
+/// startup so uptime measures from process launch rather than from the
+/// first scrape.
+fn process_metrics() -> &'static ProcessMetrics {
+    static PM: OnceLock<ProcessMetrics> = OnceLock::new();
+    PM.get_or_init(|| {
+        gauge_with(
+            "build_info",
+            &[
+                ("version", env!("CARGO_PKG_VERSION")),
+                (
+                    "features",
+                    if cfg!(feature = "pjrt") { "pjrt" } else { "native" },
+                ),
+            ],
+            "Constant 1; version/features identify this build.",
+        )
+        .set(1.0);
+        ProcessMetrics {
+            start: Instant::now(),
+            uptime: gauge(
+                "process_uptime_seconds",
+                "Seconds since init_process_metrics() (startup), or since \
+                 the first scrape/snapshot if it was never called.",
+            ),
+        }
+    })
+}
+
+/// Start the uptime clock and register `process_uptime_seconds` /
+/// `build_info` — idempotent, call once early in `main`.
+pub fn init_process_metrics() {
+    process_metrics();
+}
+
 /// Render every registered series in the Prometheus text exposition
 /// format (one `# HELP` + `# TYPE` header per family, families sorted by
 /// name, series within a family in registration order).
 pub fn render() -> String {
+    let pm = process_metrics();
+    pm.uptime.set(pm.start.elapsed().as_secs_f64());
     let reg = lock();
     let mut order: Vec<usize> = (0..reg.len()).collect();
     order.sort_by(|&a, &b| reg[a].name.cmp(&reg[b].name));
@@ -398,9 +495,192 @@ pub fn render() -> String {
                     h.count() as f64,
                 );
             }
+            Metric::Sketch(q) => {
+                let snap = q.snapshot();
+                for (quant, v) in [
+                    ("0.5", snap.p50),
+                    ("0.95", snap.p95),
+                    ("0.99", snap.p99),
+                ] {
+                    sample_line(
+                        &mut out,
+                        &s.name,
+                        &merge_quantile(&s.labels, quant),
+                        v,
+                    );
+                }
+                sample_line(
+                    &mut out,
+                    &format!("{}_sum", s.name),
+                    &s.labels,
+                    snap.sum,
+                );
+                sample_line(
+                    &mut out,
+                    &format!("{}_count", s.name),
+                    &s.labels,
+                    snap.count as f64,
+                );
+            }
         }
     }
     out
+}
+
+/// Fold the whole registry into one JSON object:
+/// `{"ts_unix_ms": …, "metrics": {"<name>{labels}": value, …}}` where a
+/// counter/gauge value is a number, a histogram is `{count, sum}`, and a
+/// sketch is `{count, sum, p50, p95, p99}`. Keys match the exposition
+/// format's sample keys so dashboards can join the two surfaces.
+pub fn snapshot_json() -> Json {
+    let pm = process_metrics();
+    pm.uptime.set(pm.start.elapsed().as_secs_f64());
+    let reg = lock();
+    let mut metrics: Vec<(String, Json)> = reg
+        .iter()
+        .map(|s| {
+            let key = if s.labels.is_empty() {
+                s.name.clone()
+            } else {
+                format!("{}{{{}}}", s.name, s.labels)
+            };
+            let value = match &s.metric {
+                Metric::Counter(c) => Json::num(c.get() as f64),
+                Metric::Gauge(g) => Json::num(g.get()),
+                Metric::Histogram(h) => Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("sum", Json::num(h.sum())),
+                ]),
+                Metric::Sketch(q) => {
+                    let snap = q.snapshot();
+                    Json::obj(vec![
+                        ("count", Json::num(snap.count as f64)),
+                        ("sum", Json::num(snap.sum)),
+                        ("p50", Json::num(snap.p50)),
+                        ("p95", Json::num(snap.p95)),
+                        ("p99", Json::num(snap.p99)),
+                    ])
+                }
+            };
+            (key, value)
+        })
+        .collect();
+    drop(reg);
+    metrics.sort_by(|a, b| a.0.cmp(&b.0));
+    let ts = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0);
+    Json::obj(vec![
+        ("ts_unix_ms", Json::num(ts)),
+        ("metrics", Json::Obj(metrics)),
+    ])
+}
+
+/// Background push exporter: one newline-delimited JSON snapshot of the
+/// registry per interval, to stdout (`sink == "-"`) or a TCP address.
+///
+/// Drop-don't-block: the TCP connection is (re)dialed lazily with short
+/// connect/write timeouts, and a snapshot that cannot be written is
+/// counted in `metrics_push_dropped_total` and discarded — a stalled or
+/// absent collector never backpressures the serving process. Dropping
+/// the exporter stops and joins the thread.
+pub struct MetricsExporter {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsExporter {
+    pub fn start(sink: &str, every: Duration) -> MetricsExporter {
+        let lines = counter(
+            "metrics_push_lines_total",
+            "NDJSON metric snapshots successfully written by the push \
+             exporter.",
+        );
+        let dropped = counter(
+            "metrics_push_dropped_total",
+            "NDJSON metric snapshots dropped because the push sink was \
+             unavailable or stalled.",
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let sink = sink.to_string();
+        let every = every.max(Duration::from_millis(10));
+        let handle = std::thread::Builder::new()
+            .name("metrics-push".into())
+            .spawn(move || {
+                let mut conn: Option<TcpStream> = None;
+                while !stop2.load(Ordering::Relaxed) {
+                    let mut line = snapshot_json().to_string();
+                    line.push('\n');
+                    let ok = if sink == "-" {
+                        let mut out = std::io::stdout().lock();
+                        out.write_all(line.as_bytes())
+                            .and_then(|()| out.flush())
+                            .is_ok()
+                    } else {
+                        push_tcp(&sink, &mut conn, line.as_bytes())
+                    };
+                    if ok {
+                        lines.inc();
+                    } else {
+                        dropped.inc();
+                    }
+                    // sleep in short slices so Drop never waits out a
+                    // long interval
+                    let mut left = every;
+                    while left > Duration::ZERO
+                        && !stop2.load(Ordering::Relaxed)
+                    {
+                        let slice = left.min(Duration::from_millis(50));
+                        std::thread::sleep(slice);
+                        left = left.saturating_sub(slice);
+                    }
+                }
+            })
+            .expect("spawn metrics-push thread");
+        MetricsExporter { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Write one snapshot to the TCP sink, dialing if needed; `false` (and a
+/// cleared connection) on any failure so the caller counts a drop and
+/// the next tick redials.
+fn push_tcp(
+    addr: &str,
+    conn: &mut Option<TcpStream>,
+    buf: &[u8],
+) -> bool {
+    const IO_TIMEOUT: Duration = Duration::from_millis(250);
+    if conn.is_none() {
+        let Some(sa) =
+            addr.to_socket_addrs().ok().and_then(|mut it| it.next())
+        else {
+            return false;
+        };
+        let Ok(s) = TcpStream::connect_timeout(&sa, IO_TIMEOUT) else {
+            return false;
+        };
+        let _ = s.set_write_timeout(Some(IO_TIMEOUT));
+        let _ = s.set_nodelay(true);
+        *conn = Some(s);
+    }
+    if let Some(s) = conn.as_mut() {
+        if s.write_all(buf).and_then(|()| s.flush()).is_ok() {
+            return true;
+        }
+    }
+    *conn = None;
+    false
 }
 
 /// Read one rendered sample back by exact `name{labels}` key (the same
@@ -574,5 +854,141 @@ mod tests {
     fn kind_mismatch_panics() {
         counter("selftest_kind_total", "h");
         gauge("selftest_kind_total", "h");
+    }
+
+    #[test]
+    fn sketch_renders_as_summary_family() {
+        let s = sketch("selftest_sketch_seconds", 0.01, "test sketch");
+        for v in [0.010, 0.020, 0.030, 0.040] {
+            s.observe(v);
+        }
+        let text = render();
+        assert!(
+            text.contains("# TYPE selftest_sketch_seconds summary"),
+            "{text}"
+        );
+        let p50 = sample_value(
+            &text,
+            "selftest_sketch_seconds{quantile=\"0.5\"}",
+        )
+        .expect("p50 sample");
+        // rank floor(0.5·3)=1 → exact 0.020, estimate within 1%
+        assert!((p50 - 0.020).abs() <= 0.01 * 0.020 + 1e-12, "{p50}");
+        assert_eq!(
+            sample_value(&text, "selftest_sketch_seconds_count"),
+            Some(4.0)
+        );
+        let sum =
+            sample_value(&text, "selftest_sketch_seconds_sum").unwrap();
+        assert!((sum - 0.1).abs() < 1e-9, "{sum}");
+        // same handle on re-registration, like every other kind
+        assert!(std::ptr::eq(
+            s,
+            sketch("selftest_sketch_seconds", 0.01, "test sketch")
+        ));
+    }
+
+    #[test]
+    fn process_metrics_appear_in_render() {
+        let text = render();
+        let uptime =
+            sample_value(&text, "process_uptime_seconds").expect("uptime");
+        assert!(uptime >= 0.0);
+        let features = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
+        assert!(
+            text.contains(&format!(
+                "build_info{{features=\"{features}\",version=\"{}\"}} 1",
+                env!("CARGO_PKG_VERSION")
+            )),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn snapshot_json_carries_every_metric_kind() {
+        counter("selftest_snap_total", "h").add(3);
+        gauge("selftest_snap_depth", "h").set(1.5);
+        histogram("selftest_snap_hist_seconds", &[1.0], "h").observe(0.5);
+        sketch("selftest_snap_sketch_seconds", 0.01, "h").observe(0.25);
+        let snap = snapshot_json();
+        assert!(snap.get("ts_unix_ms").and_then(|t| t.as_f64()).is_some());
+        let m = snap.get("metrics").expect("metrics object");
+        assert!(
+            m.get("selftest_snap_total").and_then(|v| v.as_u64())
+                >= Some(3)
+        );
+        assert_eq!(
+            m.get("selftest_snap_depth").and_then(|v| v.as_f64()),
+            Some(1.5)
+        );
+        let h = m.get("selftest_snap_hist_seconds").expect("histogram");
+        assert!(h.get("count").and_then(|v| v.as_u64()) >= Some(1));
+        assert!(h.get("sum").is_some());
+        let q = m.get("selftest_snap_sketch_seconds").expect("sketch");
+        for key in ["count", "sum", "p50", "p95", "p99"] {
+            assert!(q.get(key).is_some(), "sketch snapshot missing {key}");
+        }
+        // labelled series keep their rendered key
+        counter_with(
+            "selftest_snap_labelled_total",
+            &[("k", "v")],
+            "h",
+        )
+        .inc();
+        let snap = snapshot_json();
+        assert!(snap
+            .get("metrics")
+            .unwrap()
+            .get("selftest_snap_labelled_total{k=\"v\"}")
+            .is_some());
+    }
+
+    #[test]
+    fn exporter_pushes_ndjson_over_tcp() {
+        use std::io::{BufRead, BufReader};
+        counter("selftest_push_seen_total", "h").inc();
+        let listener =
+            std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().unwrap().to_string();
+        let reader = std::thread::spawn(move || {
+            let (sock, _) = listener.accept().expect("accept");
+            let mut line = String::new();
+            BufReader::new(sock).read_line(&mut line).expect("read line");
+            line
+        });
+        let exporter =
+            MetricsExporter::start(&addr, Duration::from_millis(20));
+        let line = reader.join().expect("reader thread");
+        drop(exporter);
+        assert!(line.ends_with('\n'), "newline-delimited: {line:?}");
+        let doc = Json::parse(line.trim()).expect("snapshot parses");
+        assert!(doc
+            .get("metrics")
+            .unwrap()
+            .get("selftest_push_seen_total")
+            .is_some());
+    }
+
+    #[test]
+    fn exporter_drops_when_sink_unreachable() {
+        let dropped = counter(
+            "metrics_push_dropped_total",
+            "NDJSON metric snapshots dropped because the push sink was \
+             unavailable or stalled.",
+        );
+        let before = dropped.get();
+        // port 1: nothing listens there in CI; connect fails fast
+        let exporter = MetricsExporter::start(
+            "127.0.0.1:1",
+            Duration::from_millis(10),
+        );
+        for _ in 0..200 {
+            if dropped.get() > before {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        drop(exporter); // joins: proves the stalled sink never wedged it
+        assert!(dropped.get() > before, "no drop was ever recorded");
     }
 }

@@ -1,8 +1,9 @@
 //! In-repo substrates that would normally be external crates (this build
 //! is fully offline): error type, JSON codec, CLI parsing, micro-bench
 //! harness, a minimal property-testing loop, the process-global metrics
-//! registry the `/metrics` endpoint renders, and the deterministic
-//! scoped-thread worker pool the native backend computes on.
+//! registry the `/metrics` endpoint renders, a streaming quantile sketch
+//! backing its latency summaries, and the deterministic scoped-thread
+//! worker pool the native backend computes on.
 
 pub mod args;
 pub mod bench;
@@ -11,6 +12,7 @@ pub mod json;
 pub mod metrics;
 pub mod pool;
 pub mod prop;
+pub mod sketch;
 
 pub use args::Args;
 pub use error::{Error, Result};

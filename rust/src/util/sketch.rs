@@ -1,0 +1,520 @@
+//! Streaming quantile sketch (DDSketch-style, log-spaced buckets).
+//!
+//! Zero-dependency substitute for `metrics-util`'s streaming summaries:
+//! values land in geometric buckets `(γ^(i-1), γ^i]` with
+//! `γ = (1+α)/(1-α)`, so any quantile estimate is within relative error
+//! `α` of the exact sample quantile (property-tested in this module
+//! against a sorted-sample oracle). Observation is O(1), memory is
+//! O(log(max/min)/α) buckets, and two sketches built with the same `α`
+//! merge exactly (bucket-wise counter addition) — which is what lets
+//! per-worker loadgen shards and per-thread engine observations fold
+//! into one process-wide p50/p95/p99.
+//!
+//! Values below [`ZERO_FLOOR`] (including exact zeros) collapse into a
+//! dedicated zero bucket: latencies are non-negative and a sub-nanosecond
+//! "latency" is indistinguishable from 0 for every consumer here.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Values at or below this threshold land in the zero bucket.
+pub const ZERO_FLOOR: f64 = 1e-9;
+
+/// Relative-error target used by the serving metrics (1%).
+pub const DEFAULT_ALPHA: f64 = 0.01;
+
+#[derive(Debug, Default, Clone)]
+struct SketchState {
+    /// bucket index -> observation count; key `i` covers `(γ^(i-1), γ^i]`.
+    buckets: HashMap<i32, u64>,
+    /// observations in `[0, ZERO_FLOOR]`.
+    zero_count: u64,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Point-in-time numeric summary of a sketch (one lock acquisition).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SketchSnapshot {
+    pub count: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl SketchSnapshot {
+    /// Mean of the observed values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// Population standard deviation (0 when empty; clamped at 0 so
+    /// float cancellation can never yield NaN).
+    pub fn std(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let mean = self.sum / n;
+        (self.sum_sq / n - mean * mean).max(0.0).sqrt()
+    }
+}
+
+/// Mergeable streaming quantile sketch with a relative-error bound.
+#[derive(Debug)]
+pub struct QuantileSketch {
+    alpha: f64,
+    gamma: f64,
+    inv_ln_gamma: f64,
+    state: Mutex<SketchState>,
+}
+
+impl QuantileSketch {
+    /// Build a sketch with relative-error bound `alpha` in (0, 1).
+    pub fn new(alpha: f64) -> Self {
+        assert!(
+            alpha > 0.0 && alpha < 1.0,
+            "sketch alpha must be in (0, 1), got {alpha}"
+        );
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        Self {
+            alpha,
+            gamma,
+            inv_ln_gamma: 1.0 / gamma.ln(),
+            state: Mutex::new(SketchState::default()),
+        }
+    }
+
+    /// The relative-error bound this sketch was built with.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SketchState> {
+        // an observer that panicked mid-update can only have left counts
+        // one observation stale — keep serving rather than poisoning
+        // every scrape
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record one observation. Negative and non-finite values are
+    /// dropped (latencies are non-negative by construction; a NaN must
+    /// not wedge every later quantile).
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        let mut s = self.lock();
+        if s.count == 0 {
+            s.min = v;
+            s.max = v;
+        } else {
+            s.min = s.min.min(v);
+            s.max = s.max.max(v);
+        }
+        s.count += 1;
+        s.sum += v;
+        s.sum_sq += v * v;
+        if v <= ZERO_FLOOR {
+            s.zero_count += 1;
+        } else {
+            let idx = (v.ln() * self.inv_ln_gamma).ceil() as i32;
+            *s.buckets.entry(idx).or_insert(0) += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.lock().count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.lock().sum
+    }
+
+    /// Estimate the `q`-quantile (q clamped to [0, 1]); 0 when empty.
+    ///
+    /// Rank pairing matches the sorted-sample oracle the property tests
+    /// use: the target is element `floor(q·(n−1))` (0-indexed) of the
+    /// ascending sample, and the estimate is the midpoint-in-log-space
+    /// of the bucket that element landed in, so
+    /// `|estimate − exact| ≤ α · exact`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let s = self.lock();
+        self.quantile_locked(&s, q)
+    }
+
+    fn quantile_locked(&self, s: &SketchState, q: f64) -> f64 {
+        if s.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (s.count - 1) as f64).floor() as u64;
+        if rank < s.zero_count {
+            return 0.0;
+        }
+        let mut keys: Vec<i32> = s.buckets.keys().copied().collect();
+        keys.sort_unstable();
+        let mut cum = s.zero_count;
+        for k in keys {
+            cum += s.buckets[&k];
+            if cum > rank {
+                // midpoint (harmonic, in log space) of (γ^(k-1), γ^k]
+                let est = 2.0 * self.gamma.powi(k) / (self.gamma + 1.0);
+                return est.clamp(s.min, s.max);
+            }
+        }
+        s.max // unreachable when counts are consistent; stay total
+    }
+
+    /// Fold another sketch's contents into this one. Both sketches must
+    /// have been built with the same `alpha` — bucket boundaries only
+    /// line up then, and every merging call site in this crate
+    /// constructs its shards from one constant.
+    pub fn merge_from(&self, other: &QuantileSketch) {
+        assert!(
+            (self.alpha - other.alpha).abs() < 1e-12,
+            "cannot merge sketches with different alpha: {} vs {}",
+            self.alpha,
+            other.alpha
+        );
+        // clone the source under its lock, then fold outside it: the two
+        // locks are never held together, so self.merge_from(other) and
+        // other.merge_from(self) can race without deadlocking
+        let src = self.ptr_eq(other).then(|| self.lock().clone());
+        let src = src.unwrap_or_else(|| other.lock().clone());
+        let mut dst = self.lock();
+        if src.count == 0 {
+            return;
+        }
+        if dst.count == 0 {
+            dst.min = src.min;
+            dst.max = src.max;
+        } else {
+            dst.min = dst.min.min(src.min);
+            dst.max = dst.max.max(src.max);
+        }
+        dst.count += src.count;
+        dst.sum += src.sum;
+        dst.sum_sq += src.sum_sq;
+        dst.zero_count += src.zero_count;
+        for (k, c) in src.buckets {
+            *dst.buckets.entry(k).or_insert(0) += c;
+        }
+    }
+
+    fn ptr_eq(&self, other: &QuantileSketch) -> bool {
+        std::ptr::eq(self, other)
+    }
+
+    /// Count, sum, moments, and p50/p95/p99 under one lock.
+    pub fn snapshot(&self) -> SketchSnapshot {
+        let s = self.lock();
+        SketchSnapshot {
+            count: s.count,
+            sum: s.sum,
+            sum_sq: s.sum_sq,
+            min: if s.count == 0 { 0.0 } else { s.min },
+            max: if s.count == 0 { 0.0 } else { s.max },
+            p50: self.quantile_locked(&s, 0.50),
+            p95: self.quantile_locked(&s, 0.95),
+            p99: self.quantile_locked(&s, 0.99),
+        }
+    }
+
+    /// Drop all observations (loadgen reuses worker shards across
+    /// schedules).
+    pub fn reset(&self) {
+        *self.lock() = SketchState::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::util::prop;
+
+    const ALPHA: f64 = 0.01;
+    const QS: [f64; 6] = [0.0, 0.25, 0.5, 0.9, 0.95, 0.99];
+
+    /// Exact oracle with the same rank pairing the sketch documents.
+    fn oracle(sorted: &[f64], q: f64) -> f64 {
+        let rank = (q * (sorted.len() - 1) as f64).floor() as usize;
+        sorted[rank]
+    }
+
+    fn check_bound(samples: &[f64]) -> Result<(), String> {
+        let sketch = QuantileSketch::new(ALPHA);
+        for &v in samples {
+            sketch.observe(v);
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in QS {
+            let exact = oracle(&sorted, q);
+            let est = sketch.quantile(q);
+            // relative bound, with an absolute floor for the zero bucket
+            if (est - exact).abs() > ALPHA * exact + ZERO_FLOOR {
+                return Err(format!(
+                    "q={q}: estimate {est} vs exact {exact} \
+                     (relative error {})",
+                    ((est - exact) / exact.max(ZERO_FLOOR)).abs()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn empty_sketch_reports_zero_everywhere() {
+        let s = QuantileSketch::new(ALPHA);
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        let snap = s.snapshot();
+        assert_eq!(snap, SketchSnapshot::default());
+        assert_eq!(snap.mean(), 0.0);
+        assert_eq!(snap.std(), 0.0);
+    }
+
+    #[test]
+    fn rejects_negative_and_non_finite() {
+        let s = QuantileSketch::new(ALPHA);
+        s.observe(-1.0);
+        s.observe(f64::NAN);
+        s.observe(f64::INFINITY);
+        assert_eq!(s.count(), 0);
+        s.observe(2.0);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.quantile(0.5), 2.0); // clamped into [min, max]
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha must be in")]
+    fn invalid_alpha_panics() {
+        QuantileSketch::new(1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "different alpha")]
+    fn merging_mismatched_alpha_panics() {
+        QuantileSketch::new(0.01).merge_from(&QuantileSketch::new(0.02));
+    }
+
+    // --- property tests: α bound vs exact oracle, per distribution ---
+
+    #[test]
+    fn prop_bound_constant() {
+        prop::forall(
+            11,
+            40,
+            |rng| {
+                let c = 10f64.powf(rng.next_f64() * 8.0 - 4.0);
+                let n = prop::usize_in(rng, 1, 400);
+                vec![c; n]
+            },
+            |samples| check_bound(samples),
+        );
+    }
+
+    #[test]
+    fn prop_bound_bimodal() {
+        prop::forall(
+            12,
+            40,
+            |rng| {
+                let lo = 1e-3 * (1.0 + rng.next_f64());
+                let hi = lo * (10.0 + 1e4 * rng.next_f64());
+                let n = prop::usize_in(rng, 2, 400);
+                (0..n)
+                    .map(|_| if rng.next_f64() < 0.5 { lo } else { hi })
+                    .collect::<Vec<f64>>()
+            },
+            |samples| check_bound(samples),
+        );
+    }
+
+    #[test]
+    fn prop_bound_heavy_tail() {
+        prop::forall(
+            13,
+            40,
+            |rng| {
+                // Pareto-ish: x = scale / u^a has a power-law tail
+                let scale = 1e-3 + rng.next_f64();
+                let a = 0.5 + 2.0 * rng.next_f64();
+                let n = prop::usize_in(rng, 1, 400);
+                (0..n)
+                    .map(|_| scale / rng.next_f64().max(1e-9).powf(a))
+                    .collect::<Vec<f64>>()
+            },
+            |samples| check_bound(samples),
+        );
+    }
+
+    #[test]
+    fn prop_bound_monotone_ramp() {
+        prop::forall(
+            14,
+            40,
+            |rng| {
+                let base = 1e-4 * (1.0 + rng.next_f64());
+                let step = base * rng.next_f64();
+                let n = prop::usize_in(rng, 1, 400);
+                (0..n)
+                    .map(|i| base + step * i as f64)
+                    .collect::<Vec<f64>>()
+            },
+            |samples| check_bound(samples),
+        );
+    }
+
+    #[test]
+    fn prop_bound_with_zeros_mixed_in() {
+        prop::forall(
+            15,
+            40,
+            |rng| {
+                let n = prop::usize_in(rng, 1, 300);
+                (0..n)
+                    .map(|_| {
+                        if rng.next_f64() < 0.3 {
+                            0.0
+                        } else {
+                            1e-3 + rng.next_f64()
+                        }
+                    })
+                    .collect::<Vec<f64>>()
+            },
+            |samples| check_bound(samples),
+        );
+    }
+
+    // --- merge: shards == concatenation, associativity ---
+
+    #[test]
+    fn prop_merge_of_shards_matches_concatenation() {
+        prop::forall(
+            16,
+            30,
+            |rng| {
+                let shards = prop::usize_in(rng, 2, 4);
+                (0..shards)
+                    .map(|_| {
+                        let n = prop::usize_in(rng, 0, 150);
+                        (0..n)
+                            .map(|_| {
+                                1e-4 / rng.next_f64().max(1e-9).powf(1.5)
+                            })
+                            .collect::<Vec<f64>>()
+                    })
+                    .collect::<Vec<Vec<f64>>>()
+            },
+            |shards| {
+                let whole = QuantileSketch::new(ALPHA);
+                let merged = QuantileSketch::new(ALPHA);
+                // left fold: ((s0 + s1) + s2) ...
+                for shard in shards {
+                    let part = QuantileSketch::new(ALPHA);
+                    for &v in shard {
+                        whole.observe(v);
+                        part.observe(v);
+                    }
+                    merged.merge_from(&part);
+                }
+                // right fold: s0 + (s1 + (s2 ...))
+                let rfold = QuantileSketch::new(ALPHA);
+                for shard in shards.iter().rev() {
+                    let part = QuantileSketch::new(ALPHA);
+                    for &v in shard {
+                        part.observe(v);
+                    }
+                    rfold.merge_from(&part);
+                }
+                // bucket merging is integer addition, so quantiles agree
+                // *exactly* across association orders and with the sketch
+                // of the concatenated stream — stronger than the α bound
+                for q in QS {
+                    let w = whole.quantile(q);
+                    let m = merged.quantile(q);
+                    let r = rfold.quantile(q);
+                    if w != m || w != r {
+                        return Err(format!(
+                            "q={q}: whole {w} vs merged {m} vs rfold {r}"
+                        ));
+                    }
+                }
+                if whole.count() != merged.count() {
+                    return Err("count mismatch".into());
+                }
+                // sums fold in different float orders: near, not bitwise
+                let (ws, ms) = (whole.sum(), merged.sum());
+                if (ws - ms).abs() > 1e-9 * ws.abs().max(1.0) {
+                    return Err(format!("sum mismatch {ws} vs {ms}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn merge_with_self_doubles_counts_without_deadlock() {
+        let s = QuantileSketch::new(ALPHA);
+        for v in [0.5, 1.0, 2.0] {
+            s.observe(v);
+        }
+        s.merge_from(&s);
+        assert_eq!(s.count(), 6);
+    }
+
+    #[test]
+    fn snapshot_mean_and_std_match_direct_computation() {
+        let s = QuantileSketch::new(ALPHA);
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        for v in xs {
+            s.observe(v);
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.count, 4);
+        assert!((snap.mean() - 2.5).abs() < 1e-12);
+        let var =
+            xs.iter().map(|x| (x - 2.5) * (x - 2.5)).sum::<f64>() / 4.0;
+        assert!((snap.std() - var.sqrt()).abs() < 1e-9);
+        assert_eq!(snap.min, 1.0);
+        assert_eq!(snap.max, 4.0);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let s = QuantileSketch::new(ALPHA);
+        s.observe(3.0);
+        s.reset();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn concurrent_observers_lose_nothing() {
+        let s = std::sync::Arc::new(QuantileSketch::new(ALPHA));
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let s = s.clone();
+                scope.spawn(move || {
+                    let mut rng = Pcg32::new(t, 77);
+                    for _ in 0..500 {
+                        s.observe(0.001 + rng.next_f64());
+                    }
+                });
+            }
+        });
+        assert_eq!(s.count(), 2000);
+        let snap = s.snapshot();
+        assert!(snap.p50 > 0.0 && snap.p95 >= snap.p50);
+        assert!(snap.p99 >= snap.p95 && snap.p99 <= snap.max);
+    }
+}

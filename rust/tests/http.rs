@@ -454,7 +454,8 @@ fn assert_prometheus_well_formed(text: &str) {
             if keyword == "TYPE" {
                 let kind = parts.next().expect("type value");
                 assert!(
-                    ["counter", "gauge", "histogram"].contains(&kind),
+                    ["counter", "gauge", "histogram", "summary"]
+                        .contains(&kind),
                     "{line:?}"
                 );
                 typed.push(name.to_string());
@@ -594,15 +595,81 @@ fn metrics_endpoint_agrees_with_engine_stats() {
         sample_value(&after, "engine_request_latency_seconds_count").unwrap()
     );
 
+    // TTFT / inter-token are first-class: exactly one first-token
+    // observation per completed request, one gap per non-first token
+    assert_eq!(
+        delta("engine_ttft_seconds_count") as u64,
+        stats.completed,
+        "one TTFT observation per completed request"
+    );
+    assert_eq!(
+        delta("engine_inter_token_seconds_count") as u64,
+        stats.tokens_generated - stats.completed,
+        "every non-first token contributes one inter-token gap"
+    );
+
+    // sketch summaries: `/metrics` serves the same absolute numbers
+    // `Engine::stats()` reports — both read the process-global sketches,
+    // and the engine is quiesced between the scrape and the stats read
+    for (family, s) in [
+        ("engine_request_latency_sketch_seconds", stats.request_latency),
+        ("engine_ttft_sketch_seconds", stats.ttft),
+        ("engine_inter_token_sketch_seconds", stats.inter_token),
+    ] {
+        assert!(s.count > 0, "{family} saw this test's traffic");
+        assert_eq!(
+            sample_value(&after, &format!("{family}_count")),
+            Some(s.count as f64),
+            "{family} count"
+        );
+        for (q, v) in
+            [("0.5", s.p50_s), ("0.95", s.p95_s), ("0.99", s.p99_s)]
+        {
+            assert_eq!(
+                sample_value(
+                    &after,
+                    &format!("{family}{{quantile=\"{q}\"}}")
+                ),
+                Some(v),
+                "{family} q{q}"
+            );
+        }
+    }
+    // and the one-line snapshot carries the same percentile tail
+    let line = stats.snapshot_line();
+    assert!(line.contains("req p50/p95/p99"), "{line}");
+    assert!(line.contains("ttft"), "{line}");
+
+    // process-level families registered by the gateway's engine
+    assert!(
+        sample_value(&after, "process_uptime_seconds").unwrap_or(-1.0)
+            >= 0.0
+    );
+    assert!(
+        after.contains("build_info{"),
+        "build_info gauge with version/features labels"
+    );
+
     // the gateway instruments itself too
     assert!(delta("gateway_connections_total") >= 6.0);
     assert!(
         sample_value(
             &after,
-            "gateway_requests_total{path=\"/v1/generate\",status=\"200\"}"
+            "gateway_requests_total{method=\"POST\",\
+             path=\"/v1/generate\",status=\"200\"}"
         )
         .unwrap_or(0.0)
             >= 5.0
+    );
+    assert!(
+        sample_value(
+            &after,
+            "gateway_requests_total{method=\"GET\",\
+             path=\"/metrics\",status=\"200\"}"
+        )
+        .unwrap_or(0.0)
+            >= 1.0,
+        "scrapes themselves are counted, with the method label"
     );
 
     // the pool's region accounting showed up (decode ran kernels)
@@ -612,6 +679,93 @@ fn metrics_endpoint_agrees_with_engine_stats() {
                 .unwrap_or(0.0)
             > 0.0
     );
+
+    server.shutdown();
+    drop(engine);
+}
+
+/// Flight recorder: per-request traces are opt-in on the wire
+/// (`"trace": true`), and the engine keeps a bounded ring of recent
+/// request records served at `GET /v1/debug/requests`.
+#[test]
+fn flight_recorder_ring_and_trace_opt_in() {
+    let _g = pool::knob_guard();
+    let (engine, server) = start_gateway(1, test_config());
+    let addr = server.local_addr();
+
+    // default: usage carries no trace (the wire format stays stable)
+    let (status, body) = post_json(
+        addr,
+        "/v1/generate",
+        "{\"prompt\":[256,3],\"max_new\":4,\"seed\":1}",
+    );
+    assert_eq!(status, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(j.get("usage").unwrap().get("trace").is_none());
+
+    // opt-in: usage carries the full per-request trace
+    let (status, body) = post_json(
+        addr,
+        "/v1/generate",
+        "{\"prompt\":[256,3,7,9],\"max_new\":6,\"seed\":2,\"trace\":true}",
+    );
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let n_tokens = j.get("tokens").unwrap().as_arr().unwrap().len();
+    let trace = j
+        .get("usage")
+        .unwrap()
+        .get("trace")
+        .expect("trace requested, trace served");
+    assert!(trace.req_usize("prefill_chunks").unwrap() >= 1);
+    assert!(trace.req_f64("queue_ms").unwrap() >= 0.0);
+    assert!(trace.req_f64("ttft_ms").unwrap() >= 0.0);
+    let invoked = trace.req_usize("blocks_invoked").unwrap();
+    let skipped = trace.req_usize("blocks_skipped").unwrap();
+    assert!(invoked > 0, "unrouted blocks always run");
+    let sf = trace.req_f64("skip_fraction").unwrap();
+    let want = skipped as f64 / (invoked + skipped).max(1) as f64;
+    assert!((sf - want).abs() < 1e-9, "{sf} vs {want}");
+    let gaps = trace.get("decode_gaps").unwrap();
+    assert_eq!(
+        gaps.req_usize("count").unwrap(),
+        n_tokens - 1,
+        "one gap per non-first token"
+    );
+    // summary order holds: p50 <= p95 <= max
+    let (p50, p95, max) = (
+        gaps.req_f64("p50_ms").unwrap(),
+        gaps.req_f64("p95_ms").unwrap(),
+        gaps.req_f64("max_ms").unwrap(),
+    );
+    assert!(p50 <= p95 + 1e-9 && p95 <= max + 1e-9, "{p50} {p95} {max}");
+
+    // the ring: finish accounting can land just after the client's
+    // response is written, so poll briefly
+    let mut recs: Vec<Json> = Vec::new();
+    for _ in 0..200 {
+        let (status, body) = get(addr, "/v1/debug/requests");
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        recs = j.get("requests").unwrap().as_arr().unwrap().to_vec();
+        if recs.len() >= 2 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(recs.len(), 2, "both requests recorded, opt-in or not");
+    // newest-first by admission sequence
+    assert!(
+        recs[0].req_usize("seq").unwrap() > recs[1].req_usize("seq").unwrap()
+    );
+    for r in &recs {
+        assert!(["eos", "stop", "max_tokens"]
+            .contains(&r.req_str("outcome").unwrap().as_str()));
+        assert!(r.req_usize("decode_tokens").unwrap() >= 1);
+        assert!(r.req_f64("latency_ms").unwrap() > 0.0);
+        let t = r.get("trace").expect("every record carries a trace");
+        assert!(t.req_usize("blocks_invoked").unwrap() > 0);
+    }
 
     server.shutdown();
     drop(engine);
