@@ -23,7 +23,7 @@ use mod_transformer::data::rng::Pcg32;
 use mod_transformer::data::{CorpusSpec, MarkovCorpus};
 use mod_transformer::runtime::{open_bundle, Bundle, Tensor};
 use mod_transformer::serve::{
-    generate_batch, Engine, GenerateParams, RoutingDecision,
+    generate_batch, Engine, GenerateParams, Priority, RoutingDecision,
 };
 use mod_transformer::util::bench::{Bench, CaseResult};
 
@@ -224,6 +224,56 @@ fn run_long_prompt_no_stall(
     assert!(stats.prefill_chunks as usize >= prompt_len / 4, "{stats:?}");
 }
 
+/// Interactive requests on their arrival schedule, optionally against a
+/// bulk-class burst submitted up front. Returns the interactive
+/// per-request latencies (seconds) and how many bulk requests completed
+/// — the weighted fair-share scheduler must keep interactive latency
+/// flat under the burst WITHOUT starving the bulk backlog.
+fn run_traffic_mix(
+    bundle: &Arc<Bundle>,
+    params: &Arc<Vec<Tensor>>,
+    interactive: &[GenerateParams],
+    offsets: &[Duration],
+    bulk: usize,
+) -> (Vec<f64>, u64) {
+    let corpus = MarkovCorpus::new(CorpusSpec::default(), 99);
+    let engine = Engine::start(
+        bundle.clone(),
+        params.clone(),
+        ServeConfig { workers: 1, ..Default::default() },
+        DECISION,
+    )
+    .expect("engine");
+    // the burst lands all at once, before any interactive arrival
+    let bulk_gens: Vec<_> = (0..bulk)
+        .map(|i| {
+            engine
+                .submit(
+                    GenerateParams::new(corpus.sequence(400 + i as u64, 4))
+                        .max_new(2)
+                        .seed(800 + i as u64)
+                        .priority(Priority::Bulk),
+                )
+                .expect("submit bulk")
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut gens = Vec::with_capacity(interactive.len());
+    for (i, r) in interactive.iter().enumerate() {
+        sleep_until(t0, offsets[i]);
+        gens.push(engine.submit(r.clone()).expect("submit interactive"));
+    }
+    let latencies: Vec<f64> = gens
+        .into_iter()
+        .map(|g| g.wait().expect("interactive response").latency.as_secs_f64())
+        .collect();
+    for g in bulk_gens {
+        g.wait().expect("bulk response");
+    }
+    let stats = engine.shutdown();
+    (latencies, stats.classes[Priority::Bulk.index()].completed)
+}
+
 fn main() -> mod_transformer::Result<()> {
     let mut bench = Bench::new("serve_throughput");
     let bundle = open_bundle(std::path::Path::new("artifacts"), "mod_tiny")?;
@@ -319,6 +369,78 @@ fn main() -> mod_transformer::Result<()> {
         || {
             run_long_prompt_no_stall(&bundle, &params, prompt_len);
         },
+    );
+
+    // --- traffic shaping: interactive latency under a bulk burst.
+    // Baseline = 16 interactive requests alone; burst = the same
+    // schedule with 24 bulk requests dumped in up front. The weighted
+    // fair-share acceptance criterion is asserted on every bench run:
+    // interactive p95 within 2× the bulk-free baseline AND nonzero bulk
+    // throughput (no starvation either way) ---
+    let interactive: Vec<GenerateParams> = (0..16)
+        .map(|i| {
+            GenerateParams::new(corpus.sequence(300 + i as u64, 4))
+                .max_new(8)
+                .temperature(0.8)
+                .top_k(16)
+                .seed(500 + i as u64)
+                .priority(Priority::Interactive)
+        })
+        .collect();
+    let int_offsets = arrival_offsets(2.0);
+    let mut base_lat = Vec::new();
+    bench.case(
+        "serve/interactive_16req_no_bulk",
+        Some((16 * 8) as f64),
+        || {
+            base_lat = run_traffic_mix(
+                &bundle,
+                &params,
+                &interactive,
+                &int_offsets,
+                0,
+            )
+            .0;
+        },
+    );
+    bench.record_case(latency_case(
+        "serve/interactive_16req_no_bulk/latency_ms",
+        &base_lat,
+    ));
+    let mut mix_lat = Vec::new();
+    let mut bulk_done = 0u64;
+    bench.case(
+        "serve/interactive_16req_bulk_burst24",
+        Some((16 * 8 + 24 * 2) as f64),
+        || {
+            let (l, d) = run_traffic_mix(
+                &bundle,
+                &params,
+                &interactive,
+                &int_offsets,
+                24,
+            );
+            mix_lat = l;
+            bulk_done = d;
+        },
+    );
+    bench.record_case(latency_case(
+        "serve/interactive_16req_bulk_burst24/latency_ms",
+        &mix_lat,
+    ));
+    let p95 = |v: &[f64]| {
+        let mut s = v.to_vec();
+        s.sort_by(f64::total_cmp);
+        s[(s.len() * 95 / 100).min(s.len() - 1)]
+    };
+    assert_eq!(bulk_done, 24, "bulk backlog starved under fair share");
+    // 10ms floor keeps an ultra-fast baseline from turning scheduler
+    // noise into a spurious 2× violation
+    let (base_p95, mix_p95) = (p95(&base_lat), p95(&mix_lat));
+    assert!(
+        mix_p95 <= 2.0 * base_p95.max(0.010),
+        "interactive p95 degraded {base_p95:.4}s -> {mix_p95:.4}s \
+         under the bulk burst"
     );
 
     bench.finish()?;

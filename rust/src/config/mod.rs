@@ -318,6 +318,20 @@ pub struct ServeConfig {
     pub prefill_chunk: usize,
     /// Byte budget for the shared-prefix KV cache. `0` disables it.
     pub prefix_cache_bytes: usize,
+    /// Admission-control cap on queued (not-yet-admitted) requests,
+    /// summed across all priority classes. A submit that would push the
+    /// queue past the cap is shed immediately with a typed
+    /// `ServeErrorKind::Overloaded` (HTTP `429` + `Retry-After` at the
+    /// gateway) instead of queueing unboundedly. `0` = unbounded (the
+    /// pre-traffic-shaping behavior; still the library default).
+    pub queue_cap: usize,
+    /// Deficit-round-robin weights for the scheduler's fair-share
+    /// dequeue, in `Priority::ALL` order (interactive, normal, bulk).
+    /// Per scheduling round a class earns its weight in credits; one
+    /// admission costs one credit, so over a contended period class `c`
+    /// receives ~`weight[c] / Σ weights` of admissions. Zero weights are
+    /// clamped to 1 (nothing can starve).
+    pub class_weights: [u32; 3],
 }
 
 impl Default for ServeConfig {
@@ -329,6 +343,8 @@ impl Default for ServeConfig {
             workers: 0,
             prefill_chunk: 16,
             prefix_cache_bytes: 0,
+            queue_cap: 0,
+            class_weights: [8, 4, 1],
         }
     }
 }

@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 
 use crate::data::rng::Pcg32;
 use crate::data::{CorpusSpec, MarkovCorpus};
+use crate::serve::request::Priority;
 use crate::util::bench::{Bench, CaseResult};
 use crate::util::json::Json;
 use crate::util::sketch::{QuantileSketch, SketchSnapshot, DEFAULT_ALPHA};
@@ -134,6 +135,61 @@ pub struct LoadgenConfig {
     pub prompt_len: usize,
     /// Seed for schedules and prompts (same seed ⇒ same offered load).
     pub seed: u64,
+    /// Priority-class mix as `(class, weight)` pairs (`--mix
+    /// interactive:8,bulk:32`). Empty ⇒ every request is `normal` and
+    /// no per-class reporting happens.
+    pub mix: Vec<(Priority, u32)>,
+}
+
+/// Parse a `--mix` spec: comma-separated `class:weight` pairs, e.g.
+/// `interactive:8,bulk:32`. Weights are positive integers.
+pub fn parse_mix(s: &str) -> crate::Result<Vec<(Priority, u32)>> {
+    let mut mix = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, weight) = part.split_once(':').ok_or_else(|| {
+            crate::err!("mix entry {part:?} is not class:weight")
+        })?;
+        let class = Priority::parse(name).ok_or_else(|| {
+            crate::err!(
+                "unknown priority class {name:?} \
+                 (interactive | normal | bulk)"
+            )
+        })?;
+        let w: u32 = weight.trim().parse().map_err(|_| {
+            crate::err!("mix weight {weight:?} is not a positive integer")
+        })?;
+        crate::ensure!(w > 0, "mix weight for {name:?} must be > 0");
+        mix.push((class, w));
+    }
+    crate::ensure!(!mix.is_empty(), "empty --mix spec");
+    Ok(mix)
+}
+
+/// Seed-deterministic class assignment: request `i` draws its class from
+/// the weighted mix with a dedicated RNG stream, so the same seed offers
+/// the same per-class load regardless of worker interleaving.
+fn assign_classes(cfg: &LoadgenConfig) -> Vec<Priority> {
+    if cfg.mix.is_empty() {
+        return vec![Priority::Normal; cfg.requests];
+    }
+    let total: u64 = cfg.mix.iter().map(|&(_, w)| w as u64).sum();
+    let mut rng = Pcg32::new(cfg.seed ^ 0x00C1A555, 23);
+    (0..cfg.requests)
+        .map(|_| {
+            let mut r = rng.next_u32() as u64 % total;
+            for &(p, w) in &cfg.mix {
+                if r < w as u64 {
+                    return p;
+                }
+                r -= w as u64;
+            }
+            cfg.mix[0].0
+        })
+        .collect()
 }
 
 impl Default for LoadgenConfig {
@@ -147,8 +203,19 @@ impl Default for LoadgenConfig {
             max_new: 16,
             prompt_len: 9,
             seed: 7,
+            mix: Vec::new(),
         }
     }
+}
+
+/// One priority class's share of a schedule (present only under `--mix`).
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: &'static str,
+    pub sent: usize,
+    pub completed: usize,
+    pub shed: usize,
+    pub latency: SketchSnapshot,
 }
 
 /// One schedule's measured outcome (all latency families in seconds).
@@ -158,11 +225,17 @@ pub struct ScheduleReport {
     pub requests: usize,
     pub completed: usize,
     pub failed: usize,
+    /// Requests the gateway shed with HTTP 429 (admission-queue
+    /// overflow) — expected under deliberate overload, so counted
+    /// apart from hard failures.
+    pub shed: usize,
     pub wall_s: f64,
     pub tokens: u64,
     pub latency: SketchSnapshot,
     pub ttft: SketchSnapshot,
     pub inter_token: SketchSnapshot,
+    /// Per-class breakdown; empty unless the run used a `--mix`.
+    pub classes: Vec<ClassReport>,
 }
 
 impl ScheduleReport {
@@ -177,8 +250,8 @@ impl ScheduleReport {
 
     /// Human report block (stdout).
     pub fn render(&self) -> String {
-        format!(
-            "[loadgen {}] {}/{} ok ({} failed) in {:.2}s: \
+        let mut out = format!(
+            "[loadgen {}] {}/{} ok ({} failed, {} shed) in {:.2}s: \
              {} tokens, {:.1} tok/s\n  \
              request latency p50/p95/p99 {:.1}/{:.1}/{:.1} ms\n  \
              ttft            p50/p95/p99 {:.1}/{:.1}/{:.1} ms\n  \
@@ -187,6 +260,7 @@ impl ScheduleReport {
             self.completed,
             self.requests,
             self.failed,
+            self.shed,
             self.wall_s,
             self.tokens,
             self.tokens_per_sec(),
@@ -199,7 +273,20 @@ impl ScheduleReport {
             self.inter_token.p50 * 1000.0,
             self.inter_token.p95 * 1000.0,
             self.inter_token.p99 * 1000.0,
-        )
+        );
+        for c in &self.classes {
+            out.push_str(&format!(
+                "\n  class {:<11} {}/{} ok, {} shed, \
+                 latency p50/p95 {:.1}/{:.1} ms",
+                c.class,
+                c.completed,
+                c.sent,
+                c.shed,
+                c.latency.p50 * 1000.0,
+                c.latency.p95 * 1000.0,
+            ));
+        }
+        out
     }
 
     /// Ledger rows: sketch-backed percentiles as [`CaseResult`]s so the
@@ -221,14 +308,39 @@ impl ScheduleReport {
         } else {
             Some(self.tokens as f64 / self.completed as f64)
         };
-        vec![
+        let mut cases = vec![
             case(
                 format!("{}_request_latency", self.schedule),
                 &self.latency,
                 tok_per_req,
             ),
             case(format!("{}_ttft", self.schedule), &self.ttft, None),
-        ]
+        ];
+        for c in &self.classes {
+            cases.push(case(
+                format!("{}_{}_request_latency", self.schedule, c.class),
+                &c.latency,
+                None,
+            ));
+        }
+        cases
+    }
+}
+
+/// One class's shard within a [`ClientTally`].
+struct ClassTally {
+    completed: usize,
+    shed: usize,
+    latency: QuantileSketch,
+}
+
+impl ClassTally {
+    fn new() -> Self {
+        Self {
+            completed: 0,
+            shed: 0,
+            latency: QuantileSketch::new(DEFAULT_ALPHA),
+        }
     }
 }
 
@@ -236,10 +348,12 @@ impl ScheduleReport {
 struct ClientTally {
     completed: usize,
     failed: usize,
+    shed: usize,
     tokens: u64,
     latency: QuantileSketch,
     ttft: QuantileSketch,
     inter_token: QuantileSketch,
+    class: [ClassTally; 3],
 }
 
 impl ClientTally {
@@ -247,10 +361,12 @@ impl ClientTally {
         Self {
             completed: 0,
             failed: 0,
+            shed: 0,
             tokens: 0,
             latency: QuantileSketch::new(DEFAULT_ALPHA),
             ttft: QuantileSketch::new(DEFAULT_ALPHA),
             inter_token: QuantileSketch::new(DEFAULT_ALPHA),
+            class: [ClassTally::new(), ClassTally::new(), ClassTally::new()],
         }
     }
 }
@@ -260,6 +376,8 @@ impl ClientTally {
 struct RequestOutcome {
     /// A terminal `done` frame arrived.
     ok: bool,
+    /// HTTP status code (0 = transport failure before a status line).
+    status: u16,
     tokens: u64,
     ttft_s: Option<f64>,
     last_token_s: Option<f64>,
@@ -279,8 +397,15 @@ fn drain_frames(buf: &mut Vec<u8>) -> Vec<String> {
 }
 
 /// JSON body for request `i` (prompt from the synthetic corpus — the
-/// same generator the serve demo and the benches draw from).
-fn request_body(corpus: &MarkovCorpus, i: usize, cfg: &LoadgenConfig) -> String {
+/// same generator the serve demo and the benches draw from). The
+/// request's priority class rides in the body, the same way a real
+/// client would tag it.
+fn request_body(
+    corpus: &MarkovCorpus,
+    i: usize,
+    cfg: &LoadgenConfig,
+    class: Priority,
+) -> String {
     let prompt = corpus.sequence(i as u64, cfg.prompt_len.max(2));
     Json::obj(vec![
         (
@@ -291,6 +416,7 @@ fn request_body(corpus: &MarkovCorpus, i: usize, cfg: &LoadgenConfig) -> String 
         ("seed", Json::num(i as f64)),
         ("temperature", Json::num(0.8)),
         ("top_k", Json::num(32.0)),
+        ("priority", Json::str(class.as_str())),
     ])
     .to_string()
 }
@@ -338,15 +464,19 @@ fn run_request(addr: &str, body: &str) -> crate::Result<RequestOutcome> {
             else {
                 continue;
             };
-            let status_ok = raw[..pos]
+            out.status = raw[..pos]
                 .split(|&b| b == b'\r')
                 .next()
-                .is_some_and(|line| {
-                    String::from_utf8_lossy(line).contains(" 200 ")
-                });
+                .and_then(|line| {
+                    String::from_utf8_lossy(line)
+                        .split_whitespace()
+                        .nth(1)
+                        .and_then(|s| s.parse::<u16>().ok())
+                })
+                .unwrap_or(0);
             raw.drain(..pos + 4);
             headers_done = true;
-            if !status_ok {
+            if out.status != 200 {
                 break;
             }
         }
@@ -381,8 +511,9 @@ pub fn run_schedule(
         schedule.offsets(cfg.requests, cfg.rate, cfg.burst, cfg.seed);
     let corpus =
         MarkovCorpus::new(CorpusSpec::default(), cfg.seed ^ 0x10ADBEEF);
+    let classes = assign_classes(cfg);
     let bodies: Vec<String> = (0..cfg.requests)
-        .map(|i| request_body(&corpus, i, cfg))
+        .map(|i| request_body(&corpus, i, cfg, classes[i]))
         .collect();
 
     let next = AtomicUsize::new(0);
@@ -406,17 +537,26 @@ pub fn run_schedule(
                         if due > now {
                             std::thread::sleep(due - now);
                         }
+                        let c = classes[i].index();
                         match run_request(&cfg.addr, &bodies[i]) {
                             Ok(o) if o.ok => {
                                 tally.completed += 1;
                                 tally.tokens += o.tokens;
                                 tally.latency.observe(o.latency_s);
+                                tally.class[c].completed += 1;
+                                tally.class[c].latency.observe(o.latency_s);
                                 if let Some(t) = o.ttft_s {
                                     tally.ttft.observe(t);
                                 }
                                 for g in &o.gaps_s {
                                     tally.inter_token.observe(*g);
                                 }
+                            }
+                            // admission-control sheds are an expected
+                            // overload response, not a broken gateway
+                            Ok(o) if o.status == 429 => {
+                                tally.shed += 1;
+                                tally.class[c].shed += 1;
                             }
                             _ => tally.failed += 1,
                         }
@@ -437,25 +577,65 @@ pub fn run_schedule(
     let latency = QuantileSketch::new(DEFAULT_ALPHA);
     let ttft = QuantileSketch::new(DEFAULT_ALPHA);
     let inter_token = QuantileSketch::new(DEFAULT_ALPHA);
-    let (mut completed, mut failed, mut tokens) = (0usize, 0usize, 0u64);
+    let class_latency: [QuantileSketch; 3] = [
+        QuantileSketch::new(DEFAULT_ALPHA),
+        QuantileSketch::new(DEFAULT_ALPHA),
+        QuantileSketch::new(DEFAULT_ALPHA),
+    ];
+    let (mut completed, mut failed, mut shed, mut tokens) =
+        (0usize, 0usize, 0usize, 0u64);
+    let mut class_completed = [0usize; 3];
+    let mut class_shed = [0usize; 3];
     for t in &shards {
         completed += t.completed;
         failed += t.failed;
+        shed += t.shed;
         tokens += t.tokens;
         latency.merge_from(&t.latency);
         ttft.merge_from(&t.ttft);
         inter_token.merge_from(&t.inter_token);
+        for (c, ct) in t.class.iter().enumerate() {
+            class_completed[c] += ct.completed;
+            class_shed[c] += ct.shed;
+            class_latency[c].merge_from(&ct.latency);
+        }
     }
+    // per-class rows only exist when the caller asked for a mix — a
+    // plain run stays byte-compatible with the old single-family report
+    let class_reports = if cfg.mix.is_empty() {
+        Vec::new()
+    } else {
+        Priority::ALL
+            .iter()
+            .filter_map(|p| {
+                let c = p.index();
+                let sent =
+                    classes.iter().filter(|cls| **cls == *p).count();
+                if sent == 0 {
+                    return None;
+                }
+                Some(ClassReport {
+                    class: p.as_str(),
+                    sent,
+                    completed: class_completed[c],
+                    shed: class_shed[c],
+                    latency: class_latency[c].snapshot(),
+                })
+            })
+            .collect()
+    };
     Ok(ScheduleReport {
         schedule: schedule.as_str(),
         requests: cfg.requests,
         completed,
         failed,
+        shed,
         wall_s,
         tokens,
         latency: latency.snapshot(),
         ttft: ttft.snapshot(),
         inter_token: inter_token.snapshot(),
+        classes: class_reports,
     })
 }
 
@@ -562,10 +742,10 @@ mod tests {
     }
 
     #[test]
-    fn request_body_is_valid_json_with_prompt() {
+    fn request_body_is_valid_json_with_prompt_and_class() {
         let cfg = LoadgenConfig::default();
         let corpus = MarkovCorpus::new(CorpusSpec::default(), 3);
-        let body = request_body(&corpus, 5, &cfg);
+        let body = request_body(&corpus, 5, &cfg, Priority::Bulk);
         let j = Json::parse(&body).expect("body parses");
         assert_eq!(
             j.get("prompt").and_then(|p| p.as_arr()).unwrap().len(),
@@ -573,6 +753,49 @@ mod tests {
         );
         assert_eq!(j.req_usize("max_new").unwrap(), cfg.max_new);
         assert_eq!(j.req_usize("seed").unwrap(), 5);
+        assert_eq!(j.req_str("priority").unwrap(), "bulk");
+    }
+
+    #[test]
+    fn parse_mix_accepts_specs_and_rejects_garbage() {
+        assert_eq!(
+            parse_mix("interactive:8,bulk:32").unwrap(),
+            vec![(Priority::Interactive, 8), (Priority::Bulk, 32)]
+        );
+        assert_eq!(
+            parse_mix(" Normal : 4 ").unwrap(),
+            vec![(Priority::Normal, 4)]
+        );
+        for bad in ["", "interactive", "vip:3", "bulk:0", "bulk:x"] {
+            assert!(parse_mix(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn class_assignment_is_deterministic_and_tracks_weights() {
+        let cfg = LoadgenConfig {
+            requests: 400,
+            mix: parse_mix("interactive:1,bulk:3").unwrap(),
+            ..LoadgenConfig::default()
+        };
+        let a = assign_classes(&cfg);
+        let b = assign_classes(&cfg);
+        assert_eq!(a, b, "same seed ⇒ same class sequence");
+        let interactive =
+            a.iter().filter(|p| **p == Priority::Interactive).count();
+        let bulk = a.iter().filter(|p| **p == Priority::Bulk).count();
+        assert_eq!(interactive + bulk, 400, "only mixed classes appear");
+        // 1:3 weighting ⇒ ~100 interactive; allow generous sampling slack
+        assert!(
+            (50..200).contains(&interactive),
+            "1:3 mix gave {interactive} interactive of 400"
+        );
+        // no mix ⇒ everything is normal
+        let plain = assign_classes(&LoadgenConfig {
+            requests: 8,
+            ..LoadgenConfig::default()
+        });
+        assert!(plain.iter().all(|p| *p == Priority::Normal));
     }
 
     #[test]
@@ -583,16 +806,59 @@ mod tests {
             requests: 0,
             completed: 0,
             failed: 0,
+            shed: 0,
             wall_s: 0.0,
             tokens: 0,
             latency: empty,
             ttft: empty,
             inter_token: empty,
+            classes: Vec::new(),
         };
         assert_eq!(r.tokens_per_sec(), 0.0);
         for c in r.to_cases() {
             assert!(c.mean_ms.is_finite() && c.std_ms.is_finite());
         }
         assert!(r.render().contains("0 tokens"));
+    }
+
+    #[test]
+    fn class_reports_become_ledger_rows() {
+        let empty = QuantileSketch::new(DEFAULT_ALPHA).snapshot();
+        let r = ScheduleReport {
+            schedule: "burst",
+            requests: 8,
+            completed: 6,
+            failed: 0,
+            shed: 2,
+            wall_s: 1.0,
+            tokens: 96,
+            latency: empty,
+            ttft: empty,
+            inter_token: empty,
+            classes: vec![
+                ClassReport {
+                    class: "interactive",
+                    sent: 2,
+                    completed: 2,
+                    shed: 0,
+                    latency: empty,
+                },
+                ClassReport {
+                    class: "bulk",
+                    sent: 6,
+                    completed: 4,
+                    shed: 2,
+                    latency: empty,
+                },
+            ],
+        };
+        let names: Vec<String> =
+            r.to_cases().into_iter().map(|c| c.name).collect();
+        assert!(names
+            .contains(&"burst_interactive_request_latency".to_string()));
+        assert!(names.contains(&"burst_bulk_request_latency".to_string()));
+        let text = r.render();
+        assert!(text.contains("2 shed"), "{text}");
+        assert!(text.contains("class bulk"), "{text}");
     }
 }

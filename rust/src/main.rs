@@ -51,7 +51,7 @@ COMMANDS:
                     [--stream] [--deadline-ms N] [--http PORT]
                     [--stats-every-ms N] [--prefill-chunk N]
                     [--prefix-cache-mb N] [--push-metrics ADDR|-]
-                    [--push-every-ms N]
+                    [--push-every-ms N] [--queue-cap N]
                     continuously-batched engine. Default (loopback mode):
                     demo over N synthetic requests; --stream prints the
                     first request's tokens live; --deadline-ms attaches a
@@ -68,18 +68,26 @@ COMMANDS:
                     --prefill-chunk sets the tokens per parallel prefill
                     pass (default 16; 1 = per-token); --prefix-cache-mb
                     enables the shared-prefix KV cache with that byte
-                    budget (default 0 = off)
+                    budget (default 0 = off); --queue-cap bounds the
+                    admission queue across all priority classes (default
+                    0 = unbounded; overflow sheds with typed
+                    `overloaded` / HTTP 429 + Retry-After)
   loadgen           [--addr HOST:PORT] [--schedule poisson|burst|ramp|all]
                     [--requests N] [--concurrency N] [--rate R] [--burst N]
                     [--max-new N] [--prompt-len N] [--seed N]
+                    [--mix CLASS:N,CLASS:N]
                     open-loop load generator against a running
                     `serve --http` gateway: precomputed Poisson / burst /
                     ramp arrival schedules over N concurrent SSE clients
                     (default schedules: poisson + burst; comma-separate to
-                    pick several). Reports throughput and sketch-backed
-                    p50/p95/p99 for request latency, TTFT and inter-token
-                    gap, and merges each schedule into BENCH_native.json
-                    (suite `loadgen`)
+                    pick several). --mix weights requests across priority
+                    classes (e.g. `interactive:8,bulk:32`; default all
+                    `normal`) and reports per-class latency sketches.
+                    Reports throughput and sketch-backed p50/p95/p99 for
+                    request latency, TTFT and inter-token gap, and merges
+                    each schedule (plus per-class rows under a --mix) into
+                    BENCH_native.json (suite `loadgen`); 429 sheds are
+                    counted separately from hard failures
   flops <preset>
   exp <fig3|fig4|fig5|fig6|fig7|all> [--scale smoke|tiny|full]
                     [--steps N]  (fixed-step figures 5/6/7 only; figs 3/4
@@ -291,6 +299,8 @@ fn main() -> mod_transformer::Result<()> {
                     prefix_cache_bytes: args
                         .usize_or("prefix-cache-mb", 0)?
                         .saturating_mul(1 << 20),
+                    queue_cap: args
+                        .usize_or("queue-cap", defaults.queue_cap)?,
                     ..defaults
                 },
                 decision,
@@ -444,6 +454,10 @@ fn main() -> mod_transformer::Result<()> {
                 prompt_len: args
                     .usize_or("prompt-len", defaults.prompt_len)?,
                 seed: args.u64_or("seed", defaults.seed)?,
+                mix: match args.opt("mix") {
+                    Some(spec) => loadgen::parse_mix(spec)?,
+                    None => Vec::new(),
+                },
             };
             let reports = loadgen::run(&cfg, &schedules)?;
             let failed: usize = reports.iter().map(|r| r.failed).sum();

@@ -47,7 +47,9 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use crate::serve::engine::Engine;
-use crate::serve::request::{Event, GenerateParams, ServeError, ServeErrorKind};
+use crate::serve::request::{
+    Event, GenerateParams, Priority, ServeError, ServeErrorKind,
+};
 use crate::util::json::Json;
 use crate::util::metrics::{self, Counter};
 
@@ -88,6 +90,7 @@ impl Default for HttpConfig {
 pub fn status_for(kind: ServeErrorKind) -> u16 {
     match kind {
         ServeErrorKind::Rejected => 400,
+        ServeErrorKind::Overloaded => 429,
         ServeErrorKind::Cancelled => 499,
         ServeErrorKind::DeadlineExceeded => 504,
         ServeErrorKind::Batch => 500,
@@ -103,6 +106,7 @@ fn reason(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         499 => "Client Closed Request",
         500 => "Internal Server Error",
@@ -320,14 +324,32 @@ fn write_response(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_extra(w, status, content_type, body, keep_alive, "")
+}
+
+/// [`write_response`] plus pre-formatted extra header lines (each ending
+/// in `\r\n`) — the `Retry-After` carrier for 429 shed responses.
+fn write_response_extra(
+    w: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra_headers: &str,
+) -> std::io::Result<()> {
+    debug_assert!(
+        extra_headers.is_empty() || extra_headers.ends_with("\r\n"),
+        "extra header lines must be CRLF-terminated"
+    );
     let head = format!(
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
-         Connection: {}\r\n\r\n",
+         Connection: {}\r\n{}\r\n",
         status,
         reason(status),
         content_type,
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
+        extra_headers,
     );
     w.write_all(head.as_bytes())?;
     w.write_all(body)?;
@@ -346,7 +368,21 @@ fn write_json_error(
     err: &ServeError,
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    write_response(w, status, "application/json", &error_body(err), keep_alive)
+    // a shed request tells the client when to come back: Retry-After in
+    // whole seconds, computed by the engine from queue depth × observed
+    // per-request service time
+    let retry = match err.retry_after_secs() {
+        Some(secs) => format!("Retry-After: {secs}\r\n"),
+        None => String::new(),
+    };
+    write_response_extra(
+        w,
+        status,
+        "application/json",
+        &error_body(err),
+        keep_alive,
+        &retry,
+    )
 }
 
 fn handle_connection(gw: &Gateway, stream: TcpStream) {
@@ -483,7 +519,15 @@ fn handle_request(
 }
 
 /// Decode the `/v1/generate` JSON body into [`GenerateParams`].
-fn parse_generate_body(body: &[u8]) -> Result<GenerateParams, ServeError> {
+///
+/// `header_priority` is the raw `X-Priority` header value, if the client
+/// sent one; it sets the request's class unless the JSON body carries an
+/// explicit `"priority"` field, which wins. Unknown class names in either
+/// place are a typed 400, not a silent downgrade.
+fn parse_generate_body(
+    body: &[u8],
+    header_priority: Option<&str>,
+) -> Result<GenerateParams, ServeError> {
     let reject = |m: String| ServeError::new(ServeErrorKind::Rejected, m);
     let text = std::str::from_utf8(body)
         .map_err(|e| reject(format!("body is not UTF-8: {e}")))?;
@@ -586,6 +630,33 @@ fn parse_generate_body(body: &[u8]) -> Result<GenerateParams, ServeError> {
             p = p.trace(on);
         }
     }
+    if let Some(h) = header_priority {
+        let cls = Priority::parse(h).ok_or_else(|| {
+            reject(format!("unknown X-Priority class {h:?}"))
+        })?;
+        p = p.priority(cls);
+    }
+    match j.get("priority") {
+        None | Some(Json::Null) => {}
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| {
+                reject("\"priority\" must be a string".to_string())
+            })?;
+            let cls = Priority::parse(s).ok_or_else(|| {
+                reject(format!("unknown \"priority\" class {s:?}"))
+            })?;
+            p = p.priority(cls);
+        }
+    }
+    match j.get("tenant") {
+        None | Some(Json::Null) => {}
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| {
+                reject("\"tenant\" must be a string".to_string())
+            })?;
+            p = p.tenant(s);
+        }
+    }
     Ok(p)
 }
 
@@ -596,7 +667,8 @@ fn handle_generate(
     keep: bool,
 ) -> std::io::Result<(u16, bool)> {
     let stream = req.query_flag("stream");
-    let params = match parse_generate_body(&req.body) {
+    let params =
+        match parse_generate_body(&req.body, req.header("x-priority")) {
         Ok(p) => p,
         Err(e) => {
             let status = status_for(e.kind);

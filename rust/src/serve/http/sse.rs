@@ -73,12 +73,18 @@ pub fn trace_json(t: &RequestTrace) -> Json {
     ])
 }
 
-/// JSON shape of a typed [`ServeError`].
+/// JSON shape of a typed [`ServeError`]. Overload sheds carry their
+/// computed backoff (`retry_after_s`, the same whole-seconds integer the
+/// HTTP `Retry-After` header uses).
 pub fn error_json(e: &ServeError) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("kind", Json::str(e.kind.as_str())),
         ("message", Json::str(&e.message)),
-    ])
+    ];
+    if let Some(secs) = e.retry_after_secs() {
+        fields.push(("retry_after_s", Json::num(secs as f64)));
+    }
+    Json::obj(fields)
 }
 
 /// Render one engine [`Event`] as its SSE frame.

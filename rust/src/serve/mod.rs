@@ -49,7 +49,9 @@ pub mod request;
 pub mod sampling;
 pub mod session;
 
-pub use engine::{generate_batch, Engine, EngineStats, LatencySummary};
+pub use engine::{
+    generate_batch, ClassStats, Engine, EngineStats, LatencySummary,
+};
 pub use http::{HttpConfig, HttpServer};
 pub use kv_cache::{CacheStats, LayerKvCache};
 pub use prefix_cache::{
@@ -57,7 +59,8 @@ pub use prefix_cache::{
 };
 pub use request::{
     DecodeGapSummary, Event, FinishReason, FlightRecord, GenerateParams,
-    Generation, RequestTrace, Response, ServeError, ServeErrorKind, Usage,
+    Generation, Priority, RequestTrace, Response, ServeError, ServeErrorKind,
+    Usage,
 };
 pub use sampling::{argmax, sample, sample_sort_oracle};
 pub use session::{

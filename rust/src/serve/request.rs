@@ -16,6 +16,63 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
+/// Priority class of one request — the traffic-shaping axis the
+/// scheduler fair-shares over. Classes are *weights*, not strict tiers:
+/// a bulk backlog cannot starve interactive arrivals, and interactive
+/// bursts cannot starve bulk forever either (deficit round-robin, see
+/// `serve::engine`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive traffic (largest scheduling weight).
+    Interactive,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Throughput traffic that tolerates queueing (smallest weight).
+    Bulk,
+}
+
+impl Priority {
+    /// All classes in the scheduler's deterministic service order.
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Normal, Priority::Bulk];
+
+    /// Stable wire name — the JSON `priority` field, the `X-Priority`
+    /// header value, and the `class` label on per-class metrics.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Interactive => "interactive",
+            Self::Normal => "normal",
+            Self::Bulk => "bulk",
+        }
+    }
+
+    /// Parse a wire name (case-insensitive). `None` for unknown names so
+    /// the gateway can reject them typed instead of silently defaulting.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interactive" => Some(Self::Interactive),
+            "normal" | "" => Some(Self::Normal),
+            "bulk" => Some(Self::Bulk),
+            _ => None,
+        }
+    }
+
+    /// Index into per-class arrays (matches [`Priority::ALL`] order).
+    pub fn index(&self) -> usize {
+        match self {
+            Self::Interactive => 0,
+            Self::Normal => 1,
+            Self::Bulk => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// One generation request: prompt + sampling/stopping knobs.
 ///
 /// Build with the fluent setters:
@@ -59,6 +116,14 @@ pub struct GenerateParams {
     /// for its debug ring; this flag only controls whether it rides on
     /// the response (`"trace": true` on the wire).
     pub trace: bool,
+    /// Scheduling class (`"priority"` on the wire, or the `X-Priority`
+    /// header). Never changes the token stream — only *when* the request
+    /// is admitted relative to competing traffic.
+    pub priority: Priority,
+    /// Optional tenant id, carried into per-request accounting (flight
+    /// records) and reserved for per-tenant quotas. FIFO order within a
+    /// class is tenant-blind today.
+    pub tenant: Option<String>,
 }
 
 impl GenerateParams {
@@ -73,6 +138,8 @@ impl GenerateParams {
             deadline: None,
             prefix_cache: true,
             trace: false,
+            priority: Priority::Normal,
+            tenant: None,
         }
     }
 
@@ -117,6 +184,16 @@ impl GenerateParams {
 
     pub fn trace(mut self, on: bool) -> Self {
         self.trace = on;
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn tenant(mut self, t: impl Into<String>) -> Self {
+        self.tenant = Some(t.into());
         self
     }
 }
@@ -242,6 +319,10 @@ pub enum ServeErrorKind {
     /// The request was rejected up front (e.g. prompt + max_new exceed
     /// the bundle's decode budget).
     Rejected,
+    /// Load shed: the bounded admission queue was full at submit time.
+    /// The gateway maps this to HTTP `429` with a computed `Retry-After`
+    /// ([`ServeError::retry_after`]).
+    Overloaded,
 }
 
 impl ServeErrorKind {
@@ -252,6 +333,7 @@ impl ServeErrorKind {
             Self::Batch => "batch_failed",
             Self::Shutdown => "engine_shutdown",
             Self::Rejected => "rejected",
+            Self::Overloaded => "overloaded",
         }
     }
 }
@@ -261,11 +343,29 @@ impl ServeErrorKind {
 pub struct ServeError {
     pub kind: ServeErrorKind,
     pub message: String,
+    /// For [`ServeErrorKind::Overloaded`]: how long the caller should
+    /// back off before retrying, computed by the engine from current
+    /// queue depth × observed per-request service time. The gateway
+    /// serializes it as the HTTP `Retry-After` header (whole seconds,
+    /// rounded up, minimum 1).
+    pub retry_after: Option<Duration>,
 }
 
 impl ServeError {
     pub fn new(kind: ServeErrorKind, message: impl Into<String>) -> Self {
-        Self { kind, message: message.into() }
+        Self { kind, message: message.into(), retry_after: None }
+    }
+
+    /// Attach a retry hint (overload shedding).
+    pub fn with_retry_after(mut self, d: Duration) -> Self {
+        self.retry_after = Some(d);
+        self
+    }
+
+    /// Retry hint in whole seconds, rounded up with a floor of 1 — the
+    /// exact integer the gateway writes into `Retry-After`.
+    pub fn retry_after_secs(&self) -> Option<u64> {
+        self.retry_after.map(|d| (d.as_secs_f64().ceil() as u64).max(1))
     }
 }
 
@@ -295,14 +395,16 @@ pub enum Event {
     Error(ServeError),
 }
 
-/// Completed generation (the blocking view; same shape as before the
-/// streaming redesign).
+/// Completed generation (the blocking view).
 #[derive(Debug, Clone)]
 pub struct Response {
     pub tokens: Vec<u16>,
     pub latency: Duration,
     pub prefill_tokens: usize,
     pub decode_tokens: usize,
+    /// Submission → admission into a decode-session row.
+    pub queue_latency: Duration,
+    pub finish: FinishReason,
 }
 
 /// Handle to one in-flight generation: an iterator of [`Event`]s.
@@ -362,6 +464,8 @@ impl Generation {
                         latency: u.latency,
                         prefill_tokens: u.prefill_tokens,
                         decode_tokens: u.decode_tokens,
+                        queue_latency: u.queue_latency,
+                        finish: u.finish,
                     });
                 }
                 Event::Error(e) => return Err(e.into()),
@@ -393,7 +497,9 @@ mod tests {
             .stop_token(7)
             .deadline_ms(100)
             .prefix_cache(false)
-            .trace(true);
+            .trace(true)
+            .priority(Priority::Interactive)
+            .tenant("acme");
         assert_eq!(p.prompt, vec![1, 2]);
         assert_eq!(p.max_new, 9);
         assert!((p.temperature - 0.5).abs() < 1e-12);
@@ -403,8 +509,36 @@ mod tests {
         assert_eq!(p.deadline, Some(Duration::from_millis(100)));
         assert!(!p.prefix_cache);
         assert!(p.trace);
+        assert_eq!(p.priority, Priority::Interactive);
+        assert_eq!(p.tenant.as_deref(), Some("acme"));
         assert!(GenerateParams::new(vec![]).prefix_cache, "default on");
         assert!(!GenerateParams::new(vec![]).trace, "trace is opt-in");
+        assert_eq!(GenerateParams::new(vec![]).priority, Priority::Normal);
+        assert!(GenerateParams::new(vec![]).tenant.is_none());
+    }
+
+    #[test]
+    fn priority_wire_names_round_trip() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+            assert_eq!(Priority::ALL[p.index()], p);
+        }
+        assert_eq!(Priority::parse("INTERACTIVE"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse(" bulk "), Some(Priority::Bulk));
+        assert_eq!(Priority::parse(""), Some(Priority::Normal));
+        assert_eq!(Priority::parse("vip"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn retry_after_rounds_up_whole_seconds() {
+        let e = ServeError::new(ServeErrorKind::Overloaded, "queue full");
+        assert_eq!(e.retry_after_secs(), None);
+        let e = e.with_retry_after(Duration::from_millis(1400));
+        assert_eq!(e.retry_after_secs(), Some(2), "ceil to whole seconds");
+        let tiny = ServeError::new(ServeErrorKind::Overloaded, "queue full")
+            .with_retry_after(Duration::from_millis(3));
+        assert_eq!(tiny.retry_after_secs(), Some(1), "floor of 1s");
     }
 
     #[test]
@@ -426,6 +560,8 @@ mod tests {
         assert_eq!(r.tokens, vec![5, 6]);
         assert_eq!(r.prefill_tokens, 3);
         assert_eq!(r.decode_tokens, 2);
+        assert_eq!(r.finish, FinishReason::MaxTokens, "finish must survive wait()");
+        assert_eq!(r.queue_latency, Duration::ZERO);
     }
 
     #[test]

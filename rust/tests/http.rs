@@ -771,6 +771,146 @@ fn flight_recorder_ring_and_trace_opt_in() {
     drop(engine);
 }
 
+/// Admission control over the wire: with the single session row busy
+/// and the queue at its cap, the gateway answers 429 with a numeric
+/// `Retry-After` header, a typed `overloaded` JSON body (including
+/// `retry_after_s`), and a per-class `engine_shed_total` counter in
+/// `/metrics`. Priority rides both the JSON `priority` field and the
+/// `X-Priority` header; unknown class names are a 400, never a silent
+/// downgrade.
+#[test]
+fn overload_returns_429_with_retry_after_and_class_metrics() {
+    let _g = pool::knob_guard();
+    let bundle = open("mod_tiny_http");
+    let params = Arc::new(bundle.init_params().unwrap());
+    let engine = Arc::new(
+        Engine::start(
+            bundle,
+            params,
+            ServeConfig {
+                decode_batches: vec![1],
+                workers: 1,
+                queue_cap: 1,
+                ..Default::default()
+            },
+            DECISION,
+        )
+        .unwrap(),
+    );
+    let server = HttpServer::start(engine.clone(), test_config()).unwrap();
+    let addr = server.local_addr();
+
+    // unknown class names: typed 400 from the JSON field ...
+    let (status, body) = post_json(
+        addr,
+        "/v1/generate",
+        "{\"prompt\":[256],\"max_new\":2,\"priority\":\"vip\"}",
+    );
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    // ... and from the X-Priority header
+    let ok_body = "{\"prompt\":[256],\"max_new\":2,\"seed\":4}";
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nX-Priority: vip\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{ok_body}",
+        ok_body.len()
+    );
+    let (head, _) = split_response(&exchange(addr, raw.as_bytes()));
+    assert_eq!(status_of(&head), 400, "{head}");
+
+    // a long stream occupies the single row ...
+    let long = std::thread::spawn(move || {
+        sse_generate(
+            addr,
+            "{\"prompt\":[256,3],\"max_new\":60,\"temperature\":0.9,\
+             \"seed\":1}",
+        )
+    });
+    // ... wait until it has been admitted (left the queue)
+    for _ in 0..500 {
+        let s = engine.stats();
+        if s.submitted >= 1 && s.queue_depth == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // one queued request fills the whole cap
+    let queued = std::thread::spawn(move || {
+        post_json(
+            addr,
+            "/v1/generate",
+            "{\"prompt\":[256,5],\"max_new\":2,\"seed\":2}",
+        )
+    });
+    for _ in 0..500 {
+        if engine.stats().queue_depth >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // the next request sheds: 429 + numeric Retry-After + typed body
+    let shed_body =
+        "{\"prompt\":[256,7],\"max_new\":2,\"seed\":3,\"priority\":\"bulk\"}";
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{shed_body}",
+        shed_body.len()
+    );
+    let (head, resp_body) = split_response(&exchange(addr, raw.as_bytes()));
+    assert_eq!(status_of(&head), 429, "{head}");
+    let retry: u64 = header_of(&head, "retry-after")
+        .expect("429 carries Retry-After")
+        .parse()
+        .expect("Retry-After is whole seconds");
+    assert!(retry >= 1);
+    let j = Json::parse(std::str::from_utf8(&resp_body).unwrap()).unwrap();
+    let err = j.get("error").expect("typed error body");
+    assert_eq!(err.req_str("kind").unwrap(), "overloaded");
+    assert!(err.req_str("message").unwrap().contains("queue full"));
+    assert!(err.req_f64("retry_after_s").unwrap() >= 1.0);
+
+    // the shed is visible per class in /metrics
+    let (status, scrape) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    let scrape = String::from_utf8(scrape).unwrap();
+    assert!(
+        sample_value(&scrape, "engine_shed_total{class=\"bulk\"}")
+            .unwrap_or(0.0)
+            >= 1.0,
+        "per-class shed counter exported"
+    );
+
+    // the admitted requests were untouched by the shed
+    let (tokens, terminal) = long.join().expect("long stream");
+    assert_eq!(terminal, "done");
+    assert!(!tokens.is_empty());
+    let (status, _) = queued.join().expect("queued request");
+    assert_eq!(status, 200, "queued request completed after the stream");
+
+    // a well-formed X-Priority header is accepted and counted per class
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nX-Priority: interactive\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{ok_body}",
+        ok_body.len()
+    );
+    let (head, _) = split_response(&exchange(addr, raw.as_bytes()));
+    assert_eq!(status_of(&head), 200, "{head}");
+    let (_, scrape) = get(addr, "/metrics");
+    let scrape = String::from_utf8(scrape).unwrap();
+    assert!(
+        sample_value(
+            &scrape,
+            "engine_class_requests_total{class=\"interactive\"}"
+        )
+        .unwrap_or(0.0)
+            >= 1.0,
+        "per-class submit counter exported"
+    );
+
+    server.shutdown();
+    drop(engine);
+}
+
 /// Graceful drain: a stream in flight when shutdown starts runs to
 /// completion, then the gateway joins its threads and returns.
 #[test]

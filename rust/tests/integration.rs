@@ -18,7 +18,7 @@ use mod_transformer::data::{BatchIter, CorpusSpec, MarkovCorpus, BOS, EOS, PAD};
 use mod_transformer::runtime::{Bundle, SyntheticSpec};
 use mod_transformer::serve::{
     argmax, generate_batch, DecodeSession, Engine, Event, GenerateParams,
-    RoutingDecision,
+    Priority, RoutingDecision, ServeErrorKind,
 };
 use mod_transformer::util::pool;
 
@@ -554,6 +554,256 @@ fn cancel_frees_row_and_queued_request_completes() {
         assert_eq!(stats.completed, 2, "{stats:?}");
     }
     assert!(stats.rows_released >= 2, "{stats:?}");
+}
+
+/// A single-row bundle for admission-control tests: one session row, so
+/// service order is exactly the scheduler's pop order and an in-flight
+/// request pins every queued one.
+fn single_row_engine(name: &str, queue_cap: usize) -> (Arc<Bundle>, Engine) {
+    let bundle = Arc::new(
+        Bundle::native(
+            name,
+            &test_model(),
+            &test_train(),
+            &SyntheticSpec {
+                seed: 7,
+                decode_batches: vec![1],
+                max_decode_len: MAX_DECODE,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let params = Arc::new(bundle.init_params().unwrap());
+    let engine = Engine::start(
+        bundle.clone(),
+        params,
+        ServeConfig {
+            decode_batches: vec![1],
+            workers: 1,
+            queue_cap,
+            ..Default::default()
+        },
+        RoutingDecision::RouterThreshold,
+    )
+    .unwrap();
+    (bundle, engine)
+}
+
+/// Admission control: with the only row occupied and the queue at its
+/// cap, the next submit sheds synchronously with the typed `Overloaded`
+/// kind, a computed Retry-After, a flight-ring record, and per-class
+/// shed accounting — while already-admitted requests are untouched.
+#[test]
+fn queue_overflow_sheds_typed_overloaded_with_retry_after() {
+    let (_bundle, engine) = single_row_engine("overload_tiny", 1);
+    // A occupies the only row (first token proves it left the queue)
+    let mut a = engine
+        .submit(
+            GenerateParams::new(vec![BOS, 3])
+                .max_new(MAX_DECODE - 2)
+                .temperature(0.9)
+                .seed(1),
+        )
+        .unwrap();
+    match a.next_event() {
+        Some(Event::Token { .. }) => {}
+        other => panic!("expected a first token, got {other:?}"),
+    }
+    // B fills the whole queue (cap 1) ...
+    let b = engine
+        .submit(GenerateParams::new(vec![BOS, 5]).max_new(2).seed(2))
+        .unwrap();
+    // ... so C must shed, typed, without ever entering the queue
+    let err = engine
+        .submit_typed(
+            GenerateParams::new(vec![BOS, 7])
+                .max_new(2)
+                .seed(3)
+                .priority(Priority::Bulk),
+        )
+        .expect_err("overflow must shed");
+    assert_eq!(err.kind, ServeErrorKind::Overloaded);
+    assert!(err.message.contains("queue full"), "{err}");
+    let secs = err
+        .retry_after_secs()
+        .expect("overload carries a computed Retry-After");
+    assert!(secs >= 1, "Retry-After rounds up to at least 1s, got {secs}");
+    // the shed is visible at the flight recorder with zeroed decode state
+    let rec = engine
+        .recent_traces()
+        .into_iter()
+        .find(|r| r.outcome == "overloaded")
+        .expect("shed request recorded in the flight ring");
+    assert_eq!(rec.decode_tokens, 0);
+    // admitted requests are unaffected by the shed
+    a.cancel();
+    let _ = a.wait();
+    let resp = b.wait().expect("queued request still completes");
+    assert!(!resp.tokens.is_empty());
+    let stats = engine.shutdown();
+    assert_eq!(stats.shed(), 1, "{stats:?}");
+    assert_eq!(stats.classes[Priority::Bulk.index()].shed, 1, "{stats:?}");
+    assert_eq!(stats.completed, 1, "{stats:?}");
+}
+
+/// Weighted fair share, end to end: an interactive request submitted
+/// *after* a bulk backlog is still served first (class weight 8 vs 1),
+/// and the bulk backlog is not starved — every bulk request completes.
+/// Queue latencies prove the order without racing on thread wakeups:
+/// on a single row, admission is strictly sequential, so the last-in
+/// interactive request beating the backlog means a smaller queue wait.
+#[test]
+fn interactive_requests_jump_the_bulk_backlog_without_starving_it() {
+    let (_bundle, engine) = single_row_engine("fairshare_tiny", 0);
+    let mut a = engine
+        .submit(
+            GenerateParams::new(vec![BOS, 3])
+                .max_new(MAX_DECODE - 2)
+                .temperature(0.9)
+                .seed(1),
+        )
+        .unwrap();
+    match a.next_event() {
+        Some(Event::Token { .. }) => {}
+        other => panic!("expected a first token, got {other:?}"),
+    }
+    // bulk backlog first, the interactive request arrives LAST
+    let bulks: Vec<_> = (0..4)
+        .map(|i| {
+            engine
+                .submit(
+                    GenerateParams::new(vec![BOS, 5 + i as u16])
+                        .max_new(2)
+                        .seed(10 + i as u64)
+                        .priority(Priority::Bulk),
+                )
+                .unwrap()
+        })
+        .collect();
+    let inter = engine
+        .submit(
+            GenerateParams::new(vec![BOS, 2])
+                .max_new(2)
+                .seed(99)
+                .priority(Priority::Interactive),
+        )
+        .unwrap();
+    a.cancel();
+    let _ = a.wait();
+    let inter_resp = inter.wait().expect("interactive completes");
+    let bulk_waits: Vec<std::time::Duration> = bulks
+        .into_iter()
+        .map(|g| g.wait().expect("bulk completes").queue_latency)
+        .collect();
+    // submitted last, admitted first: strictly less time in the queue
+    // than every bulk request that was already waiting
+    for (i, w) in bulk_waits.iter().enumerate() {
+        assert!(
+            inter_resp.queue_latency < *w,
+            "bulk {i} ({w:?}) was served before interactive \
+             ({:?})",
+            inter_resp.queue_latency
+        );
+    }
+    let stats = engine.shutdown();
+    assert_eq!(
+        stats.classes[Priority::Interactive.index()].completed,
+        1,
+        "{stats:?}"
+    );
+    assert_eq!(
+        stats.classes[Priority::Bulk.index()].completed,
+        4,
+        "bulk starved: {stats:?}"
+    );
+}
+
+/// A request cancelled while still queued lands in the flight ring as a
+/// queue-side `cancelled` record with zeroed decode fields — abandoning
+/// a stream before admission must not vanish from observability.
+#[test]
+fn flight_ring_records_queue_side_cancellation() {
+    let (_bundle, engine) = single_row_engine("queue_cancel_tiny", 0);
+    let mut a = engine
+        .submit(
+            GenerateParams::new(vec![BOS, 3])
+                .max_new(MAX_DECODE - 2)
+                .temperature(0.9)
+                .seed(1),
+        )
+        .unwrap();
+    match a.next_event() {
+        Some(Event::Token { .. }) => {}
+        other => panic!("expected a first token, got {other:?}"),
+    }
+    // B: 4-token prompt (distinguishes its flight record from A's)
+    let mut b = engine
+        .submit(GenerateParams::new(vec![BOS, 5, 6, 7]).max_new(2).seed(2))
+        .unwrap();
+    b.cancel();
+    let err = b.wait().expect_err("cancelled while queued");
+    assert!(err.to_string().contains("cancelled"), "{err}");
+    a.cancel();
+    let _ = a.wait();
+    let rec = engine
+        .recent_traces()
+        .into_iter()
+        .find(|r| r.outcome == "cancelled" && r.prompt_tokens == 4)
+        .expect("queue-side cancellation recorded in the flight ring");
+    assert_eq!(rec.decode_tokens, 0, "never reached a row");
+    assert!(rec.trace.queue_ms >= 0.0);
+    engine.shutdown();
+}
+
+/// Priority changes only WHEN a request is admitted, never its content:
+/// a mixed-class batch through the engine is bitwise-identical to the
+/// synchronous `generate_batch` baseline at pool widths 1 and 4.
+#[test]
+fn priority_classes_change_order_not_tokens() {
+    let bundle = open("mod_tiny");
+    let params = bundle.init_params().unwrap();
+    let decision = RoutingDecision::RouterThreshold;
+    let classes =
+        [Priority::Bulk, Priority::Interactive, Priority::Normal];
+    let reqs: Vec<GenerateParams> = (0..3)
+        .map(|i| {
+            GenerateParams::new(vec![BOS, 5 + i as u16, 10])
+                .max_new(8)
+                .temperature(0.8)
+                .top_k(8)
+                .seed(100 + i as u64)
+                .priority(classes[i])
+        })
+        .collect();
+    let refs: Vec<&GenerateParams> = reqs.iter().collect();
+    let _guard = pool::knob_guard();
+    for width in [1usize, 4] {
+        pool::with_threads(width, || {
+            let (direct, _) =
+                generate_batch(&bundle, &params, 4, decision, &refs).unwrap();
+            let engine = Engine::start(
+                bundle.clone(),
+                Arc::new(params.clone()),
+                ServeConfig {
+                    workers: 1,
+                    queue_cap: 8,
+                    ..Default::default()
+                },
+                decision,
+            )
+            .unwrap();
+            let served: Vec<Vec<u16>> = reqs
+                .iter()
+                .map(|r| engine.generate(r.clone()).unwrap().tokens)
+                .collect();
+            engine.shutdown();
+            assert_eq!(
+                served, direct,
+                "priority changed token content at width {width}"
+            );
+        });
+    }
 }
 
 /// Regression (old bug): a failed batch dropped the responders, so
