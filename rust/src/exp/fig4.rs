@@ -7,6 +7,10 @@
 //! Here: the same two families over the scaled ladder at
 //! {0.5, 1, 2} × `scale.budget()`.
 
+// Experiment harnesses narrate progress on stdout by design (they
+// are figure-regeneration drivers, not library surface).
+#![allow(clippy::print_stdout)]
+
 use crate::util::json::Json;
 
 use crate::config::{ladder_for_budget, RoutingMode, TrainConfig};

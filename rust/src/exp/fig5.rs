@@ -8,6 +8,10 @@
 //! becomes a measurable conditional probability instead of the paper's
 //! "preliminary analyses suggest".
 
+// Experiment harnesses narrate progress on stdout by design (they
+// are figure-regeneration drivers, not library surface).
+#![allow(clippy::print_stdout)]
+
 use crate::util::json::Json;
 
 use crate::analysis::{

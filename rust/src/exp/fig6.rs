@@ -11,6 +11,10 @@
 //! blocks — we additionally measure the real decode wall-clock speedup and
 //! KV-cache memory saving vs the baseline bundle.
 
+// Experiment harnesses narrate progress on stdout by design (they
+// are figure-regeneration drivers, not library surface).
+#![allow(clippy::print_stdout)]
+
 use crate::util::json::Json;
 
 use crate::config::{ModelConfig, RoutingMode, ServeConfig, TrainConfig};

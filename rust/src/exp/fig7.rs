@@ -9,6 +9,10 @@
 //! synthetic corpus — every variant on the native expert-choice
 //! interpreter (`runtime::native::experts`), no artifacts.
 
+// Experiment harnesses narrate progress on stdout by design (they
+// are figure-regeneration drivers, not library surface).
+#![allow(clippy::print_stdout)]
+
 use crate::util::json::Json;
 
 use crate::config::{FfMode, ModelConfig, RoutingMode, TrainConfig};

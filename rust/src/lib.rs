@@ -55,6 +55,7 @@ pub mod data;
 pub mod exp;
 pub mod flops;
 pub mod isoflop;
+pub mod lint;
 pub mod loadgen;
 pub mod runtime;
 pub mod serve;

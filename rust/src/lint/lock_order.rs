@@ -1,0 +1,246 @@
+//! L1: nested `Mutex` acquisitions checked against the declared lock
+//! order.
+//!
+//! The map below is the repo's single source of truth for which locks
+//! may nest, seeded from the locks that actually exist today. The rule
+//! is *lexical*: it tracks `let g = <lock>;` guard bindings inside one
+//! function body (a guard dies when its block closes or on `drop(g)`)
+//! and flags any acquisition that is out of order — or not in the map
+//! at all — while a known guard is live. Cross-function nesting (e.g.
+//! the engine's drain path holding `queue` while a callee takes
+//! `stats`) is invisible to a lexical pass; that is what the TSan CI
+//! job is for. Lock names resolve from the receiver (`shared.queue
+//! .lock()` → `queue`) or from the poison-recovering helper's argument
+//! (`util::sync::lock(&self.stats)` → `stats`); `self.lock()` and the
+//! metrics registry's internal bare `lock()` are untrackable and
+//! skipped.
+
+use super::scan::Line;
+use super::Finding;
+use super::rules::{
+    find_tokens, finding_at, ident_ending_at, ident_starting_at,
+    matching_paren, next_nonws, prev_nonws, Flat,
+};
+
+/// `(lock name, rank, where it lives)` — a lock may only be acquired
+/// while locks of *strictly lower* rank are held.
+pub const LOCK_ORDER: &[(&str, usize, &str)] = &[
+    ("queue", 0, "serve::engine — Scheduler admission queue"),
+    ("stats", 1, "serve::engine — EngineStats"),
+    ("recent", 2, "serve::engine — flight-recorder ring"),
+    ("inner", 3, "serve::prefix_cache — CacheInner pages/LRU"),
+    ("request_counters", 4, "serve::http — gateway per-route counters"),
+    ("registry", 5, "util::metrics — global metric registry"),
+];
+
+pub fn order_of(name: &str) -> Option<usize> {
+    LOCK_ORDER
+        .iter()
+        .find(|(n, _, _)| *n == name)
+        .map(|(_, rank, _)| *rank)
+}
+
+struct Acquire {
+    pos: usize,
+    name: String,
+    /// `let <bound> = <lock>;` binding, when the acquisition is a guard
+    /// that outlives its statement.
+    bound: Option<String>,
+}
+
+/// Name of the lock acquired by the `lock` token at `k`, or None when
+/// untrackable. Also returns the index of the call's closing paren.
+fn lock_name(t: &[char], k: usize) -> Option<(String, usize)> {
+    let p = prev_nonws(t, k as isize - 1);
+    if p >= 0 && t[p as usize] == '.' {
+        // method form: recv.lock()
+        let recv = ident_ending_at(t, prev_nonws(t, p - 1))?;
+        if recv == "self" {
+            return None;
+        }
+        let q = next_nonws(t, k + 4);
+        if q >= t.len() || t[q] != '(' {
+            return None;
+        }
+        return Some((recv, matching_paren(t, q)));
+    }
+    // helper form: [util::sync::]lock(&path) — skip `fn lock` definitions
+    if ident_ending_at(t, p).as_deref() == Some("fn") {
+        return None;
+    }
+    let q = next_nonws(t, k + 4);
+    if q >= t.len() || t[q] != '(' {
+        return None;
+    }
+    let close = matching_paren(t, q);
+    let inner: String = t[q + 1..close].iter().collect();
+    let mut last = None;
+    let mut cur = String::new();
+    for c in inner.chars() {
+        if c.is_alphanumeric() || c == '_' {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            if cur != "self" && cur != "mut" {
+                last = Some(std::mem::take(&mut cur));
+            } else {
+                cur.clear();
+            }
+        }
+    }
+    if !cur.is_empty() && cur != "self" && cur != "mut" {
+        last = Some(cur);
+    }
+    last.map(|n| (n, close))
+}
+
+/// True when, after the lock call closing at `close`, only a
+/// poison-handling tail (`.unwrap()` / `.unwrap_or_else(..)` /
+/// `.expect(..)`) follows before the statement ends — i.e. the lock's
+/// guard is the statement's value.
+fn statement_ends_after(t: &[char], mut fp: usize) -> bool {
+    loop {
+        let q2 = next_nonws(t, fp);
+        if q2 < t.len() && t[q2] == '.' {
+            let q3 = next_nonws(t, q2 + 1);
+            if let Some(w) = ident_starting_at(t, q3) {
+                if matches!(w.as_str(), "unwrap" | "unwrap_or_else" | "expect")
+                {
+                    let q4 = next_nonws(t, q3 + w.len());
+                    if q4 < t.len() && t[q4] == '(' {
+                        fp = matching_paren(t, q4) + 1;
+                        continue;
+                    }
+                }
+            }
+            return false;
+        }
+        return q2 < t.len() && t[q2] == ';';
+    }
+}
+
+/// The `let [mut] <name> =` prefix of the statement containing `k`.
+fn let_binding_of(t: &[char], k: usize) -> Option<String> {
+    let mut s = k;
+    while s > 0 && !matches!(t[s - 1], ';' | '{' | '}') {
+        s -= 1;
+    }
+    let mut i = next_nonws(t, s);
+    let kw = ident_starting_at(t, i)?;
+    if kw != "let" {
+        return None;
+    }
+    i = next_nonws(t, i + 3);
+    let mut name = ident_starting_at(t, i)?;
+    if name == "mut" {
+        i = next_nonws(t, i + 3);
+        name = ident_starting_at(t, i)?;
+    }
+    i = next_nonws(t, i + name.len());
+    if i < t.len() && t[i] == '=' && t.get(i + 1) != Some(&'=') {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+pub fn rule_l1(rel: &str, lines: &[Line], flat: &Flat) -> Vec<Finding> {
+    let t = &flat.chars;
+    let mut acquires: Vec<Acquire> = Vec::new();
+    for k in find_tokens(flat, "lock") {
+        let (li, _) = flat.pos[k];
+        if lines[li].in_test {
+            continue;
+        }
+        let Some((name, close)) = lock_name(t, k) else {
+            continue;
+        };
+        let bound = if statement_ends_after(t, close + 1) {
+            let_binding_of(t, k)
+        } else {
+            None
+        };
+        acquires.push(Acquire { pos: k, name, bound });
+    }
+    let mut drops: Vec<(usize, String)> = Vec::new();
+    for k in find_tokens(flat, "drop") {
+        let q = next_nonws(t, k + 4);
+        if q < t.len() && t[q] == '(' {
+            let close = matching_paren(t, q);
+            let inner: String = t[q + 1..close].iter().collect();
+            let inner = inner.trim();
+            if !inner.is_empty()
+                && inner.chars().all(|c| c.is_alphanumeric() || c == '_')
+            {
+                drops.push((k, inner.to_string()));
+            }
+        }
+    }
+
+    // single pass: brace depth + live guards
+    let mut out = Vec::new();
+    // (bound var, lock name, rank, depth at binding)
+    let mut live: Vec<(String, String, usize, usize)> = Vec::new();
+    let mut depth = 0usize;
+    let mut ai = 0usize;
+    let mut di = 0usize;
+    for (idx, &c) in t.iter().enumerate() {
+        while di < drops.len() && drops[di].0 == idx {
+            let name = &drops[di].1;
+            live.retain(|g| &g.0 != name);
+            di += 1;
+        }
+        while ai < acquires.len() && acquires[ai].pos == idx {
+            let a = &acquires[ai];
+            ai += 1;
+            let rank = order_of(&a.name);
+            for (_, held, held_rank, _) in &live {
+                match rank {
+                    None => {
+                        out.push(finding_at(
+                            flat,
+                            idx,
+                            "L1",
+                            format!(
+                                "lock `{}` (not in the lock-order map) \
+                                 acquired while `{held}` is held",
+                                a.name
+                            ),
+                            "add the lock to lint/lock_order.rs at the \
+                             right rank, or restructure to drop the outer \
+                             guard first",
+                            rel,
+                        ));
+                        break;
+                    }
+                    Some(r) if *held_rank >= r => {
+                        out.push(finding_at(
+                            flat,
+                            idx,
+                            "L1",
+                            format!(
+                                "lock `{}` acquired while `{held}` is held: \
+                                 the declared order requires `{}` before \
+                                 `{held}`",
+                                a.name, a.name
+                            ),
+                            "take the locks in declared-rank order, or \
+                             release the outer guard first",
+                            rel,
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+            if let (Some(b), Some(r)) = (&a.bound, rank) {
+                live.push((b.clone(), a.name.clone(), r, depth));
+            }
+        }
+        if c == '{' {
+            depth += 1;
+        } else if c == '}' {
+            live.retain(|g| g.3 < depth);
+            depth = depth.saturating_sub(1);
+        }
+    }
+    out
+}

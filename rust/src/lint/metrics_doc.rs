@@ -1,0 +1,211 @@
+//! M1: registered metric names vs the rust/README.md metrics tables.
+//!
+//! Source side: every string literal passed as the *first* argument of a
+//! registration call (`counter(..)`, `gauge(..)`, `histogram(..)`,
+//! `sketch(..)`, the `_with` variants, and the engine's `per_class(..)`
+//! wrapper) whose name starts with one of the serving prefixes. Wire
+//! names and format strings never match because only registration call
+//! sites are inspected. README side: every token with a serving prefix,
+//! with brace alternation expanded (`engine_blocks_{invoked,skipped}_
+//! total`) and Prometheus exposition suffixes (`_bucket`/`_sum`/
+//! `_count`) falling back to their base name. The two sets must be
+//! equal in both directions.
+
+use super::scan::{is_ident, Line};
+use super::Finding;
+use super::rules::{find_tokens, matching_paren, next_nonws, Flat};
+
+const REG_FNS: &[&str] = &[
+    "counter",
+    "counter_with",
+    "gauge",
+    "gauge_with",
+    "histogram",
+    "sketch",
+    "per_class",
+];
+
+pub const METRIC_PREFIXES: &[&str] = &["engine_", "gateway_", "prefix_cache_"];
+
+/// A metric name registered in source, with where it was registered.
+pub struct Registration {
+    pub name: String,
+    pub file: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+pub fn registrations(
+    file: &str,
+    lines: &[Line],
+    flat: &Flat,
+) -> Vec<Registration> {
+    let mut out = Vec::new();
+    let t = &flat.chars;
+    for fn_name in REG_FNS {
+        for k in find_tokens(flat, fn_name) {
+            let (li, _) = flat.pos[k];
+            if lines[li].in_test {
+                continue;
+            }
+            let q = next_nonws(t, k + fn_name.len());
+            if q >= t.len() || t[q] != '(' {
+                continue;
+            }
+            let close = matching_paren(t, q);
+            let (sli, scol) = flat.pos[q];
+            let (eli, ecol) = flat.pos[close.min(flat.pos.len() - 1)];
+            // first string literal inside the call span
+            let mut name: Option<(usize, usize, &str)> = None;
+            'search: for lj in sli..=eli.min(lines.len() - 1) {
+                for (col, s) in &lines[lj].strings {
+                    if lj == sli && *col < scol {
+                        continue;
+                    }
+                    if lj == eli && *col > ecol {
+                        continue;
+                    }
+                    name = Some((lj, *col, s.as_str()));
+                    break 'search;
+                }
+            }
+            if let Some((lj, col, s)) = name {
+                if METRIC_PREFIXES.iter().any(|p| s.starts_with(p)) {
+                    out.push(Registration {
+                        name: s.to_string(),
+                        file: file.to_string(),
+                        line: lj + 1,
+                        col: col + 1,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Metric-name tokens found in README text: `(name, line, col)`,
+/// 1-based. Brace groups directly after a `_` are treated as name
+/// alternation and expanded; brace groups after a complete name are
+/// Prometheus label lists and end the token.
+pub fn readme_names(text: &str) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    for (li, raw) in text.lines().enumerate() {
+        let line: Vec<char> = raw.chars().collect();
+        let mut i = 0usize;
+        while i < line.len() {
+            let rest: String = line[i..].iter().collect();
+            let hit = METRIC_PREFIXES.iter().find(|p| {
+                rest.starts_with(*p) && (i == 0 || !is_ident(line[i - 1]))
+            });
+            let Some(prefix) = hit else {
+                i += 1;
+                continue;
+            };
+            let col = i;
+            let mut names = vec![String::new()];
+            let mut j = i;
+            while j < line.len() {
+                let c = line[j];
+                if c == '_' || c.is_ascii_digit() || c.is_ascii_lowercase() {
+                    for n in &mut names {
+                        n.push(c);
+                    }
+                    j += 1;
+                } else if c == '{' {
+                    let Some(e) =
+                        (j..line.len()).find(|&x| line[x] == '}')
+                    else {
+                        break;
+                    };
+                    let content: String = line[j + 1..e].iter().collect();
+                    let is_alt = names[0].ends_with('_')
+                        && !content.is_empty()
+                        && content.chars().all(|c| {
+                            c == ',' || c == '_' || c.is_ascii_lowercase()
+                                || c.is_ascii_digit()
+                        });
+                    if is_alt {
+                        let mut expanded = Vec::new();
+                        for n in &names {
+                            for alt in content.split(',') {
+                                expanded.push(format!("{n}{alt}"));
+                            }
+                        }
+                        names = expanded;
+                        j = e + 1;
+                    } else {
+                        break;
+                    }
+                } else {
+                    break;
+                }
+            }
+            for n in &names {
+                if n.len() > prefix.len() && !n.ends_with('_') {
+                    out.push((n.clone(), li + 1, col + 1));
+                }
+            }
+            i = if j > i { j } else { i + 1 };
+        }
+    }
+    out
+}
+
+/// Set-compare registrations against the README, producing M1 findings
+/// in both directions.
+pub fn cross_check(
+    regs: &[Registration],
+    readme_file: &str,
+    readme_text: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // first registration site per name, in stable order
+    let mut src: Vec<(&str, &Registration)> = Vec::new();
+    for r in regs {
+        if !src.iter().any(|(n, _)| *n == r.name) {
+            src.push((r.name.as_str(), r));
+        }
+    }
+    let readme = readme_names(readme_text);
+    for (name, reg) in &src {
+        if !readme.iter().any(|(n, _, _)| n == name) {
+            out.push(Finding {
+                file: reg.file.clone(),
+                line: reg.line,
+                col: reg.col,
+                rule: "M1",
+                message: format!(
+                    "metric `{name}` registered in source but missing from \
+                     rust/README.md"
+                ),
+                suggestion: "add it to the metrics list in rust/README.md \
+                             (every serving metric is documented)",
+            });
+        }
+    }
+    let known = |n: &str| src.iter().any(|(s, _)| *s == n);
+    for (name, line, col) in &readme {
+        if known(name) {
+            continue;
+        }
+        let base_ok = ["_bucket", "_sum", "_count"].iter().any(|suf| {
+            name.strip_suffix(suf).is_some_and(known)
+        });
+        if base_ok {
+            continue;
+        }
+        out.push(Finding {
+            file: readme_file.to_string(),
+            line: *line,
+            col: *col,
+            rule: "M1",
+            message: format!(
+                "metric `{name}` documented in rust/README.md but not \
+                 registered in source"
+            ),
+            suggestion: "remove the stale doc entry, or register the metric",
+        });
+    }
+    out
+}

@@ -1,0 +1,32 @@
+//! Finding rendering: human-readable lines plus optional GitHub
+//! workflow-command annotations (`::error file=..,line=..::`), which CI
+//! turns into inline PR annotations. Rendering returns a `String` so
+//! the library stays print-free; the `repro` binary does the printing.
+
+use super::Finding;
+use std::fmt::Write as _;
+
+pub fn render(findings: &[Finding], github: bool) -> String {
+    let mut out = String::new();
+    for f in findings {
+        let _ = writeln!(
+            out,
+            "{}:{}:{}: [{}] {}",
+            f.file, f.line, f.col, f.rule, f.message
+        );
+        let _ = writeln!(out, "    suggestion: {}", f.suggestion);
+        if github {
+            let _ = writeln!(
+                out,
+                "::error file={},line={},col={},title=lint {}::{}",
+                f.file, f.line, f.col, f.rule, f.message
+            );
+        }
+    }
+    if findings.is_empty() {
+        out.push_str("lint: clean\n");
+    } else {
+        let _ = writeln!(out, "lint: {} finding(s)", findings.len());
+    }
+    out
+}

@@ -1,0 +1,682 @@
+//! Per-file lint rules D1, D2, D3, P1 and A1.
+//!
+//! All rules operate on the blanked [`scan::Line`] view, flattened into
+//! one char stream ([`Flat`]) so method chains and call spans that wrap
+//! across lines (rustfmt loves those) still resolve. Each rule is
+//! deliberately *lexical*: no type information, so scopes are kept
+//! narrow (path prefixes) and every check errs permissive — a missed
+//! violation is recoverable in review, a false positive that needs a
+//! bogus allowlist comment is not.
+
+use super::scan::{is_ident, Line};
+use super::Finding;
+use std::collections::HashSet;
+
+/// Wrapper type names skipped when walking back from `HashMap<` to the
+/// binding it is declared under (`pages: Mutex<HashMap<..>>` → `pages`).
+const WRAPPERS: &[&str] = &[
+    "Mutex", "RwLock", "Arc", "Rc", "Option", "Box", "Cell", "RefCell",
+];
+
+/// Methods that observe hash iteration order.
+const D1_METHODS: &[&str] = &[
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter",
+    "drain", "retain",
+];
+
+/// The sanctioned parallel helpers whose closures D3 inspects.
+const PAR_FNS: &[&str] = &["par_tasks", "par_rows", "par_map"];
+
+/// The flattened code view: every line's blanked code joined with `\n`,
+/// with a back-map from flat index to `(line, col)` (both 0-based).
+pub struct Flat {
+    pub chars: Vec<char>,
+    pub pos: Vec<(usize, usize)>,
+}
+
+impl Flat {
+    pub fn new(lines: &[Line]) -> Self {
+        let mut chars = Vec::new();
+        let mut pos = Vec::new();
+        for (li, l) in lines.iter().enumerate() {
+            for (ci, &ch) in l.code.iter().enumerate() {
+                chars.push(ch);
+                pos.push((li, ci));
+            }
+            chars.push('\n');
+            pos.push((li, l.code.len()));
+        }
+        Flat { chars, pos }
+    }
+}
+
+pub(crate) fn finding_at(
+    flat: &Flat,
+    k: usize,
+    rule: &'static str,
+    message: String,
+    suggestion: &'static str,
+    file: &str,
+) -> Finding {
+    let (li, ci) = flat.pos[k.min(flat.pos.len() - 1)];
+    Finding {
+        file: file.to_string(),
+        line: li + 1,
+        col: ci + 1,
+        rule,
+        message,
+        suggestion,
+    }
+}
+
+/// Positions where `word` appears as a whole token in the flat view.
+pub(crate) fn find_tokens(flat: &Flat, word: &str) -> Vec<usize> {
+    let w: Vec<char> = word.chars().collect();
+    let t = &flat.chars;
+    let mut out = Vec::new();
+    if t.len() < w.len() || w.is_empty() {
+        return out;
+    }
+    for k in 0..=(t.len() - w.len()) {
+        if t[k..k + w.len()] != w[..] {
+            continue;
+        }
+        let before_ok = k == 0 || !is_ident(t[k - 1]);
+        let after_ok = k + w.len() >= t.len() || !is_ident(t[k + w.len()]);
+        if before_ok && after_ok {
+            out.push(k);
+        }
+    }
+    out
+}
+
+pub(crate) fn next_nonws(t: &[char], mut i: usize) -> usize {
+    while i < t.len() && (t[i] == ' ' || t[i] == '\t' || t[i] == '\n') {
+        i += 1;
+    }
+    i
+}
+
+pub(crate) fn prev_nonws(t: &[char], mut i: isize) -> isize {
+    while i >= 0 {
+        let c = t[i as usize];
+        if c == ' ' || c == '\t' || c == '\n' {
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    i
+}
+
+/// The identifier whose last char sits at `i` (inclusive), if any.
+pub(crate) fn ident_ending_at(t: &[char], i: isize) -> Option<String> {
+    if i < 0 || !is_ident(t[i as usize]) {
+        return None;
+    }
+    let mut j = i as usize;
+    while j > 0 && is_ident(t[j - 1]) {
+        j -= 1;
+    }
+    Some(t[j..=(i as usize)].iter().collect())
+}
+
+/// The identifier starting at `i`, if any.
+pub(crate) fn ident_starting_at(t: &[char], i: usize) -> Option<String> {
+    if i >= t.len() || !is_ident(t[i]) || t[i].is_ascii_digit() {
+        return None;
+    }
+    let mut j = i;
+    while j < t.len() && is_ident(t[j]) {
+        j += 1;
+    }
+    Some(t[i..j].iter().collect())
+}
+
+/// Index of the `)` matching the `(` at `i` (falls back to end-of-text
+/// on unbalanced input — blanked code can only lose brackets, not gain
+/// them, so this is the safe direction).
+pub(crate) fn matching_paren(t: &[char], i: usize) -> usize {
+    let mut d = 0isize;
+    for (k, &c) in t.iter().enumerate().skip(i) {
+        if c == '(' {
+            d += 1;
+        } else if c == ')' {
+            d -= 1;
+            if d == 0 {
+                return k;
+            }
+        }
+    }
+    t.len().saturating_sub(1)
+}
+
+fn collect_idents(seg: &[char]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for &c in seg {
+        if is_ident(c) {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Split a char segment into identifier tokens and single punctuation
+/// chars (whitespace dropped).
+fn tokens(seg: &[char]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for &c in seg {
+        if is_ident(c) {
+            cur.push(c);
+        } else {
+            if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+            if !c.is_whitespace() {
+                out.push(c.to_string());
+            }
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+// ---------------------------------------------------------------- D1 --
+
+/// Names declared with a `HashMap`/`HashSet` type or constructor in this
+/// file (outside tests). Declaration shapes handled: `name: HashMap<..>`
+/// (struct fields, params), `let [mut] name: .. =`, `name = HashMap::new()`,
+/// and the rustfmt split where the type starts the line after `name:`.
+fn hash_symbols(lines: &[Line]) -> HashSet<String> {
+    let mut syms = HashSet::new();
+    for (li, l) in lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        let code = &l.code;
+        for word in ["HashMap", "HashSet"] {
+            let w: Vec<char> = word.chars().collect();
+            if code.len() < w.len() {
+                continue;
+            }
+            for s in 0..=(code.len() - w.len()) {
+                if code[s..s + w.len()] != w[..] {
+                    continue;
+                }
+                if s > 0 && is_ident(code[s - 1]) {
+                    continue;
+                }
+                if s + w.len() < code.len() && is_ident(code[s + w.len()]) {
+                    continue;
+                }
+                if let Some(name) = bind_name(&code[..s], lines, li) {
+                    syms.insert(name);
+                }
+            }
+        }
+    }
+    syms
+}
+
+fn bind_name(seg: &[char], lines: &[Line], li: usize) -> Option<String> {
+    let toks = tokens(seg);
+    let mut i = toks.len() as isize - 1;
+    while i >= 0 {
+        let t = toks[i as usize].as_str();
+        if t == "<" || t == "&" || t == "(" || WRAPPERS.contains(&t) {
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    if i < 0 {
+        // type starts this line; binding is the previous line's trailing
+        // `name:` / `name =`
+        for pj in (0..li).rev() {
+            let pseg: String = lines[pj].code.iter().collect();
+            let pseg = pseg.trim_end();
+            if pseg.trim().is_empty() {
+                continue;
+            }
+            return trailing_binding(pseg);
+        }
+        return None;
+    }
+    let t = toks[i as usize].as_str();
+    if t != ":" && t != "=" {
+        return None;
+    }
+    i -= 1;
+    while i >= 0 && toks[i as usize] == "mut" {
+        i -= 1;
+    }
+    if i < 0 {
+        return None;
+    }
+    let name = toks[i as usize].as_str();
+    let first = name.chars().next()?;
+    if (first.is_alphabetic() || first == '_')
+        && !matches!(name, "mut" | "let" | "pub")
+    {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+fn trailing_binding(pseg: &str) -> Option<String> {
+    let stripped = pseg
+        .strip_suffix(':')
+        .or_else(|| pseg.strip_suffix('='))?
+        .trim_end();
+    let cs: Vec<char> = stripped.chars().collect();
+    let name = ident_ending_at(&cs, cs.len() as isize - 1)?;
+    let first = name.chars().next()?;
+    if first.is_alphabetic() || first == '_' {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+pub fn rule_d1(rel: &str, lines: &[Line], flat: &Flat) -> Vec<Finding> {
+    if !(rel.starts_with("runtime/") || rel.starts_with("serve/")) {
+        return Vec::new();
+    }
+    let syms = hash_symbols(lines);
+    let mut out = Vec::new();
+    let t = &flat.chars;
+    if !syms.is_empty() {
+        for meth in D1_METHODS {
+            for k in find_tokens(flat, meth) {
+                let (li, _) = flat.pos[k];
+                if lines[li].in_test {
+                    continue;
+                }
+                let p = prev_nonws(t, k as isize - 1);
+                if p < 0 || t[p as usize] != '.' {
+                    continue;
+                }
+                let q = next_nonws(t, k + meth.len());
+                if q >= t.len() || t[q] != '(' {
+                    continue;
+                }
+                let r = prev_nonws(t, p - 1);
+                if let Some(recv) = ident_ending_at(t, r) {
+                    if syms.contains(&recv) {
+                        out.push(finding_at(
+                            flat,
+                            k,
+                            "D1",
+                            format!(
+                                "iteration over hash-ordered `{recv}` \
+                                 (`.{meth}()`): HashMap/HashSet order is \
+                                 nondeterministic"
+                            ),
+                            "key by sorted/stable order, or justify with \
+                             `// lint:allow(D1) -- <why order cannot leak>`",
+                            rel,
+                        ));
+                    }
+                }
+            }
+        }
+        for k in find_tokens(flat, "for") {
+            let (li, _) = flat.pos[k];
+            if lines[li].in_test {
+                continue;
+            }
+            let Some(brace) = (k..t.len()).find(|&j| t[j] == '{') else {
+                continue;
+            };
+            let seg = &t[k + 3..brace];
+            // first `in` token in the for head
+            let mut in_end = None;
+            let iw = ['i', 'n'];
+            for j in 0..seg.len().saturating_sub(1) {
+                if seg[j..j + 2] == iw[..]
+                    && (j == 0 || !is_ident(seg[j - 1]))
+                    && (j + 2 >= seg.len() || !is_ident(seg[j + 2]))
+                {
+                    in_end = Some(j + 2);
+                    break;
+                }
+            }
+            let Some(in_end) = in_end else { continue };
+            let expr: String = seg[in_end..].iter().collect();
+            let expr = expr.trim().trim_start_matches('&').replace("mut ", "");
+            let expr = expr.trim();
+            if !expr.is_empty()
+                && expr.chars().next().is_some_and(|c| {
+                    c.is_alphabetic() || c == '_'
+                })
+                && expr.chars().all(|c| is_ident(c) || c == '.')
+            {
+                let last = expr.rsplit('.').next().unwrap_or(expr);
+                if syms.contains(last) {
+                    out.push(finding_at(
+                        flat,
+                        k,
+                        "D1",
+                        format!(
+                            "`for` iteration over hash-ordered `{last}`: \
+                             HashMap/HashSet order is nondeterministic"
+                        ),
+                        "iterate a sorted key list instead, or justify with \
+                         `// lint:allow(D1) -- <why order cannot leak>`",
+                        rel,
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- D2 --
+
+pub fn rule_d2(rel: &str, lines: &[Line], flat: &Flat) -> Vec<Finding> {
+    if !rel.starts_with("runtime/native/") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = &flat.chars;
+    for word in ["Instant", "SystemTime"] {
+        for k in find_tokens(flat, word) {
+            let (li, _) = flat.pos[k];
+            if lines[li].in_test {
+                continue;
+            }
+            let q = next_nonws(t, k + word.len());
+            let tail: String =
+                t[q..t.len().min(q + 5)].iter().collect();
+            if tail == "::now" {
+                out.push(finding_at(
+                    flat,
+                    k,
+                    "D2",
+                    format!(
+                        "`{word}::now` inside a kernel module: timing must \
+                         come from callers"
+                    ),
+                    "thread the clock in from the caller (engine/bench own \
+                     all timing)",
+                    rel,
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- D3 --
+
+/// Bindings a `par_*` closure may legitimately compound-assign into:
+/// its own params (incl. nested closures), `let` bindings, and `for`
+/// pattern names. Over-collecting is fine — D3 only uses this to prove
+/// a target is local.
+fn harvest_locals(span: &[char]) -> HashSet<String> {
+    let mut loc = HashSet::new();
+    let pipes: Vec<usize> = span
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c == '|')
+        .map(|(i, _)| i)
+        .collect();
+    let mut i = 0;
+    while i + 1 < pipes.len() {
+        let group = &span[pipes[i] + 1..pipes[i + 1]];
+        if group.len() < 120 {
+            for w in collect_idents(group) {
+                loc.insert(w);
+            }
+        }
+        i += 2;
+    }
+    for kw in ["let", "for"] {
+        let w: Vec<char> = kw.chars().collect();
+        if span.len() < w.len() {
+            continue;
+        }
+        for s in 0..=(span.len() - w.len()) {
+            if span[s..s + w.len()] != w[..] {
+                continue;
+            }
+            if s > 0 && is_ident(span[s - 1]) {
+                continue;
+            }
+            if s + w.len() < span.len() && is_ident(span[s + w.len()]) {
+                continue;
+            }
+            let rest = &span[s + w.len()..];
+            let stop = if kw == "let" {
+                rest.iter()
+                    .position(|&c| c == '=' || c == ';' || c == '{')
+                    .unwrap_or(rest.len())
+            } else {
+                // for <pat> in ...
+                let mut p = rest.len();
+                for j in 0..rest.len().saturating_sub(1) {
+                    if rest[j] == 'i'
+                        && rest[j + 1] == 'n'
+                        && (j == 0 || !is_ident(rest[j - 1]))
+                        && (j + 2 >= rest.len() || !is_ident(rest[j + 2]))
+                    {
+                        p = j;
+                        break;
+                    }
+                }
+                p
+            };
+            for w in collect_idents(&rest[..stop]) {
+                loc.insert(w);
+            }
+        }
+    }
+    loc
+}
+
+/// Walk back from a compound-assign operator over the lvalue chain
+/// (`self.acc[i].x += ..`, `*slot += ..`) to its root identifier.
+fn lvalue_root(span: &[char], op_pos: usize) -> Option<String> {
+    let mut i = op_pos as isize - 1;
+    while i >= 0 && span[i as usize].is_whitespace() {
+        i -= 1;
+    }
+    let end = i;
+    while i >= 0 {
+        let c = span[i as usize];
+        if c == ']' || c == ')' {
+            let (open, close) = if c == ']' { ('[', ']') } else { ('(', ')') };
+            let mut d = 0isize;
+            while i >= 0 {
+                let cc = span[i as usize];
+                if cc == close {
+                    d += 1;
+                } else if cc == open {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                i -= 1;
+            }
+            i -= 1;
+        } else if is_ident(c) || c == '.' || c == '*' {
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    if end < 0 {
+        return None;
+    }
+    let start = (i + 1).max(0) as usize;
+    let chain: String = span[start..=(end as usize)].iter().collect();
+    let mut name = String::new();
+    for c in chain.chars() {
+        if is_ident(c) {
+            name.push(c);
+        } else if !name.is_empty() {
+            break;
+        }
+    }
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+pub fn rule_d3(rel: &str, lines: &[Line], flat: &Flat) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let t = &flat.chars;
+    for fn_name in PAR_FNS {
+        for k in find_tokens(flat, fn_name) {
+            let (li, _) = flat.pos[k];
+            if lines[li].in_test {
+                continue;
+            }
+            let q = next_nonws(t, k + fn_name.len());
+            if q >= t.len() || t[q] != '(' {
+                continue;
+            }
+            // skip the helper definitions themselves
+            let p = prev_nonws(t, k as isize - 1);
+            if ident_ending_at(t, p).as_deref() == Some("fn") {
+                continue;
+            }
+            let close = matching_paren(t, q);
+            let span = &t[q..=close];
+            let locals = harvest_locals(span);
+            let mut m = 0usize;
+            while m + 1 < span.len() {
+                let c = span[m];
+                if (c == '+' || c == '-' || c == '*' || c == '/')
+                    && span[m + 1] == '='
+                    && span.get(m + 2) != Some(&'=')
+                {
+                    if let Some(root) = lvalue_root(span, m) {
+                        if root != "_" && !locals.contains(&root) {
+                            out.push(finding_at(
+                                flat,
+                                q + m,
+                                "D3",
+                                format!(
+                                    "compound assignment to non-closure-local \
+                                     `{root}` inside `{fn_name}`: cross-item \
+                                     accumulation must use partials + a \
+                                     serial fold"
+                                ),
+                                "accumulate into per-task partials and fold \
+                                 serially after the parallel region (see \
+                                 util::pool docs)",
+                                rel,
+                            ));
+                        }
+                    }
+                    m += 2;
+                    continue;
+                }
+                m += 1;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- P1 --
+
+pub fn rule_p1(rel: &str, lines: &[Line], flat: &Flat) -> Vec<Finding> {
+    let in_scope = rel == "serve/engine.rs"
+        || rel == "serve/request.rs"
+        || rel.starts_with("serve/http/");
+    if !in_scope {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = &flat.chars;
+    for meth in ["unwrap", "expect"] {
+        for k in find_tokens(flat, meth) {
+            let (li, _) = flat.pos[k];
+            if lines[li].in_test {
+                continue;
+            }
+            let p = prev_nonws(t, k as isize - 1);
+            if p < 0 || t[p as usize] != '.' {
+                continue;
+            }
+            let q = next_nonws(t, k + meth.len());
+            if q >= t.len() || t[q] != '(' {
+                continue;
+            }
+            out.push(finding_at(
+                flat,
+                k,
+                "P1",
+                format!(
+                    "`.{meth}()` on the request path: return a typed \
+                     `ServeError` instead"
+                ),
+                "propagate a ServeError (or recover: util::sync::lock for \
+                 mutex poisoning)",
+                rel,
+            ));
+        }
+    }
+    for mac in ["panic", "unreachable", "todo", "unimplemented"] {
+        for k in find_tokens(flat, mac) {
+            let (li, _) = flat.pos[k];
+            if lines[li].in_test {
+                continue;
+            }
+            if t.get(k + mac.len()) == Some(&'!') {
+                out.push(finding_at(
+                    flat,
+                    k,
+                    "P1",
+                    format!(
+                        "`{mac}!` on the request path: return a typed \
+                         `ServeError` instead"
+                    ),
+                    "fail the one request, not the worker: return \
+                     ServeError and keep serving",
+                    rel,
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- A1 --
+
+pub fn rule_a1(rel: &str, lines: &[Line], flat: &Flat) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for k in find_tokens(flat, "Relaxed") {
+        let (li, _) = flat.pos[k];
+        if lines[li].in_test {
+            continue;
+        }
+        out.push(finding_at(
+            flat,
+            k,
+            "A1",
+            "`Ordering::Relaxed` outside an allowlisted monotone counter"
+                .to_string(),
+            "use Acquire/Release (flags, knobs) or justify with \
+             `// lint:allow(A1) -- <why no ordering is needed>`",
+            rel,
+        ));
+    }
+    out
+}

@@ -1,0 +1,345 @@
+//! Line-level source scanner backing the lint rules.
+//!
+//! The rules in this crate are token-level, not AST-level (the no-deps
+//! rule forbids `syn`), so the scanner's job is to produce a per-line
+//! view where *only real code tokens remain*: comments and string
+//! contents are blanked to spaces with columns preserved, char literals
+//! are blanked (so `'{'` cannot confuse the brace tracker), and
+//! lifetimes keep their tick without being mistaken for char literals.
+//! It also tracks `#[cfg(test)]` scopes with a brace counter, so rules
+//! can skip test code wholesale.
+
+/// One scanned source line.
+pub struct Line {
+    /// The line with comments / string contents / char literals replaced
+    /// by spaces. Same char length as the raw line, so columns line up.
+    pub code: Vec<char>,
+    /// Concatenated comment text appearing on this line (allowlist syntax
+    /// lives in comments).
+    pub comment: String,
+    /// `(char column of the opening quote, content)` per string literal
+    /// segment on this line. Multi-line strings contribute one segment
+    /// per line.
+    pub strings: Vec<(usize, String)>,
+    /// True when the line *starts* inside a `#[cfg(test)]` scope (or on
+    /// the attribute itself).
+    pub in_test: bool,
+}
+
+enum State {
+    Normal,
+    Str,
+    RawStr,
+    LineComment,
+    BlockComment,
+}
+
+pub fn scan(text: &str) -> Vec<Line> {
+    let cs: Vec<char> = text.chars().collect();
+    let n = cs.len();
+    let mut lines: Vec<Line> = Vec::new();
+
+    let mut code: Vec<char> = Vec::new();
+    let mut comment = String::new();
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    let mut line_in_test = false;
+
+    // brace / cfg(test) tracking
+    let mut depth: usize = 0;
+    let mut armed = false; // saw `#[cfg(test)]`, waiting for its `{` or `;`
+    let mut test_stack: Vec<usize> = Vec::new();
+    let mut recent = String::new(); // rolling window of code chars
+
+    let mut state = State::Normal;
+    let mut block_depth = 0usize; // nested /* */ depth
+    let mut raw_hashes = 0usize;
+    let mut str_start = 0usize; // col of the current string's opening quote
+    let mut str_buf = String::new();
+
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            if matches!(state, State::Str | State::RawStr) {
+                if !str_buf.is_empty() {
+                    strings.push((str_start, std::mem::take(&mut str_buf)));
+                }
+                str_start = 0; // string continues on the next line
+            }
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                strings: std::mem::take(&mut strings),
+                in_test: line_in_test,
+            });
+            line_in_test = !test_stack.is_empty() || armed;
+            recent.clear();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::LineComment => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            State::BlockComment => {
+                if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    block_depth += 1;
+                    comment.push_str("/*");
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else if c == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    block_depth -= 1;
+                    comment.push_str("*/");
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    if block_depth == 0 {
+                        state = State::Normal;
+                    }
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' && i + 1 < n {
+                    if cs[i + 1] == '\n' {
+                        // line continuation: leave the newline for the
+                        // line accounting above
+                        code.push(' ');
+                        i += 1;
+                    } else {
+                        str_buf.push(c);
+                        str_buf.push(cs[i + 1]);
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    strings.push((str_start, std::mem::take(&mut str_buf)));
+                    code.push('"');
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    str_buf.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' && h < raw_hashes {
+                        j += 1;
+                        h += 1;
+                    }
+                    if h == raw_hashes {
+                        strings.push((str_start, std::mem::take(&mut str_buf)));
+                        code.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        state = State::Normal;
+                        i = j;
+                        continue;
+                    }
+                }
+                str_buf.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            State::Normal => {
+                if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+                    state = State::LineComment;
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    state = State::BlockComment;
+                    block_depth = 1;
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = State::Str;
+                    str_start = code.len();
+                    str_buf.clear();
+                    code.push('"');
+                    i += 1;
+                    continue;
+                }
+                if (c == 'r' || c == 'b')
+                    && !code.last().copied().is_some_and(is_ident)
+                {
+                    // raw / byte-raw string prefix: r".." r#".."# br".."
+                    let mut j = i;
+                    if cs[j] == 'b' && j + 1 < n && cs[j + 1] == 'r' {
+                        j += 1;
+                    }
+                    if cs[j] == 'r' {
+                        let mut k = j + 1;
+                        let mut h = 0usize;
+                        while k < n && cs[k] == '#' {
+                            k += 1;
+                            h += 1;
+                        }
+                        if k < n && cs[k] == '"' {
+                            while i < k {
+                                code.push(cs[i]);
+                                i += 1;
+                            }
+                            code.push('"');
+                            str_start = code.len() - 1;
+                            str_buf.clear();
+                            raw_hashes = h;
+                            state = State::RawStr;
+                            i = k + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == '\'' {
+                    if i + 1 < n && cs[i + 1] == '\\' {
+                        // escaped char literal: blank through the close
+                        let mut j = i + 2;
+                        while j < n && cs[j] != '\'' && cs[j] != '\n' {
+                            j += 1;
+                        }
+                        let end = if j < n && cs[j] == '\'' { j + 1 } else { j };
+                        for _ in i..end {
+                            code.push(' ');
+                        }
+                        i = end;
+                        continue;
+                    }
+                    if i + 2 < n && cs[i + 2] == '\'' {
+                        // plain char literal 'x'
+                        code.push(' ');
+                        code.push(' ');
+                        code.push(' ');
+                        i += 3;
+                        continue;
+                    }
+                    // lifetime tick
+                    code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                // plain code char
+                code.push(c);
+                if c.is_ascii() {
+                    recent.push(c);
+                    if recent.len() > 16 {
+                        recent.remove(0);
+                    }
+                } else {
+                    recent.clear();
+                }
+                if recent.ends_with("cfg(test)") {
+                    armed = true;
+                }
+                match c {
+                    '{' => {
+                        depth += 1;
+                        if armed {
+                            test_stack.push(depth);
+                            armed = false;
+                        }
+                    }
+                    '}' => {
+                        if test_stack.last() == Some(&depth) {
+                            test_stack.pop();
+                        }
+                        depth = depth.saturating_sub(1);
+                    }
+                    ';' => {
+                        // `#[cfg(test)]` on a braceless item (use, const)
+                        armed = false;
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !strings.is_empty() || !comment.is_empty() {
+        lines.push(Line {
+            code,
+            comment,
+            strings,
+            in_test: line_in_test,
+        });
+    }
+    lines
+}
+
+pub(crate) fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_str(l: &Line) -> String {
+        l.code.iter().collect()
+    }
+
+    #[test]
+    fn blanks_comments_and_strings() {
+        let src = "let x = \"a // b\"; // trailing\nlet y = 2; /* c */ let z = 3;\n";
+        let lines = scan(src);
+        assert_eq!(lines.len(), 2);
+        assert_eq!(code_str(&lines[0]), "let x = \"      \";            ");
+        assert_eq!(lines[0].comment, " trailing");
+        assert_eq!(lines[0].strings, vec![(8, "a // b".to_string())]);
+        assert_eq!(code_str(&lines[1]), "let y = 2;         let z = 3;");
+    }
+
+    #[test]
+    fn string_line_continuation_keeps_line_count() {
+        let src = "let s = \"one \\\n    two\";\nlet t = 1;\n";
+        let lines = scan(src);
+        assert_eq!(lines.len(), 3);
+        assert_eq!(code_str(&lines[2]), "let t = 1;");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { '{' }\n";
+        let lines = scan(src);
+        // the '{' literal must not unbalance the brace tracker
+        assert!(code_str(&lines[0]).contains("fn f<'a>"));
+        assert!(!code_str(&lines[0]).contains("'{'"));
+    }
+
+    #[test]
+    fn cfg_test_scope_tracking() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let lines = scan(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[3].in_test);
+        assert!(!lines[5].in_test);
+    }
+
+    #[test]
+    fn raw_strings() {
+        let src = "let s = r#\"quote \" inside\"#;\nlet t = 1;\n";
+        let lines = scan(src);
+        assert_eq!(lines[0].strings.len(), 1);
+        assert_eq!(lines[0].strings[0].1, "quote \" inside");
+        assert_eq!(code_str(&lines[1]), "let t = 1;");
+    }
+}

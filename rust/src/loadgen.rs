@@ -21,6 +21,9 @@
 //! the `BENCH_native.json` perf ledger via the in-crate [`Bench`]
 //! machinery (suite `loadgen`).
 
+// A CLI driver that reports on stdout by design.
+#![allow(clippy::print_stdout)]
+
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -11,6 +11,7 @@
 //!   flops <preset>     analytic FLOPs report for a preset config
 //!   exp <figure>       regenerate a paper figure (fig3..fig7 | all)
 //!   info <bundle>      inspect an artifact bundle
+//!   lint [path]        static-analysis pass over this repo's own source
 
 use std::io::Write as _;
 use std::path::PathBuf;
@@ -93,6 +94,15 @@ COMMANDS:
                     [--steps N]  (fixed-step figures 5/6/7 only; figs 3/4
                     derive steps from the isoFLOP budget)
   info <bundle>
+  lint [path]       [--github] [--fix-allowlist]
+                    static-analysis pass enforcing the determinism and
+                    serving-safety contracts (rules D1 D2 D3 P1 L1 A1 M1;
+                    see rust/README.md \"Correctness tooling\"). Lints the
+                    repo containing [path] (default: cwd) and exits
+                    nonzero on findings. Suppress a justified site with
+                    `// lint:allow(<rule>) -- reason`. --github emits
+                    ::error annotations for CI; --fix-allowlist appends
+                    lint:allow TODO markers to offending lines
 ";
 
 fn parse_decision(s: &str) -> mod_transformer::Result<RoutingDecision> {
@@ -138,7 +148,7 @@ fn run_stats_printer(
 ) {
     use std::sync::atomic::Ordering;
     let mut waited = 0u64;
-    while !stop.load(Ordering::Relaxed) {
+    while !stop.load(Ordering::Acquire) {
         std::thread::sleep(std::time::Duration::from_millis(100));
         if every_ms == 0 {
             continue;
@@ -148,7 +158,7 @@ fn run_stats_printer(
             continue;
         }
         waited = 0;
-        if stop.load(Ordering::Relaxed) {
+        if stop.load(Ordering::Acquire) {
             break;
         }
         println!("{}", engine.stats().snapshot_line());
@@ -166,7 +176,10 @@ fn data_for(bundle: &Arc<Bundle>, corpus_seed: u64) -> BatchIter {
 }
 
 fn main() -> mod_transformer::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["help", "stream"])?;
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["help", "stream", "github", "fix-allowlist"],
+    )?;
     if args.has_flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -406,7 +419,7 @@ fn main() -> mod_transformer::Result<()> {
                         }
                     }
                 }
-                stop.store(true, Ordering::Relaxed);
+                stop.store(true, Ordering::Release);
             });
             latencies.sort_by(|a, b| a.total_cmp(b));
             let stats = engine.shutdown();
@@ -538,6 +551,29 @@ fn main() -> mod_transformer::Result<()> {
                 v
             });
             println!("metrics: {:?}", m.metrics);
+        }
+        "lint" => {
+            let start = match args.positional.get(1) {
+                Some(p) => PathBuf::from(p),
+                None => std::env::current_dir()?,
+            };
+            let root = mod_transformer::lint::find_root(&start)?;
+            let findings = mod_transformer::lint::lint_tree(&root)?;
+            if args.has_flag("fix-allowlist") && !findings.is_empty() {
+                let n =
+                    mod_transformer::lint::fix_allowlist(&root, &findings)?;
+                println!("lint: annotated {n} line(s) with lint:allow TODOs");
+            }
+            print!(
+                "{}",
+                mod_transformer::lint::report::render(
+                    &findings,
+                    args.has_flag("github"),
+                )
+            );
+            if !findings.is_empty() {
+                mod_transformer::bail!("lint: {} finding(s)", findings.len());
+            }
         }
         other => {
             println!("{USAGE}");

@@ -44,6 +44,7 @@ use crate::runtime::{Bundle, Tensor};
 use crate::util::metrics::{self, Counter, Gauge, Histogram};
 use crate::util::pool;
 use crate::util::sketch::{QuantileSketch, DEFAULT_ALPHA};
+use crate::util::sync;
 
 use super::prefix_cache::{
     extend_hash, PrefixCache, PrefixCacheStats, PrefixPage, ROOT_HASH,
@@ -538,7 +539,7 @@ struct Shared {
 
 impl Shared {
     fn stat(&self, f: impl FnOnce(&mut EngineStats)) {
-        f(&mut self.stats.lock().unwrap());
+        f(&mut sync::lock(&self.stats));
     }
 }
 
@@ -573,7 +574,7 @@ fn record_queue_flight(
 
 /// Fail every queued job with a typed terminal event.
 fn drain_queue(shared: &Shared, why: &str) {
-    let mut q = shared.queue.lock().unwrap();
+    let mut q = sync::lock(&shared.queue);
     while let Some(job) = q.pop() {
         shared.stat(|s| s.failed += 1);
         shared.metrics.failed.inc();
@@ -784,7 +785,7 @@ impl Engine {
         };
         // admission control: push under the queue lock so the cap check
         // and the enqueue are one atomic decision
-        if let Err(job) = self.shared.queue.lock().unwrap().push(job) {
+        if let Err(job) = sync::lock(&self.shared.queue).push(job) {
             return Err(self.shed(job, class, now));
         }
         self.shared.stat(|s| {
@@ -810,7 +811,7 @@ impl Engine {
     /// median per-request service time (a conservative 100 ms stand-in
     /// before the first completion has been observed).
     fn shed(&self, job: Job, class: Priority, now: Instant) -> ServeError {
-        let depth = self.shared.queue.lock().unwrap().len();
+        let depth = sync::lock(&self.shared.queue).len();
         self.shared.stat(|s| s.classes[class.index()].shed += 1);
         self.shared.metrics.class_shed[class.index()].inc();
         record_queue_flight(
@@ -829,7 +830,7 @@ impl Engine {
             ServeErrorKind::Overloaded,
             format!(
                 "queue full ({depth} queued, cap {}); retry in ~{}s",
-                self.shared.queue.lock().unwrap().cap,
+                sync::lock(&self.shared.queue).cap,
                 (depth as f64 * service_s).ceil().max(1.0) as u64,
             ),
         )
@@ -846,10 +847,10 @@ impl Engine {
         // nested, because workers take stats while holding the queue
         // (reject sweep) and nesting the other way would deadlock
         let (queue_depth, queued_by_class) = {
-            let q = self.shared.queue.lock().unwrap();
+            let q = sync::lock(&self.shared.queue);
             (q.len() as u64, q.lens())
         };
-        let mut s = self.shared.stats.lock().unwrap().clone();
+        let mut s = sync::lock(&self.shared.stats).clone();
         s.queue_depth = queue_depth;
         for c in 0..3 {
             s.classes[c].queued = queued_by_class[c] as u64;
@@ -876,7 +877,7 @@ impl Engine {
     /// (outcome = the `ServeErrorKind` wire name, decode fields zeroed
     /// for requests that never reached a row).
     pub fn recent_traces(&self) -> Vec<FlightRecord> {
-        let ring = self.shared.recent.lock().unwrap();
+        let ring = sync::lock(&self.shared.recent);
         ring.iter().rev().cloned().collect()
     }
 
@@ -995,7 +996,7 @@ fn worker_loop(
         // even with no free row: a deadline must shed load (and cancel
         // must answer) within ~one decode step, not one queue turn ---
         {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = sync::lock(&shared.queue);
             let now = Instant::now();
             q.retain(|j| match queued_rejection(j, now) {
                 Some(err) => {
@@ -1008,7 +1009,7 @@ fn worker_loop(
 
         // --- admit: seat queued requests in free rows (mid-flight) ---
         if rows.iter().zip(&dead).any(|(r, &d)| r.is_none() && !d) {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = sync::lock(&shared.queue);
             if occupied == 0 {
                 // fully idle: block until work arrives or shutdown
                 loop {
@@ -1018,7 +1019,7 @@ fn worker_loop(
                     if shared.shutdown.load(Ordering::SeqCst) {
                         break 'outer;
                     }
-                    q = shared.cond.wait(q).unwrap();
+                    q = sync::cond_wait(&shared.cond, q);
                 }
             }
             let now = Instant::now();
@@ -1051,12 +1052,14 @@ fn worker_loop(
                 // prefill entirely (their K/V land pre-compacted), and
                 // the token stream stays bitwise identical because the
                 // seated slots hold exactly what a cold prefill writes
-                let use_cache =
-                    job.params.prefix_cache && shared.prefix.is_some();
+                let cache_opt = shared
+                    .prefix
+                    .as_ref()
+                    .filter(|_| job.params.prefix_cache);
+                let use_cache = cache_opt.is_some();
                 let mut prompt_idx = 0usize;
                 let mut chain_hash = ROOT_HASH;
-                if use_cache {
-                    let cache = shared.prefix.as_ref().unwrap();
+                if let Some(cache) = cache_opt {
                     let prompt_i32: Vec<i32> =
                         job.params.prompt.iter().map(|&t| t as i32).collect();
                     let pages = cache.lookup(&prompt_i32);
@@ -1222,27 +1225,31 @@ fn worker_loop(
             // grow the shared-prefix cache: full chunk-aligned pages
             // only, while the chain from the prompt start is unbroken
             let mut new_hash = None;
-            if rows[b].as_ref().unwrap().chain_ok {
-                if let Some(cache) = shared.prefix.as_ref() {
-                    let row = rows[b].as_ref().unwrap();
-                    if lo % cache.chunk() == 0 && end - lo == cache.chunk() {
-                        let hash = extend_hash(row.chain_hash, &chunk_tokens);
-                        if let Ok(layers) =
-                            session.extract_prefix_layers(b, &out.layer_spans)
-                        {
-                            cache.insert(PrefixPage {
-                                hash,
-                                parent: row.chain_hash,
-                                tokens: chunk_tokens,
-                                n_prefix: end,
-                                layers,
-                            });
-                            new_hash = Some(hash);
-                        }
+            if let (Some(row), Some(cache)) =
+                (rows[b].as_ref(), shared.prefix.as_ref())
+            {
+                if row.chain_ok
+                    && lo % cache.chunk() == 0
+                    && end - lo == cache.chunk()
+                {
+                    let hash = extend_hash(row.chain_hash, &chunk_tokens);
+                    if let Ok(layers) =
+                        session.extract_prefix_layers(b, &out.layer_spans)
+                    {
+                        cache.insert(PrefixPage {
+                            hash,
+                            parent: row.chain_hash,
+                            tokens: chunk_tokens,
+                            n_prefix: end,
+                            layers,
+                        });
+                        new_hash = Some(hash);
                     }
                 }
             }
-            let row = rows[b].as_mut().unwrap();
+            // a row that just prefilled is always seated; bail (rather
+            // than panic) if that invariant ever breaks
+            let Some(row) = rows[b].as_mut() else { continue };
             match new_hash {
                 Some(h) => row.chain_hash = h,
                 None => row.chain_ok = false,
@@ -1566,7 +1573,7 @@ fn build_trace(
 
 /// Push a finished request into the bounded flight-recorder ring.
 fn record_flight(shared: &Shared, rec: FlightRecord) {
-    let mut ring = shared.recent.lock().unwrap();
+    let mut ring = sync::lock(&shared.recent);
     if ring.len() == FLIGHT_RING_CAP {
         ring.pop_front();
     }
@@ -1583,7 +1590,10 @@ fn abandon_row(
     dead: &mut [bool],
     b: usize,
 ) {
-    let row = rows[b].take().expect("abandon_row on empty row");
+    let Some(row) = rows[b].take() else {
+        debug_assert!(false, "abandon_row on empty row");
+        return;
+    };
     let trace = build_trace(session, &row, b);
     free_row(shared, session, dead, b);
     shared.stat(|s| s.cancelled += 1);
@@ -1609,7 +1619,10 @@ fn finish_done(
     b: usize,
     finish: FinishReason,
 ) {
-    let row = rows[b].take().expect("finish_done on empty row");
+    let Some(row) = rows[b].take() else {
+        debug_assert!(false, "finish_done on empty row");
+        return;
+    };
     let trace = build_trace(session, &row, b);
     // release + count BEFORE the terminal event: a caller that returns
     // from wait() and immediately reads stats() must see this request
@@ -1653,7 +1666,10 @@ fn finish_error(
     b: usize,
     err: ServeError,
 ) {
-    let row = rows[b].take().expect("finish_error on empty row");
+    let Some(row) = rows[b].take() else {
+        debug_assert!(false, "finish_error on empty row");
+        return;
+    };
     let trace = build_trace(session, &row, b);
     free_row(shared, session, dead, b);
     record_flight(

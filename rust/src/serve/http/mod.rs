@@ -52,6 +52,7 @@ use crate::serve::request::{
 };
 use crate::util::json::Json;
 use crate::util::metrics::{self, Counter};
+use crate::util::sync;
 
 use parser::{HttpRequest, Limits};
 
@@ -159,10 +160,7 @@ impl Gateway {
     fn count_request(&self, method: &str, path: &str, status: u16) {
         let key =
             (Self::method_label(method), Self::path_label(path), status);
-        let counter = *self
-            .request_counters
-            .lock()
-            .unwrap()
+        let counter = *sync::lock(&self.request_counters)
             .entry(key)
             .or_insert_with(|| {
                 let status = key.2.to_string();
@@ -223,7 +221,7 @@ impl HttpServer {
             workers.push(std::thread::spawn(move || loop {
                 // holding the lock while blocked in recv() is fine: only
                 // one worker can pop at a time anyway
-                let conn = rx.lock().unwrap().recv();
+                let conn = sync::lock(&rx).recv();
                 match conn {
                     Ok(stream) => {
                         in_flight.add(1.0);

@@ -263,10 +263,12 @@ impl PrefixCache {
             return false;
         }
         while inner.bytes + size > self.budget {
-            // LRU victim among unpinned pages
+            // LRU victim among unpinned pages. Iteration order does not
+            // matter: `last_used` is a strictly monotone clock, so the
+            // min_by_key winner is unique.
             let victim = inner
                 .pages
-                .iter()
+                .iter() // lint:allow(D1) -- unique min: last_used is a strictly monotone clock
                 .filter(|(_, e)| Arc::strong_count(&e.page) == 1)
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(&h, _)| h);

@@ -6,6 +6,9 @@
 //! JSON report under `runs/bench/` so EXPERIMENTS.md §Perf numbers are
 //! regenerable.
 
+// The table rendering is the harness's product; stdout is intentional.
+#![allow(clippy::print_stdout)]
+
 use std::time::Instant;
 
 use super::json::Json;

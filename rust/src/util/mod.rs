@@ -13,6 +13,7 @@ pub mod metrics;
 pub mod pool;
 pub mod prop;
 pub mod sketch;
+pub mod sync;
 
 pub use args::Args;
 pub use error::{Error, Result};

@@ -96,7 +96,7 @@ fn env_default_threads() -> usize {
 
 /// Effective pool width for the next parallel region.
 pub fn threads() -> usize {
-    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+    match THREAD_OVERRIDE.load(Ordering::Acquire) {
         0 => env_default_threads(),
         n => n,
     }
@@ -105,11 +105,11 @@ pub fn threads() -> usize {
 /// Pin the pool width (`None` restores the `RP_THREADS`/auto default).
 /// Safe to flip at any time: results are width-invariant by contract.
 pub fn set_threads(n: Option<usize>) {
-    THREAD_OVERRIDE.store(n.unwrap_or(0), Ordering::Relaxed);
+    THREAD_OVERRIDE.store(n.unwrap_or(0), Ordering::Release);
 }
 
 fn min_work() -> usize {
-    match MIN_WORK_OVERRIDE.load(Ordering::Relaxed) {
+    match MIN_WORK_OVERRIDE.load(Ordering::Acquire) {
         usize::MAX => DEFAULT_MIN_WORK,
         w => w,
     }
@@ -119,7 +119,7 @@ fn min_work() -> usize {
 /// default). Tests set `Some(0)` so test-sized problems still exercise
 /// the parallel code paths.
 pub fn set_min_work(w: Option<usize>) {
-    MIN_WORK_OVERRIDE.store(w.unwrap_or(usize::MAX), Ordering::Relaxed);
+    MIN_WORK_OVERRIDE.store(w.unwrap_or(usize::MAX), Ordering::Release);
 }
 
 /// Serializes tests that reconfigure the global knobs, so a test premised
@@ -142,13 +142,13 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     struct Restore(usize, usize);
     impl Drop for Restore {
         fn drop(&mut self) {
-            THREAD_OVERRIDE.store(self.0, Ordering::Relaxed);
-            MIN_WORK_OVERRIDE.store(self.1, Ordering::Relaxed);
+            THREAD_OVERRIDE.store(self.0, Ordering::Release);
+            MIN_WORK_OVERRIDE.store(self.1, Ordering::Release);
         }
     }
     let _restore = Restore(
-        THREAD_OVERRIDE.swap(n, Ordering::Relaxed),
-        MIN_WORK_OVERRIDE.swap(0, Ordering::Relaxed),
+        THREAD_OVERRIDE.swap(n, Ordering::AcqRel),
+        MIN_WORK_OVERRIDE.swap(0, Ordering::AcqRel),
     );
     f()
 }

@@ -1,0 +1,45 @@
+//! Poison-recovering lock helpers for the serving path.
+//!
+//! A panicking thread poisons every `Mutex` it holds; the std response
+//! (`.lock().unwrap()`) then cascades that one panic into every other
+//! thread touching the lock — in a serving process that turns one bad
+//! request into a dead gateway. All the state behind the engine's and
+//! gateway's locks (queues, counters, ring buffers) stays structurally
+//! valid across a panic at any await-free point, so the right response
+//! is to take the data and keep serving. These helpers are the
+//! sanctioned spelling; the P1 lint rule flags raw `.lock().unwrap()`
+//! on the request path.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait`, recovering the guard if a holder panicked.
+pub fn cond_wait<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Mutex::new(7u32);
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = m.lock().unwrap();
+                panic!("poison it");
+            })
+            .join()
+        });
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+    }
+}

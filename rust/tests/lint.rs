@@ -1,0 +1,150 @@
+//! `repro lint` end-to-end: every rule fires on its fixture at the
+//! exact line, every allowlisted negative stays silent, and — the self
+//! check — the real tree is clean (the lint CI lane is the same
+//! assertion run as a binary).
+
+use mod_transformer::lint::{self, metrics_doc, rules, scan, Finding};
+
+/// The fixture must yield exactly one finding: `rule` at `line`. The
+/// allowlisted twin in the same file proves suppression works per-site.
+fn assert_single(rel: &str, text: &str, rule: &str, line: usize) {
+    let fs = lint::lint_source(rel, text);
+    let got: Vec<(&str, usize)> =
+        fs.iter().map(|f| (f.rule, f.line)).collect();
+    assert_eq!(got, vec![(rule, line)], "findings for {rel}: {:?}", dump(&fs));
+}
+
+fn dump(fs: &[Finding]) -> Vec<String> {
+    fs.iter()
+        .map(|f| format!("{}:{}:{} [{}] {}", f.file, f.line, f.col, f.rule, f.message))
+        .collect()
+}
+
+#[test]
+fn d1_hash_iteration_in_serve() {
+    assert_single(
+        "serve/fixture.rs",
+        include_str!("lint_fixtures/d1.rs"),
+        "D1",
+        7,
+    );
+}
+
+#[test]
+fn d1_silent_outside_scoped_dirs() {
+    // same source under analysis/: hash iteration is fine there
+    let fs = lint::lint_source(
+        "analysis/fixture.rs",
+        include_str!("lint_fixtures/d1.rs"),
+    );
+    assert!(fs.is_empty(), "{:?}", dump(&fs));
+}
+
+#[test]
+fn d2_wallclock_in_kernels() {
+    assert_single(
+        "runtime/native/fixture.rs",
+        include_str!("lint_fixtures/d2.rs"),
+        "D2",
+        6,
+    );
+}
+
+#[test]
+fn d3_cross_closure_accumulation() {
+    assert_single(
+        "runtime/native/kernels.rs",
+        include_str!("lint_fixtures/d3.rs"),
+        "D3",
+        8,
+    );
+}
+
+#[test]
+fn p1_unwrap_on_request_path() {
+    assert_single(
+        "serve/engine.rs",
+        include_str!("lint_fixtures/p1.rs"),
+        "P1",
+        6,
+    );
+}
+
+#[test]
+fn l1_lock_order_inversion() {
+    assert_single(
+        "serve/l1_fixture.rs",
+        include_str!("lint_fixtures/l1.rs"),
+        "L1",
+        13,
+    );
+}
+
+#[test]
+fn a1_relaxed_ordering() {
+    assert_single(
+        "serve/a1_fixture.rs",
+        include_str!("lint_fixtures/a1.rs"),
+        "A1",
+        6,
+    );
+}
+
+#[test]
+fn m1_source_and_doc_drift_both_directions() {
+    let text = include_str!("lint_fixtures/m1_source.rs");
+    let lines = scan::scan(text);
+    let flat = rules::Flat::new(&lines);
+    let regs = metrics_doc::registrations("m1_source.rs", &lines, &flat);
+    assert_eq!(
+        regs.iter()
+            .map(|r| (r.name.as_str(), r.line))
+            .collect::<Vec<_>>(),
+        vec![("engine_demo_total", 7), ("engine_other_total", 11)]
+    );
+    let readme = include_str!("lint_fixtures/m1_readme.md");
+    let fs = metrics_doc::cross_check(&regs, "fixture_readme.md", readme);
+    let got: Vec<(&str, &str, usize)> = fs
+        .iter()
+        .map(|f| (f.rule, f.file.as_str(), f.line))
+        .collect();
+    assert!(
+        got.contains(&("M1", "m1_source.rs", 11)),
+        "missing-from-doc finding: {:?}",
+        dump(&fs)
+    );
+    assert!(
+        got.contains(&("M1", "fixture_readme.md", 6)),
+        "ghost-doc-entry finding: {:?}",
+        dump(&fs)
+    );
+    assert_eq!(got.len(), 2, "{:?}", dump(&fs));
+}
+
+/// The rendered report carries file:line:col, the rule ID, and a GitHub
+/// annotation when asked for one.
+#[test]
+fn report_renders_spans_and_annotations() {
+    let fs = lint::lint_source(
+        "serve/engine.rs",
+        include_str!("lint_fixtures/p1.rs"),
+    );
+    let plain = lint::report::render(&fs, false);
+    assert!(plain.contains("serve/engine.rs:6:"), "{plain}");
+    assert!(plain.contains("[P1]"), "{plain}");
+    assert!(plain.contains("1 finding"), "{plain}");
+    let gh = lint::report::render(&fs, true);
+    assert!(gh.contains("::error file=serve/engine.rs,line=6"), "{gh}");
+    let clean = lint::report::render(&[], false);
+    assert!(clean.contains("clean"), "{clean}");
+}
+
+/// The self-check: the tree this test compiled from passes its own lint.
+/// This is the same assertion CI's `lint` lane makes via the binary.
+#[test]
+fn real_tree_is_clean() {
+    let root = lint::find_root(std::path::Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("repo root above CARGO_MANIFEST_DIR");
+    let fs = lint::lint_tree(&root).expect("lint_tree");
+    assert!(fs.is_empty(), "lint findings on the real tree:\n{:#?}", dump(&fs));
+}

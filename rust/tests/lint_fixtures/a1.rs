@@ -1,0 +1,12 @@
+// A1 fixture — linted under any non-test path.
+// Line numbers are asserted exactly by tests/lint.rs; edit with care.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn violation(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+fn allowed(c: &AtomicU64) -> u64 {
+    // lint:allow(A1) -- monotone counter, no data published through it
+    c.load(Ordering::Relaxed)
+}

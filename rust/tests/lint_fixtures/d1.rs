@@ -1,0 +1,16 @@
+// D1 fixture — linted under the virtual path `serve/fixture.rs`.
+// Line numbers are asserted exactly by tests/lint.rs; edit with care.
+use std::collections::HashMap;
+
+fn violation(m: &HashMap<u32, u32>) -> u32 {
+    let mut sum = 0;
+    for (_, v) in m.iter() {
+        sum += v;
+    }
+    sum
+}
+
+fn allowed(m: &HashMap<u32, u32>) -> u32 {
+    // lint:allow(D1) -- summation is order-independent
+    m.values().sum()
+}

@@ -1,0 +1,12 @@
+// D2 fixture — linted under the virtual path `runtime/native/fixture.rs`.
+// Line numbers are asserted exactly by tests/lint.rs; edit with care.
+use std::time::Instant;
+
+fn violation() -> Instant {
+    Instant::now()
+}
+
+fn allowed() -> Instant {
+    // lint:allow(D2) -- diagnostics only, value never reaches a tensor
+    Instant::now()
+}

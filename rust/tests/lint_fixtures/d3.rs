@@ -1,0 +1,19 @@
+// D3 fixture — linted under the virtual path `runtime/native/kernels.rs`.
+// Line numbers are asserted exactly by tests/lint.rs; edit with care.
+use crate::util::pool;
+
+fn violation(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    pool::par_tasks(xs.len(), |i| {
+        acc += xs[i];
+    });
+    acc
+}
+
+fn allowed(xs: &[f64], out: &mut [f64]) {
+    pool::par_rows(out, 1, |row, r| {
+        let mut local = 0.0;
+        local += xs[r];
+        row[0] = local;
+    });
+}

@@ -1,0 +1,26 @@
+// L1 fixture — linted under any path; rule L1 is path-independent.
+// Line numbers are asserted exactly by tests/lint.rs; edit with care.
+use std::sync::Mutex;
+
+struct S {
+    queue: Mutex<Vec<u32>>,
+    stats: Mutex<u32>,
+}
+
+impl S {
+    fn violation(&self) {
+        let s = self.stats.lock().unwrap();
+        let q = self.queue.lock().unwrap();
+        drop(q);
+        drop(s);
+    }
+
+    fn allowed(&self) {
+        let s = self.stats.lock().unwrap();
+        // lint:allow(L1) -- bounded drain at shutdown: single-threaded by
+        // then, the declared order no longer binds
+        let q = self.queue.lock().unwrap();
+        drop(q);
+        drop(s);
+    }
+}

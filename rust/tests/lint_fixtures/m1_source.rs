@@ -1,0 +1,14 @@
+// M1 fixture — fed to lint::metrics_doc::{registrations, cross_check}
+// together with m1_readme.md. Line numbers are asserted exactly.
+use crate::util::metrics;
+
+fn register() {
+    let _documented = metrics::counter(
+        "engine_demo_total",
+        "Documented in the fixture README",
+    );
+    let _undocumented = metrics::counter(
+        "engine_other_total",
+        "Missing from the fixture README",
+    );
+}

@@ -1,0 +1,12 @@
+// P1 fixture — linted under the virtual path `serve/engine.rs`.
+// Line numbers are asserted exactly by tests/lint.rs; edit with care.
+use std::sync::Mutex;
+
+fn violation(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+fn allowed(m: &Mutex<u32>) -> u32 {
+    // lint:allow(P1) -- lock cannot be poisoned: no panicking holder
+    *m.lock().unwrap()
+}
