@@ -19,6 +19,7 @@ use mod_transformer::runtime::{open_bundle, Bundle};
 use mod_transformer::serve::{DecodeSession, RoutingDecision};
 use mod_transformer::util::bench::Bench;
 use mod_transformer::util::pool;
+use mod_transformer::util::trace;
 
 fn decode_tokens(
     bundle: &Bundle,
@@ -89,6 +90,40 @@ fn main() -> mod_transformer::Result<()> {
             }
         }
     }
+    // tracing overhead: the identical batch-1 decode loop with the span
+    // ring disabled (each span site costs one relaxed load) vs enabled
+    // (clock reads + ring pushes) — the pair the README's "tracing is
+    // cheap enough to leave compiled in" claim rests on
+    {
+        let bundle =
+            open_bundle(std::path::Path::new("artifacts"), "mod_tiny")?;
+        let params = bundle.init_params()?;
+        pool::set_threads(Some(1));
+        trace::disable();
+        bench.case("trace_overhead/off", Some(n_tokens as f64), || {
+            decode_tokens(
+                &bundle,
+                &params,
+                1,
+                RoutingDecision::RouterThreshold,
+                n_tokens,
+            );
+        });
+        trace::enable(trace::DEFAULT_CAPACITY);
+        bench.case("trace_overhead/on", Some(n_tokens as f64), || {
+            decode_tokens(
+                &bundle,
+                &params,
+                1,
+                RoutingDecision::RouterThreshold,
+                n_tokens,
+            );
+        });
+        trace::disable();
+        trace::clear();
+        pool::set_threads(None);
+    }
+
     bench.finish()?;
     Ok(())
 }

@@ -25,7 +25,8 @@ const REG_FNS: &[&str] = &[
     "per_class",
 ];
 
-pub const METRIC_PREFIXES: &[&str] = &["engine_", "gateway_", "prefix_cache_"];
+pub const METRIC_PREFIXES: &[&str] =
+    &["engine_", "gateway_", "prefix_cache_", "mod_layer_"];
 
 /// A metric name registered in source, with where it was registered.
 pub struct Registration {

@@ -35,6 +35,7 @@ use crate::serve::request::Priority;
 use crate::util::bench::{Bench, CaseResult};
 use crate::util::json::Json;
 use crate::util::sketch::{QuantileSketch, SketchSnapshot, DEFAULT_ALPHA};
+use crate::util::trace;
 
 /// Per-request socket budget: a request that can't finish in this long
 /// against a local gateway is counted as failed, not waited on forever.
@@ -429,6 +430,8 @@ fn request_body(
 /// come back as `ok == false` outcomes, not process errors — one flaky
 /// request must not abort the run.
 fn run_request(addr: &str, body: &str) -> crate::Result<RequestOutcome> {
+    // client-side view of the same request the gateway traces server-side
+    let _sp = trace::span("loadgen_request");
     let t0 = Instant::now();
     let mut out = RequestOutcome::default();
     let Ok(mut stream) = TcpStream::connect(addr) else {
@@ -524,8 +527,12 @@ pub fn run_schedule(
     let start = Instant::now();
     let shards: Vec<ClientTally> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                s.spawn(|| {
+            .map(|w| {
+                // move only `w`; the shared run state stays borrowed
+                let (next, offsets, classes, bodies) =
+                    (&next, &offsets, &classes, &bodies);
+                s.spawn(move || {
+                    trace::register_thread(&format!("loadgen-client-{w}"));
                     let mut tally = ClientTally::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::SeqCst);

@@ -7,6 +7,7 @@
 //!   eval <bundle>      held-out evaluation under a routing mode
 //!   generate <bundle>  autoregressive generation (layer-sliced runtime)
 //!   serve <bundle>     dynamic-batching server over demo requests
+//!   trace <bundle>     span-traced generation -> Chrome/Perfetto JSON
 //!   loadgen            open-loop load generator against a running gateway
 //!   flops <preset>     analytic FLOPs report for a preset config
 //!   exp <figure>       regenerate a paper figure (fig3..fig7 | all)
@@ -28,7 +29,7 @@ use mod_transformer::serve::{
     Engine, Event, GenerateParams, HttpConfig, HttpServer, RoutingDecision,
 };
 use mod_transformer::util::metrics::{init_process_metrics, MetricsExporter};
-use mod_transformer::util::Args;
+use mod_transformer::util::{trace, Args};
 
 const USAGE: &str = "\
 repro — Mixture-of-Depths transformers (Raposo et al. 2024) rust coordinator
@@ -47,12 +48,20 @@ COMMANDS:
   generate <bundle> [--ckpt CKPT] [--max-new N]
                     [--decision predictor|router|always] [--temperature T]
                     (tokens print as each decode step streams in)
+  trace <bundle>    [--out PATH] [--ckpt CKPT] [--max-new N]
+                    [--decision predictor|router|always]
+                    one short generation with span tracing on, then dumps
+                    the ring as Chrome trace-event JSON (default
+                    trace.json; open in https://ui.perfetto.dev). Kernel
+                    spans (matmul / attention / mlp|moe) nest under each
+                    decode_step span on the engine-worker track
   serve <bundle>    [--ckpt CKPT] [--requests N] [--max-new N]
                     [--decision predictor|router|always] [--workers N]
                     [--stream] [--deadline-ms N] [--http PORT]
                     [--stats-every-ms N] [--prefill-chunk N]
                     [--prefix-cache-mb N] [--push-metrics ADDR|-]
                     [--push-every-ms N] [--queue-cap N]
+                    [--trace-out PATH]
                     continuously-batched engine. Default (loopback mode):
                     demo over N synthetic requests; --stream prints the
                     first request's tokens live; --deadline-ms attaches a
@@ -72,11 +81,14 @@ COMMANDS:
                     budget (default 0 = off); --queue-cap bounds the
                     admission queue across all priority classes (default
                     0 = unbounded; overflow sheds with typed
-                    `overloaded` / HTTP 429 + Retry-After)
+                    `overloaded` / HTTP 429 + Retry-After).
+                    --trace-out enables span tracing: loopback mode dumps
+                    the ring to PATH on exit; gateway mode serves the
+                    live ring at GET /v1/debug/trace (same JSON)
   loadgen           [--addr HOST:PORT] [--schedule poisson|burst|ramp|all]
                     [--requests N] [--concurrency N] [--rate R] [--burst N]
                     [--max-new N] [--prompt-len N] [--seed N]
-                    [--mix CLASS:N,CLASS:N]
+                    [--mix CLASS:N,CLASS:N] [--trace-out PATH]
                     open-loop load generator against a running
                     `serve --http` gateway: precomputed Poisson / burst /
                     ramp arrival schedules over N concurrent SSE clients
@@ -88,7 +100,9 @@ COMMANDS:
                     request latency, TTFT and inter-token gap, and merges
                     each schedule (plus per-class rows under a --mix) into
                     BENCH_native.json (suite `loadgen`); 429 sheds are
-                    counted separately from hard failures
+                    counted separately from hard failures. --trace-out
+                    writes the client-side span trace (one request span
+                    per HTTP call) as Chrome trace-event JSON
   flops <preset>
   exp <fig3|fig4|fig5|fig6|fig7|all> [--scale smoke|tiny|full]
                     [--steps N]  (fixed-step figures 5/6/7 only; figs 3/4
@@ -281,6 +295,56 @@ fn main() -> mod_transformer::Result<()> {
                 stats.total_flops / stats.tokens_generated.max(1) as f64
             );
         }
+        "trace" => {
+            let bundle = args.pos(1, "bundle")?;
+            let out = PathBuf::from(args.str_or("out", "trace.json"));
+            let b = mod_transformer::runtime::open_bundle(&artifacts, bundle)?;
+            let params = Arc::new(load_params(&b, args.opt("ckpt"))?);
+            let decision = parse_decision(&args.str_or("decision", "router"))?;
+            let max_new = args
+                .usize_or("max-new", 32)?
+                .min(b.manifest.max_decode_len.saturating_sub(1));
+            trace::enable(trace::DEFAULT_CAPACITY);
+            trace::register_thread("main");
+            let engine = Engine::start(
+                b.clone(),
+                params,
+                // batch-1, single worker: kernel work runs inline on the
+                // engine thread, so matmul/attention spans nest under its
+                // decode_step spans on one track in the export
+                ServeConfig {
+                    decode_batches: vec![1],
+                    workers: 1,
+                    ..Default::default()
+                },
+                decision,
+            )?;
+            let mut gen = engine.submit(
+                GenerateParams::new(vec![mod_transformer::data::BOS])
+                    .max_new(max_new)
+                    .temperature(0.8)
+                    .seed(42),
+            )?;
+            while let Some(ev) = gen.next_event() {
+                match ev {
+                    Event::Token { .. } => {}
+                    Event::Done(_) => break,
+                    Event::Error(e) => return Err(e.into()),
+                }
+            }
+            let stats = engine.shutdown();
+            let n = trace::write_file(&out)?;
+            trace::disable();
+            println!(
+                "traced {} decode token(s): {n} span(s) -> {}",
+                stats.tokens_generated,
+                out.display()
+            );
+            println!(
+                "open in https://ui.perfetto.dev or chrome://tracing \
+                 (Chrome trace-event JSON)"
+            );
+        }
         "serve" => {
             let bundle = args.pos(1, "bundle")?;
             let b = mod_transformer::runtime::open_bundle(&artifacts, bundle)?;
@@ -291,6 +355,11 @@ fn main() -> mod_transformer::Result<()> {
             let stream = args.has_flag("stream");
             let deadline_ms = args.opt_u64("deadline-ms")?;
             let stats_every = args.u64_or("stats-every-ms", 2000)?;
+            let trace_out = args.opt("trace-out").map(PathBuf::from);
+            if trace_out.is_some() {
+                trace::enable(trace::DEFAULT_CAPACITY);
+                trace::register_thread("main");
+            }
             init_process_metrics();
             let push_every = args.u64_or("push-every-ms", 1000)?;
             // the push exporter outlives both serve modes; dropping it
@@ -348,8 +417,14 @@ fn main() -> mod_transformer::Result<()> {
                 );
                 println!(
                     "  GET  /v1/debug/requests      \
-                     flight recorder (recent request traces)"
+                     flight recorder (recent request traces; ?n=LIMIT)"
                 );
+                if trace_out.is_some() {
+                    println!(
+                        "  GET  /v1/debug/trace         \
+                         live span ring (Chrome trace-event JSON)"
+                    );
+                }
                 let _ = std::io::stdout().flush();
                 // gateway mode never stops on its own: the printer loop
                 // doubles as the serve-forever block (stats-every-ms 0
@@ -423,6 +498,10 @@ fn main() -> mod_transformer::Result<()> {
             });
             latencies.sort_by(|a, b| a.total_cmp(b));
             let stats = engine.shutdown();
+            if let Some(path) = &trace_out {
+                let n = trace::write_file(path)?;
+                println!("trace: {n} span(s) -> {}", path.display());
+            }
             let p50 = latencies.get(latencies.len() / 2).copied().unwrap_or(0.0);
             let p95 = latencies
                 .get((latencies.len() * 95 / 100)
@@ -472,7 +551,16 @@ fn main() -> mod_transformer::Result<()> {
                     None => Vec::new(),
                 },
             };
+            let trace_out = args.opt("trace-out").map(PathBuf::from);
+            if trace_out.is_some() {
+                trace::enable(trace::DEFAULT_CAPACITY);
+                trace::register_thread("loadgen");
+            }
             let reports = loadgen::run(&cfg, &schedules)?;
+            if let Some(path) = &trace_out {
+                let n = trace::write_file(path)?;
+                println!("trace: {n} span(s) -> {}", path.display());
+            }
             let failed: usize = reports.iter().map(|r| r.failed).sum();
             // a dead gateway must fail the process (and CI's
             // loadgen-smoke job), not just print zeros

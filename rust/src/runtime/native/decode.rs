@@ -16,6 +16,8 @@
 use crate::config::{FfMode, ModelConfig};
 use crate::runtime::backend::{f32_arg, i32_arg, Executable, Value};
 use crate::runtime::tensor::Tensor;
+// span guards only: every clock read lives inside util::trace (rule D2)
+use crate::util::trace;
 
 use super::experts;
 use super::ops;
@@ -70,6 +72,7 @@ impl Executable for NativeLogits {
         let v = self.cfg.vocab_size;
         crate::ensure!(h.len() % d == 0, "h shape mismatch");
         let b = h.len() / d;
+        let _sp = trace::span_args("logits_head", &[("batch", b as f64)]);
         let (xn, _) = ops::rmsnorm(h, final_norm, b, d);
         let logits = ops::matmul_nt(&xn, embed, b, d, v);
         Ok(vec![Tensor::f32(vec![b, v], logits).into()])
@@ -242,6 +245,10 @@ impl Executable for NativeBlockDecode {
             .map(|(r, ((((ho, ck), cv), cp), cw))| (r, ho, ck, cv, cp, cw))
             .collect();
         let row_work = 4 * d * kd + 2 * cl * kd + 2 * d * f.max(d);
+        let _sp = trace::span_args(
+            "block_decode",
+            &[("participating", participating as f64)],
+        );
         crate::util::pool::par_tasks(
             participating * row_work,
             tasks,
@@ -251,9 +258,14 @@ impl Executable for NativeBlockDecode {
             }
             let hr = &h[r * d..(r + 1) * d];
             let (xn, _) = ops::rmsnorm(hr, attn_norm, 1, d);
-            let mut q = ops::matmul(&xn, wq, 1, d, kd);
-            let mut k = ops::matmul(&xn, wk, 1, d, kd);
-            let v = ops::matmul(&xn, wv, 1, d, kd);
+            let (mut q, mut k, v) = {
+                let _sp = trace::span("matmul");
+                (
+                    ops::matmul(&xn, wq, 1, d, kd),
+                    ops::matmul(&xn, wk, 1, d, kd),
+                    ops::matmul(&xn, wv, 1, d, kd),
+                )
+            };
             let p = [pos[r]];
             ops::rope(&mut q, &p, 1, heads, dh, freqs, 1.0);
             ops::rope(&mut k, &p, 1, heads, dh, freqs, 1.0);
@@ -266,6 +278,7 @@ impl Executable for NativeBlockDecode {
             cw[sl] = 1.0;
 
             // attend over valid slots with pos <= current pos
+            let sp_att = trace::span("attention");
             let mut att = vec![0f32; kd];
             let mut logits = vec![0f32; cl];
             for hd in 0..heads {
@@ -298,6 +311,7 @@ impl Executable for NativeBlockDecode {
                 }
             }
             let attn = ops::matmul(&att, wo, 1, kd, d);
+            drop(sp_att);
 
             // h_mid = h + attn; mlp over h_mid; delta = attn + mlp
             let mut h_mid = vec![0f32; d];
@@ -305,6 +319,10 @@ impl Executable for NativeBlockDecode {
                 h_mid[j] = hr[j] + attn[j];
             }
             let (xn2, _) = ops::rmsnorm(&h_mid, mlp_norm, 1, d);
+            let _sp_ff = trace::span(match &ff {
+                Ff::Dense { .. } => "mlp",
+                Ff::Moe { .. } => "moe",
+            });
             let mlp = match &ff {
                 Ff::Dense { w1, w2 } => {
                     let u = ops::matmul(&xn2, w1, 1, d, f);

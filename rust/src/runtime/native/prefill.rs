@@ -29,6 +29,8 @@
 
 use crate::config::ModelConfig;
 use crate::util::pool;
+// span guards only: every clock read lives inside util::trace (rule D2)
+use crate::util::trace;
 
 use super::experts;
 use super::ops;
@@ -106,6 +108,13 @@ pub fn block_prefill_chunk(
         }
     }
     let participating = blk.part.iter().filter(|&&p| p > 0.5).count();
+    let _sp = trace::span_args(
+        "block_prefill",
+        &[
+            ("tokens", t as f64),
+            ("participating", participating as f64),
+        ],
+    );
 
     // --- phase 1: per-token projections + RoPE (parallel over tokens;
     // each token owns disjoint q/k/v scratch rows) ---

@@ -45,6 +45,7 @@ use crate::util::metrics::{self, Counter, Gauge, Histogram};
 use crate::util::pool;
 use crate::util::sketch::{QuantileSketch, DEFAULT_ALPHA};
 use crate::util::sync;
+use crate::util::trace;
 
 use super::prefix_cache::{
     extend_hash, PrefixCache, PrefixCacheStats, PrefixPage, ROOT_HASH,
@@ -233,6 +234,49 @@ fn per_class(name: &str, help: &'static str) -> [&'static Counter; 3] {
         .map(|p| metrics::counter_with(name, &[("class", p.as_str())], help))
 }
 
+/// Per-layer MoD routing telemetry: the depth axis of the block-dispatch
+/// counters. The counter pair mirrors [`SessionReport::layer_blocks`], so
+/// summed across layers the `mod_layer_tokens_total` series equal
+/// `engine_blocks_{invoked,skipped}_total` exactly — the reconciliation
+/// invariant the integration tests pin.
+struct LayerMetrics {
+    invoked: &'static Counter,
+    skipped: &'static Counter,
+    selection_rate: &'static Gauge,
+}
+
+/// Resolve the per-layer families once at [`Engine::start`] (cardinality
+/// = the bundle's layer count, bounded; the `layer` label values are
+/// leaked like every registry handle).
+fn layer_metrics(n_layers: usize) -> Vec<LayerMetrics> {
+    (0..n_layers)
+        .map(|li| {
+            let layer: &'static str =
+                Box::leak(li.to_string().into_boxed_str());
+            LayerMetrics {
+                invoked: metrics::counter_with(
+                    "mod_layer_tokens_total",
+                    &[("layer", layer), ("path", "invoked")],
+                    "Block dispatches by layer and MoD routing path; sums \
+                     across layers equal the engine_blocks_*_total pair",
+                ),
+                skipped: metrics::counter_with(
+                    "mod_layer_tokens_total",
+                    &[("layer", layer), ("path", "skipped")],
+                    "Block dispatches by layer and MoD routing path; sums \
+                     across layers equal the engine_blocks_*_total pair",
+                ),
+                selection_rate: metrics::gauge_with(
+                    "mod_layer_selection_rate",
+                    &[("layer", layer)],
+                    "Fraction of this layer's block dispatches that were \
+                     invoked (1.0 = dense; lower = more MoD skipping)",
+                ),
+            }
+        })
+        .collect()
+}
+
 /// Sketch-backed percentile summary of one latency family (seconds).
 /// Sourced from the process-global sketches — the same series `/metrics`
 /// renders, so the two surfaces cannot disagree.
@@ -293,6 +337,10 @@ pub struct EngineStats {
     pub prefill_chunks: u64,
     pub blocks_invoked: u64,
     pub blocks_skipped: u64,
+    /// Per-layer `[invoked, skipped]` split of the pair above (the
+    /// `mod_layer_tokens_total` twin); sums across layers equal
+    /// `blocks_invoked`/`blocks_skipped` exactly.
+    pub layer_blocks: Vec<[u64; 2]>,
     pub capacity_drops: u64,
     pub total_flops: f64,
     /// Summed per-session decode seconds (double-counts overlapping
@@ -530,6 +578,9 @@ struct Shared {
     prefix: Option<Arc<PrefixCache>>,
     /// Registry handles, resolved once at start (shared process-wide).
     metrics: &'static EngineMetrics,
+    /// Per-layer routing telemetry handles (`mod_layer_*`), indexed by
+    /// layer — resolved once at start like `metrics`.
+    layer_metrics: Vec<LayerMetrics>,
     /// Flight-recorder ring: traces of the last [`FLIGHT_RING_CAP`]
     /// finished requests, newest at the back.
     recent: Mutex<VecDeque<FlightRecord>>,
@@ -705,6 +756,7 @@ impl Engine {
             stats: Mutex::new(EngineStats::default()),
             prefix,
             metrics: engine_metrics(),
+            layer_metrics: layer_metrics(bundle.manifest.model.n_layers),
             recent: Mutex::new(VecDeque::new()),
             trace_seq: AtomicU64::new(0),
         });
@@ -715,9 +767,10 @@ impl Engine {
             sessions.push(DecodeSession::new(&bundle, &params, batch, decision)?);
         }
         let mut handles = Vec::with_capacity(workers);
-        for session in sessions {
+        for (wi, session) in sessions.into_iter().enumerate() {
             let shared = shared.clone();
             handles.push(std::thread::spawn(move || {
+                trace::register_thread(&format!("engine-worker-{wi}"));
                 worker_loop(&shared, session, batch, vocab, max_len, chunk);
             }));
         }
@@ -1023,6 +1076,7 @@ fn worker_loop(
                 }
             }
             let now = Instant::now();
+            let _sp = trace::span("admit");
             'seat: for b in 0..batch {
                 if rows[b].is_some() || dead[b] {
                     continue;
@@ -1194,12 +1248,21 @@ fn worker_loop(
                 }
             };
             let multi = shared.decoding_workers.load(Ordering::SeqCst) > 1;
-            let result = if multi {
-                pool::run_as_worker(|| {
+            let result = {
+                let _sp = trace::span_args(
+                    "prefill_chunk",
+                    &[
+                        ("row", b as f64),
+                        ("tokens", chunk_tokens.len() as f64),
+                    ],
+                );
+                if multi {
+                    pool::run_as_worker(|| {
+                        session.prefill_chunk(b, &chunk_tokens, need_logits)
+                    })
+                } else {
                     session.prefill_chunk(b, &chunk_tokens, need_logits)
-                })
-            } else {
-                session.prefill_chunk(b, &chunk_tokens, need_logits)
+                }
             };
             let out = match result {
                 Ok(out) => out,
@@ -1335,13 +1398,23 @@ fn worker_loop(
         let mut stepped = false;
         if active.iter().any(|&a| a) {
             let multi = shared.decoding_workers.load(Ordering::SeqCst) > 1;
-            let result = if multi {
-                // another session is decoding concurrently: session-level
-                // concurrency replaces kernel fan-out so threads don't
-                // multiply; a lone session keeps full kernel parallelism
-                pool::run_as_worker(|| session.step(&tokens, &active))
-            } else {
-                session.step(&tokens, &active)
+            let result = {
+                let _sp = trace::span_args(
+                    "decode_step",
+                    &[(
+                        "active",
+                        active.iter().filter(|&&a| a).count() as f64,
+                    )],
+                );
+                if multi {
+                    // another session is decoding concurrently:
+                    // session-level concurrency replaces kernel fan-out so
+                    // threads don't multiply; a lone session keeps full
+                    // kernel parallelism
+                    pool::run_as_worker(|| session.step(&tokens, &active))
+                } else {
+                    session.step(&tokens, &active)
+                }
             };
             match result {
                 Err(e) => {
@@ -1367,6 +1440,7 @@ fn worker_loop(
                 }
                 Ok(logits) => {
                     stepped = true;
+                    let _sp = trace::span("sample");
                     // --- per-row: sample, stream, finish ---
                     for b in 0..batch {
                         let fate = match rows[b].as_mut() {
@@ -1461,6 +1535,19 @@ fn worker_loop(
             .metrics
             .capacity_drops
             .add(rep.capacity_drops - prev.capacity_drops);
+        // depth axis: the same dispatch deltas split per layer (summed
+        // over layers these equal the engine_blocks_*_total deltas above
+        // by construction — see SessionReport::layer_blocks)
+        for (li, lm) in shared.layer_metrics.iter().enumerate() {
+            let cur = rep.layer_blocks.get(li).copied().unwrap_or([0, 0]);
+            let old = prev.layer_blocks.get(li).copied().unwrap_or([0, 0]);
+            lm.invoked.add(cur[0] - old[0]);
+            lm.skipped.add(cur[1] - old[1]);
+            let (inv, skip) = (lm.invoked.get(), lm.skipped.get());
+            if inv + skip > 0 {
+                lm.selection_rate.set(inv as f64 / (inv + skip) as f64);
+            }
+        }
         shared.stat(|s| {
             s.steps += rep.steps - prev.steps;
             s.tokens_generated += rep.tokens_generated - prev.tokens_generated;
@@ -1468,6 +1555,14 @@ fn worker_loop(
             s.prefill_chunks += rep.prefill_chunks - prev.prefill_chunks;
             s.blocks_invoked += rep.blocks_invoked - prev.blocks_invoked;
             s.blocks_skipped += rep.blocks_skipped - prev.blocks_skipped;
+            if s.layer_blocks.len() < rep.layer_blocks.len() {
+                s.layer_blocks.resize(rep.layer_blocks.len(), [0, 0]);
+            }
+            for (li, lb) in rep.layer_blocks.iter().enumerate() {
+                let old = prev.layer_blocks.get(li).copied().unwrap_or([0, 0]);
+                s.layer_blocks[li][0] += lb[0] - old[0];
+                s.layer_blocks[li][1] += lb[1] - old[1];
+            }
             s.capacity_drops += rep.capacity_drops - prev.capacity_drops;
             s.total_flops += rep.total_flops - prev.total_flops;
             s.decode_wall_s += rep.wall_s - prev.wall_s;
@@ -1568,6 +1663,7 @@ fn build_trace(
         decode_gaps,
         blocks_invoked,
         blocks_skipped,
+        layer_blocks: session.row_block_layers(b),
     }
 }
 

@@ -18,6 +18,10 @@
 //!                                process-global util::metrics registry)
 //!   GET  /v1/debug/requests      flight recorder: per-request traces of
 //!                                the most recently finished requests
+//!                                (`?n=<limit>` caps the count, newest
+//!                                first)
+//!   GET  /v1/debug/trace         live span-tracer ring as Chrome
+//!                                trace-event JSON (util::trace)
 //! ```
 //!
 //! Failure containment mirrors the engine's: malformed requests map to
@@ -53,6 +57,7 @@ use crate::serve::request::{
 use crate::util::json::Json;
 use crate::util::metrics::{self, Counter};
 use crate::util::sync;
+use crate::util::trace;
 
 use parser::{HttpRequest, Limits};
 
@@ -143,6 +148,7 @@ impl Gateway {
             "/metrics" => "/metrics",
             "/v1/generate" => "/v1/generate",
             "/v1/debug/requests" => "/v1/debug/requests",
+            "/v1/debug/trace" => "/v1/debug/trace",
             _ => "other",
         }
     }
@@ -464,30 +470,67 @@ fn handle_request(
             (200, keep)
         }
         ("GET", "/v1/debug/requests") => {
-            let recs: Vec<Json> = gw
-                .engine
-                .recent_traces()
-                .iter()
-                .map(|r| {
-                    Json::obj(vec![
-                        ("seq", Json::num(r.seq as f64)),
-                        ("outcome", Json::str(r.outcome)),
-                        ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
-                        ("decode_tokens", Json::num(r.decode_tokens as f64)),
-                        (
-                            "latency_ms",
-                            Json::num(r.latency.as_secs_f64() * 1000.0),
-                        ),
-                        ("trace", sse::trace_json(&r.trace)),
-                    ])
-                })
-                .collect();
-            let body = Json::obj(vec![("requests", Json::Arr(recs))]);
+            // optional ?n=<limit>: newest-first cap on returned records
+            // (default: the whole flight-recorder ring)
+            match req.query_value("n").map(str::parse::<usize>) {
+                Some(Err(_)) => {
+                    let err = ServeError::new(
+                        ServeErrorKind::Rejected,
+                        "query param \"n\" must be a non-negative integer",
+                    );
+                    write_json_error(w, 400, &err, keep)?;
+                    (400, keep)
+                }
+                parsed => {
+                    let mut records = gw.engine.recent_traces();
+                    if let Some(n) = parsed.and_then(|r| r.ok()) {
+                        records.truncate(n);
+                    }
+                    let recs: Vec<Json> = records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("seq", Json::num(r.seq as f64)),
+                                ("outcome", Json::str(r.outcome)),
+                                (
+                                    "prompt_tokens",
+                                    Json::num(r.prompt_tokens as f64),
+                                ),
+                                (
+                                    "decode_tokens",
+                                    Json::num(r.decode_tokens as f64),
+                                ),
+                                (
+                                    "latency_ms",
+                                    Json::num(
+                                        r.latency.as_secs_f64() * 1000.0,
+                                    ),
+                                ),
+                                ("trace", sse::trace_json(&r.trace)),
+                            ])
+                        })
+                        .collect();
+                    let body =
+                        Json::obj(vec![("requests", Json::Arr(recs))]);
+                    write_response(
+                        w,
+                        200,
+                        "application/json",
+                        body.to_string().as_bytes(),
+                        keep,
+                    )?;
+                    (200, keep)
+                }
+            }
+        }
+        ("GET", "/v1/debug/trace") => {
+            // live span-tracer ring, Chrome trace-event JSON (empty
+            // traceEvents when tracing was never enabled)
             write_response(
                 w,
                 200,
                 "application/json",
-                body.to_string().as_bytes(),
+                trace::export_json().to_string().as_bytes(),
                 keep,
             )?;
             (200, keep)
@@ -495,7 +538,7 @@ fn handle_request(
         ("POST", "/v1/generate") => handle_generate(gw, req, w, keep)?,
         // known path, wrong verb → 405; anything else → 404
         (_, "/healthz" | "/metrics" | "/v1/generate"
-            | "/v1/debug/requests") => {
+            | "/v1/debug/requests" | "/v1/debug/trace") => {
             let err = ServeError::new(
                 ServeErrorKind::Rejected,
                 format!("method {} not allowed on {}", req.method, req.path),
@@ -694,6 +737,7 @@ fn handle_generate(
         )?;
         w.flush()?;
         while let Some(ev) = gen.next_event() {
+            let _sp = trace::span("sse_write");
             if w.write_all(sse::event_frame(&ev).as_bytes()).is_err()
                 || w.flush().is_err()
             {

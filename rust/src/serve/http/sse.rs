@@ -70,6 +70,20 @@ pub fn trace_json(t: &RequestTrace) -> Json {
         ("blocks_invoked", Json::num(t.blocks_invoked as f64)),
         ("blocks_skipped", Json::num(t.blocks_skipped as f64)),
         ("skip_fraction", Json::num(t.skip_fraction())),
+        (
+            "layer_blocks",
+            Json::Arr(
+                t.layer_blocks
+                    .iter()
+                    .map(|lb| {
+                        Json::Arr(vec![
+                            Json::num(lb[0] as f64),
+                            Json::num(lb[1] as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -168,6 +182,7 @@ mod tests {
                 },
                 blocks_invoked: 30,
                 blocks_skipped: 10,
+                layer_blocks: vec![[20, 0], [6, 4], [4, 6]],
             }),
         }));
         let j = assert_well_framed(&f, "done");
@@ -179,6 +194,12 @@ mod tests {
         let gaps = t.get("decode_gaps").expect("gap summary");
         assert_eq!(gaps.req_usize("count").unwrap(), 8);
         assert!((gaps.req_f64("p95_ms").unwrap() - 14.0).abs() < 1e-9);
+        // per-layer breakdown rides along, [invoked, skipped] per layer
+        let layers = t.get("layer_blocks").and_then(|l| l.as_arr()).unwrap();
+        assert_eq!(layers.len(), 3);
+        let l1 = layers[1].as_arr().unwrap();
+        assert_eq!(l1[0].as_f64().unwrap(), 6.0);
+        assert_eq!(l1[1].as_f64().unwrap(), 4.0);
     }
 
     #[test]

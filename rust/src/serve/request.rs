@@ -259,6 +259,10 @@ pub struct RequestTrace {
     /// …and the block executions MoD routing skipped for this row
     /// (per-layer capacity drops included).
     pub blocks_skipped: u64,
+    /// Depth axis of the pair above: `[invoked, skipped]` per layer —
+    /// which layers spent their top-k budget on this request. Sums over
+    /// layers equal `blocks_invoked`/`blocks_skipped` exactly.
+    pub layer_blocks: Vec<[u64; 2]>,
 }
 
 impl RequestTrace {

@@ -85,6 +85,13 @@ pub struct SessionReport {
     pub prefill_tokens: u64,
     /// Chunked-prefill invocations ([`DecodeSession::prefill_chunk`]).
     pub prefill_chunks: u64,
+    /// Per-layer split of the block-dispatch counters: `[invoked,
+    /// skipped]` for each layer, incremented at exactly the same sites
+    /// as [`Self::blocks_invoked`]/[`Self::blocks_skipped`] — so the
+    /// per-layer sums equal the aggregate pair *by construction* (the
+    /// `mod_layer_tokens_total` ⇔ `engine_blocks_*_total`
+    /// reconciliation invariant).
+    pub layer_blocks: Vec<[u64; 2]>,
     pub cache_stats: Vec<CacheStats>,
 }
 
@@ -166,12 +173,13 @@ pub struct DecodeSession {
     host: HostModel,
     /// next position per batch row.
     pos: Vec<i32>,
-    /// per-row MoD compute ledger since the row was admitted:
-    /// `[blocks invoked, blocks skipped]` summed over decode steps and
-    /// prefill chunks — the flight recorder's compute-actually-spent
-    /// signal. Unlike [`SessionReport`], which counts each batched block
-    /// dispatch once, this counts per-row *participation*.
-    row_blocks: Vec<[u64; 2]>,
+    /// per-(row, layer) MoD compute ledger since the row was admitted:
+    /// `[blocks invoked, blocks skipped]` per layer, summed over decode
+    /// steps and prefill chunks — the flight recorder's
+    /// compute-actually-spent signal, now with a depth axis. Unlike
+    /// [`SessionReport`], which counts each batched block dispatch once,
+    /// this counts per-row *participation*.
+    row_blocks: Vec<Vec<[u64; 2]>>,
     report: SessionReport,
     last_trace: StepTrace,
 }
@@ -296,12 +304,15 @@ impl DecodeSession {
             layers,
             host,
             pos: vec![0; batch],
-            row_blocks: vec![[0u64; 2]; batch],
+            row_blocks: vec![vec![[0u64; 2]; cfg.n_layers]; batch],
+            report: SessionReport {
+                layer_blocks: vec![[0u64; 2]; cfg.n_layers],
+                ..SessionReport::default()
+            },
             cfg,
             batch,
             decision,
             backend,
-            report: SessionReport::default(),
             last_trace: StepTrace::default(),
         })
     }
@@ -448,20 +459,24 @@ impl DecodeSession {
                     .routed
                     .insert(li, (gates[0], part_f[0] > 0.5));
             }
-            // per-row flight-recorder ledger: an active row either ran
-            // this block or was routed around it (capacity drops count
-            // as skipped — the compute genuinely wasn't spent)
+            // per-(row, layer) flight-recorder ledger: an active row
+            // either ran this block or was routed around it (capacity
+            // drops count as skipped — the compute genuinely wasn't
+            // spent)
             for b in 0..self.batch {
                 if active[b] {
-                    self.row_blocks[b][usize::from(part_f[b] < 0.5)] += 1;
+                    self.row_blocks[b][li][usize::from(part_f[b] < 0.5)] +=
+                        1;
                 }
             }
 
             if !any {
                 stats.blocks_skipped += 1;
+                self.report.layer_blocks[li][1] += 1;
                 continue; // ZERO cost: no executable call at all
             }
             stats.blocks_invoked += 1;
+            self.report.layer_blocks[li][0] += 1;
 
             // --- block invocation ---
             let gate_val = self
@@ -639,9 +654,11 @@ impl DecodeSession {
 
             if !any {
                 stats.blocks_skipped += 1;
+                self.report.layer_blocks[li][1] += 1;
                 continue; // whole chunk routed around this block
             }
             stats.blocks_invoked += 1;
+            self.report.layer_blocks[li][0] += 1;
 
             // --- chunk kernel over the row's cache slab ---
             let cl = self.layers[li].cache_len;
@@ -733,12 +750,13 @@ impl DecodeSession {
 
         self.pos[row] += t as i32;
 
-        // per-row flight-recorder ledger, token-granular: each prompt
-        // token either entered a block or was routed around it
-        let invoked =
-            part_tok.iter().flatten().filter(|&&p| p).count() as u64;
-        self.row_blocks[row][0] += invoked;
-        self.row_blocks[row][1] += (t * n_layers) as u64 - invoked;
+        // per-(row, layer) flight-recorder ledger, token-granular: each
+        // prompt token either entered a block or was routed around it
+        for li in 0..n_layers {
+            for part in part_tok.iter().map(|tok_part| tok_part[li]) {
+                self.row_blocks[row][li][usize::from(!part)] += 1;
+            }
+        }
 
         stats.flops = (0..t)
             .map(|i| {
@@ -834,17 +852,31 @@ impl DecodeSession {
             layer.book.admit_row(row);
         }
         self.pos[row] = 0;
-        self.row_blocks[row] = [0, 0];
+        for lb in &mut self.row_blocks[row] {
+            *lb = [0, 0];
+        }
         Ok(())
     }
 
     /// The per-row MoD compute ledger since the row was last admitted:
     /// `(blocks invoked, blocks skipped)` across its decode steps and
-    /// prefill chunks. Survives [`Self::release_row`] (the engine reads
-    /// it while finishing a request) and resets on [`Self::admit_row`].
+    /// prefill chunks, summed over layers. Survives
+    /// [`Self::release_row`] (the engine reads it while finishing a
+    /// request) and resets on [`Self::admit_row`].
     pub fn row_block_counts(&self, row: usize) -> (u64, u64) {
-        let [invoked, skipped] = self.row_blocks[row];
+        let (mut invoked, mut skipped) = (0u64, 0u64);
+        for lb in &self.row_blocks[row] {
+            invoked += lb[0];
+            skipped += lb[1];
+        }
         (invoked, skipped)
+    }
+
+    /// Depth axis of the same ledger: `[invoked, skipped]` per layer for
+    /// `row` — the flight recorder's per-layer blocks breakdown. Sums
+    /// over layers equal [`Self::row_block_counts`] exactly.
+    pub fn row_block_layers(&self, row: usize) -> Vec<[u64; 2]> {
+        self.row_blocks[row].clone()
     }
 
     /// Seat an admitted row with the cache state of a shared-prefix page

@@ -2,8 +2,9 @@
 //! is fully offline): error type, JSON codec, CLI parsing, micro-bench
 //! harness, a minimal property-testing loop, the process-global metrics
 //! registry the `/metrics` endpoint renders, a streaming quantile sketch
-//! backing its latency summaries, and the deterministic scoped-thread
-//! worker pool the native backend computes on.
+//! backing its latency summaries, the deterministic scoped-thread
+//! worker pool the native backend computes on, and the Perfetto-export
+//! span tracer behind `repro trace` / `GET /v1/debug/trace`.
 
 pub mod args;
 pub mod bench;
@@ -14,6 +15,7 @@ pub mod pool;
 pub mod prop;
 pub mod sketch;
 pub mod sync;
+pub mod trace;
 
 pub use args::Args;
 pub use error::{Error, Result};

@@ -33,6 +33,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use super::metrics::{self, Counter, Histogram};
+use super::trace;
 
 /// Registry handles for region accounting, resolved once: the dispatch
 /// path runs for every kernel call, so it must stay at the cost of a
@@ -199,9 +200,17 @@ pub fn par_tasks<T: Send>(work: usize, tasks: Vec<T>, body: impl Fn(T) + Sync) {
     }
     pool_metrics().parallel.inc();
     pool_metrics().width.observe(nt as f64);
+    // captured before spawning: 0 when tracing is off (free), else the
+    // coordinator's trace tid, from which each worker slot derives a
+    // stable track id even though scoped threads are re-spawned per
+    // region
+    let parent = trace::region_parent();
     let queue = Mutex::new(tasks.into_iter());
-    let drain = || {
+    let drain = |slot: usize| {
         let _flag = WorkerFlag::set();
+        if slot > 0 {
+            trace::register_worker(parent, slot);
+        }
         loop {
             // take the next task with the lock released before running it
             let t = queue.lock().unwrap().next();
@@ -212,10 +221,12 @@ pub fn par_tasks<T: Send>(work: usize, tasks: Vec<T>, body: impl Fn(T) + Sync) {
         }
     };
     std::thread::scope(|s| {
-        for _ in 1..nt {
-            s.spawn(&drain);
+        for w in 1..nt {
+            let d = &drain;
+            s.spawn(move || d(w));
         }
-        drain();
+        // the caller participates as slot 0 and keeps its own trace tid
+        drain(0);
     });
 }
 

@@ -1,0 +1,528 @@
+//! Zero-dependency, thread-aware span tracer (the third observability
+//! surface, after the metrics registry and the flight recorder).
+//!
+//! A global bounded ring of completed spans sits behind a single
+//! relaxed-atomic `enabled` check: with tracing off, [`span`] costs one
+//! atomic load and a stack write — no clock read, no allocation, no
+//! lock. With tracing on, the RAII [`Span`] guard stamps wall-clock
+//! microseconds at construction and drop and pushes one event into the
+//! ring (oldest events overwritten first, so the ring always holds the
+//! *newest* window of activity).
+//!
+//! **Clock containment:** every `Instant::now` read on the tracing path
+//! lives in this module. Kernel code under `runtime/native/` calls
+//! [`span`]/[`span_args`] and stays clean under lint rule D2 (no
+//! `Instant::now` in kernels) by construction — instrumenters never
+//! touch a clock themselves.
+//!
+//! **Thread identity:** spans carry a stable virtual tid, not the OS
+//! thread id. The first span on a thread allocates the next sequential
+//! tid; [`register_thread`] additionally names the track. Pool workers
+//! are *ephemeral* scoped threads re-spawned per parallel region, so
+//! `util::pool` assigns them a deterministic tid derived from the
+//! coordinator's tid and the worker slot ([`register_worker`]) — the
+//! same slot maps to the same track across regions, which is what makes
+//! kernel spans legible in a timeline UI.
+//!
+//! The exporter renders Chrome trace-event JSON — `ph:"X"` complete
+//! events with `ts`/`dur` in microseconds plus `ph:"M"` thread-name
+//! metadata — loadable directly in Perfetto or `chrome://tracing`.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::json::Json;
+use super::sync;
+
+/// Default ring capacity: enough for several seconds of fully
+/// instrumented decode (~10 spans per step) without unbounded growth.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Virtual-tid base for pool-worker tracks (coordinator tids are small
+/// sequential integers, so the two ranges can never collide).
+const WORKER_TID_BASE: u32 = 1000;
+/// Worker slots per coordinator track (slot indices clamp below this).
+const WORKER_TID_STRIDE: u32 = 100;
+
+/// The one gate on the hot path.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Next unregistered-thread virtual tid (0 is reserved for "unset").
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    /// This thread's virtual tid; 0 until first use.
+    static TID: Cell<u32> = const { Cell::new(0) };
+}
+
+/// One completed span.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub tid: u32,
+    /// Microseconds since the process trace epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Numeric key/value annotations (row index, layer, token counts…).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+struct Ring {
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    /// Events overwritten since the last [`clear`]/[`enable`].
+    dropped: u64,
+    /// Registered `(tid, track name)` pairs for the exporter.
+    threads: Vec<(u32, String)>,
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+    RING.get_or_init(|| {
+        Mutex::new(Ring {
+            cap: DEFAULT_CAPACITY,
+            events: VecDeque::new(),
+            dropped: 0,
+            threads: Vec::new(),
+        })
+    })
+}
+
+/// Process trace epoch: all timestamps are microseconds since the first
+/// clock read, so exported `ts` values start near zero.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Is tracing on? One atomic load — the entire disabled-path cost.
+#[inline]
+pub fn enabled() -> bool {
+    // lint:allow(A1) -- pure on/off gate: span data is published via the
+    // ring mutex, so the flag needs no ordering of its own
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on with the given ring capacity (events, min 1). The
+/// ring is trimmed, not cleared: re-enabling keeps prior events.
+pub fn enable(capacity: usize) {
+    let mut r = sync::lock(ring());
+    r.cap = capacity.max(1);
+    while r.events.len() > r.cap {
+        r.events.pop_front();
+    }
+    drop(r);
+    // lint:allow(A1) -- see `enabled`: the flag carries no data
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn tracing off. In-flight spans on other threads may still record
+/// (they checked the flag at construction); the ring keeps its events
+/// for a later [`export_json`].
+pub fn disable() {
+    // lint:allow(A1) -- see `enabled`: the flag carries no data
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Drop every recorded event (thread registrations are kept).
+pub fn clear() {
+    let mut r = sync::lock(ring());
+    r.events.clear();
+    r.dropped = 0;
+}
+
+/// Number of events currently in the ring.
+pub fn event_count() -> usize {
+    sync::lock(ring()).events.len()
+}
+
+/// This thread's stable virtual tid, allocating one on first use.
+fn current_tid() -> u32 {
+    TID.with(|c| {
+        let t = c.get();
+        if t != 0 {
+            return t;
+        }
+        // lint:allow(A1) -- fresh-id allocator: only uniqueness matters
+        let t = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        c.set(t);
+        t
+    })
+}
+
+/// Name the calling thread's track in the exported trace (idempotent).
+pub fn register_thread(name: &str) {
+    let tid = current_tid();
+    let mut r = sync::lock(ring());
+    if !r.threads.iter().any(|(t, _)| *t == tid) {
+        r.threads.push((tid, name.to_string()));
+    }
+}
+
+/// The calling thread's tid if tracing is enabled, else 0 — pool regions
+/// capture this before spawning so workers can derive stable tids
+/// without paying anything when tracing is off.
+pub fn region_parent() -> u32 {
+    if !enabled() {
+        return 0;
+    }
+    current_tid()
+}
+
+/// Assign the calling (ephemeral pool-worker) thread the stable virtual
+/// tid for worker `slot` under coordinator `parent` (a [`region_parent`]
+/// value; 0 = tracing off, no-op). Re-spawned scoped threads for the
+/// same slot land on the same track across parallel regions.
+pub fn register_worker(parent: u32, slot: usize) {
+    if parent == 0 {
+        return;
+    }
+    let slot = (slot as u32).min(WORKER_TID_STRIDE - 1);
+    let tid = WORKER_TID_BASE + parent * WORKER_TID_STRIDE + slot;
+    TID.with(|c| c.set(tid));
+    let mut r = sync::lock(ring());
+    if !r.threads.iter().any(|(t, _)| *t == tid) {
+        r.threads.push((tid, format!("pool worker {parent}.{slot}")));
+    }
+}
+
+/// RAII span guard: measures from construction to drop. Disarmed (and
+/// free) when tracing is off.
+#[must_use = "a span measures until it is dropped"]
+pub struct Span {
+    name: &'static str,
+    start_us: u64,
+    tid: u32,
+    args: Option<Vec<(&'static str, f64)>>,
+    armed: bool,
+}
+
+/// Open a span; it records when dropped. `trace::span("decode_step")`.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    span_args(name, &[])
+}
+
+/// [`span`] with numeric annotations shown in the trace viewer's args
+/// pane, e.g. `trace::span_args("prefill_chunk", &[("tokens", 32.0)])`.
+#[inline]
+pub fn span_args(name: &'static str, args: &[(&'static str, f64)]) -> Span {
+    if !enabled() {
+        return Span { name, start_us: 0, tid: 0, args: None, armed: false };
+    }
+    Span {
+        name,
+        start_us: now_us(),
+        tid: current_tid(),
+        args: if args.is_empty() { None } else { Some(args.to_vec()) },
+        armed: true,
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let ev = TraceEvent {
+            name: self.name,
+            tid: self.tid,
+            start_us: self.start_us,
+            dur_us: now_us().saturating_sub(self.start_us),
+            args: self.args.take().unwrap_or_default(),
+        };
+        let mut r = sync::lock(ring());
+        if r.events.len() >= r.cap {
+            r.events.pop_front();
+            r.dropped += 1;
+        }
+        r.events.push_back(ev);
+    }
+}
+
+/// Clone of the ring's events, oldest first.
+pub fn snapshot() -> Vec<TraceEvent> {
+    sync::lock(ring()).events.iter().cloned().collect()
+}
+
+/// Render the ring as Chrome trace-event JSON: an object with a
+/// `traceEvents` array of `ph:"M"` thread-name metadata plus `ph:"X"`
+/// complete events sorted by start time (so `ts` is monotone within
+/// every tid), loadable in Perfetto / `chrome://tracing` as-is.
+pub fn export_json() -> Json {
+    let (mut events, threads, dropped) = {
+        let r = sync::lock(ring());
+        (
+            r.events.iter().cloned().collect::<Vec<_>>(),
+            r.threads.clone(),
+            r.dropped,
+        )
+    };
+    events.sort_by(|a, b| {
+        (a.start_us, a.tid).cmp(&(b.start_us, b.tid))
+    });
+    let mut out = Vec::with_capacity(events.len() + threads.len());
+    for (tid, name) in &threads {
+        out.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(*tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(name.as_str()))])),
+        ]));
+    }
+    for ev in &events {
+        let args = ev
+            .args
+            .iter()
+            .map(|&(k, v)| (k, Json::num(v)))
+            .collect::<Vec<_>>();
+        out.push(Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("name", Json::str(ev.name)),
+            ("cat", Json::str("repro")),
+            ("ts", Json::num(ev.start_us as f64)),
+            ("dur", Json::num(ev.dur_us as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(ev.tid as f64)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("droppedEvents", Json::num(dropped as f64)),
+    ])
+}
+
+/// Write [`export_json`] to `path` (pretty-printed; Perfetto-loadable).
+pub fn write_file(path: &std::path::Path) -> crate::Result<usize> {
+    let n = event_count();
+    std::fs::write(path, export_json().to_string_pretty())
+        .map_err(|e| crate::err!("trace: write {}: {e}", path.display()))?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::util::prop;
+
+    /// The tracer is process-global: tests that flip it serialize here
+    /// (poison-tolerant so one failure cannot cascade).
+    fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let _g = test_guard();
+        disable();
+        clear();
+        {
+            let _s = span("trace_test_off_a");
+            let _t = span_args("trace_test_off_b", &[("x", 1.0)]);
+        }
+        // the ring is process-global (sibling tests may race stray
+        // events in), so assert on our names, not on emptiness
+        assert!(snapshot()
+            .iter()
+            .all(|e| !e.name.starts_with("trace_test_off_")));
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_events() {
+        let _g = test_guard();
+        const NAMES: &[&str] = &[
+            "tt_e0", "tt_e1", "tt_e2", "tt_e3", "tt_e4", "tt_e5", "tt_e6",
+            "tt_e7", "tt_e8", "tt_e9", "tt_e10", "tt_e11", "tt_e12",
+            "tt_e13", "tt_e14", "tt_e15", "tt_e16", "tt_e17", "tt_e18",
+            "tt_e19",
+        ];
+        // property: for any (cap, n), the ring holds exactly the newest
+        // min(n, cap) events in order
+        prop::forall(
+            11,
+            40,
+            |rng: &mut Pcg32| {
+                (
+                    prop::usize_in(rng, 1, 8),
+                    prop::usize_in(rng, 0, NAMES.len()),
+                )
+            },
+            |&(cap, n)| {
+                enable(cap);
+                clear();
+                for name in NAMES.iter().take(n) {
+                    drop(span(name));
+                }
+                disable();
+                let all = snapshot();
+                // a sibling test's stray event can evict our oldest; in
+                // that (rare) window the filtered view is still a suffix
+                let foreign = all.iter().any(|e| !NAMES.contains(&e.name));
+                let got: Vec<&str> = all
+                    .iter()
+                    .map(|e| e.name)
+                    .filter(|n| NAMES.contains(n))
+                    .collect();
+                let want: Vec<&str> = NAMES
+                    .iter()
+                    .take(n)
+                    .skip(n.saturating_sub(cap))
+                    .copied()
+                    .collect();
+                let ok = if foreign {
+                    want.ends_with(&got)
+                } else {
+                    got == want
+                };
+                if ok {
+                    Ok(())
+                } else {
+                    Err(format!("cap {cap}, n {n}: {got:?} != {want:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn span_nesting_is_well_formed() {
+        let _g = test_guard();
+        enable(DEFAULT_CAPACITY);
+        clear();
+        {
+            let _outer = span("tt_outer");
+            {
+                let _inner = span_args("tt_inner", &[("layer", 3.0)]);
+            }
+        }
+        disable();
+        let evs: Vec<TraceEvent> = snapshot()
+            .into_iter()
+            .filter(|e| e.name.starts_with("tt_"))
+            .collect();
+        assert_eq!(evs.len(), 2);
+        // drop order: inner records first
+        let (inner, outer) = (&evs[0], &evs[1]);
+        assert_eq!(inner.name, "tt_inner");
+        assert_eq!(outer.name, "tt_outer");
+        assert_eq!(inner.tid, outer.tid, "same thread, same track");
+        assert!(inner.start_us >= outer.start_us);
+        assert!(
+            inner.start_us + inner.dur_us <= outer.start_us + outer.dur_us,
+            "inner must close before outer"
+        );
+        assert_eq!(inner.args, vec![("layer", 3.0)]);
+    }
+
+    #[test]
+    fn export_parses_with_monotone_ts_per_tid() {
+        let _g = test_guard();
+        enable(DEFAULT_CAPACITY);
+        clear();
+        register_thread("test-main");
+        for _ in 0..5 {
+            drop(span("tt_main_side"));
+        }
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                register_thread("test-side");
+                for _ in 0..5 {
+                    drop(span("tt_thread_side"));
+                }
+            });
+        });
+        disable();
+        let text = export_json().to_string_pretty();
+        let j = Json::parse(&text).expect("export is valid JSON");
+        let evs = j
+            .get("traceEvents")
+            .and_then(|e| e.as_arr())
+            .expect("traceEvents array");
+        assert!(!evs.is_empty());
+        let mut names = Vec::new();
+        let mut last_ts: Vec<(u64, f64)> = Vec::new(); // (tid, last ts)
+        let mut ours = 0usize;
+        let mut our_tids: Vec<u64> = Vec::new();
+        for e in evs {
+            match e.req_str("ph").unwrap().as_str() {
+                "M" => names.push(
+                    e.get("args").unwrap().req_str("name").unwrap(),
+                ),
+                "X" => {
+                    let tid = e.req_f64("tid").unwrap() as u64;
+                    let ts = e.req_f64("ts").unwrap();
+                    assert!(e.req_f64("dur").unwrap() >= 0.0);
+                    // monotone ts within every tid — the exporter sorts
+                    match last_ts.iter_mut().find(|(t, _)| *t == tid) {
+                        Some((_, prev)) => {
+                            assert!(
+                                ts >= *prev,
+                                "ts must be monotone within tid {tid}"
+                            );
+                            *prev = ts;
+                        }
+                        None => last_ts.push((tid, ts)),
+                    }
+                    if e.req_str("name").unwrap().starts_with("tt_") {
+                        ours += 1;
+                        if !our_tids.contains(&tid) {
+                            our_tids.push(tid);
+                        }
+                    }
+                }
+                other => panic!("unexpected ph {other:?}"),
+            }
+        }
+        assert_eq!(ours, 10);
+        assert!(names.iter().any(|n| n == "test-main"), "{names:?}");
+        assert!(names.iter().any(|n| n == "test-side"), "{names:?}");
+        assert_eq!(our_tids.len(), 2, "two distinct tids for our spans");
+    }
+
+    #[test]
+    fn worker_registration_gives_stable_derived_tids() {
+        let _g = test_guard();
+        enable(DEFAULT_CAPACITY);
+        clear();
+        let parent = region_parent();
+        assert_ne!(parent, 0, "enabled tracer hands out a real parent tid");
+        let tids = std::sync::Mutex::new(Vec::new());
+        // two "regions": the same slot must land on the same tid even
+        // though the OS thread is fresh each time
+        for _ in 0..2 {
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    register_worker(parent, 1);
+                    drop(span("tt_work"));
+                    let tid = snapshot()
+                        .iter()
+                        .rev()
+                        .find(|e| e.name == "tt_work")
+                        .expect("own span recorded")
+                        .tid;
+                    tids.lock().unwrap().push(tid);
+                });
+            });
+        }
+        disable();
+        let tids = tids.into_inner().unwrap();
+        assert_eq!(tids.len(), 2);
+        assert_eq!(tids[0], tids[1], "slot 1 keeps its track across regions");
+        assert!(tids[0] >= WORKER_TID_BASE);
+        // disabled regions are a no-op
+        assert_eq!(region_parent(), 0);
+    }
+}

@@ -765,7 +765,120 @@ fn flight_recorder_ring_and_trace_opt_in() {
         assert!(r.req_f64("latency_ms").unwrap() > 0.0);
         let t = r.get("trace").expect("every record carries a trace");
         assert!(t.req_usize("blocks_invoked").unwrap() > 0);
+        // per-layer routing ledger: one [invoked, skipped] pair per
+        // model layer, summing exactly to the aggregate pair
+        let layers = t
+            .get("layer_blocks")
+            .and_then(Json::as_arr)
+            .expect("layer_blocks array");
+        assert_eq!(layers.len(), 4, "one entry per model layer");
+        let (mut inv, mut skip) = (0usize, 0usize);
+        for lb in layers {
+            let pair = lb.as_arr().expect("[invoked, skipped] pair");
+            assert_eq!(pair.len(), 2);
+            inv += pair[0].as_usize().unwrap();
+            skip += pair[1].as_usize().unwrap();
+        }
+        assert_eq!(inv, t.req_usize("blocks_invoked").unwrap());
+        assert_eq!(skip, t.req_usize("blocks_skipped").unwrap());
     }
+
+    server.shutdown();
+    drop(engine);
+}
+
+/// The debug surfaces added with the span tracer: `?n=` bounds the
+/// flight-recorder dump (non-numeric → typed 400, never a silent
+/// default), and `GET /v1/debug/trace` serves the live span ring as
+/// parseable Chrome trace-event JSON carrying the request-path spans.
+#[test]
+fn debug_trace_endpoint_and_requests_limit() {
+    use mod_transformer::util::trace;
+    let _g = pool::knob_guard();
+    // the ring is process-global; other tests tolerate foreign events
+    trace::enable(trace::DEFAULT_CAPACITY);
+    let (engine, server) = start_gateway(1, test_config());
+    let addr = server.local_addr();
+
+    for i in 0..2u64 {
+        let (status, body) = post_json(
+            addr,
+            "/v1/generate",
+            &format!("{{\"prompt\":[256,5],\"max_new\":3,\"seed\":{i}}}"),
+        );
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    }
+    // one streamed request so the `sse_write` span lands on the ring too
+    sse_generate(addr, "{\"prompt\":[256,5],\"max_new\":3,\"seed\":2}");
+
+    // finish accounting can land just after the response: poll the ring
+    let mut all: Vec<Json> = Vec::new();
+    for _ in 0..200 {
+        let (status, body) = get(addr, "/v1/debug/requests");
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        all = j.get("requests").unwrap().as_arr().unwrap().to_vec();
+        if all.len() >= 3 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(all.len(), 3);
+
+    // ?n= keeps the newest-first head of the same list
+    let (status, body) = get(addr, "/v1/debug/requests?n=2");
+    assert_eq!(status, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let limited = j.get("requests").unwrap().as_arr().unwrap();
+    assert_eq!(limited.len(), 2);
+    assert_eq!(
+        limited[0].req_usize("seq").unwrap(),
+        all[0].req_usize("seq").unwrap()
+    );
+    // n past the ring size is the whole ring; n=0 is legal and empty
+    let (_, body) = get(addr, "/v1/debug/requests?n=999");
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("requests").unwrap().as_arr().unwrap().len(), 3);
+    let (_, body) = get(addr, "/v1/debug/requests?n=0");
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(j.get("requests").unwrap().as_arr().unwrap().is_empty());
+
+    // non-numeric limit: typed 400
+    let (status, body) = get(addr, "/v1/debug/requests?n=bogus");
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let err = j.get("error").expect("typed error body");
+    assert_eq!(err.req_str("kind").unwrap(), "rejected");
+    assert!(err.req_str("message").unwrap().contains("non-negative"));
+
+    // the live span ring over the wire
+    let (status, body) = get(addr, "/v1/debug/trace");
+    assert_eq!(status, 200);
+    let dump = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let events = dump.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "tracing was on while requests ran");
+    let names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    for want in ["admit", "decode_step", "sample", "sse_write"] {
+        assert!(names.contains(&want), "missing span {want:?} in {names:?}");
+    }
+    // every complete event carries the Chrome timing/track fields
+    for e in events {
+        match e.get("ph").and_then(Json::as_str) {
+            Some("X") => {
+                assert!(e.get("ts").and_then(Json::as_f64).is_some());
+                assert!(e.get("dur").and_then(Json::as_f64).unwrap() >= 0.0);
+                assert!(e.get("tid").and_then(Json::as_u64).is_some());
+            }
+            Some("M") => {}
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    trace::disable();
+    trace::clear();
 
     server.shutdown();
     drop(engine);

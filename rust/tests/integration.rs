@@ -1236,6 +1236,107 @@ fn vanilla_bundle_decodes_without_routing() {
     assert!((ratio - 1.0).abs() < 1e-12);
 }
 
+/// Satellite acceptance: the depth×time compute ledger reconciles
+/// exactly. Per engine, the per-layer `[invoked, skipped]` pairs sum to
+/// the aggregate block counters; globally, the `mod_layer_tokens_total`
+/// family carries the same cumulative totals as
+/// `engine_blocks_{invoked,skipped}_total` — both sides are incremented
+/// from the identical per-report deltas in one absorb block.
+#[test]
+fn mod_layer_ledger_reconciles_with_block_totals() {
+    use mod_transformer::util::json::Json;
+    use mod_transformer::util::metrics;
+
+    // read the global registry: (sum over mod_layer series, engine pair)
+    let read = || {
+        let snap = metrics::snapshot_json();
+        let mut layers = [0u64; 2];
+        let mut engine_totals = [0u64; 2];
+        if let Some(Json::Obj(entries)) = snap.get("metrics") {
+            for (key, v) in entries {
+                let val = v.as_u64().unwrap_or(0);
+                if key.starts_with("mod_layer_tokens_total{") {
+                    if key.contains("path=\"invoked\"") {
+                        layers[0] += val;
+                    } else if key.contains("path=\"skipped\"") {
+                        layers[1] += val;
+                    }
+                } else if key == "engine_blocks_invoked_total" {
+                    engine_totals[0] = val;
+                } else if key == "engine_blocks_skipped_total" {
+                    engine_totals[1] = val;
+                }
+            }
+        }
+        (layers, engine_totals)
+    };
+    let (_, before_engine) = read();
+
+    let bundle = open("mod_tiny");
+    let n_layers = bundle.manifest.model.n_layers;
+    let params = Arc::new(bundle.init_params().unwrap());
+    let engine = Engine::start(
+        bundle.clone(),
+        params,
+        ServeConfig { workers: 1, ..Default::default() },
+        RoutingDecision::RouterThreshold,
+    )
+    .unwrap();
+    let gens: Vec<_> = (0..4)
+        .map(|i| {
+            engine
+                .submit(
+                    GenerateParams::new(vec![BOS, 5 + i as u16])
+                        .max_new(8)
+                        .seed(i as u64),
+                )
+                .unwrap()
+        })
+        .collect();
+    for g in gens {
+        g.wait().expect("response");
+    }
+    let stats = engine.shutdown();
+
+    // per-engine: the depth axis sums to the aggregates, exactly
+    assert!(stats.blocks_invoked > 0 && stats.blocks_skipped > 0, "{stats:?}");
+    assert_eq!(stats.layer_blocks.len(), n_layers, "{stats:?}");
+    let sum_inv: u64 = stats.layer_blocks.iter().map(|lb| lb[0]).sum();
+    let sum_skip: u64 = stats.layer_blocks.iter().map(|lb| lb[1]).sum();
+    assert_eq!(sum_inv, stats.blocks_invoked, "{stats:?}");
+    assert_eq!(sum_skip, stats.blocks_skipped, "{stats:?}");
+    // unrouted layers run dense: every dispatch invoked, none skipped
+    for (li, lb) in stats.layer_blocks.iter().enumerate() {
+        if !bundle.manifest.model.is_routed_block(li) {
+            assert_eq!(lb[1], 0, "full layer {li} skipped: {stats:?}");
+            assert!(lb[0] > 0, "full layer {li} idle: {stats:?}");
+        }
+    }
+
+    // global registry: concurrent tests' engines may be mid-absorb at
+    // any single sampling instant, so poll for a quiescent read — at
+    // every such instant the cumulative families are exactly equal
+    let mut agreed = None;
+    for _ in 0..200 {
+        let (layers, engine_totals) = read();
+        if layers == engine_totals {
+            agreed = Some(engine_totals);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    let totals = agreed.expect(
+        "mod_layer_tokens_total sums never reconciled with \
+         engine_blocks_{invoked,skipped}_total",
+    );
+    // and our own traffic is included in both families
+    assert!(
+        totals[0] >= before_engine[0] + stats.blocks_invoked
+            && totals[1] >= before_engine[1] + stats.blocks_skipped,
+        "ledger lost traffic: {totals:?} vs {before_engine:?} + {stats:?}"
+    );
+}
+
 /// Satellite: the step trace must describe row 0's *current* step only.
 /// A step where row 0 is inactive leaves the trace empty instead of
 /// recording row 0's stale gate values as if it had participated.

@@ -121,6 +121,56 @@ fn m1_source_and_doc_drift_both_directions() {
     assert_eq!(got.len(), 2, "{:?}", dump(&fs));
 }
 
+/// M1 covers the `mod_layer_` routing-ledger prefix: `_with`-style
+/// registrations are picked up by name, README tokens with a trailing
+/// `{layer,path}` label list parse to the bare metric name, and drift
+/// fires in both directions — an undocumented registration and a ghost
+/// doc entry.
+#[test]
+fn m1_covers_mod_layer_prefix() {
+    let text = include_str!("lint_fixtures/m1_mod_source.rs");
+    let lines = scan::scan(text);
+    let flat = rules::Flat::new(&lines);
+    let regs = metrics_doc::registrations("m1_mod_source.rs", &lines, &flat);
+    let mut by_line: Vec<(&str, usize)> =
+        regs.iter().map(|r| (r.name.as_str(), r.line)).collect();
+    by_line.sort_by_key(|(_, l)| *l);
+    assert_eq!(
+        by_line,
+        vec![
+            ("mod_layer_tokens_total", 7),
+            ("mod_layer_selection_rate", 12),
+            ("mod_layer_orphan_total", 17),
+        ]
+    );
+    let readme = include_str!("lint_fixtures/m1_mod_readme.md");
+    // the label lists end the token: both documented names parse bare
+    let parsed = metrics_doc::readme_names(readme);
+    let doc_names: Vec<&str> =
+        parsed.iter().map(|(n, _, _)| n.as_str()).collect();
+    assert!(doc_names.contains(&"mod_layer_tokens_total"), "{doc_names:?}");
+    assert!(
+        doc_names.contains(&"mod_layer_selection_rate"),
+        "{doc_names:?}"
+    );
+    let fs = metrics_doc::cross_check(&regs, "fixture_readme.md", readme);
+    let got: Vec<(&str, &str, usize)> = fs
+        .iter()
+        .map(|f| (f.rule, f.file.as_str(), f.line))
+        .collect();
+    assert!(
+        got.contains(&("M1", "m1_mod_source.rs", 17)),
+        "undocumented mod_layer registration: {:?}",
+        dump(&fs)
+    );
+    assert!(
+        got.contains(&("M1", "fixture_readme.md", 7)),
+        "ghost mod_layer doc entry: {:?}",
+        dump(&fs)
+    );
+    assert_eq!(got.len(), 2, "{:?}", dump(&fs));
+}
+
 /// The rendered report carries file:line:col, the rule ID, and a GitHub
 /// annotation when asked for one.
 #[test]

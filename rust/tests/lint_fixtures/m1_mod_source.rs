@@ -1,0 +1,20 @@
+// M1 fixture — the `mod_layer_` prefix: label-carrying `_with`
+// registrations feed the same cross-check as the engine families.
+use crate::util::metrics;
+
+fn register() {
+    let _documented = metrics::counter_with(
+        "mod_layer_tokens_total",
+        &[("layer", "0"), ("path", "invoked")],
+        "Documented in the fixture README",
+    );
+    let _rate = metrics::gauge_with(
+        "mod_layer_selection_rate",
+        &[("layer", "0")],
+        "Documented in the fixture README",
+    );
+    let _undocumented = metrics::counter(
+        "mod_layer_orphan_total",
+        "Missing from the fixture README",
+    );
+}
